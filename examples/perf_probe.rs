@@ -1,0 +1,50 @@
+//! §Perf probe: time artifacts through the real PJRT runtime.
+//! Usage: perf_probe [artifact_dir] — times every mgemm2-kind artifact
+//! found in the manifest at the (384, 128) probe shape.
+use comet::config::Precision;
+use comet::runtime::{ops::BlockOps, PjrtService};
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+fn main() {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let svc = PjrtService::start(std::path::Path::new(&dir)).unwrap();
+    let client = svc.client();
+    let v32: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 384, 128, 0);
+    let v64: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 384, 128, 0);
+    let gops = comet::metrics::counts::ops_mgemm_block(384, 128, 128) as f64 / 1e9;
+    let names: Vec<(String, comet::runtime::ElemKind)> = client
+        .manifest()
+        .entries
+        .iter()
+        .filter(|e| e.kind == "mgemm2" && e.nf == 384)
+        .map(|e| (e.name.clone(), e.precision))
+        .collect();
+    for (name, prec) in names {
+        let prec = match prec {
+            comet::runtime::ElemKind::F32 => Precision::F32,
+            comet::runtime::ElemKind::F64 => Precision::F64,
+            comet::runtime::ElemKind::U32 => continue,
+        };
+        let ops = BlockOps::new(client.clone(), prec);
+        let iters = 10;
+        let time = match prec {
+            Precision::F32 => {
+                let _ = ops.mgemm2_named(&name, &v32, &v32).unwrap();
+                let t0 = std::time::Instant::now();
+                for _ in 0..iters {
+                    std::hint::black_box(ops.mgemm2_named(&name, &v32, &v32).unwrap());
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            }
+            Precision::F64 => {
+                let _ = ops.mgemm2_named(&name, &v64, &v64).unwrap();
+                let t0 = std::time::Instant::now();
+                for _ in 0..iters {
+                    std::hint::black_box(ops.mgemm2_named(&name, &v64, &v64).unwrap());
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            }
+        };
+        println!("{name:<28} {:.2} ms  {:.2} Gop/s", time * 1e3, gops / time);
+    }
+}

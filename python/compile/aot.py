@@ -1,0 +1,218 @@
+"""AOT lowering: Layer-2 graphs (+ Layer-1 Pallas kernels) → HLO text artifacts.
+
+This is the only Python that ever runs; it runs ONCE at build time
+(`make artifacts`) and writes:
+
+  artifacts/<name>.hlo.txt   one per artifact (HLO TEXT — see below)
+  artifacts/manifest.txt     whitespace table the Rust runtime parses
+  artifacts/kernel_report.txt VMEM/working-set estimates per kernel shape
+                              (the TPU occupancy analysis, DESIGN.md §Perf)
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialized. The Rust runtime pads blocks up to the
+nearest artifact tier: zero-padding features/vectors is exact for the
+min-product over non-negative data (min(0, x) = 0 contributes nothing),
+and padded output rows/columns are sliced off on the Rust side.
+
+Usage (from the python/ directory, as `make artifacts` does):
+    python -m compile.aot --out ../artifacts [--only PREFIX] [--list]
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import mgemm as mgemm_kernels  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Artifact specification table
+# ---------------------------------------------------------------------------
+
+# Shape tiers. "s" is the quick correctness tier, "m" the bench tier,
+# "p" the PheWAS tier (n_f = 385 pads to 512 instead of 1536 — §Perf).
+TIERS_2WAY = [
+    # (tag, n_f, n_v)
+    ("s", 384, 128),
+    ("p", 512, 256),
+    ("n", 1536, 128),  # deep-narrow: small blocks of deep vectors (§Perf)
+    ("m", 1536, 256),
+]
+TIERS_3WAY = [
+    # (tag, n_f, n_v, jt)
+    ("s", 384, 64, 8),
+    ("p", 512, 64, 8),
+    ("n", 1536, 64, 8),  # deep-narrow (§Perf: avoids 4× nv padding)
+    ("m", 1536, 128, 16),
+]
+DTYPES = [("f32", jnp.float32), ("f64", jnp.float64)]
+
+# Pallas tile sizes (shared across tiers; all tiers divide evenly).
+PALLAS_2WAY = dict(bm=64, bn=64, bk=64)
+PALLAS_3WAY = dict(bm=32, bn=32, bk=64)
+# XLA-graph tile schedule: §Perf-swept winners through the actual
+# PJRT runtime (xla_extension 0.5.1 codegen — NOT the jax-jit runtime,
+# whose optimum differs; see EXPERIMENTS.md §Perf).
+XLA_CHUNK = 128
+XLA_JTILE = 8
+
+
+def _specs_2way(nf, nv, dt):
+    s = jax.ShapeDtypeStruct((nf, nv), dt)
+    return (s, s)
+
+
+def _specs_3way(nf, nv, jt, dt):
+    return (
+        jax.ShapeDtypeStruct((nf, nv), dt),
+        jax.ShapeDtypeStruct((nf, jt), dt),
+        jax.ShapeDtypeStruct((nf, nv), dt),
+    )
+
+
+def build_artifact_table():
+    """Return [(name, kind, dtype, nf, nv, jt, fn, arg_specs)]."""
+    table = []
+    for dtag, dt in DTYPES:
+        for tag, nf, nv in TIERS_2WAY:
+            specs = _specs_2way(nf, nv, dt)
+            two_way = [
+                # (kind, fn) — all share the contract N = W^T ∘min V
+                ("mgemm2", functools.partial(model.mgemm2_xla, chunk=XLA_CHUNK, jtile=XLA_JTILE)),
+                ("mgemm2ternary",
+                 functools.partial(model.mgemm2_ternary_xla, chunk=XLA_CHUNK, jtile=XLA_JTILE)),
+                ("mgemm2pallas", functools.partial(model.mgemm2_pallas, **PALLAS_2WAY)),
+                ("mgemm2pallasternary",
+                 functools.partial(model.mgemm2_pallas, min_impl="ternary", **PALLAS_2WAY)),
+                ("gemm", model.gemm_xla),
+                ("gemmpallas", functools.partial(model.gemm_pallas, **PALLAS_2WAY)),
+                ("block2",
+                 functools.partial(model.block2_xla, chunk=XLA_CHUNK, jtile=XLA_JTILE)),
+            ]
+            for kind, fn in two_way:
+                name = f"{kind}_{dtag}_{tag}"
+                table.append((name, kind, dtag, nf, nv, 0, fn, specs))
+            name = f"rowsum_{dtag}_{tag}"
+            table.append((name, "rowsum", dtag, nf, nv, 0, model.rowsum_xla, specs[:1]))
+        for tag, nf, nv, jt in TIERS_3WAY:
+            specs = _specs_3way(nf, nv, jt, dt)
+            # §Perf sweep through the PJRT runtime: f32 peaks at ktile=8
+            # (5.05 vs 4.62 Gop/s), f64 at ktile=4 (3.72 vs 3.30).
+            ktile = 8 if dtag == "f32" else 4
+            m3 = functools.partial(model.mgemm3_xla, chunk=XLA_CHUNK, ktile=ktile)
+            three_way = [
+                ("mgemm3", m3),
+                ("mgemm3pallas", functools.partial(model.mgemm3_pallas, **PALLAS_3WAY)),
+            ]
+            for kind, fn in three_way:
+                name = f"{kind}_{dtag}_{tag}"
+                table.append((name, kind, dtag, nf, nv, jt, fn, specs))
+    # Bitwise Sorenson tiers (§2.3): packed uint32 words, n_f = 32·n_w.
+    for tag, nw, nv in [("s", 16, 128), ("m", 128, 256)]:
+        spec = jax.ShapeDtypeStruct((nw, nv), jnp.uint32)
+        table.append((
+            f"sorenson2_u32_{tag}", "sorenson2", "u32", nw * 32, nv, 0,
+            functools.partial(model.sorenson2_xla, chunk=16, jtile=8), (spec, spec),
+        ))
+        table.append((
+            f"sorenson2pallas_u32_{tag}", "sorenson2pallas", "u32", nw * 32, nv, 0,
+            functools.partial(model.sorenson2_pallas, bk=16), (spec, spec),
+        ))
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, arg_specs) -> str:
+    wrapped = lambda *args: fn(*args)  # noqa: E731 — normalize partials
+    return to_hlo_text(jax.jit(wrapped).lower(*arg_specs))
+
+
+def write_kernel_report(outdir):
+    lines = ["# Pallas kernel working-set estimates (bytes per grid step)", ""]
+    for dtag, nbytes in (("f32", 4), ("f64", 8)):
+        est2 = mgemm_kernels.vmem_estimate_2way(
+            PALLAS_2WAY["bm"], PALLAS_2WAY["bn"], PALLAS_2WAY["bk"], nbytes
+        )
+        lines.append(f"mgemm2 {dtag} tiles bm={PALLAS_2WAY['bm']} bn={PALLAS_2WAY['bn']} "
+                     f"bk={PALLAS_2WAY['bk']}: {est2}")
+        for tag, nf, nv, jt in TIERS_3WAY:
+            est3 = mgemm_kernels.vmem_estimate_3way(
+                PALLAS_3WAY["bm"], PALLAS_3WAY["bn"], PALLAS_3WAY["bk"], jt, nbytes
+            )
+            lines.append(f"mgemm3 {dtag} tier={tag} jt={jt} tiles bm={PALLAS_3WAY['bm']} "
+                         f"bn={PALLAS_3WAY['bn']} bk={PALLAS_3WAY['bk']}: {est3}")
+    lines.append("")
+    lines.append("# 'panels'+'out_tile' must fit the ~16 MiB VMEM budget on real TPU;")
+    lines.append("# 'interpret_bcast_temp' is an interpret-mode artifact only (Mosaic")
+    lines.append("# keeps the q-loop in vector registers).")
+    with open(os.path.join(outdir, "kernel_report.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact output directory")
+    p.add_argument("--only", default=None, help="only build artifacts whose name starts with this")
+    p.add_argument("--list", action="store_true", help="list artifact names and exit")
+    args = p.parse_args(argv)
+
+    table = build_artifact_table()
+    if args.list:
+        for name, kind, dtag, nf, nv, jt, _, _ in table:
+            print(f"{name:32s} kind={kind:14s} dtype={dtag} nf={nf} nv={nv} jt={jt}")
+        return 0
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest_rows = []
+    built = 0
+    for name, kind, dtag, nf, nv, jt, fn, specs in table:
+        fname = f"{name}.hlo.txt"
+        manifest_rows.append(f"{name} {kind} {dtag} {nf} {nv} {jt} {fname}")
+        if args.only and not name.startswith(args.only):
+            continue
+        text = lower_artifact(fn, specs)
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        built += 1
+        print(f"  lowered {name:32s} ({len(text)} chars)", flush=True)
+
+    # Manifest always lists the full table so the Rust registry knows the
+    # complete tier set (files built with --only filters may be absent;
+    # the registry reports missing files with a remediation hint).
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("# name kind dtype nf nv jt file\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    write_kernel_report(outdir)
+    print(f"built {built}/{len(table)} artifacts -> {outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

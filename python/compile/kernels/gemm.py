@@ -1,0 +1,43 @@
+"""Layer-1 Pallas true-GEMM comparator kernel.
+
+Paper Table 1 measures the mGEMM against the true GEMM it was derived
+from (MAGMA's) and against the vendor GEMM (cuBLAS). This kernel is the
+"MAGMA GEMM" analogue: the *same* tiling and grid structure as
+mgemm.mgemm2_pallas, with the broadcast-min inner loop replaced by an
+MXU-shaped dot — so the pair isolates exactly the cost of min+add vs.
+fused multiply-add, which is the paper's Table 1 comparison. The
+"cuBLAS" analogue is the platform-native `jnp.matmul` graph in model.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(w_ref, v_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped contraction over the feature panel: [bm, bk] @ [bk, bn].
+    o_ref[...] += jnp.dot(w_ref[...].T, v_ref[...])
+
+
+def gemm_pallas(w, v, *, bm=64, bn=64, bk=64):
+    """W^T V with the same BlockSpec schedule as the mGEMM kernel."""
+    nf, m = w.shape
+    nf2, n = v.shape
+    assert nf == nf2, (nf, nf2)
+    assert m % bm == 0 and n % bn == 0 and nf % bk == 0, (nf, m, n, bm, bn, bk)
+    grid = (m // bm, n // bn, nf // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(w, v)

@@ -1,0 +1,169 @@
+"""Layer-1 Pallas kernels: the min-product "modified GEMM" (mGEMM).
+
+The paper's core kernel insight (§3.1): the 2-way numerator computation
+N = W^T ∘min V has the exact computational pattern of a BLAS-3 GEMM with
+the scalar multiply replaced by scalar min, so it inherits a GEMM's whole
+memory-hierarchy optimization stack. The authors patched MAGMA's
+`gemm_stencil.cuh` FMA macro; here the same idea is expressed natively as
+a tiled Pallas kernel.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): MAGMA's shared-memory
+panel tiling becomes BlockSpec VMEM tiling; the grid's k-axis streams
+feature panels HBM→VMEM while the (i, j) output tile stays resident
+(Pallas keeps the output block in VMEM across grid steps whose index map
+ignores k — the declarative form of the paper's double buffering). The
+min+add inner loop runs on the VPU, not the MXU — the TPU analogue of the
+paper's "min is not FMA" headroom observation; the true-GEMM comparator in
+gemm.py uses the MXU and bounds the achievable rate from above (Table 1).
+
+All kernels are lowered with interpret=True: real TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot execute, while interpret
+mode lowers the identical kernel to plain HLO that the Rust runtime runs
+bit-for-bit (see /opt/xla-example/README.md).
+
+Two scalar-min implementations are provided, mirroring the paper's
+Table 1 comparison of the CUDA `fmin` intrinsic against the C ternary
+operator:
+
+  min_impl="minimum"  -> jnp.minimum       (the hardware-min lowering)
+  min_impl="ternary"  -> where(a <= b, a, b) (the select/branch lowering)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scalar_min(a, b, min_impl):
+    if min_impl == "minimum":
+        return jnp.minimum(a, b)
+    if min_impl == "ternary":
+        return jnp.where(a <= b, a, b)
+    raise ValueError(f"unknown min_impl: {min_impl!r}")
+
+
+def _mgemm2_kernel(w_ref, v_ref, o_ref, *, min_impl):
+    """One (i, j, k) grid step: o[i, j] += sum over the k-th feature panel.
+
+    w_ref: [bk, bm] panel of W; v_ref: [bk, bn] panel of V;
+    o_ref: [bm, bn] resident output tile.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wt = w_ref[...]  # [bk, bm]
+    vt = v_ref[...]  # [bk, bn]
+    # Broadcast-min over the panel, then add-reduce over q. On real TPU
+    # hardware Mosaic would keep the q loop in vector registers; interpret
+    # mode materializes the [bk, bm, bn] temporary (documented in the
+    # kernel report emitted by aot.py).
+    acc = _scalar_min(wt[:, :, None], vt[:, None, :], min_impl).sum(axis=0)
+    o_ref[...] += acc
+
+
+def mgemm2_pallas(w, v, *, bm=64, bn=64, bk=64, min_impl="minimum"):
+    """N = W^T ∘min V via the tiled Pallas kernel.
+
+    w: [n_f, m], v: [n_f, n] -> [m, n] with
+    N[i, j] = sum_q min(w[q, i], v[q, j]).
+
+    Tile sizes must divide the respective dimensions (artifact shapes are
+    chosen to satisfy this; the Rust runtime pads blocks to artifact
+    shapes — zero-padding is exact for the min-product since inputs are
+    non-negative and min(0, x) = 0 contributes nothing).
+    """
+    nf, m = w.shape
+    nf2, n = v.shape
+    assert nf == nf2, (nf, nf2)
+    assert m % bm == 0 and n % bn == 0 and nf % bk == 0, (nf, m, n, bm, bn, bk)
+    grid = (m // bm, n // bn, nf // bk)
+    kernel = functools.partial(_mgemm2_kernel, min_impl=min_impl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=True,
+    )(w, v)
+
+
+def _mgemm3_kernel(vj_ref, vi_ref, vk_ref, o_ref, *, min_impl):
+    """One (i, j, k) grid step of the 3-way slab.
+
+    vj_ref: [bk, jt] panel of the pivot columns (jt is small and kept
+    whole); vi_ref: [bk, bm]; vk_ref: [bk, bn];
+    o_ref: [jt, bm, bn] resident output slab.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vjt = vj_ref[...]  # [bk, jt]
+    vit = vi_ref[...]  # [bk, bm]
+    vkt = vk_ref[...]  # [bk, bn]
+    # X-panel: min of pivot column t with each column of Vi -> the paper's
+    # X_j construction, fused with the subsequent B_j mGEMM by min
+    # associativity (§3.2).
+    x = _scalar_min(vjt[:, :, None], vit[:, None, :], min_impl)  # [bk, jt, bm]
+    acc = _scalar_min(x[:, :, :, None], vkt[:, None, None, :], min_impl).sum(axis=0)
+    o_ref[...] += acc
+
+
+def mgemm3_pallas(vi, vj, vk, *, bm=32, bn=32, bk=64, min_impl="minimum"):
+    """3-way min-product slab via the tiled Pallas kernel.
+
+    vi: [n_f, m], vj: [n_f, jt], vk: [n_f, n] -> [jt, m, n] with
+    out[t, i, k] = sum_q min(vj[q, t], vi[q, i], vk[q, k]).
+
+    These are the paper's B_j entries n3'(v_i, v_j, v_k) for a batch of jt
+    pivot columns (Algorithm 3's GPU-pipeline body).
+    """
+    nf, m = vi.shape
+    nfj, jt = vj.shape
+    nfk, n = vk.shape
+    assert nf == nfj == nfk, (nf, nfj, nfk)
+    assert m % bm == 0 and n % bn == 0 and nf % bk == 0, (nf, m, n, bm, bn, bk)
+    grid = (m // bm, n // bn, nf // bk)
+    kernel = functools.partial(_mgemm3_kernel, min_impl=min_impl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, jt), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((jt, bm, bn), lambda i, j, k: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((jt, m, n), vi.dtype),
+        interpret=True,
+    )(vj, vi, vk)
+
+
+def vmem_estimate_2way(bm, bn, bk, dtype_bytes):
+    """VMEM working-set estimate for one 2-way grid step, in bytes.
+
+    Panels + resident output tile; the broadcast temporary is listed
+    separately because a real Mosaic lowering keeps the q-loop in vector
+    registers rather than materializing it.
+    """
+    panels = (bk * bm + bk * bn) * dtype_bytes
+    out_tile = bm * bn * dtype_bytes
+    bcast_temp = bk * bm * bn * dtype_bytes
+    return {"panels": panels, "out_tile": out_tile, "interpret_bcast_temp": bcast_temp}
+
+
+def vmem_estimate_3way(bm, bn, bk, jt, dtype_bytes):
+    """VMEM working-set estimate for one 3-way grid step, in bytes."""
+    panels = (bk * jt + bk * bm + bk * bn) * dtype_bytes
+    out_tile = jt * bm * bn * dtype_bytes
+    bcast_temp = bk * jt * bm * bn * dtype_bytes
+    return {"panels": panels, "out_tile": out_tile, "interpret_bcast_temp": bcast_temp}

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the CoMet-RS kernels.
+
+These are the correctness ground truth for every kernel and compute-graph
+variant in this package (Layer 1 Pallas kernels and Layer 2 XLA graphs),
+and — via the AOT artifacts — transitively for the Rust runtime path.
+
+All functions are direct, unoptimized transcriptions of the paper's
+definitions (Joubert et al., Parallel Computing 2018, §2):
+
+  n2(u, v)      = sum_q min(u_q, v_q)                  ("min-product")
+  d2(u, v)      = sum_q u_q + sum_q v_q
+  c2(u, v)      = 2 n2 / d2                            (2-way metric)
+
+  n3'(u, v, w)  = sum_q min(u_q, v_q, w_q)
+  n3(u, v, w)   = n2(u,v) + n2(u,w) + n2(v,w) - n3'
+  d3(u, v, w)   = sum_q u_q + sum_q v_q + sum_q w_q
+  c3(u, v, w)   = (3/2) n3 / d3                        (3-way metric)
+
+Matrices hold vectors as COLUMNS: V is [n_f, n_v] (paper's layout).
+"""
+
+import jax.numpy as jnp
+
+
+def mgemm2(w, v):
+    """Min-product GEMM: out[i, j] = sum_q min(w[q, i], v[q, j]).
+
+    This is M = W^T ∘min V from paper §3.1 — the BLAS-3-like kernel whose
+    optimized forms live in mgemm.py (Pallas) and model.py (XLA graph).
+    O(n_f · m · n) memory; small shapes only.
+    """
+    return jnp.minimum(w[:, :, None], v[:, None, :]).sum(axis=0)
+
+
+def gemm(w, v):
+    """True GEMM comparator: out = W^T V (paper Table 1 reference rows)."""
+    return w.T @ v
+
+
+def mgemm3(vi, vj, vk):
+    """3-way min-product slab: out[t, i, k] = sum_q min(vj[q,t], vi[q,i], vk[q,k]).
+
+    vi: [n_f, m], vj: [n_f, jt], vk: [n_f, n] -> out [jt, m, n].
+    These are the paper's B_j entries n3'(v_i, v_j, v_k) for each column t
+    of vj (§3.2: X_j, then B_j = X_j^T ∘min V; associativity of min folds
+    the two stages into one triple min). Small shapes only.
+    """
+    trip = jnp.minimum(
+        jnp.minimum(
+            vj[:, :, None, None],  # [nf, jt, 1, 1]
+            vi[:, None, :, None],  # [nf, 1,  m, 1]
+        ),
+        vk[:, None, None, :],  # [nf, 1, 1, n]
+    )  # [nf, jt, m, n]
+    return trip.sum(axis=0)
+
+
+def rowsums(v):
+    """Column sums s_j = sum_q v[q, j] — the d2/d3 denominator ingredient."""
+    return v.sum(axis=0)
+
+
+def czekanowski2(v):
+    """Full 2-way Proportional Similarity matrix C[i, j] = c2(v_i, v_j)."""
+    n = mgemm2(v, v)
+    s = rowsums(v)
+    d = s[:, None] + s[None, :]
+    return 2.0 * n / d
+
+
+def czekanowski3(v):
+    """Full 3-way Proportional Similarity tensor C[i, j, k] = c3(v_i, v_j, v_k).
+
+    Small n_v only (O(n_v^3) output).
+    """
+    n2 = mgemm2(v, v)
+    n3p = jnp.minimum(
+        jnp.minimum(v[:, :, None, None], v[:, None, :, None]), v[:, None, None, :]
+    ).sum(axis=0)
+    n3 = n2[:, :, None] + n2[:, None, :] + n2[None, :, :] - n3p
+    s = rowsums(v)
+    d = s[:, None, None] + s[None, :, None] + s[None, None, :]
+    return 1.5 * n3 / d
+
+
+def sorenson2(vbits):
+    """2-way Sorenson metric numerators for 0/1 vectors (paper §2.3).
+
+    vbits: [n_f, n_v] with entries in {0, 1}. For binary data the
+    min-product coincides with logical AND, so n2 is the co-occurrence
+    count. The Rust popcount baseline reproduces this from packed words.
+    """
+    return (vbits[:, :, None] * vbits[:, None, :]).sum(axis=0)

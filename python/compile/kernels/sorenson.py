@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: bitwise Sorenson numerators (paper §2.3).
+
+On 0/1 data the min-product coincides with logical AND, so the mGEMM
+becomes an AND+popcount contraction over words of packed bits — each
+32-bit word op performs 32 elementwise comparisons, the trick behind
+the very high comparison rates of Table 6's 1-bit codes.
+
+Layout: packed uint32 words, shape [n_w, n_v] with n_w = ⌈n_f/32⌉,
+vectors as columns (same convention as the float path). Output counts
+are uint32 — exact for any realistic n_f.
+
+The kernel is the mGEMM kernel with the scalar op swapped a second
+time: FMA → min (paper §3.1) → AND+popcount (§2.3); the BlockSpec
+schedule is identical, which is the point — the memory-hierarchy work
+transfers across metric families.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _sorenson_kernel(w_ref, v_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wt = w_ref[...]  # [bk, bm] uint32 words
+    vt = v_ref[...]  # [bk, bn]
+    conj = jnp.bitwise_and(wt[:, :, None], vt[:, None, :])  # [bk, bm, bn]
+    o_ref[...] += lax.population_count(conj).sum(axis=0, dtype=jnp.uint32)
+
+
+def sorenson2_pallas(w, v, *, bm=64, bn=64, bk=16):
+    """N[i, j] = Σ_w popcount(w[:, i] & v[:, j]) over packed words."""
+    nw, m = w.shape
+    nw2, n = v.shape
+    assert nw == nw2, (nw, nw2)
+    assert w.dtype == jnp.uint32 and v.dtype == jnp.uint32
+    assert m % bm == 0 and n % bn == 0 and nw % bk == 0, (nw, m, n, bm, bn, bk)
+    grid = (m // bm, n // bn, nw // bk)
+    return pl.pallas_call(
+        _sorenson_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,
+    )(w, v)

@@ -1,0 +1,185 @@
+"""Layer-2 compute graphs: blocked Proportional-Similarity building blocks.
+
+These are the jax functions that aot.py lowers to HLO text artifacts for
+the Rust coordinator. Each corresponds to one accelerator offload in the
+paper's node-level algorithm:
+
+  mgemm2_xla / mgemm2_ternary_xla : N = W^T ∘min V        (§3.1, the GPU kernel)
+  gemm_xla                        : W^T V                 (Table 1 comparator)
+  mgemm3_xla                      : B_j slabs             (§3.2, Algorithm 3 body)
+  rowsum_xla                      : column sums           (denominator ingredient)
+  block2_xla                      : fused N + both rowsum (hot-path variant)
+
+Denominator combination and the final quotient stay on the Rust side,
+matching the paper's CPU/GPU split ("all other computations are performed
+on the CPU", §3.1).
+
+The Pallas kernels from kernels/ are alternative lowerings of the same
+contracts; pytest asserts all variants agree with kernels/ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import mgemm as mgemm_kernels
+
+
+def _min_tiled_accum(w, v, chunk, jtile, combine):
+    """Shared tiled accumulation: output column tiles of width `jtile`,
+    each summed over feature panels of depth `chunk`.
+
+    This is the XLA-graph analogue of the Pallas kernel's VMEM schedule,
+    and the §Perf winner on the CPU backend: the [chunk, m, jtile]
+    broadcast temporary stays L2-resident (a [chunk, m, n] panel does
+    not), which measured 2–2.5× faster than feature-chunking alone
+    (EXPERIMENTS.md §Perf). `chunk` must divide n_f and `jtile` n_v
+    (artifact shapes guarantee both).
+    """
+    nf, m = w.shape
+    _, n = v.shape
+    assert nf % chunk == 0, (nf, chunk)
+    assert n % jtile == 0, (n, jtile)
+
+    def jbody(c, acc):
+        vc = lax.dynamic_slice_in_dim(v, c * jtile, jtile, axis=1)
+
+        def fbody(k, a):
+            wc = lax.dynamic_slice_in_dim(w, k * chunk, chunk, axis=0)
+            vcc = lax.dynamic_slice_in_dim(vc, k * chunk, chunk, axis=0)
+            return a + combine(wc, vcc)
+
+        blk = lax.fori_loop(0, nf // chunk, fbody, jnp.zeros((m, jtile), w.dtype))
+        return lax.dynamic_update_slice(acc, blk, (0, c * jtile))
+
+    return lax.fori_loop(0, n // jtile, jbody, jnp.zeros((m, n), w.dtype))
+
+
+def mgemm2_xla(w, v, *, chunk=128, jtile=4):
+    """N[i, j] = sum_q min(w[q, i], v[q, j]) — hardware-min lowering."""
+
+    def combine(wc, vc):
+        return jnp.minimum(wc[:, :, None], vc[:, None, :]).sum(axis=0)
+
+    return _min_tiled_accum(w, v, chunk, jtile, combine)
+
+
+def mgemm2_ternary_xla(w, v, *, chunk=128, jtile=4):
+    """Same contract with the select/ternary min (paper Table 1 row 1)."""
+
+    def combine(wc, vc):
+        a = wc[:, :, None]
+        b = vc[:, None, :]
+        return jnp.where(a <= b, a, b).sum(axis=0)
+
+    return _min_tiled_accum(w, v, chunk, jtile, combine)
+
+
+def gemm_xla(w, v):
+    """True GEMM W^T V via the platform-native dot (the "cuBLAS" row)."""
+    return w.T @ v
+
+
+def rowsum_xla(v):
+    """s_j = sum_q v[q, j]."""
+    return v.sum(axis=0)
+
+
+def block2_xla(w, v, *, chunk=128, jtile=4):
+    """Fused 2-way block: (N, rowsums(W), rowsums(V)) in one offload.
+
+    One execute() call per off-diagonal block instead of three; the Rust
+    driver combines s_i + s_j and forms the quotient.
+    """
+    n = mgemm2_xla(w, v, chunk=chunk, jtile=jtile)
+    return n, rowsum_xla(w), rowsum_xla(v)
+
+
+def mgemm3_xla(vi, vj, vk, *, chunk=128, ktile=4):
+    """B[t, i, k] = sum_q min(vj[q, t], vi[q, i], vk[q, k]).
+
+    Mirrors the paper's Algorithm 3 inner pipeline: for each pivot column
+    t, build X_t = vj[:, t] ∘min Vi, then a 2-way mGEMM X_t^T ∘min Vk.
+    scan over t keeps the lowered module compact; the inner mGEMM uses
+    the tiled schedule of [`_min_tiled_accum`] (`ktile` columns of Vk at
+    a time) except when ktile is None (plain feature chunking — measured
+    faster for the f32 small tier, EXPERIMENTS.md §Perf).
+    """
+    nf, m = vi.shape
+    _, jt = vj.shape
+    _, n = vk.shape
+
+    def combine(xc, vc):
+        return jnp.minimum(xc[:, :, None], vc[:, None, :]).sum(axis=0)
+
+    def per_pivot(_, t):
+        xt = jnp.minimum(vj[:, t][:, None], vi)  # [nf, m] — the X_j columns
+        if ktile is None:
+            def body(c, acc):
+                xc = lax.dynamic_slice_in_dim(xt, c * chunk, chunk, axis=0)
+                vc = lax.dynamic_slice_in_dim(vk, c * chunk, chunk, axis=0)
+                return acc + combine(xc, vc)
+
+            plane = lax.fori_loop(0, nf // chunk, body, jnp.zeros((m, n), vi.dtype))
+        else:
+            plane = _min_tiled_accum(xt, vk, chunk, ktile, combine)
+        return None, plane
+
+    _, slabs = lax.scan(per_pivot, None, jnp.arange(jt))
+    return slabs  # [jt, m, n]
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed variants (Layer 1 inside the Layer 2 graph): same contracts,
+# lowered through the tiled kernels so the identical HLO pipeline the TPU
+# path would use is exercised end-to-end from Rust.
+# ---------------------------------------------------------------------------
+
+
+def mgemm2_pallas(w, v, *, bm=64, bn=64, bk=64, min_impl="minimum"):
+    return mgemm_kernels.mgemm2_pallas(w, v, bm=bm, bn=bn, bk=bk, min_impl=min_impl)
+
+
+def mgemm3_pallas(vi, vj, vk, *, bm=32, bn=32, bk=64, min_impl="minimum"):
+    return mgemm_kernels.mgemm3_pallas(vi, vj, vk, bm=bm, bn=bn, bk=bk, min_impl=min_impl)
+
+
+def gemm_pallas(w, v, *, bm=64, bn=64, bk=64):
+    from compile.kernels import gemm as gemm_kernels
+
+    return gemm_kernels.gemm_pallas(w, v, bm=bm, bn=bn, bk=bk)
+
+
+def sorenson2_pallas(w, v, *, bm=64, bn=64, bk=16):
+    from compile.kernels import sorenson as sorenson_kernels
+
+    return sorenson_kernels.sorenson2_pallas(w, v, bm=bm, bn=bn, bk=bk)
+
+
+def sorenson2_xla(w, v, *, chunk=16, jtile=8):
+    """Bitwise Sorenson numerators as an XLA graph (§2.3): the 2-way
+    mGEMM schedule with AND+popcount as the scalar contraction over
+    packed uint32 words [n_w, n_v]."""
+
+    def combine(wc, vc):
+        conj = jnp.bitwise_and(wc[:, :, None], vc[:, None, :])
+        return lax.population_count(conj).sum(axis=0, dtype=jnp.uint32)
+
+    nw, m = w.shape
+    _, n = v.shape
+    assert nw % chunk == 0 and n % jtile == 0, (nw, chunk, n, jtile)
+
+    def jbody(c, acc):
+        vc = lax.dynamic_slice_in_dim(v, c * jtile, jtile, axis=1)
+
+        def fbody(k, a):
+            wc = lax.dynamic_slice_in_dim(w, k * chunk, chunk, axis=0)
+            vcc = lax.dynamic_slice_in_dim(vc, k * chunk, chunk, axis=0)
+            return a + combine(wc, vcc)
+
+        blk = lax.fori_loop(0, nw // chunk, fbody, jnp.zeros((m, jtile), jnp.uint32))
+        return lax.dynamic_update_slice(acc, blk, (0, c * jtile))
+
+    return lax.fori_loop(0, n // jtile, jbody, jnp.zeros((m, n), jnp.uint32))

@@ -1,0 +1,62 @@
+"""AOT pipeline tests: artifact table consistency and HLO lowering sanity."""
+
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+
+
+def test_artifact_table_well_formed():
+    table = aot.build_artifact_table()
+    names = [row[0] for row in table]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for name, kind, dtag, nf, nv, jt, fn, specs in table:
+        assert dtag in ("f32", "f64", "u32")
+        if dtag == "u32":
+            assert nf % 32 == 0, f"{name}: bit depth must pack into words"
+            continue
+        assert nf % aot.XLA_CHUNK == 0, f"{name}: chunk must divide nf"
+        if "pallas" in kind and jt == 0:
+            assert nf % aot.PALLAS_2WAY["bk"] == 0
+            assert nv % aot.PALLAS_2WAY["bm"] == 0
+        if jt > 0:
+            assert nv % aot.PALLAS_3WAY["bm"] == 0
+
+
+def test_table_covers_all_required_kinds():
+    kinds = {row[1] for row in aot.build_artifact_table()}
+    required = {
+        "mgemm2", "mgemm2ternary", "mgemm2pallas", "mgemm2pallasternary",
+        "gemm", "gemmpallas", "block2", "rowsum", "mgemm3", "mgemm3pallas",
+        "sorenson2", "sorenson2pallas",
+    }
+    assert required <= kinds
+
+
+@pytest.mark.parametrize("prefix", ["mgemm2_f32_s", "gemm_f64_s", "mgemm3_f32_s"])
+def test_lowering_produces_hlo_text(prefix):
+    table = aot.build_artifact_table()
+    row = next(r for r in table if r[0] == prefix)
+    name, kind, dtag, nf, nv, jt, fn, specs = row
+    text = aot.lower_artifact(fn, specs)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ROOT" in text
+    # Tuple-rooted (return_tuple=True) — the Rust side unwraps with to_tuple*.
+    assert "tuple" in text.lower()
+
+
+def test_manifest_written(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--only", "rowsum_f32_s"])
+    assert rc == 0
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    body = [l for l in manifest if not l.startswith("#")]
+    assert len(body) == len(aot.build_artifact_table())
+    cols = body[0].split()
+    assert len(cols) == 7
+    assert os.path.exists(tmp_path / "rowsum_f32_s.hlo.txt")
+    assert os.path.exists(tmp_path / "kernel_report.txt")

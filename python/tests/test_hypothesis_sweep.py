@@ -1,0 +1,116 @@
+"""Hypothesis sweeps: Pallas kernel shape/dtype/value space vs. the oracle.
+
+The paper's correctness story rests on the mGEMM being *exactly* a GEMM
+with the scalar op swapped; these sweeps probe the places that can break
+that equivalence — tile-boundary arithmetic, accumulation order, dtype
+edge values (zeros, denormal-adjacent, equal elements where ternary vs.
+min lowering could diverge).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import mgemm as mgemm_kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def np_mgemm2(w, v):
+    return np.minimum(w[:, :, None], v[:, None, :]).sum(axis=0)
+
+
+@st.composite
+def matrices_2way(draw, max_mult=3):
+    """Tile-multiple shapes with values including exact ties and zeros."""
+    bk = 64
+    km = draw(st.integers(1, max_mult))
+    mm = draw(st.integers(1, 2))
+    nm = draw(st.integers(1, 2))
+    nf, m, n = bk * km, 64 * mm, 64 * nm
+    seed = draw(st.integers(0, 2**32 - 1))
+    rng = np.random.default_rng(seed)
+    w = rng.random((nf, m))
+    v = rng.random((nf, n))
+    # Inject structured edge values: exact zeros, exact ties across operands.
+    w[rng.random((nf, m)) < 0.05] = 0.0
+    v[rng.random((nf, n)) < 0.05] = 0.0
+    tie_rows = rng.integers(0, nf, size=nf // 8)
+    v[tie_rows, : min(m, n)] = w[tie_rows, : min(m, n)]
+    return w, v
+
+
+@given(matrices_2way(), st.sampled_from(["f32", "f64"]))
+@settings(**SETTINGS)
+def test_mgemm2_pallas_sweep(wv, dtag):
+    w, v = wv
+    dt = jnp.float32 if dtag == "f32" else jnp.float64
+    wj, vj = jnp.asarray(w, dt), jnp.asarray(v, dt)
+    got = np.asarray(mgemm_kernels.mgemm2_pallas(wj, vj))
+    want = np_mgemm2(np.asarray(wj), np.asarray(vj))
+    rtol = 2e-5 if dtag == "f32" else 1e-12
+    np.testing.assert_allclose(got, want, rtol=rtol)
+
+
+@given(matrices_2way(max_mult=2), st.sampled_from(["minimum", "ternary"]))
+@settings(**SETTINGS)
+def test_mgemm2_xla_min_impls_sweep(wv, impl):
+    w, v = wv
+    wj, vj = jnp.asarray(w), jnp.asarray(v)
+    fn = model.mgemm2_xla if impl == "minimum" else model.mgemm2_ternary_xla
+    got = np.asarray(fn(wj, vj, chunk=64))
+    np.testing.assert_allclose(got, np_mgemm2(w, v), rtol=1e-12)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 2), st.sampled_from([4, 8]))
+@settings(**SETTINGS)
+def test_mgemm3_pallas_sweep(seed, kmult, jt):
+    rng = np.random.default_rng(seed)
+    nf = 64 * kmult
+    vi = rng.random((nf, 32))
+    vj = rng.random((nf, jt))
+    vk = rng.random((nf, 64))
+    got = np.asarray(
+        mgemm_kernels.mgemm3_pallas(
+            jnp.asarray(vi), jnp.asarray(vj), jnp.asarray(vk), bm=32, bn=32, bk=64
+        )
+    )
+    want = np.minimum(
+        np.minimum(vj[:, :, None, None], vi[:, None, :, None]), vk[:, None, None, :]
+    ).sum(axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_grid_valued_bitwise_agreement(seed):
+    """On the k/64 grid all lowerings must agree BIT-FOR-BIT (paper §5)."""
+    rng = np.random.default_rng(seed)
+    w = np.floor(rng.random((128, 64)) * 64.0) / 64.0
+    v = np.floor(rng.random((128, 64)) * 64.0) / 64.0
+    wj, vj = jnp.asarray(w, jnp.float32), jnp.asarray(v, jnp.float32)
+    outs = [
+        np.asarray(model.mgemm2_xla(wj, vj, chunk=64)),
+        np.asarray(model.mgemm2_ternary_xla(wj, vj, chunk=64)),
+        np.asarray(mgemm_kernels.mgemm2_pallas(wj, vj)),
+        np.asarray(mgemm_kernels.mgemm2_pallas(wj, vj, min_impl="ternary")),
+        np_mgemm2(np.asarray(wj), np.asarray(vj)).astype(np.float32),
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_c2_bounds_sweep(seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.random((64, 12)) + 1e-6)
+    c = np.asarray(ref.czekanowski2(v))
+    assert (c >= 0.0).all() and (c <= 1.0 + 1e-12).all()
+    np.testing.assert_allclose(np.diag(c), 1.0, rtol=1e-12)

@@ -1,0 +1,185 @@
+"""Kernel correctness: every Pallas kernel and XLA graph vs. the jnp oracle.
+
+This is the CORE correctness signal for Layers 1 and 2: the Rust runtime
+executes AOT lowerings of exactly these functions, so agreement here plus
+the Rust-side HLO round-trip test pins the whole accelerator path.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import gemm as gemm_kernels
+from compile.kernels import mgemm as mgemm_kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(20180326)  # paper acceptance date
+
+
+def rand_v(nf, nv, dtype, grid=False):
+    """Non-negative test vectors; grid=True snaps to k/64 (exact-sum grid)."""
+    x = RNG.random((nf, nv))
+    if grid:
+        x = np.floor(x * 64.0) / 64.0
+    return jnp.asarray(x, dtype=dtype)
+
+
+TOL = {jnp.float32: 1e-5, jnp.float64: 1e-12}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("nf,m,n", [(64, 64, 64), (128, 64, 128), (192, 128, 64)])
+def test_mgemm2_pallas_vs_ref(dtype, nf, m, n):
+    w, v = rand_v(nf, m, dtype), rand_v(nf, n, dtype)
+    got = mgemm_kernels.mgemm2_pallas(w, v, bm=64, bn=64, bk=64)
+    want = ref.mgemm2(w, v)
+    np.testing.assert_allclose(got, want, rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_mgemm2_pallas_ternary_matches_minimum(dtype):
+    w, v = rand_v(128, 64, dtype), rand_v(128, 64, dtype)
+    a = mgemm_kernels.mgemm2_pallas(w, v, min_impl="minimum")
+    b = mgemm_kernels.mgemm2_pallas(w, v, min_impl="ternary")
+    # The two min lowerings are bit-identical on non-NaN data.
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_mgemm2_xla_vs_ref(dtype, chunk):
+    w, v = rand_v(128, 96, dtype), rand_v(128, 32, dtype)
+    got = model.mgemm2_xla(w, v, chunk=chunk)
+    want = ref.mgemm2(w, v)
+    np.testing.assert_allclose(got, want, rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_mgemm2_ternary_xla_vs_ref(dtype):
+    w, v = rand_v(128, 64, dtype), rand_v(128, 64, dtype)
+    got = model.mgemm2_ternary_xla(w, v, chunk=64)
+    np.testing.assert_allclose(got, ref.mgemm2(w, v), rtol=TOL[dtype])
+
+
+def test_mgemm2_grid_inputs_exact_f32():
+    """On the k/64 value grid every partial sum is exact in f32, so all
+    variants agree bit-for-bit — the basis of the paper's bit-identical
+    checksum across decompositions (§5)."""
+    w = rand_v(384, 64, jnp.float32, grid=True)
+    v = rand_v(384, 64, jnp.float32, grid=True)
+    a = np.asarray(model.mgemm2_xla(w, v, chunk=64))
+    b = np.asarray(mgemm_kernels.mgemm2_pallas(w, v))
+    c = np.asarray(ref.mgemm2(w, v))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_gemm_pallas_vs_ref(dtype):
+    w, v = rand_v(128, 64, dtype), rand_v(128, 64, dtype)
+    got = gemm_kernels.gemm_pallas(w, v)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(got, ref.gemm(w, v), rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("jt", [4, 8])
+def test_mgemm3_pallas_vs_ref(dtype, jt):
+    vi, vj, vk = rand_v(128, 32, dtype), rand_v(128, jt, dtype), rand_v(128, 64, dtype)
+    got = mgemm_kernels.mgemm3_pallas(vi, vj, vk, bm=32, bn=32, bk=64)
+    want = ref.mgemm3(vi, vj, vk)
+    np.testing.assert_allclose(got, want, rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_mgemm3_xla_vs_ref(dtype):
+    vi, vj, vk = rand_v(128, 32, dtype), rand_v(128, 8, dtype), rand_v(128, 32, dtype)
+    got = model.mgemm3_xla(vi, vj, vk, chunk=64)
+    np.testing.assert_allclose(got, ref.mgemm3(vi, vj, vk), rtol=TOL[dtype])
+
+
+def test_mgemm3_symmetry():
+    """n3' is symmetric under any permutation of its three vectors."""
+    v = rand_v(64, 8, jnp.float64)
+    full = np.asarray(ref.mgemm3(v, v, v))  # [t, i, k]
+    for perm in [(0, 2, 1), (1, 0, 2), (2, 1, 0), (1, 2, 0), (2, 0, 1)]:
+        np.testing.assert_allclose(full, full.transpose(perm), rtol=1e-12)
+
+
+def test_block2_xla_parts():
+    w, v = rand_v(128, 64, jnp.float64), rand_v(128, 64, jnp.float64)
+    n, sw, sv = model.block2_xla(w, v, chunk=64)
+    np.testing.assert_allclose(n, ref.mgemm2(w, v), rtol=1e-12)
+    np.testing.assert_allclose(sw, ref.rowsums(w), rtol=1e-12)
+    np.testing.assert_allclose(sv, ref.rowsums(v), rtol=1e-12)
+
+
+def test_rowsum():
+    v = rand_v(100, 10, jnp.float64)
+    np.testing.assert_allclose(model.rowsum_xla(v), np.asarray(v).sum(0), rtol=1e-12)
+
+
+class TestMetricProperties:
+    """Paper §2 mathematical properties of the metrics themselves."""
+
+    def test_c2_range_and_symmetry(self):
+        v = rand_v(64, 16, jnp.float64)
+        c = np.asarray(ref.czekanowski2(v))
+        assert (c >= -1e-12).all() and (c <= 1.0 + 1e-12).all()
+        np.testing.assert_allclose(c, c.T, rtol=1e-12)
+        # Self-similarity is exactly 1: c2(v, v) = 2*sum(v)/(2*sum(v)).
+        np.testing.assert_allclose(np.diag(c), 1.0, rtol=1e-12)
+
+    def test_c2_identical_vectors(self):
+        u = np.abs(RNG.random(64))
+        v = jnp.asarray(np.stack([u, u], axis=1))
+        c = np.asarray(ref.czekanowski2(v))
+        np.testing.assert_allclose(c, 1.0, rtol=1e-12)
+
+    def test_c2_disjoint_support_is_zero(self):
+        a = np.zeros(64)
+        b = np.zeros(64)
+        a[:32] = 1.0
+        b[32:] = 1.0
+        v = jnp.asarray(np.stack([a, b], axis=1))
+        c = np.asarray(ref.czekanowski2(v))
+        assert c[0, 1] == 0.0
+
+    def test_c3_range_and_total_symmetry(self):
+        v = rand_v(48, 8, jnp.float64)
+        c = np.asarray(ref.czekanowski3(v))
+        assert (c >= -1e-12).all() and (c <= 1.5 + 1e-9).all()
+        for perm in [(0, 2, 1), (1, 0, 2), (2, 1, 0)]:
+            np.testing.assert_allclose(c, c.transpose(perm), rtol=1e-12)
+
+    def test_c3_identical_triple(self):
+        u = np.abs(RNG.random(32)) + 0.1
+        v = jnp.asarray(np.stack([u, u, u], axis=1))
+        c = np.asarray(ref.czekanowski3(v))
+        # n3 = 3 n2 - n3' = 3 s - s = 2 s ; d3 = 3 s ; c3 = 1.5 * 2/3 = 1.
+        np.testing.assert_allclose(c[0, 1, 2], 1.0, rtol=1e-12)
+
+    def test_n3_inclusion_exclusion_identity(self):
+        """Eq. (1): n3 = n2(ij) + n2(ik) + n2(jk) - n3'."""
+        v = rand_v(64, 6, jnp.float64)
+        n2 = np.asarray(ref.mgemm2(v, v))
+        n3p = np.asarray(ref.mgemm3(v, v, v))  # [t=j, i, k]
+        s = np.asarray(ref.rowsums(v))
+        c3 = np.asarray(ref.czekanowski3(v))
+        i, j, k = 1, 3, 5
+        n3 = n2[i, j] + n2[i, k] + n2[j, k] - n3p[j, i, k]
+        d3 = s[i] + s[j] + s[k]
+        np.testing.assert_allclose(c3[i, j, k], 1.5 * n3 / d3, rtol=1e-12)
+
+    def test_sorenson_equals_czekanowski_on_binary(self):
+        """§2.3: Sorenson == Proportional Similarity when entries ∈ {0,1}."""
+        bits = (RNG.random((96, 12)) < 0.4).astype(np.float64)
+        v = jnp.asarray(bits)
+        n_ps = np.asarray(ref.mgemm2(v, v))
+        n_sor = np.asarray(ref.sorenson2(v))
+        np.testing.assert_array_equal(n_ps, n_sor)

@@ -1,0 +1,56 @@
+//! Ablation — Figure 2(a–c): naive upper-triangular block assignment vs
+//! the paper's block-circulant schedule.
+//!
+//! The paper's claim: the naive plan leaves block rows with up to 2×
+//! the average work (Figure 2(b)); the circulant plan equalizes rows
+//! exactly (Figure 2(c)) — worth "the potential 2X-6X performance loss
+//! factor" of the title claim's redundancy/imbalance elimination.
+
+use comet::decomp::two_way;
+use comet::util::fmt;
+
+fn main() {
+    println!("Ablation — 2-way load balance: naive (Fig 2a) vs block-circulant (Fig 2c)\n");
+    let mut table = fmt::Table::new(&[
+        "npv", "naive min..max", "naive makespan/ideal", "circulant min..max", "circulant makespan/ideal",
+    ]);
+    for npv in [4usize, 8, 16, 32, 64] {
+        let naive: Vec<usize> = (0..npv).map(|pv| two_way::plan_naive(npv, pv).len()).collect();
+        let circ: Vec<usize> = (0..npv)
+            .map(|pv| two_way::blocks_per_node(npv, 1, pv, 0))
+            .collect();
+        let ideal = |v: &[usize]| v.iter().sum::<usize>() as f64 / v.len() as f64;
+        let makespan = |v: &[usize]| *v.iter().max().unwrap() as f64;
+        table.row(&[
+            npv.to_string(),
+            format!("{}..{}", naive.iter().min().unwrap(), naive.iter().max().unwrap()),
+            format!("{:.2}×", makespan(&naive) / ideal(&naive)),
+            format!("{}..{}", circ.iter().min().unwrap(), circ.iter().max().unwrap()),
+            format!("{:.2}×", makespan(&circ) / ideal(&circ)),
+        ]);
+    }
+    table.print();
+    println!("\nexpected: naive →(≈2.0× makespan inflation as npv grows); circulant ≈1.0×.");
+
+    // 3-way: volume-combo ownership balance across slabs.
+    println!("\n3-way volume-combo ownership balance (circular-canonical rule):");
+    let mut t3 = fmt::Table::new(&["npv", "combos/slab min..max", "slices/slab (paper (npv+1)(npv+2))"]);
+    for npv in [4usize, 6, 8, 12] {
+        use comet::decomp::three_way;
+        let counts: Vec<usize> = (0..npv)
+            .map(|pv| three_way::combos_owned(npv, pv).len())
+            .collect();
+        let slices: Vec<usize> = (0..npv).map(|pv| three_way::slices_per_slab(npv, pv)).collect();
+        t3.row(&[
+            npv.to_string(),
+            format!("{}..{}", counts.iter().min().unwrap(), counts.iter().max().unwrap()),
+            format!(
+                "{}..{} (paper {})",
+                slices.iter().min().unwrap(),
+                slices.iter().max().unwrap(),
+                (npv + 1) * (npv + 2)
+            ),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,111 @@
+//! Ablation — §6.3 model fidelity: predicted vs measured step times for
+//! the 2-way pipeline on this testbed, plus the model's tuning-advice
+//! directions (larger blocks ⇒ higher mGEMM fraction; fewer stages ⇒
+//! higher 3-way efficiency).
+
+use comet::comm::cost::CostModel;
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run;
+use comet::decomp::Grid;
+use comet::perfmodel::{self, ModelInput};
+use comet::util::fmt;
+use comet::vecdata::SyntheticKind;
+
+/// Host cost model: in-process channels are ~free; measure an effective
+/// bandwidth from one exchange-heavy run.
+fn host_net() -> CostModel {
+    CostModel { latency_s: 2e-6, bandwidth_bps: 2.0e9 }
+}
+
+fn measured_total(nvp: usize, nf: usize, npv: usize) -> (f64, f64) {
+    let cfg = RunConfig {
+        num_way: 2,
+        nv: nvp * npv,
+        nf,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, npv, 1),
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 3 },
+        store_metrics: false,
+        ..Default::default()
+    };
+    let out = run(&cfg).unwrap();
+    // Per-virtual-node compute second (shared core ⇒ divide by np).
+    (out.stats.t_total / npv as f64, out.stats.t_compute)
+}
+
+fn main() {
+    println!("Ablation — §6.3 performance model vs measurement (2-way, DP, native backend)\n");
+
+    // Calibrate t_gemm from a single-node run.
+    let nf = 384;
+    let nvp = 192;
+    let (t_single, _) = measured_total(nvp, nf, 1);
+    let blocks_single = 1.0; // npv=1: one diagonal block
+    let t_gemm = t_single / blocks_single;
+
+    let mut table = fmt::Table::new(&["npv", "load ℓ", "predicted/node", "measured/node", "ratio"]);
+    for npv in [2usize, 3, 4, 6] {
+        let load = comet::decomp::two_way::blocks_per_node(npv, 1, 0, 0);
+        let m = ModelInput {
+            nfp: nf,
+            nvp,
+            elem_bytes: 8,
+            t_gemm,
+            t_cpu: 0.1 * t_gemm,
+            load,
+            nst: 1,
+            net: host_net(),
+            link: host_net(),
+        };
+        let pred = perfmodel::predict_2way(&m).total;
+        let (meas, _) = measured_total(nvp, nf, npv);
+        table.row(&[
+            npv.to_string(),
+            load.to_string(),
+            fmt::secs(pred),
+            fmt::secs(meas),
+            format!("{:.2}", meas / pred),
+        ]);
+    }
+    table.print();
+    println!("\nexpect ratio ≈ 1 within a small factor — the model is a step-count ×");
+    println!("kernel-time estimate, and ℓ grows with npv at npr=1 (paper §6.3).");
+
+    // Tuning-advice directions.
+    println!("\nmodel advice sweeps (§6.3 guidance):");
+    let base = ModelInput {
+        nfp: 5000,
+        nvp: 10_240,
+        elem_bytes: 8,
+        t_gemm: 6.5,
+        t_cpu: 0.1,
+        load: 13,
+        nst: 16,
+        net: CostModel::gemini(),
+        link: CostModel::pcie2(),
+    };
+    let mut t2 = fmt::Table::new(&["knob", "setting", "mGEMM fraction"]);
+    for load in [1usize, 4, 13] {
+        let m = ModelInput { load, ..base };
+        t2.row(&[
+            "load ℓ".into(),
+            load.to_string(),
+            format!("{:.1}%", 100.0 * perfmodel::predict_2way(&m).gemm_fraction()),
+        ]);
+    }
+    for nst in [1usize, 16, 240] {
+        let m = ModelInput { nvp: 2880, t_gemm: 0.5, load: 6, nst, ..base };
+        t2.row(&[
+            "stages n_st (3-way)".into(),
+            nst.to_string(),
+            format!("{:.1}%", 100.0 * perfmodel::predict_3way(&m).gemm_fraction()),
+        ]);
+    }
+    t2.print();
+    println!("\nexpect: fraction rises with ℓ, falls with n_st — the paper's 'maximize ℓ,");
+    println!("minimize n_st subject to memory' tuning rule.");
+
+    let (npv, npr, nst) = perfmodel::advise(32, 200_000, 6 << 30, 8, 2);
+    println!("\nadvise(np=32, nv=200k, 6 GB, DP, 2-way) -> npv={npv} npr={npr} nst={nst}");
+}

@@ -1,0 +1,144 @@
+//! Figure 6 — strong scaling, 2-way and 3-way, double precision.
+//!
+//! Fixed problem, growing node count (paper: 2→64 Titan nodes, best
+//! decomposition per count; parallel efficiency 79% / 34%).
+//!
+//! On one physical core, virtual-node wall-clock cannot show speedup;
+//! we therefore report the two quantities the paper's curves are built
+//! from: (a) measured per-node *work* (max blocks/slices per node —
+//! the load-balance component of strong scaling) and (b) the §6.3
+//! model-projected runtime combining measured single-node kernel rates
+//! with the comm cost model — the same methodology the paper's model
+//! section validates.
+
+use comet::comm::cost::CostModel;
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run;
+use comet::decomp::{three_way, two_way, Grid};
+use comet::metrics::counts;
+use comet::perfmodel::{self, ModelInput};
+use comet::util::fmt;
+use comet::vecdata::SyntheticKind;
+
+fn main() {
+    // Scaled problem: nv fixed, nodes 2..8 (paper: 16,384 / 1,544
+    // vectors on 2..64 nodes).
+    let nf = 384usize;
+    let nv2 = 512usize;
+    let nv3 = 120usize;
+
+    // Measure the single-node mGEMM rate once (native backend — the
+    // kernel-rate source for the model).
+    let probe = RunConfig {
+        num_way: 2,
+        nv: 256,
+        nf,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, 1, 1),
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 4 },
+        store_metrics: false,
+        ..Default::default()
+    };
+    let out = run(&probe).unwrap();
+    let ops = counts::ops_2way_numerators(nf, 256) as f64;
+    let gemm_rate = ops / out.stats.t_compute; // ops/s on this host
+    println!(
+        "Figure 6 — strong scaling (fixed problem), DP. kernel rate probe: {}\n",
+        fmt::rate(gemm_rate)
+    );
+
+    let mut table = fmt::Table::new(&[
+        "np", "2way max-load", "2way balance", "2way t_model", "2way eff",
+        "3way max-slices", "3way t_model", "3way eff",
+    ]);
+    let mut t2_first = 0.0;
+    let mut t3_first = 0.0;
+    let mut np_first = 0;
+    for np in [2usize, 4, 8, 16, 32, 64] {
+        // Best decomposition: npv = np (pure vector split) vs npv·npr.
+        let (npv2, npr2) = best_grid_2way(np);
+        let nvp2 = nv2.div_ceil(npv2);
+        let loads: Vec<usize> = (0..npv2)
+            .flat_map(|pv| (0..npr2).map(move |pr| two_way::blocks_per_node(npv2, npr2, pv, pr)))
+            .collect();
+        let lmax = *loads.iter().max().unwrap();
+        let lmin = *loads.iter().min().unwrap();
+        let t_block = counts::ops_mgemm_block(nf, nvp2, nvp2) as f64 / gemm_rate;
+        let m2 = ModelInput {
+            nfp: nf,
+            nvp: nvp2,
+            elem_bytes: 8,
+            t_gemm: t_block,
+            t_cpu: 0.05 * t_block,
+            load: lmax,
+            nst: 1,
+            net: CostModel::gemini(),
+            link: CostModel::pcie2(),
+        };
+        let t2 = perfmodel::predict_2way(&m2).total;
+
+        let (npv3, npr3) = best_grid_3way(np);
+        let nvp3 = nv3.div_ceil(npv3);
+        let smax = (0..npv3)
+            .flat_map(|pv| {
+                (0..npr3).map(move |pr| three_way::slices_for_node(npv3, npr3, pv, pr).len())
+            })
+            .max()
+            .unwrap();
+        let t_block3 = counts::ops_mgemm3_slab(nf, 6, nvp3, nvp3) as f64 / gemm_rate;
+        let m3 = ModelInput {
+            nfp: nf,
+            nvp: nvp3,
+            elem_bytes: 8,
+            t_gemm: t_block3,
+            t_cpu: 0.05 * t_block3,
+            load: smax,
+            nst: 1,
+            net: CostModel::gemini(),
+            link: CostModel::pcie2(),
+        };
+        let t3 = perfmodel::predict_3way(&m3).total;
+
+        if np_first == 0 {
+            np_first = np;
+            t2_first = t2;
+            t3_first = t3;
+        }
+        let eff2 = t2_first * np_first as f64 / (t2 * np as f64);
+        let eff3 = t3_first * np_first as f64 / (t3 * np as f64);
+        table.row(&[
+            np.to_string(),
+            format!("{lmax}"),
+            format!("{lmin}..{lmax}"),
+            fmt::secs(t2),
+            format!("{:.0}%", 100.0 * eff2),
+            format!("{smax}"),
+            fmt::secs(t3),
+            format!("{:.0}%", 100.0 * eff3),
+        ]);
+    }
+    table.print();
+    println!("\npaper Figure 6: 79% (2-way) and 34% (3-way) efficiency at 64 vs 2 nodes;");
+    println!("3-way drops faster because the fixed problem leaves tiny per-node blocks —");
+    println!("the same crossover the model rows above reproduce.");
+}
+
+fn best_grid_2way(np: usize) -> (usize, usize) {
+    // Prefer pure vector decomposition until blocks get thin, then npr.
+    for npv in (1..=np).rev() {
+        if np % npv == 0 && npv <= 16 {
+            return (npv, np / npv);
+        }
+    }
+    (np, 1)
+}
+
+fn best_grid_3way(np: usize) -> (usize, usize) {
+    for npv in (1..=np).rev() {
+        if np % npv == 0 && npv <= 8 {
+            return (npv, np / npv);
+        }
+    }
+    (np, 1)
+}

@@ -1,0 +1,86 @@
+//! Table 5 — the realistic PheWAS sample problem with unoptimized I/O:
+//! input read, metrics computation, and output write timed separately;
+//! short real vector length (n_f = 385) vs a long-vector control.
+//!
+//! Paper: n_v = 189,625 × n_f = 385 poplar SNP/metabolite profiles, SP;
+//! rate/node 125e9 cmp/s at n_f = 385 vs 415e9 at n_f = 20,000 (2-way)
+//! — the short-depth mGEMM runs below peak. Expected shape here: the
+//! long-n_f control shows a clearly higher per-node comparison rate.
+
+use std::path::Path;
+
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run_with_client;
+use comet::decomp::Grid;
+use comet::metrics::{counts, indexing};
+use comet::util::fmt;
+use comet::vecdata::{io as vio, SyntheticKind, VectorSet};
+
+fn main() {
+    assert!(
+        Path::new("artifacts/manifest.txt").exists(),
+        "run `make artifacts` first"
+    );
+    let dir = std::env::temp_dir().join(format!("comet-table5-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let svc = comet::runtime::PjrtService::start(Path::new("artifacts")).unwrap();
+    let client = svc.client();
+
+    // Scaled: 2,048 vectors (paper: 189,625); n_f = 385 real shape and a
+    // 1,536-deep control (paper control: 20,000).
+    // Block sizes land on artifact-tier edges (nvb = 512 → 2×2 tiles of
+    // 256; nvb = 64 exact) so padding doesn't distort the n_f comparison.
+    let nv = 2048;
+    let nv3 = 256;
+    println!("Table 5 — sample problem timings (unoptimized I/O), single precision\n");
+    let mut table = fmt::Table::new(&[
+        "num way", "n_f", "input (s)", "metrics comp (s)", "output (s)", "cmp rate/node",
+    ]);
+
+    for (num_way, nf) in [(2usize, 385usize), (2, 1536), (3, 385), (3, 1536)] {
+        let this_nv = if num_way == 2 { nv } else { nv3 };
+        // Write the input file (its read is the timed "input" phase).
+        let input_path = dir.join(format!("in_{num_way}_{nf}.bin"));
+        let set: VectorSet<f32> =
+            VectorSet::generate(SyntheticKind::PhewasLike, 77, nf, this_nv, 0);
+        vio::write_raw(&input_path, &set).unwrap();
+
+        let cfg = RunConfig {
+            num_way,
+            nv: this_nv,
+            nf,
+            precision: Precision::F32,
+            backend: BackendKind::Pjrt,
+            grid: Grid::new(1, 4, 1),
+            num_stage: if num_way == 3 { 4 } else { 1 },
+            stage: if num_way == 3 { Some(3) } else { None },
+            input: InputSource::File { path: input_path.to_string_lossy().into_owned() },
+            store_metrics: false,
+            output_dir: (num_way == 2)
+                .then(|| dir.join(format!("out_{nf}")).to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let out = run_with_client(&cfg, Some(client.clone())).unwrap();
+        let np = cfg.grid.np() as f64;
+        let (cmps, frac) = if num_way == 2 {
+            (counts::cmp_2way(nf, this_nv) as f64, 1.0)
+        } else {
+            let f = out.stats.metrics as f64 / indexing::num_triples(this_nv) as f64;
+            (counts::cmp_3way(nf, this_nv) as f64 * f, f)
+        };
+        let _ = frac;
+        table.row(&[
+            num_way.to_string(),
+            nf.to_string(),
+            format!("{:.3}", out.stats.t_input),
+            format!("{:.3}", out.stats.t_compute),
+            if num_way == 2 { format!("{:.3}", out.stats.t_output) } else { "-".into() },
+            fmt::cmp_rate(cmps / out.stats.t_total / np),
+        ]);
+    }
+    table.print();
+    println!("\npaper Table 5 rates/node: 125e9 (n_f=385) vs 415e9 (n_f=20k) 2-way;");
+    println!("54e9 vs 321e9 3-way — longer vectors lift mGEMM efficiency. The same");
+    println!("short-vs-long ordering should appear in the rate column above.");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,118 @@
+//! Table 6 — comparison with related-work method *classes*, normalized
+//! against hardware capability.
+//!
+//! The paper compares absolute cmp/s across codes (GBOOST, GWISFI,
+//! Haque 1-bit, epiSNP, CoMet…) and a normalized performance ratio
+//! (cmp/s per peak FLOP/s). Those codes are not portable here; we
+//! reimplement the method *classes* on this host so the normalized
+//! comparison is apples-to-apples:
+//!   · 1-bit popcount similarity (Haque-style)        — bit-packed AND+popcount
+//!   · 2-bit/3-bit GWAS contingency codes (GBOOST-ish) — 2-bit packed genotype AND
+//!   · float Proportional Similarity (CoMet — ours)    — PJRT mGEMM + native
+//!
+//! Expected shape (paper §6.9): bitwise codes win absolute cmp/s by a
+//! wide margin (≥10× — elements are 1–2 bits, not 32), while the float
+//! method's normalized ratio is competitive.
+
+use std::path::Path;
+
+use comet::config::Precision;
+use comet::linalg::{optimized, sorenson};
+use comet::runtime::ops::BlockOps;
+use comet::runtime::PjrtService;
+use comet::util::timer::bench_run;
+use comet::util::fmt;
+use comet::vecdata::bits::BitVectorSet;
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+/// 2-bit genotype code baseline (GBOOST-class): each SNP is {0,1,2}
+/// packed 2 bits/entry; pair "comparison" = popcount of genotype-match
+/// planes — the same AND+popcount inner loop GBOOST runs per
+/// contingency cell.
+fn genotype_pairs(words: &[Vec<u64>], nv: usize) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..nv {
+        for j in (i + 1)..nv {
+            let (a, b) = (&words[i], &words[j]);
+            let mut c = 0u64;
+            for (x, y) in a.iter().zip(b) {
+                // genotype equality per 2-bit lane: xnor both bits.
+                let eq = !(x ^ y);
+                let lane = eq & (eq >> 1) & 0x5555_5555_5555_5555;
+                c += lane.count_ones() as u64;
+            }
+            acc += c;
+        }
+    }
+    acc
+}
+
+fn main() {
+    assert!(
+        Path::new("artifacts/manifest.txt").exists(),
+        "run `make artifacts` first"
+    );
+    let nf = 1536;
+    let nv = 192;
+    let pairs = (nv * (nv - 1) / 2) as f64;
+    let cmps = nf as f64 * pairs;
+
+    println!("Table 6 — method classes on one host core, {nv} vectors × {nf} elements\n");
+    let mut table = fmt::Table::new(&["code class", "element", "time", "cmp/s", "norm vs float-mGEMM"]);
+
+    // 1-bit Haque-class popcount.
+    let bits = BitVectorSet::generate(3, nf, nv, 0.3);
+    let t_bits = bench_run("1bit", 1, 3, || {
+        std::hint::black_box(sorenson::sorenson_all_pairs(&bits).len());
+    })
+    .median();
+
+    // 2-bit GBOOST-class genotype code.
+    let words_per = nf.div_ceil(32);
+    let geno: Vec<Vec<u64>> = (0..nv)
+        .map(|v| {
+            let mut s = comet::util::prng::Stream::for_vector(5, v as u64);
+            (0..words_per).map(|_| s.next_u64() & 0xAAAA_AAAA_AAAA_AAAA ^ s.next_u64()).collect()
+        })
+        .collect();
+    let t_geno = bench_run("2bit", 1, 3, || {
+        std::hint::black_box(genotype_pairs(&geno, nv));
+    })
+    .median();
+
+    // Float Proportional Similarity — native optimized (CoMet CPU class).
+    let v32: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 7, nf, nv, 0);
+    let t_native = bench_run("float-native", 1, 3, || {
+        std::hint::black_box(optimized::mgemm2(&v32, &v32).data.len());
+    })
+    .median();
+
+    // Float Proportional Similarity — PJRT artifact (CoMet GPU class).
+    let svc = PjrtService::start(Path::new("artifacts")).unwrap();
+    let ops = BlockOps::new(svc.client(), Precision::F32);
+    let t_pjrt = bench_run("float-pjrt", 1, 3, || {
+        std::hint::black_box(ops.mgemm2("mgemm2", &v32, &v32).unwrap().data.len());
+    })
+    .median();
+
+    let base_rate = cmps / t_native;
+    for (label, elem, t) in [
+        ("1-bit popcount (Haque-class)", "1 bit", t_bits),
+        ("2-bit genotype AND (GBOOST-class)", "2 bit", t_geno),
+        ("float PS, native mGEMM (CoMet CPU)", "f32", t_native),
+        ("float PS, PJRT mGEMM (CoMet accel)", "f32", t_pjrt),
+    ] {
+        let rate = cmps / t;
+        table.row(&[
+            label.into(),
+            elem.into(),
+            fmt::secs(t),
+            fmt::cmp_rate(rate),
+            format!("{:.2}", rate / base_rate),
+        ]);
+    }
+    table.print();
+    println!("\npaper Table 6 shape: 1–2-bit codes reach ~10×+ the float method's raw");
+    println!("cmp/s (element is 1/32nd the size), while CoMet's normalized ratio stays");
+    println!("within the field's range — check the same ordering above.");
+}

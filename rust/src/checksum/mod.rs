@@ -1,0 +1,136 @@
+//! Order-independent extended-precision checksums over metric results.
+//!
+//! Paper §5: "A checksum feature using extended precision integer
+//! arithmetic computes a bit-for-bit exact checksum of computed results
+//! to check for errors when using synthetic inputs."
+//!
+//! Each metric value is hashed together with its *global* indices and
+//! accumulated with wrapping 128-bit addition — a commutative monoid, so
+//! the checksum is independent of computation order, node assignment,
+//! and parallel decomposition. Combined with grid-valued synthetic
+//! inputs (whose float sums are exact, hence bit-identical across all
+//! code paths), this reproduces the paper's cross-decomposition
+//! bit-for-bit validation.
+
+use crate::util::prng::mix64;
+
+/// Accumulating checksum over a multiset of indexed metric values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Checksum {
+    /// 128-bit wrapping sum of item hashes.
+    pub sum: u128,
+    /// Item count (guards against silently missing values).
+    pub count: u64,
+}
+
+impl Checksum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn add_item(&mut self, h: u128) {
+        self.sum = self.sum.wrapping_add(h);
+        self.count += 1;
+    }
+
+    /// Add a 2-way metric value for global pair (i, j), i < j.
+    pub fn add_pair(&mut self, i: usize, j: usize, value: f64) {
+        debug_assert!(i < j);
+        let hi = mix64(mix64(i as u64) ^ mix64((j as u64) << 1));
+        let hv = mix64(value.to_bits());
+        self.add_item(((hi as u128) << 64) | hv as u128);
+    }
+
+    /// Add a 3-way metric value for global triple (i, j, k), i < j < k.
+    pub fn add_triple(&mut self, i: usize, j: usize, k: usize, value: f64) {
+        debug_assert!(i < j && j < k);
+        let hi = mix64(mix64(i as u64) ^ mix64((j as u64) << 1) ^ mix64((k as u64) << 2));
+        let hv = mix64(value.to_bits());
+        self.add_item(((hi as u128) << 64) | hv as u128);
+    }
+
+    /// Merge a partial checksum from another node (commutative).
+    pub fn merge(&mut self, other: Checksum) {
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.count += other.count;
+    }
+
+    /// Short printable digest.
+    pub fn digest(&self) -> String {
+        format!("{:032x}:{}", self.sum, self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_independent() {
+        let mut a = Checksum::new();
+        a.add_pair(0, 1, 0.5);
+        a.add_pair(2, 3, 0.25);
+        a.add_pair(1, 7, 0.125);
+        let mut b = Checksum::new();
+        b.add_pair(1, 7, 0.125);
+        b.add_pair(0, 1, 0.5);
+        b.add_pair(2, 3, 0.25);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut whole = Checksum::new();
+        whole.add_pair(0, 1, 0.5);
+        whole.add_pair(0, 2, 0.75);
+        let mut p1 = Checksum::new();
+        p1.add_pair(0, 1, 0.5);
+        let mut p2 = Checksum::new();
+        p2.add_pair(0, 2, 0.75);
+        p1.merge(p2);
+        assert_eq!(whole, p1);
+    }
+
+    #[test]
+    fn value_sensitivity() {
+        let mut a = Checksum::new();
+        a.add_pair(0, 1, 0.5);
+        let mut b = Checksum::new();
+        b.add_pair(0, 1, 0.5 + f64::EPSILON);
+        assert_ne!(a, b, "single-ulp changes must be detected");
+    }
+
+    #[test]
+    fn index_sensitivity() {
+        let mut a = Checksum::new();
+        a.add_pair(0, 1, 0.5);
+        let mut b = Checksum::new();
+        b.add_pair(0, 2, 0.5);
+        assert_ne!(a, b);
+        // Swapped roles across pair/triple must differ too.
+        let mut c = Checksum::new();
+        c.add_triple(0, 1, 2, 0.5);
+        assert_ne!(a.sum, c.sum);
+    }
+
+    #[test]
+    fn count_detects_missing_values() {
+        let mut a = Checksum::new();
+        a.add_pair(0, 1, 0.0);
+        let b = Checksum::new();
+        assert_ne!(a, b); // even a zero-hash-sum style collision is caught by count
+        assert_eq!(a.count, 1);
+    }
+
+    #[test]
+    fn triple_order_canonicalization_is_callers_job() {
+        // Same canonical triple -> same checksum regardless of when added.
+        let mut a = Checksum::new();
+        a.add_triple(1, 2, 3, 0.5);
+        a.add_triple(4, 5, 6, 0.5);
+        let mut b = Checksum::new();
+        b.add_triple(4, 5, 6, 0.5);
+        b.add_triple(1, 2, 3, 0.5);
+        assert_eq!(a, b);
+    }
+}

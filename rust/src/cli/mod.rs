@@ -1,0 +1,148 @@
+//! Minimal command-line parsing (no clap offline): `--key value` /
+//! `--flag` options plus positionals, with typed accessors and
+//! did-you-mean-free but precise error messages.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed argument list.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: HashMap<String, String>,
+    switches: HashSet<String>,
+    /// Keys consumed by accessors (for unknown-flag detection).
+    seen: std::cell::RefCell<HashSet<String>>,
+}
+
+/// Parse `argv[1..]`. An option is `--key value` unless `value` starts
+/// with `--` or is absent, in which case it is a boolean switch.
+pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+    let mut args = Args::default();
+    let mut iter = argv.into_iter().peekable();
+    while let Some(a) = iter.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            if key.is_empty() {
+                bail!("stray `--`");
+            }
+            let next_is_value = iter.peek().is_some_and(|n| !n.starts_with("--"));
+            if next_is_value {
+                let v = iter.next().unwrap();
+                if args.values.insert(key.to_string(), v).is_some() {
+                    bail!("duplicate option --{key}");
+                }
+            } else {
+                args.switches.insert(key.to_string());
+            }
+        } else {
+            args.positional.push(a);
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn switch(&self, key: &str) -> bool {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.switches.contains(key)
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt_str(key).unwrap_or(default).to_string()
+    }
+
+    pub fn require_str(&self, key: &str) -> Result<String> {
+        self.opt_str(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    /// Error on options that no accessor consulted (typo protection).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .values
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !seen.contains(*k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn values_switches_positionals() {
+        let a = args("run --nv 100 --verbose --backend pjrt input.bin");
+        assert_eq!(a.positional, vec!["run", "input.bin"]);
+        assert_eq!(a.opt_str("nv"), Some("100"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.str_or("backend", "cpu"), "pjrt");
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = args("--nv 128 --frac 0.5");
+        assert_eq!(a.parse_or::<usize>("nv", 1).unwrap(), 128);
+        assert_eq!(a.parse_or::<f64>("frac", 0.0).unwrap(), 0.5);
+        assert_eq!(a.parse_or::<usize>("missing", 7).unwrap(), 7);
+        let bad = args("--nv abc");
+        assert!(bad.parse_or::<usize>("nv", 1).is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        assert!(parse(["--x", "1", "--x", "2"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = args("--known 1 --typo 2");
+        let _ = a.opt_str("known");
+        let err = a.reject_unknown().unwrap_err();
+        assert!(err.to_string().contains("typo"));
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = args("run");
+        assert!(a.require_str("config").is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Analytic communication cost model — the latency/bandwidth pricing
+//! behind the §6.3 performance model and the scaling projections.
+//!
+//! Calibrated to a Gemini-class interconnect by default (the paper's
+//! Titan: ~1.5 µs latency, ~6 GB/s effective per-node bandwidth under
+//! the balanced-injection settings of §6.6); construct with other
+//! numbers to model different fabrics.
+
+/// α–β model: t(msg) = α + bytes/β.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-message latency α, seconds.
+    pub latency_s: f64,
+    /// Effective bandwidth β, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl CostModel {
+    /// Titan Gemini-class defaults (see module docs).
+    pub fn gemini() -> Self {
+        CostModel {
+            latency_s: 1.5e-6,
+            bandwidth_bps: 6.0e9,
+        }
+    }
+
+    /// PCIe-2 x16 host↔accelerator link (the K20X's bus): ~8 GB/s peak,
+    /// ~6 GB/s effective.
+    pub fn pcie2() -> Self {
+        CostModel {
+            latency_s: 10e-6,
+            bandwidth_bps: 6.0e9,
+        }
+    }
+
+    /// Time for one point-to-point message of `bytes`.
+    pub fn msg_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Time for a reduction of `bytes` across `n` nodes (log-tree, the
+    /// paper's "log(npf) communication steps" for the vector-elements
+    /// axis, §4.1).
+    pub fn reduce_time(&self, bytes: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n as f64).log2().ceil() * self.msg_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_time_scales_linearly() {
+        let m = CostModel::gemini();
+        let t1 = m.msg_time(1_000_000);
+        let t2 = m.msg_time(2_000_000);
+        assert!(t2 > t1);
+        assert!((t2 - t1 - 1_000_000.0 / m.bandwidth_bps).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = CostModel::gemini();
+        assert!(m.msg_time(8) < 2.0 * m.latency_s);
+    }
+
+    #[test]
+    fn reduce_time_log_steps() {
+        let m = CostModel::gemini();
+        assert_eq!(m.reduce_time(100, 1), 0.0);
+        let t2 = m.reduce_time(100, 2);
+        let t8 = m.reduce_time(100, 8);
+        assert!((t8 / t2 - 3.0).abs() < 1e-9); // log2(8) = 3 steps
+    }
+
+    #[test]
+    fn paper_half_gb_message_time_plausible() {
+        // §6.6: 2-way weak scaling sends ~1/2 GB messages; at Gemini
+        // rates that is ~80 ms per step — the scale the paper hides
+        // under mGEMM compute.
+        let m = CostModel::gemini();
+        let t = m.msg_time(500_000_000);
+        assert!((0.05..0.2).contains(&t), "t={t}");
+    }
+}

@@ -1,0 +1,352 @@
+//! The simulated interconnect: an in-process message-passing fabric
+//! with MPI-like semantics, plus the analytic latency/bandwidth cost
+//! model used for scaling projections.
+//!
+//! The paper ran MPI over Titan's Gemini torus; no network exists here
+//! (DESIGN.md §1), so [`VirtualCluster`] gives each virtual node a
+//! mailbox and tagged point-to-point send/recv over channels, with the
+//! same pairing discipline as Algorithm 1/2's ring exchanges. Message
+//! and byte counts are accounted per node so benches can report the
+//! communication volumes the paper's model (§6.3) prices.
+
+pub mod cost;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Message payload: a block of vector data or a small control value.
+/// Blocks travel as `Arc<Vec<f64>>` — the simulation's "wire" — and the
+/// byte accounting charges them at the run precision's width.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Vector block: (nf, nv, first_id, column-major data).
+    Block {
+        nf: usize,
+        nv: usize,
+        first_id: usize,
+        data: Arc<Vec<f64>>,
+    },
+    /// Partial result row for reductions (npf axis).
+    Partial(Arc<Vec<f64>>),
+    /// Small scalar vector (denominators etc.).
+    Sums(Arc<Vec<f64>>),
+    /// Bare control/ack.
+    Token(u64),
+}
+
+impl Payload {
+    /// Simulated wire size in bytes, at `elem_bytes` per element.
+    pub fn wire_bytes(&self, elem_bytes: usize) -> u64 {
+        match self {
+            Payload::Block { data, .. } => (data.len() * elem_bytes) as u64,
+            Payload::Partial(d) | Payload::Sums(d) => (d.len() * elem_bytes) as u64,
+            Payload::Token(_) => 8,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Envelope {
+    from: usize,
+    tag: u64,
+    payload: Payload,
+}
+
+/// Shared per-cluster counters (the §6.3 accounting inputs).
+#[derive(Debug, Default)]
+pub struct CommCounters {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+/// The fabric: construct once, then [`VirtualCluster::endpoints`] yields
+/// one [`Endpoint`] per rank to move into each node's thread.
+pub struct VirtualCluster {
+    senders: Vec<Sender<Envelope>>,
+    receivers: Vec<Option<Receiver<Envelope>>>,
+    counters: Arc<CommCounters>,
+    elem_bytes: usize,
+}
+
+impl VirtualCluster {
+    /// `elem_bytes`: precision width used for wire-byte accounting.
+    pub fn new(np: usize, elem_bytes: usize) -> Self {
+        let mut senders = Vec::with_capacity(np);
+        let mut receivers = Vec::with_capacity(np);
+        for _ in 0..np {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        VirtualCluster {
+            senders,
+            receivers,
+            counters: Arc::new(CommCounters::default()),
+            elem_bytes,
+        }
+    }
+
+    pub fn np(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn counters(&self) -> Arc<CommCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// Take all endpoints (consumes the receivers; call once).
+    pub fn endpoints(&mut self) -> Vec<Endpoint> {
+        (0..self.np())
+            .map(|rank| Endpoint {
+                rank,
+                np: self.np(),
+                senders: self.senders.clone(),
+                rx: self.receivers[rank].take().expect("endpoints() called twice"),
+                stash: HashMap::new(),
+                counters: Arc::clone(&self.counters),
+                elem_bytes: self.elem_bytes,
+            })
+            .collect()
+    }
+}
+
+/// One rank's communication handle (moved into its node thread).
+pub struct Endpoint {
+    pub rank: usize,
+    pub np: usize,
+    senders: Vec<Sender<Envelope>>,
+    rx: Receiver<Envelope>,
+    /// Out-of-order arrivals parked until a matching recv posts
+    /// (the MPI unexpected-message queue).
+    stash: HashMap<(usize, u64), Vec<Payload>>,
+    counters: Arc<CommCounters>,
+    elem_bytes: usize,
+}
+
+impl Endpoint {
+    /// Non-blocking tagged send (buffered — never deadlocks on unpaired
+    /// sends, like MPI_Isend with ample buffering).
+    pub fn send(&self, to: usize, tag: u64, payload: Payload) {
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .bytes
+            .fetch_add(payload.wire_bytes(self.elem_bytes), Ordering::Relaxed);
+        self.senders[to]
+            .send(Envelope {
+                from: self.rank,
+                tag,
+                payload,
+            })
+            .expect("peer endpoint dropped");
+    }
+
+    /// Blocking tagged receive from a specific source.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Payload {
+        if let Some(q) = self.stash.get_mut(&(from, tag)) {
+            if !q.is_empty() {
+                return q.remove(0);
+            }
+        }
+        loop {
+            let env = self.rx.recv().expect("cluster torn down mid-recv");
+            if env.from == from && env.tag == tag {
+                return env.payload;
+            }
+            self.stash
+                .entry((env.from, env.tag))
+                .or_default()
+                .push(env.payload);
+        }
+    }
+
+    /// Ring send-and-receive (the Algorithm 1 exchange step): send own
+    /// payload to `to`, receive the matching payload from `from`.
+    pub fn sendrecv(&mut self, to: usize, from: usize, tag: u64, payload: Payload) -> Payload {
+        if to == self.rank && from == self.rank {
+            return payload; // self-exchange is the identity
+        }
+        self.send(to, tag, payload);
+        self.recv(from, tag)
+    }
+
+    /// Sum-allreduce of equal-length f64 vectors across `group` (which
+    /// must contain this rank). Gather-to-root + broadcast: O(2·|g|)
+    /// messages — fine at simulation scale, same byte volume as a tree
+    /// for the accounting's purposes.
+    pub fn allreduce_sum(&mut self, group: &[usize], tag: u64, mut data: Vec<f64>) -> Vec<f64> {
+        if group.len() <= 1 {
+            return data;
+        }
+        let root = group[0];
+        if self.rank == root {
+            for &peer in &group[1..] {
+                match self.recv(peer, tag) {
+                    Payload::Partial(d) => {
+                        for (a, b) in data.iter_mut().zip(d.iter()) {
+                            *a += b;
+                        }
+                    }
+                    other => panic!("allreduce expected Partial, got {other:?}"),
+                }
+            }
+            let out = Arc::new(data);
+            for &peer in &group[1..] {
+                self.send(peer, tag + 1, Payload::Partial(Arc::clone(&out)));
+            }
+            Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone())
+        } else {
+            self.send(root, tag, Payload::Partial(Arc::new(data)));
+            match self.recv(root, tag + 1) {
+                Payload::Partial(d) => (*d).clone(),
+                other => panic!("allreduce expected Partial, got {other:?}"),
+            }
+        }
+    }
+
+    /// Barrier over `group` (gather tokens at root, release).
+    pub fn barrier(&mut self, group: &[usize], tag: u64) {
+        if group.len() <= 1 {
+            return;
+        }
+        let root = group[0];
+        if self.rank == root {
+            for &peer in &group[1..] {
+                let _ = self.recv(peer, tag);
+            }
+            for &peer in &group[1..] {
+                self.send(peer, tag + 1, Payload::Token(0));
+            }
+        } else {
+            self.send(root, tag, Payload::Token(0));
+            let _ = self.recv(root, tag + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn point_to_point_with_tags() {
+        let mut cluster = VirtualCluster::new(2, 8);
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        // Send two tags out of order; recv must match by tag.
+        e0.send(1, 7, Payload::Token(77));
+        e0.send(1, 5, Payload::Token(55));
+        match e1.recv(0, 5) {
+            Payload::Token(t) => assert_eq!(t, 55),
+            _ => panic!(),
+        }
+        match e1.recv(0, 7) {
+            Payload::Token(t) => assert_eq!(t, 77),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn ring_sendrecv_rotates_blocks() {
+        let np = 4;
+        let mut cluster = VirtualCluster::new(np, 8);
+        let eps = cluster.endpoints();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let rank = ep.rank;
+                    let own = Payload::Partial(Arc::new(vec![rank as f64]));
+                    // shift by 1: send to rank-1, receive from rank+1.
+                    let to = (rank + np - 1) % np;
+                    let from = (rank + 1) % np;
+                    match ep.sendrecv(to, from, 1, own) {
+                        Payload::Partial(d) => d[0] as usize,
+                        _ => panic!(),
+                    }
+                })
+            })
+            .collect();
+        let got: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn self_sendrecv_is_identity() {
+        let mut cluster = VirtualCluster::new(1, 8);
+        let mut ep = cluster.endpoints().pop().unwrap();
+        match ep.sendrecv(0, 0, 1, Payload::Token(9)) {
+            Payload::Token(t) => assert_eq!(t, 9),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn allreduce_sums_across_group() {
+        let np = 3;
+        let mut cluster = VirtualCluster::new(np, 8);
+        let eps = cluster.endpoints();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let group = [0, 1, 2];
+                    let data = vec![ep.rank as f64, 1.0];
+                    ep.allreduce_sum(&group, 10, data)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn counters_account_bytes() {
+        let mut cluster = VirtualCluster::new(2, 4); // f32 accounting
+        let counters = cluster.counters();
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(
+            1,
+            1,
+            Payload::Block {
+                nf: 10,
+                nv: 2,
+                first_id: 0,
+                data: Arc::new(vec![0.0; 20]),
+            },
+        );
+        let _ = e1.recv(0, 1);
+        assert_eq!(counters.messages.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.bytes.load(Ordering::Relaxed), 80); // 20 × 4B
+    }
+
+    #[test]
+    fn barrier_releases_all() {
+        let np = 4;
+        let mut cluster = VirtualCluster::new(np, 8);
+        let eps = cluster.endpoints();
+        let flag = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                let flag = Arc::clone(&flag);
+                thread::spawn(move || {
+                    let group: Vec<usize> = (0..np).collect();
+                    flag.fetch_add(1, Ordering::SeqCst);
+                    ep.barrier(&group, 100);
+                    // After the barrier everyone must have incremented.
+                    assert_eq!(flag.load(Ordering::SeqCst), np as u64);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Run configuration: a validated [`RunConfig`] plus a TOML-subset
+//! parser (offline environment — no serde/toml crates; see DESIGN.md).
+//!
+//! The supported TOML subset covers what launcher configs need:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean values, `#` comments, and blank lines.
+
+pub mod toml;
+
+use crate::decomp::Grid;
+use crate::vecdata::SyntheticKind;
+use anyhow::{bail, Context, Result};
+
+/// Numeric precision of a run (the paper's compile-time SP/DP choice,
+/// runtime-selected here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F64,
+}
+
+impl Precision {
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "single" | "sp" => Ok(Precision::F32),
+            "f64" | "double" | "dp" => Ok(Precision::F64),
+            other => bail!("unknown precision {other:?} (want f32|f64)"),
+        }
+    }
+}
+
+/// Which engine executes the mGEMM blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT artifacts through the PJRT client — the "GPU" path.
+    Pjrt,
+    /// Native blocked CPU kernels — the paper's optimized CPU version.
+    CpuOptimized,
+    /// Native naive kernels — the paper's reference version.
+    CpuReference,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" | "gpu" | "accelerator" => Ok(BackendKind::Pjrt),
+            "cpu" | "cpu-optimized" => Ok(BackendKind::CpuOptimized),
+            "reference" | "cpu-reference" => Ok(BackendKind::CpuReference),
+            other => bail!("unknown backend {other:?} (want pjrt|cpu|reference)"),
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::CpuOptimized => "cpu-optimized",
+            BackendKind::CpuReference => "cpu-reference",
+        }
+    }
+}
+
+/// Where the input vectors come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InputSource {
+    /// Generate synthetically (kind, seed).
+    Synthetic { kind: SyntheticKind, seed: u64 },
+    /// Read the §6.8 column-major binary file.
+    File { path: String },
+}
+
+/// A fully validated run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// 2 or 3 (the paper's `num_way`).
+    pub num_way: usize,
+    /// Total vectors n_v.
+    pub nv: usize,
+    /// Features per vector n_f.
+    pub nf: usize,
+    pub precision: Precision,
+    pub backend: BackendKind,
+    pub grid: Grid,
+    /// Stage count n_st (3-way only; 1 = no staging).
+    pub num_stage: usize,
+    /// Stage to compute, or None = all stages (§6.8 computes only the
+    /// last stage of 220).
+    pub stage: Option<usize>,
+    pub input: InputSource,
+    /// Keep computed metrics in memory (examples/tests) — large runs
+    /// set false and stream to output files instead.
+    pub store_metrics: bool,
+    /// Output directory for per-node metric files (§6.8), if any.
+    pub output_dir: Option<String>,
+    /// Output threshold (§6.8 discussion: "methods to threshold …
+    /// data"): metrics below it are dropped; files switch to
+    /// (offset, byte) records since formulaic indexing no longer holds.
+    pub output_threshold: Option<f64>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            num_way: 2,
+            nv: 256,
+            nf: 384,
+            precision: Precision::F64,
+            backend: BackendKind::CpuOptimized,
+            grid: Grid::new(1, 1, 1),
+            num_stage: 1,
+            stage: None,
+            input: InputSource::Synthetic {
+                kind: SyntheticKind::RandomGrid,
+                seed: 1,
+            },
+            store_metrics: true,
+            output_dir: None,
+            output_threshold: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Validate cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.num_way == 2 || self.num_way == 3) {
+            bail!("num_way must be 2 or 3, got {}", self.num_way);
+        }
+        if self.nv < self.num_way {
+            bail!("nv={} too small for {}-way", self.nv, self.num_way);
+        }
+        if self.grid.npv > self.nv {
+            bail!("npv={} exceeds nv={}", self.grid.npv, self.nv);
+        }
+        if self.grid.npf > self.nf {
+            bail!("npf={} exceeds nf={}", self.grid.npf, self.nf);
+        }
+        if self.num_stage == 0 {
+            bail!("num_stage must be >= 1");
+        }
+        if let Some(s) = self.stage {
+            if s >= self.num_stage {
+                bail!("stage {} out of range (num_stage={})", s, self.num_stage);
+            }
+        }
+        if self.num_way == 2 && self.num_stage != 1 {
+            bail!("staging is a 3-way feature (num_way=2 requires num_stage=1)");
+        }
+        Ok(())
+    }
+
+    /// Build from a parsed TOML document.
+    pub fn from_toml(doc: &toml::Doc) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("run", "num_way") {
+            cfg.num_way = v.as_int().context("run.num_way")? as usize;
+        }
+        if let Some(v) = doc.get("run", "nv") {
+            cfg.nv = v.as_int().context("run.nv")? as usize;
+        }
+        if let Some(v) = doc.get("run", "nf") {
+            cfg.nf = v.as_int().context("run.nf")? as usize;
+        }
+        if let Some(v) = doc.get("run", "precision") {
+            cfg.precision = Precision::parse(v.as_str().context("run.precision")?)?;
+        }
+        if let Some(v) = doc.get("run", "backend") {
+            cfg.backend = BackendKind::parse(v.as_str().context("run.backend")?)?;
+        }
+        if let Some(v) = doc.get("run", "store_metrics") {
+            cfg.store_metrics = v.as_bool().context("run.store_metrics")?;
+        }
+        if let Some(v) = doc.get("run", "output_dir") {
+            cfg.output_dir = Some(v.as_str().context("run.output_dir")?.to_string());
+        }
+        if let Some(v) = doc.get("run", "output_threshold") {
+            cfg.output_threshold = Some(v.as_float().context("run.output_threshold")?);
+        }
+        let npf = doc.get("decomp", "npf").map(|v| v.as_int()).transpose()?.unwrap_or(1) as usize;
+        let npv = doc.get("decomp", "npv").map(|v| v.as_int()).transpose()?.unwrap_or(1) as usize;
+        let npr = doc.get("decomp", "npr").map(|v| v.as_int()).transpose()?.unwrap_or(1) as usize;
+        cfg.grid = Grid::new(npf, npv, npr);
+        if let Some(v) = doc.get("decomp", "num_stage") {
+            cfg.num_stage = v.as_int().context("decomp.num_stage")? as usize;
+        }
+        if let Some(v) = doc.get("decomp", "stage") {
+            cfg.stage = Some(v.as_int().context("decomp.stage")? as usize);
+        }
+        match doc.get("input", "file") {
+            Some(v) => {
+                cfg.input = InputSource::File {
+                    path: v.as_str().context("input.file")?.to_string(),
+                };
+            }
+            None => {
+                let kind = match doc.get("input", "synthetic").map(|v| v.as_str()).transpose()? {
+                    Some("grid") | None => SyntheticKind::RandomGrid,
+                    Some("verifiable") => SyntheticKind::Verifiable,
+                    Some("phewas") => SyntheticKind::PhewasLike,
+                    Some(other) => bail!("unknown input.synthetic {other:?}"),
+                };
+                let seed = doc
+                    .get("input", "seed")
+                    .map(|v| v.as_int())
+                    .transpose()?
+                    .unwrap_or(1) as u64;
+                cfg.input = InputSource::Synthetic { kind, seed };
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        Self::from_toml(&toml::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# A 3-way staged campaign.
+[run]
+num_way = 3
+nv = 1536
+nf = 385
+precision = "f32"
+backend = "pjrt"
+store_metrics = false
+
+[decomp]
+npv = 4
+npr = 3
+num_stage = 16
+stage = 15
+
+[input]
+synthetic = "phewas"
+seed = 42
+"#;
+        let cfg = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.num_way, 3);
+        assert_eq!(cfg.nv, 1536);
+        assert_eq!(cfg.precision, Precision::F32);
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        assert_eq!(cfg.grid, Grid::new(1, 4, 3));
+        assert_eq!(cfg.num_stage, 16);
+        assert_eq!(cfg.stage, Some(15));
+        assert!(matches!(
+            cfg.input,
+            InputSource::Synthetic { kind: SyntheticKind::PhewasLike, seed: 42 }
+        ));
+        assert!(!cfg.store_metrics);
+    }
+
+    #[test]
+    fn file_input() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nnv = 10\nnf = 5\n[input]\nfile = \"/data/v.bin\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.input, InputSource::File { path: "/data/v.bin".into() });
+    }
+
+    #[test]
+    fn rejects_bad_numway() {
+        let err = RunConfig::from_toml_str("[run]\nnum_way = 4\n").unwrap_err();
+        assert!(err.to_string().contains("num_way"));
+    }
+
+    #[test]
+    fn rejects_2way_staging() {
+        let err =
+            RunConfig::from_toml_str("[run]\nnum_way = 2\n[decomp]\nnum_stage = 4\n").unwrap_err();
+        assert!(err.to_string().contains("staging"));
+    }
+
+    #[test]
+    fn rejects_oversized_grid() {
+        let err = RunConfig::from_toml_str("[run]\nnv = 4\n[decomp]\nnpv = 8\n").unwrap_err();
+        assert!(err.to_string().contains("npv"));
+    }
+
+    #[test]
+    fn precision_aliases() {
+        assert_eq!(Precision::parse("single").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("dp").unwrap(), Precision::F64);
+        assert!(Precision::parse("f16").is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Minimal TOML-subset parser (see module docs in `config`): sections,
+//! scalar key/values, comments. Enough for launcher configs without the
+//! (unavailable) toml crate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed document: (section, key) → value. Keys before any section
+/// header live in section "".
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|(s, _)| s.as_str()).collect();
+        v.dedup();
+        v
+    }
+}
+
+/// Parse the TOML subset. Errors carry line numbers.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: malformed section header {raw:?}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() || val.is_empty() {
+            bail!("line {}: empty key or value in {raw:?}", lineno + 1);
+        }
+        let value = parse_value(val)
+            .map_err(|e| anyhow::anyhow!("line {}: {e} in {raw:?}", lineno + 1))?;
+        let prev = doc
+            .entries
+            .insert((section.clone(), key.to_string()), value);
+        if prev.is_some() {
+            bail!("line {}: duplicate key {key:?} in section {section:?}", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_types() {
+        let doc = parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n[s]\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("", "b").unwrap().as_float().unwrap(), 2.5);
+        assert_eq!(doc.get("", "c").unwrap().as_str().unwrap(), "hi");
+        assert!(doc.get("", "d").unwrap().as_bool().unwrap());
+        assert!(!doc.get("s", "e").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("# header\n\na = 1  # trailing\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int().unwrap(), 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("p = \"/tmp/#1\"\n").unwrap();
+        assert_eq!(doc.get("", "p").unwrap().as_str().unwrap(), "/tmp/#1");
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float().unwrap(), 3.0);
+        assert!(doc.get("", "x").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("a = 1\nbogus line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = parse("[unclosed\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = parse("a = 1\na = 2\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn sections_scope_keys() {
+        let doc = parse("[x]\nk = 1\n[y]\nk = 2\n").unwrap();
+        assert_eq!(doc.get("x", "k").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("y", "k").unwrap().as_int().unwrap(), 2);
+        assert!(doc.get("z", "k").is_none());
+    }
+}

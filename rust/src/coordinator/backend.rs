@@ -1,0 +1,202 @@
+//! Execution backends for the block kernels.
+//!
+//! Matches the paper's three code versions (§5): a reference CPU
+//! version, an optimized CPU version, and the accelerator version
+//! (PJRT artifacts here, CUDA/MAGMA there). The coordinator is generic
+//! over the backend, which is what the Table 2 GPU-vs-CPU comparison
+//! swaps.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, Precision};
+use crate::linalg::{optimized, reference, MatF64, SlabF64};
+use crate::runtime::ops::BlockOps;
+use crate::runtime::RuntimeClient;
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+
+/// Block-kernel provider at element type `T`.
+pub trait Backend<T: Scalar>: Send + Sync {
+    /// N = W^T ∘min V.
+    fn mgemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64>;
+    /// slab[t, i, k] = Σ_q min(pivot_t, w_i, v_k).
+    fn mgemm3(&self, w: &VectorSet<T>, pivots: &VectorSet<T>, v: &VectorSet<T>)
+        -> Result<SlabF64>;
+    fn name(&self) -> &'static str;
+    /// Max pivot batch (jt) a single mgemm3 call should receive.
+    fn pivot_batch(&self) -> usize {
+        8
+    }
+    /// Shape-aware pivot batch: the jt of the artifact tier an
+    /// (nf, nv) block will actually select — avoids forcing a large
+    /// tier (and its padding waste) just to fit a big pivot batch.
+    fn pivot_batch_for(&self, _nf: usize, _nv: usize) -> usize {
+        self.pivot_batch()
+    }
+}
+
+/// Naive scalar loops — the paper's "reference (CPU-only) version".
+pub struct CpuReference;
+
+impl<T: Scalar> Backend<T> for CpuReference {
+    fn mgemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(reference::mgemm2(w, v))
+    }
+    fn mgemm3(
+        &self,
+        w: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        Ok(reference::mgemm3(w, pivots, v))
+    }
+    fn name(&self) -> &'static str {
+        "cpu-reference"
+    }
+}
+
+/// Blocked native kernels — the paper's optimized CPU version.
+pub struct CpuOptimized;
+
+impl<T: Scalar> Backend<T> for CpuOptimized {
+    fn mgemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(optimized::mgemm2(w, v))
+    }
+    fn mgemm3(
+        &self,
+        w: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        Ok(optimized::mgemm3(w, pivots, v))
+    }
+    fn name(&self) -> &'static str {
+        "cpu-optimized"
+    }
+}
+
+/// AOT artifacts through the PJRT service — the accelerator version.
+pub struct PjrtBackend {
+    ops: BlockOps,
+    /// Artifact kind for 2-way blocks ("mgemm2", "mgemm2pallas", …).
+    pub kind2: String,
+    /// Artifact kind for 3-way slabs ("mgemm3", "mgemm3pallas").
+    pub kind3: String,
+    /// jt tier used when batching pivots.
+    jt: usize,
+}
+
+impl PjrtBackend {
+    pub fn new(client: RuntimeClient, precision: Precision) -> Self {
+        // Use the largest jt available for this precision (fewer calls).
+        let jt = client
+            .manifest()
+            .entries
+            .iter()
+            .filter(|e| e.kind == "mgemm3" && e.precision == precision.into())
+            .map(|e| e.jt)
+            .max()
+            .unwrap_or(8);
+        PjrtBackend {
+            ops: BlockOps::new(client, precision),
+            kind2: "mgemm2".to_string(),
+            kind3: "mgemm3".to_string(),
+            jt,
+        }
+    }
+
+    pub fn with_kinds(mut self, kind2: &str, kind3: &str) -> Self {
+        self.kind2 = kind2.to_string();
+        self.kind3 = kind3.to_string();
+        self
+    }
+}
+
+impl<T: Scalar> Backend<T> for PjrtBackend {
+    fn mgemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
+        self.ops.mgemm2(&self.kind2, w, v)
+    }
+    fn mgemm3(
+        &self,
+        w: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        self.ops.mgemm3(&self.kind3, w, pivots, v)
+    }
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+    fn pivot_batch(&self) -> usize {
+        self.jt
+    }
+    fn pivot_batch_for(&self, nf: usize, nv: usize) -> usize {
+        // jt of the smallest tier covering (nf, nv): larger batches
+        // would force a deeper/wider tier and pay padding quadratically.
+        let manifest = self.ops.client.manifest();
+        manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                e.kind == self.kind3
+                    && e.precision == crate::runtime::ElemKind::from(self.ops.precision)
+                    && e.nf >= nf
+                    && e.nv >= nv
+                    && manifest.dir.join(&e.file).exists()
+            })
+            .min_by_key(|e| (e.nf, e.nv, e.jt))
+            .map(|e| e.jt)
+            .unwrap_or(self.jt)
+    }
+}
+
+/// Build the backend a config names. `runtime` must be Some for
+/// [`BackendKind::Pjrt`].
+pub fn make_backend<T: Scalar>(
+    kind: BackendKind,
+    precision: Precision,
+    runtime: Option<RuntimeClient>,
+) -> Result<Arc<dyn Backend<T>>> {
+    Ok(match kind {
+        BackendKind::CpuReference => Arc::new(CpuReference),
+        BackendKind::CpuOptimized => Arc::new(CpuOptimized),
+        BackendKind::Pjrt => {
+            let client = runtime.ok_or_else(|| {
+                anyhow::anyhow!("pjrt backend requires a running PjrtService (artifacts built?)")
+            })?;
+            Arc::new(PjrtBackend::new(client, precision))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::SyntheticKind;
+
+    #[test]
+    fn cpu_backends_agree() {
+        let w: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 32, 8, 0);
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 32, 8, 8);
+        let a = Backend::<f64>::mgemm2(&CpuReference, &w, &v).unwrap();
+        let b = Backend::<f64>::mgemm2(&CpuOptimized, &w, &v).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn make_backend_pjrt_requires_runtime() {
+        let err = match make_backend::<f64>(BackendKind::Pjrt, Precision::F64, None) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error without a runtime client"),
+        };
+        assert!(err.to_string().contains("artifacts"));
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(Backend::<f64>::name(&CpuReference), "cpu-reference");
+        assert_eq!(Backend::<f32>::name(&CpuOptimized), "cpu-optimized");
+    }
+}

@@ -1,0 +1,248 @@
+//! The Layer-3 coordinator: the paper's parallel algorithms (§4) run
+//! over the virtual cluster, with the mGEMM blocks offloaded through a
+//! [`backend::Backend`].
+//!
+//! * [`two_way`] — Algorithm 1: block-circulant ring pipeline.
+//! * [`three_way`] — Algorithms 2 + 3: tetrahedral slices, pivot
+//!   pipeline, staging.
+//! * [`serial`] — single-node convenience drivers (examples/tests).
+//!
+//! Division of labor matches §3.1: numerators (mGEMM) go to the
+//! backend/accelerator; denominators, quotients, checksums, and output
+//! stay on the coordinator ("CPU") side.
+
+pub mod backend;
+pub mod serial;
+pub mod three_way;
+pub mod two_way;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checksum::Checksum;
+use crate::comm::VirtualCluster;
+use crate::config::{BackendKind, InputSource, Precision, RunConfig};
+use crate::decomp::partition::Partition;
+use crate::metrics::store::{PairStore, TripleStore};
+use crate::runtime::PjrtService;
+use crate::util::Scalar;
+use crate::vecdata::{io as vio, VectorSet};
+
+/// Per-run counters and timings, merged across nodes.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// mGEMM block executions (2-way kind).
+    pub mgemm2_calls: u64,
+    /// 3-way slab executions.
+    pub mgemm3_calls: u64,
+    /// Metric values produced.
+    pub metrics: u64,
+    /// Comm volume (bytes, at run precision) and message count.
+    pub comm_bytes: u64,
+    pub comm_messages: u64,
+    /// Wall-clock phases (seconds; max across nodes = makespan).
+    pub t_input: f64,
+    pub t_compute: f64,
+    pub t_output: f64,
+    pub t_total: f64,
+    /// Accelerator-side execution seconds (PJRT only).
+    pub t_accel: f64,
+}
+
+impl RunStats {
+    fn absorb(&mut self, o: &RunStats) {
+        self.mgemm2_calls += o.mgemm2_calls;
+        self.mgemm3_calls += o.mgemm3_calls;
+        self.metrics += o.metrics;
+        self.t_input = self.t_input.max(o.t_input);
+        self.t_compute = self.t_compute.max(o.t_compute);
+        self.t_output = self.t_output.max(o.t_output);
+        self.t_total = self.t_total.max(o.t_total);
+    }
+}
+
+/// Result of a coordinated run.
+#[derive(Debug, Default)]
+pub struct RunOutcome {
+    pub stats: RunStats,
+    pub checksum: Checksum,
+    /// Present when `cfg.store_metrics` (2-way runs).
+    pub pairs: Option<PairStore>,
+    /// Present when `cfg.store_metrics` (3-way runs).
+    pub triples: Option<TripleStore>,
+}
+
+/// What one node thread returns.
+pub(crate) struct NodeResult {
+    pub checksum: Checksum,
+    pub pairs: PairStore,
+    pub triples: TripleStore,
+    pub stats: RunStats,
+}
+
+/// Run a configured campaign end-to-end. Dispatches on precision; for
+/// [`BackendKind::Pjrt`] a [`PjrtService`] is started for the run.
+pub fn run(cfg: &RunConfig) -> Result<RunOutcome> {
+    run_with_artifacts(cfg, std::path::Path::new("artifacts"))
+}
+
+/// As [`run`], with an explicit artifact directory. Starts (and tears
+/// down) a fresh PJRT service — one-shot campaigns. Long-lived callers
+/// (benches, servers) should start one [`PjrtService`] and use
+/// [`run_with_client`] so compiled executables are reused across runs.
+pub fn run_with_artifacts(cfg: &RunConfig, artifact_dir: &std::path::Path) -> Result<RunOutcome> {
+    let service = match cfg.backend {
+        BackendKind::Pjrt => Some(PjrtService::start(artifact_dir).context("start PJRT service")?),
+        _ => None,
+    };
+    run_with_client(cfg, service.as_ref().map(|s| s.client()))
+}
+
+/// Run against an existing PJRT service (None for native backends).
+/// The service's executable cache persists across calls — the §Perf
+/// fix for per-run artifact recompilation (~70 ms/run on this host).
+pub fn run_with_client(
+    cfg: &RunConfig,
+    client: Option<crate::runtime::RuntimeClient>,
+) -> Result<RunOutcome> {
+    cfg.validate()?;
+    if cfg.num_way == 3 && cfg.grid.npf > 1 {
+        bail!("npf > 1 is not supported for 3-way runs (the paper sets npf=1 there too)");
+    }
+    let accel_before = client.as_ref().map(|c| c.stats().1).unwrap_or(0.0);
+    let mut outcome = match cfg.precision {
+        Precision::F32 => run_typed::<f32>(cfg, client.clone()),
+        Precision::F64 => run_typed::<f64>(cfg, client.clone()),
+    }?;
+    if let Some(c) = &client {
+        let (_execs, secs) = c.stats();
+        outcome.stats.t_accel = secs - accel_before;
+    }
+    Ok(outcome)
+}
+
+fn run_typed<T: Scalar>(
+    cfg: &RunConfig,
+    client: Option<crate::runtime::RuntimeClient>,
+) -> Result<RunOutcome> {
+    let backend = backend::make_backend::<T>(cfg.backend, cfg.precision, client)?;
+    let np = cfg.grid.np();
+    let mut cluster = VirtualCluster::new(np, cfg.precision.bytes());
+    let counters = cluster.counters();
+    let endpoints = cluster.endpoints();
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for ep in endpoints {
+        let cfg = cfg.clone();
+        let backend = Arc::clone(&backend);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("node-{}", ep.rank))
+                .spawn(move || -> Result<NodeResult> {
+                    let coord = cfg.grid.coords(ep.rank);
+                    if cfg.num_way == 2 {
+                        two_way::node_main::<T>(&cfg, coord, ep, backend)
+                    } else {
+                        three_way::node_main::<T>(&cfg, coord, ep, backend)
+                    }
+                })
+                .context("spawn node thread")?,
+        );
+    }
+
+    let mut outcome = RunOutcome::default();
+    let mut pairs = PairStore::new();
+    let mut triples = TripleStore::new();
+    for h in handles {
+        let res = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
+        outcome.checksum.merge(res.checksum);
+        outcome.stats.absorb(&res.stats);
+        pairs.extend(res.pairs);
+        triples.extend(res.triples);
+    }
+    outcome.stats.t_total = t0.elapsed().as_secs_f64();
+    outcome.stats.comm_bytes = counters.bytes.load(std::sync::atomic::Ordering::Relaxed);
+    outcome.stats.comm_messages = counters.messages.load(std::sync::atomic::Ordering::Relaxed);
+    if cfg.store_metrics {
+        if cfg.num_way == 2 {
+            outcome.pairs = Some(pairs);
+        } else {
+            outcome.triples = Some(triples);
+        }
+    }
+    Ok(outcome)
+}
+
+/// Load or generate the vector block for slab `pv` (all its columns,
+/// the node's feature slice if npf > 1).
+pub(crate) fn load_block<T: Scalar>(
+    cfg: &RunConfig,
+    pv: usize,
+    pf: usize,
+) -> Result<VectorSet<T>> {
+    let vparts = Partition::new(cfg.nv, cfg.grid.npv);
+    let first = vparts.start(pv);
+    let ncols = vparts.len(pv);
+    let full = match &cfg.input {
+        InputSource::Synthetic { kind, seed } => {
+            VectorSet::<T>::generate(*kind, *seed, cfg.nf, ncols, first)
+        }
+        InputSource::File { path } => {
+            vio::read_raw_cols::<T>(std::path::Path::new(path), cfg.nf, cfg.nv, first, ncols)?
+        }
+    };
+    if cfg.grid.npf > 1 {
+        let fparts = Partition::new(cfg.nf, cfg.grid.npf);
+        let mut sliced = full.feature_slice(fparts.start(pf), fparts.len(pf));
+        sliced.first_id = first;
+        Ok(sliced)
+    } else {
+        Ok(full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::SyntheticKind;
+
+    #[test]
+    fn load_block_columns_match_global_generation() {
+        let cfg = RunConfig {
+            nv: 20,
+            nf: 16,
+            grid: crate::decomp::Grid::new(1, 4, 1),
+            ..Default::default()
+        };
+        let all: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 16, 20, 0);
+        for pv in 0..4 {
+            let block: VectorSet<f64> = load_block(&cfg, pv, 0).unwrap();
+            assert_eq!(block.nv, 5);
+            assert_eq!(block.first_id, pv * 5);
+            for c in 0..5 {
+                assert_eq!(block.col(c), all.col(pv * 5 + c));
+            }
+        }
+    }
+
+    #[test]
+    fn load_block_feature_slicing() {
+        let cfg = RunConfig {
+            nv: 8,
+            nf: 10,
+            grid: crate::decomp::Grid::new(2, 2, 1),
+            ..Default::default()
+        };
+        let b0: VectorSet<f64> = load_block(&cfg, 0, 0).unwrap();
+        let b1: VectorSet<f64> = load_block(&cfg, 0, 1).unwrap();
+        assert_eq!(b0.nf, 5);
+        assert_eq!(b1.nf, 5);
+        let full: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 10, 4, 0);
+        for c in 0..4 {
+            assert_eq!(b0.col(c), &full.col(c)[..5]);
+            assert_eq!(b1.col(c), &full.col(c)[5..]);
+        }
+    }
+}

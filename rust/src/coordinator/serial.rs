@@ -1,0 +1,110 @@
+//! Single-node convenience drivers: compute full metric sets directly
+//! through a backend, without the cluster machinery. Used by examples,
+//! tests (as the end-to-end oracle path) and kernel-level benches.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::backend::Backend;
+use crate::metrics::c2_from_parts;
+use crate::metrics::store::{PairStore, TripleStore};
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+
+/// All unique 2-way Proportional Similarity metrics of one vector set.
+pub fn all_pairs<T: Scalar>(
+    backend: &Arc<dyn Backend<T>>,
+    v: &VectorSet<T>,
+) -> Result<PairStore> {
+    let n = backend.mgemm2(v, v)?;
+    let sums = v.col_sums();
+    let mut store = PairStore::new();
+    for j in 1..v.nv {
+        for i in 0..j {
+            store.push(
+                v.first_id + i,
+                v.first_id + j,
+                c2_from_parts(n.at(i, j), sums[i], sums[j]),
+            );
+        }
+    }
+    Ok(store)
+}
+
+/// All unique 3-way Proportional Similarity metrics of one vector set
+/// (O(n_v³) output — small sets only).
+pub fn all_triples<T: Scalar>(
+    backend: &Arc<dyn Backend<T>>,
+    v: &VectorSet<T>,
+) -> Result<TripleStore> {
+    let n2 = backend.mgemm2(v, v)?;
+    let sums = v.col_sums();
+    let mut store = TripleStore::new();
+    let jt = backend.pivot_batch_for(v.nf, v.nv);
+    let pivot_ids: Vec<usize> = (0..v.nv).collect();
+    for chunk in pivot_ids.chunks(jt) {
+        let pivots = v.select_cols(chunk);
+        let slab = backend.mgemm3(v, &pivots, v)?;
+        for (t, &j) in chunk.iter().enumerate() {
+            for i in 0..j {
+                for k in (j + 1)..v.nv {
+                    let n3 = n2.at(i, j) + n2.at(i, k) + n2.at(j, k) - slab.at(t, i, k);
+                    let c3 = 1.5 * n3 / (sums[i] + sums[j] + sums[k]);
+                    store.push(v.first_id + i, v.first_id + j, v.first_id + k, c3);
+                }
+            }
+        }
+    }
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::CpuOptimized;
+    use crate::metrics;
+    use crate::vecdata::SyntheticKind;
+
+    #[test]
+    fn all_pairs_matches_scalar_oracle() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 48, 10, 0);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let store = all_pairs(&backend, &v).unwrap();
+        assert_eq!(store.len(), 45);
+        for e in store.iter() {
+            let want = metrics::czekanowski2(v.col(e.i as usize), v.col(e.j as usize));
+            assert!((e.value - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn all_triples_matches_scalar_oracle() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 32, 9, 0);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let store = all_triples(&backend, &v).unwrap();
+        assert_eq!(store.len(), 9 * 8 * 7 / 6);
+        for e in store.iter() {
+            let want = metrics::czekanowski3(
+                v.col(e.i as usize),
+                v.col(e.j as usize),
+                v.col(e.k as usize),
+            );
+            assert!((e.value - want).abs() < 1e-12, "({},{},{})", e.i, e.j, e.k);
+        }
+    }
+
+    #[test]
+    fn first_id_offsets_respected() {
+        let v: VectorSet<f64> = {
+            let mut s = VectorSet::generate(SyntheticKind::RandomGrid, 3, 16, 4, 100);
+            s.first_id = 100;
+            s
+        };
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let store = all_pairs(&backend, &v).unwrap();
+        for e in store.iter() {
+            assert!(e.i >= 100 && e.j >= 100);
+        }
+    }
+}

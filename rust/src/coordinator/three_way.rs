@@ -1,0 +1,281 @@
+//! Algorithms 2 + 3 — the 3-way metrics node program.
+//!
+//! Structure per the paper (§4.2): an outer communication pipeline
+//! circulates vector blocks around the ring; owned slices (diagonal
+//! edge / face / volume, `decomp::three_way`) then run the inner GPU
+//! pipeline (Algorithm 3): three 2-way mGEMM tables + a pivot-batched
+//! sequence of 3-way slabs, optionally cut into n_st stages. The
+//! coordinator assembles c3 from Eq. (1):
+//!   c3 = (3/2)(n2_ij + n2_ik + n2_jk − n3') / (Σv_i + Σv_j + Σv_k).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checksum::Checksum;
+use crate::comm::{Endpoint, Payload};
+use crate::config::RunConfig;
+use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
+use crate::decomp::three_way::{stripe_pivots, Combo3};
+use crate::decomp::{partition::Partition, three_way, NodeCoord};
+use crate::linalg::MatF64;
+use crate::metrics::{c3_from_parts, indexing, store::PairStore, store::TripleStore};
+use crate::output::NodeWriter;
+use crate::util::{timer::Stopwatch, Scalar};
+use crate::vecdata::VectorSet;
+
+const TAG_BLOCK3: u64 = 5_000;
+const TAG_SUMS3: u64 = 6_000;
+
+pub(crate) fn node_main<T: Scalar>(
+    cfg: &RunConfig,
+    coord: NodeCoord,
+    mut ep: Endpoint,
+    backend: Arc<dyn Backend<T>>,
+) -> Result<NodeResult> {
+    let grid = cfg.grid;
+    let (pv, pr) = (coord.pv, coord.pr);
+    let npv = grid.npv;
+    let mut stats = RunStats::default();
+    let mut checksum = Checksum::new();
+    let mut triples = TripleStore::new();
+    let mut t_in = Stopwatch::new();
+    let mut t_comp = Stopwatch::new();
+    let mut t_out = Stopwatch::new();
+
+    // --- Input phase -----------------------------------------------------
+    t_in.start();
+    let own = load_block::<T>(cfg, pv, 0)?;
+    let own_sums = own.col_sums();
+    t_in.stop();
+
+    let mut writer = match &cfg.output_dir {
+        Some(dir) => Some(
+            NodeWriter::create(std::path::Path::new(dir), ep.rank, cfg.output_threshold)
+                .context("open output writer")?,
+        ),
+        None => None,
+    };
+
+    // Which peer blocks this node's slices need.
+    let slices = three_way::slices_for_node(npv, grid.npr, pv, pr);
+    let mut needed: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    for s in &slices {
+        match s.combo {
+            Combo3::Diag => {}
+            Combo3::Face { other } => {
+                needed.insert(other);
+            }
+            Combo3::Volume { b, c } => {
+                needed.insert(b);
+                needed.insert(c);
+            }
+        }
+    }
+
+    // --- Outer communication pipeline (Algorithm 2's ring) ---------------
+    // Circulate own block; keep the peers our slices reference. Sums are
+    // small and always kept.
+    t_comp.start();
+    let wire: Arc<Vec<f64>> = Arc::new(own.raw().iter().map(|x| x.to_f64()).collect());
+    let sums_wire = Arc::new(own_sums.clone());
+    let mut blocks: HashMap<usize, Arc<VectorSet<T>>> = HashMap::new();
+    let mut sums: HashMap<usize, Arc<Vec<f64>>> = HashMap::new();
+    blocks.insert(pv, Arc::new(own));
+    sums.insert(pv, Arc::new(own_sums));
+    for d in 1..npv {
+        let to = grid.rank(NodeCoord { pf: 0, pv: (pv + npv - d) % npv, pr });
+        let from_pv = (pv + d) % npv;
+        let from = grid.rank(NodeCoord { pf: 0, pv: from_pv, pr });
+        let payload = Payload::Block {
+            nf: cfg.nf,
+            nv: blocks[&pv].nv,
+            first_id: blocks[&pv].first_id,
+            data: Arc::clone(&wire),
+        };
+        let got = ep.sendrecv(to, from, TAG_BLOCK3 + d as u64, payload);
+        let Payload::Block { nf, nv, first_id, data } = got else {
+            bail!("expected Block payload");
+        };
+        let got_sums = ep.sendrecv(to, from, TAG_SUMS3 + d as u64, Payload::Sums(Arc::clone(&sums_wire)));
+        let Payload::Sums(ps) = got_sums else {
+            bail!("expected Sums payload");
+        };
+        sums.insert(from_pv, ps);
+        if needed.contains(&from_pv) {
+            let mut vs = VectorSet::<T>::zeros(nf, nv);
+            vs.first_id = first_id;
+            for (dst, src) in vs.raw_mut().iter_mut().zip(data.iter()) {
+                *dst = T::from_f64(*src);
+            }
+            blocks.insert(from_pv, Arc::new(vs));
+        }
+    }
+
+    // --- Inner pipeline per slice (Algorithm 3) ---------------------------
+    let vparts = Partition::new(cfg.nv, npv);
+    let stages: Vec<usize> = match cfg.stage {
+        Some(s) => vec![s],
+        None => (0..cfg.num_stage).collect(),
+    };
+    // Cache of 2-way numerator tables, keyed by ordered block pair.
+    let mut n2_cache: HashMap<(usize, usize), Arc<MatF64>> = HashMap::new();
+    let mut n2_table = |a: usize,
+                        b: usize,
+                        blocks: &HashMap<usize, Arc<VectorSet<T>>>,
+                        stats: &mut RunStats|
+     -> Result<Arc<MatF64>> {
+        let key = (a.min(b), a.max(b));
+        if let Some(m) = n2_cache.get(&key) {
+            return Ok(Arc::clone(m));
+        }
+        let m = Arc::new(backend.mgemm2(&blocks[&key.0], &blocks[&key.1])?);
+        stats.mgemm2_calls += 1;
+        n2_cache.insert(key, Arc::clone(&m));
+        Ok(m)
+    };
+    // n2 lookup with transpose handling: value for (block x, local i) vs
+    // (block y, local j) from the ordered table.
+    let n2_at = |tab: &MatF64, x: usize, i: usize, y: usize, j: usize| -> f64 {
+        if x <= y {
+            tab.at(i, j)
+        } else {
+            tab.at(j, i)
+        }
+    };
+
+    for slice in &slices {
+        let (b_pivot, b_right) = match slice.combo {
+            Combo3::Diag => (pv, pv),
+            Combo3::Face { other } => (other, pv),
+            Combo3::Volume { b, c } => (b, c),
+        };
+        let a_blk = Arc::clone(&blocks[&pv]);
+        let p_blk = Arc::clone(&blocks[&b_pivot]);
+        let r_blk = Arc::clone(&blocks[&b_right]);
+        let s_a = Arc::clone(&sums[&pv]);
+        let s_p = Arc::clone(&sums[&b_pivot]);
+        let s_r = Arc::clone(&sums[&b_right]);
+        // The three 2-way tables of Algorithm 3.
+        let t_ap = n2_table(pv, b_pivot, &blocks, &mut stats)?;
+        let t_ar = n2_table(pv, b_right, &blocks, &mut stats)?;
+        let t_pr = n2_table(b_pivot, b_right, &blocks, &mut stats)?;
+
+        let jt_max = backend.pivot_batch_for(a_blk.nf, a_blk.nv.max(r_blk.nv));
+        for &stage in &stages {
+            let pivots: Vec<usize> =
+                stripe_pivots(p_blk.nv, slice.sub, cfg.num_stage, stage).collect();
+            for chunk in pivots.chunks(jt_max) {
+                let pivot_set = p_blk.select_cols(chunk);
+                let slab = backend.mgemm3(&a_blk, &pivot_set, &r_blk)?;
+                stats.mgemm3_calls += 1;
+                for (t, &j_local) in chunk.iter().enumerate() {
+                    let gj = vparts.start(b_pivot) + j_local;
+                    match slice.combo {
+                        Combo3::Volume { .. } => {
+                            for i in 0..a_blk.nv {
+                                let gi = vparts.start(pv) + i;
+                                for k in 0..r_blk.nv {
+                                    let gk = vparts.start(b_right) + k;
+                                    let c3 = c3_from_parts(
+                                        n2_at(&t_ap, pv, i, b_pivot, j_local),
+                                        n2_at(&t_ar, pv, i, b_right, k),
+                                        n2_at(&t_pr, b_pivot, j_local, b_right, k),
+                                        slab.at(t, i, k),
+                                        s_a[i],
+                                        s_p[j_local],
+                                        s_r[k],
+                                    );
+                                    emit3(gi, gj, gk, c3, cfg, &mut checksum, &mut triples, &mut writer, &mut t_out, &mut stats)?;
+                                }
+                            }
+                        }
+                        Combo3::Face { .. } => {
+                            // (i1 < i2) ∈ own block, pivot j ∈ other.
+                            for i1 in 0..a_blk.nv {
+                                let g1 = vparts.start(pv) + i1;
+                                for i2 in (i1 + 1)..a_blk.nv {
+                                    let g2 = vparts.start(pv) + i2;
+                                    let c3 = c3_from_parts(
+                                        n2_at(&t_ar, pv, i1, pv, i2),
+                                        n2_at(&t_ap, pv, i1, b_pivot, j_local),
+                                        n2_at(&t_ap, pv, i2, b_pivot, j_local),
+                                        slab.at(t, i1, i2),
+                                        s_a[i1],
+                                        s_a[i2],
+                                        s_p[j_local],
+                                    );
+                                    emit3(g1, g2, gj, c3, cfg, &mut checksum, &mut triples, &mut writer, &mut t_out, &mut stats)?;
+                                }
+                            }
+                        }
+                        Combo3::Diag => {
+                            // i < j_local < k, all in own block.
+                            for i in 0..j_local {
+                                let gi = vparts.start(pv) + i;
+                                for k in (j_local + 1)..a_blk.nv {
+                                    let gk = vparts.start(pv) + k;
+                                    let c3 = c3_from_parts(
+                                        t_ap.at(i, j_local),
+                                        t_ap.at(i, k),
+                                        t_ap.at(j_local, k),
+                                        slab.at(t, i, k),
+                                        s_a[i],
+                                        s_a[j_local],
+                                        s_a[k],
+                                    );
+                                    emit3(gi, gj, gk, c3, cfg, &mut checksum, &mut triples, &mut writer, &mut t_out, &mut stats)?;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    t_comp.stop();
+
+    if let Some(w) = writer.take() {
+        t_out.time(|| w.finish()).ok();
+    }
+    stats.t_input = t_in.secs();
+    stats.t_compute = t_comp.secs() - t_out.secs();
+    stats.t_output = t_out.secs();
+    Ok(NodeResult {
+        checksum,
+        pairs: PairStore::new(),
+        triples,
+        stats,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit3(
+    a: usize,
+    b: usize,
+    c: usize,
+    value: f64,
+    cfg: &RunConfig,
+    checksum: &mut Checksum,
+    triples: &mut TripleStore,
+    writer: &mut Option<NodeWriter>,
+    t_out: &mut Stopwatch,
+    stats: &mut RunStats,
+) -> Result<()> {
+    let mut t = [a, b, c];
+    t.sort_unstable();
+    let (i, j, k) = (t[0], t[1], t[2]);
+    debug_assert!(i < j && j < k, "degenerate triple ({a},{b},{c})");
+    checksum.add_triple(i, j, k, value);
+    stats.metrics += 1;
+    if cfg.store_metrics {
+        triples.push(i, j, k, value);
+    }
+    if let Some(w) = writer {
+        t_out.start();
+        w.write(indexing::triple_offset(i, j, k) as u64, value)?;
+        t_out.stop();
+    }
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Algorithm 1 — the 2-way metrics node program.
+//!
+//! Each parallel step Δ: exchange vector blocks around the ring
+//! (send own block to pv−Δ, receive pv+Δ's), offload the mGEMM
+//! N = V_recv^T ∘min V_own to the backend, reduce partials across the
+//! npf axis if present, then assemble denominators and quotients on the
+//! coordinator side. The block-circulant schedule (`decomp::two_way`)
+//! guarantees unique coverage and load balance (Figure 2(c)).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::checksum::Checksum;
+use crate::comm::{Endpoint, Payload};
+use crate::config::RunConfig;
+use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
+use crate::decomp::{partition::Partition, two_way, NodeCoord};
+use crate::metrics::{c2_from_parts, indexing, store::PairStore, store::TripleStore};
+use crate::output::NodeWriter;
+use crate::util::{Scalar, timer::Stopwatch};
+use crate::vecdata::VectorSet;
+
+/// Tag bases (unique per logical channel; see comm::Endpoint stash).
+const TAG_BLOCK: u64 = 1_000;
+const TAG_SUMS: u64 = 2_000;
+const TAG_REDUCE: u64 = 10_000;
+
+pub(crate) fn node_main<T: Scalar>(
+    cfg: &RunConfig,
+    coord: NodeCoord,
+    mut ep: Endpoint,
+    backend: Arc<dyn Backend<T>>,
+) -> Result<NodeResult> {
+    let grid = cfg.grid;
+    let (pv, pr, pf) = (coord.pv, coord.pr, coord.pf);
+    let mut stats = RunStats::default();
+    let mut checksum = Checksum::new();
+    let mut pairs = PairStore::new();
+    let mut t_in = Stopwatch::new();
+    let mut t_comp = Stopwatch::new();
+    let mut t_out = Stopwatch::new();
+
+    // --- Input phase -----------------------------------------------------
+    t_in.start();
+    let block = load_block::<T>(cfg, pv, pf)?;
+    // Full-feature column sums (allreduced across the npf axis).
+    let local_sums = block.col_sums();
+    let own_sums = if grid.npf > 1 {
+        let group = pf_group(&grid, pv, pr);
+        ep.allreduce_sum(&group, TAG_REDUCE, local_sums)
+    } else {
+        local_sums
+    };
+    t_in.stop();
+
+    let mut writer = match (&cfg.output_dir, pf) {
+        (Some(dir), 0) => Some(
+            NodeWriter::create(std::path::Path::new(dir), ep.rank, cfg.output_threshold)
+                .context("open output writer")?,
+        ),
+        _ => None,
+    };
+
+    // Own block as wire payload (f64), sent at each exchange step.
+    let wire: Arc<Vec<f64>> = Arc::new(block.raw().iter().map(|x| x.to_f64()).collect());
+    let sums_wire = Arc::new(own_sums.clone());
+
+    // --- Parallel step loop (Algorithm 1) ---------------------------------
+    t_comp.start();
+    for step in two_way::plan(grid.npv, grid.npr, pv, pr) {
+        let active = step.dp % grid.npr == pr;
+        if !active {
+            continue;
+        }
+        // Exchange: all pv in this (pf, pr) plane run the same Δ, so the
+        // ring sends/receives pair up.
+        let (peer_block, peer_sums) = if step.dp == 0 {
+            (None, None)
+        } else {
+            let to = grid.rank(NodeCoord { pf, pv: step.send_to_pv, pr });
+            let from = grid.rank(NodeCoord { pf, pv: step.recv_from_pv, pr });
+            let tag = TAG_BLOCK + step.dp as u64;
+            let payload = Payload::Block {
+                nf: block.nf,
+                nv: block.nv,
+                first_id: block.first_id,
+                data: Arc::clone(&wire),
+            };
+            let got = ep.sendrecv(to, from, tag, payload);
+            let Payload::Block { nf, nv, first_id, data } = got else {
+                anyhow::bail!("expected Block payload");
+            };
+            let mut vs = VectorSet::<T>::zeros(nf, nv);
+            vs.first_id = first_id;
+            for (dst, src) in vs.raw_mut().iter_mut().zip(data.iter()) {
+                *dst = T::from_f64(*src);
+            }
+            let got_sums = ep.sendrecv(
+                to,
+                from,
+                TAG_SUMS + step.dp as u64,
+                Payload::Sums(Arc::clone(&sums_wire)),
+            );
+            let Payload::Sums(ps) = got_sums else {
+                anyhow::bail!("expected Sums payload");
+            };
+            (Some(vs), Some(ps))
+        };
+
+        let Some(info) = step.compute else { continue };
+
+        // Offload the numerator block.
+        let (n_block, peer_first, peer_sums_ref): (_, usize, &[f64]) = match &peer_block {
+            None => (
+                backend.mgemm2(&block, &block)?,
+                block.first_id,
+                &own_sums,
+            ),
+            Some(pb) => (
+                backend.mgemm2(&block, pb)?,
+                pb.first_id,
+                peer_sums.as_deref().unwrap(),
+            ),
+        };
+        stats.mgemm2_calls += 1;
+
+        // Reduce partial numerators across the npf axis.
+        let n_block = if grid.npf > 1 {
+            let group = pf_group(&grid, pv, pr);
+            let reduced = ep.allreduce_sum(
+                &group,
+                TAG_REDUCE + 2 * (step.dp as u64 + 1),
+                n_block.data,
+            );
+            crate::linalg::MatF64 { rows: block.nv, cols: reduced.len() / block.nv, data: reduced }
+        } else {
+            n_block
+        };
+
+        // Only the pf=0 plane assembles metrics (others contributed via
+        // the reduction).
+        if pf != 0 {
+            continue;
+        }
+
+        // --- Denominators + quotients on the coordinator side ---------
+        let my_first = block.first_id;
+        if info.diag {
+            for j in 1..n_block.cols {
+                for i in 0..j {
+                    let value = c2_from_parts(n_block.at(i, j), own_sums[i], own_sums[j]);
+                    emit(
+                        my_first + i,
+                        my_first + j,
+                        value,
+                        cfg,
+                        &mut checksum,
+                        &mut pairs,
+                        &mut writer,
+                        &mut t_out,
+                        &mut stats,
+                    )?;
+                }
+            }
+        } else {
+            for i in 0..n_block.rows {
+                for j in 0..n_block.cols {
+                    let value = c2_from_parts(n_block.at(i, j), own_sums[i], peer_sums_ref[j]);
+                    let (a, b) = canonical(my_first + i, peer_first + j);
+                    emit(a, b, value, cfg, &mut checksum, &mut pairs, &mut writer, &mut t_out, &mut stats)?;
+                }
+            }
+        }
+    }
+    t_comp.stop();
+
+    if let Some(w) = writer.take() {
+        t_out.time(|| w.finish()).ok();
+    }
+
+    stats.t_input = t_in.secs();
+    stats.t_compute = t_comp.secs() - t_out.secs();
+    stats.t_output = t_out.secs();
+    Ok(NodeResult {
+        checksum,
+        pairs,
+        triples: TripleStore::new(),
+        stats,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    gi: usize,
+    gj: usize,
+    value: f64,
+    cfg: &RunConfig,
+    checksum: &mut Checksum,
+    pairs: &mut PairStore,
+    writer: &mut Option<NodeWriter>,
+    t_out: &mut Stopwatch,
+    stats: &mut RunStats,
+) -> Result<()> {
+    checksum.add_pair(gi, gj, value);
+    stats.metrics += 1;
+    if cfg.store_metrics {
+        pairs.push(gi, gj, value);
+    }
+    if let Some(w) = writer {
+        t_out.start();
+        w.write(indexing::pair_offset(gi, gj) as u64, value)?;
+        t_out.stop();
+    }
+    Ok(())
+}
+
+#[inline]
+fn canonical(a: usize, b: usize) -> (usize, usize) {
+    debug_assert_ne!(a, b, "off-diagonal blocks cannot pair a vector with itself");
+    if a < b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Ranks sharing (pv, pr) across the npf axis (reduction group),
+/// root (pf = 0) first.
+fn pf_group(grid: &crate::decomp::Grid, pv: usize, pr: usize) -> Vec<usize> {
+    (0..grid.npf)
+        .map(|pf| grid.rank(NodeCoord { pf, pv, pr }))
+        .collect()
+}
+
+/// Expected per-node mGEMM block count for a run (the §6.3 load ℓ).
+pub fn load_for(cfg: &RunConfig, pv: usize, pr: usize) -> usize {
+    two_way::blocks_per_node(cfg.grid.npv, cfg.grid.npr, pv, pr)
+}
+
+/// Partition helper shared with benches: the vector partition of a run.
+pub fn vector_partition(cfg: &RunConfig) -> Partition {
+    Partition::new(cfg.nv, cfg.grid.npv)
+}

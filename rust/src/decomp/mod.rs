@@ -1,0 +1,89 @@
+//! Parallel decompositions (paper §4): the processor grid, the 2-way
+//! block-circulant plan, and the 3-way tetrahedral plan.
+//!
+//! The paper's three axes of internode parallelism (§4.1–4.2):
+//! * `npf` — vector-*elements* axis (rows of V split; partial numerators
+//!   reduced across the axis),
+//! * `npv` — vector-*number* axis (columns of V split; induces the block
+//!   structure of the result matrix/cube),
+//! * `npr` — extra parallelism: blocks/slices of one block row (slab)
+//!   are round-robined over `npr` nodes.
+//!
+//! Total nodes n_p = npf · npv · npr.
+
+pub mod partition;
+pub mod three_way;
+pub mod two_way;
+
+/// The (npf, npv, npr) processor grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid {
+    pub npf: usize,
+    pub npv: usize,
+    pub npr: usize,
+}
+
+impl Grid {
+    pub fn new(npf: usize, npv: usize, npr: usize) -> Self {
+        assert!(npf >= 1 && npv >= 1 && npr >= 1);
+        Grid { npf, npv, npr }
+    }
+
+    /// Total node count n_p.
+    pub fn np(&self) -> usize {
+        self.npf * self.npv * self.npr
+    }
+
+    /// Rank → (pf, pv, pr) coordinates. Rank layout: pf slowest, then
+    /// pv, then pr fastest.
+    pub fn coords(&self, rank: usize) -> NodeCoord {
+        assert!(rank < self.np());
+        let pr = rank % self.npr;
+        let pv = (rank / self.npr) % self.npv;
+        let pf = rank / (self.npr * self.npv);
+        NodeCoord { pf, pv, pr }
+    }
+
+    /// (pf, pv, pr) → rank.
+    pub fn rank(&self, c: NodeCoord) -> usize {
+        assert!(c.pf < self.npf && c.pv < self.npv && c.pr < self.npr);
+        (c.pf * self.npv + c.pv) * self.npr + c.pr
+    }
+}
+
+/// A node's position in the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCoord {
+    pub pf: usize,
+    pub pv: usize,
+    pub pr: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coord_bijection() {
+        let g = Grid::new(2, 3, 4);
+        assert_eq!(g.np(), 24);
+        for r in 0..g.np() {
+            let c = g.coords(r);
+            assert_eq!(g.rank(c), r);
+        }
+    }
+
+    #[test]
+    fn pr_is_fastest_axis() {
+        let g = Grid::new(1, 2, 3);
+        assert_eq!(g.coords(0), NodeCoord { pf: 0, pv: 0, pr: 0 });
+        assert_eq!(g.coords(1), NodeCoord { pf: 0, pv: 0, pr: 1 });
+        assert_eq!(g.coords(3), NodeCoord { pf: 0, pv: 1, pr: 0 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_rank_panics() {
+        Grid::new(1, 2, 1).coords(2);
+    }
+}

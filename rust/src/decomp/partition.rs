@@ -1,0 +1,102 @@
+//! Balanced contiguous 1-D partitions — used for both decomposition
+//! axes (vectors across npv slabs; features across npf groups).
+
+/// Partition `n` items into `parts` contiguous spans whose sizes differ
+/// by at most one (the first `n % parts` spans get the extra item).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    pub n: usize,
+    pub parts: usize,
+}
+
+impl Partition {
+    pub fn new(n: usize, parts: usize) -> Self {
+        assert!(parts >= 1, "need at least one part");
+        Partition { n, parts }
+    }
+
+    pub fn len(&self, p: usize) -> usize {
+        assert!(p < self.parts);
+        let base = self.n / self.parts;
+        let extra = self.n % self.parts;
+        base + usize::from(p < extra)
+    }
+
+    pub fn start(&self, p: usize) -> usize {
+        assert!(p < self.parts);
+        let base = self.n / self.parts;
+        let extra = self.n % self.parts;
+        p * base + p.min(extra)
+    }
+
+    pub fn end(&self, p: usize) -> usize {
+        self.start(p) + self.len(p)
+    }
+
+    pub fn range(&self, p: usize) -> std::ops::Range<usize> {
+        self.start(p)..self.end(p)
+    }
+
+    /// Which part owns global index `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        assert!(i < self.n);
+        let base = self.n / self.parts;
+        let extra = self.n % self.parts;
+        let boundary = extra * (base + 1);
+        if i < boundary {
+            i / (base + 1)
+        } else {
+            extra + (i - boundary) / base
+        }
+    }
+
+    /// Largest part size (the padded block edge the runtime allocates).
+    pub fn max_len(&self) -> usize {
+        self.len(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_exactly_once() {
+        for (n, parts) in [(10, 3), (7, 7), (100, 8), (5, 1), (0, 3), (3, 5)] {
+            let p = Partition::new(n, parts);
+            let mut covered = vec![0usize; n];
+            for part in 0..parts {
+                for i in p.range(part) {
+                    covered[i] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "n={n} parts={parts}");
+        }
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        let p = Partition::new(10, 3);
+        let lens: Vec<usize> = (0..3).map(|i| p.len(i)).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        assert_eq!(p.max_len(), 4);
+    }
+
+    #[test]
+    fn owner_consistent_with_range() {
+        for (n, parts) in [(10, 3), (17, 5), (64, 8), (3, 5)] {
+            let p = Partition::new(n, parts);
+            for i in 0..n {
+                let o = p.owner(i);
+                assert!(p.range(o).contains(&i), "n={n} parts={parts} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_parts_when_more_parts_than_items() {
+        let p = Partition::new(3, 5);
+        assert_eq!(p.len(4), 0);
+        assert_eq!(p.start(4), 3);
+    }
+}

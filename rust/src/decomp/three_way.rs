@@ -1,0 +1,364 @@
+//! 3-way tetrahedral decomposition (paper §4.2, Figures 3–5).
+//!
+//! The results cube is tiled into npv³ blocks by the vector partition;
+//! only ~1/6 of the cube is unique. Blocks fall into three classes
+//! (Figure 5): the **diagonal edge** block (all three ids equal), **face**
+//! blocks (exactly two equal) and **volume** blocks (all distinct). Per
+//! slab (block row) the paper's modified scheme yields
+//! 6 + 6(npv−1) + (npv−1)(npv−2) = (npv+1)(npv+2) slices, round-robined
+//! over the npr axis, with staging (n_st) subdividing each slice's pivot
+//! pipeline.
+//!
+//! **Divergence note (DESIGN.md §4):** for volume blocks the paper
+//! selects per-block 1/6-slices via a folding/reflection construction
+//! that is only sketched in the text. We use a provably-correct
+//! equivalent with identical slice counts and the same communication
+//! pattern: each unordered distinct block triple {A,B,C} is assigned to
+//! a canonical owner slab by *circular distance* (rotation-invariant, so
+//! ownership counts are balanced across slabs), and the owner's work is
+//! split into 6 pivot-stripe sub-slices for the npr round-robin.
+//!
+//! Unique coverage argument: vector blocks are contiguous id ranges, so
+//! for A < B < C every (i ∈ A, j ∈ B, k ∈ C) is automatically i < j < k;
+//! combos of class {A,A,B} enumerate (i1 < i2 ∈ A) × (j ∈ B); the diag
+//! combo enumerates i < j < k within A. Every unique triple falls in
+//! exactly one combo class instance, and each combo is owned by exactly
+//! one slab.
+
+use crate::decomp::partition::Partition;
+
+/// A combo: the unordered multiset of vector blocks a slice draws from.
+/// The owning slab id is carried alongside in [`Slice3`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Combo3 {
+    /// {own, own, own} — the diagonal edge block (6 sub-slices).
+    Diag,
+    /// {own, own, other} — a face combo (6 sub-slices each).
+    Face { other: usize },
+    /// {own, b, c} with own, b, c all distinct and owned by circular
+    /// canonical rule (6 pivot-stripe sub-slices each).
+    Volume { b: usize, c: usize },
+}
+
+/// One schedulable slice of 3-way work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Slice3 {
+    /// Owning slab (vector block whose node computes this).
+    pub slab: usize,
+    pub combo: Combo3,
+    /// Pivot stripe 0..6.
+    pub sub: usize,
+    /// Global slice sequence number within the slab (round-robin key).
+    pub seq: usize,
+}
+
+/// Circular distance pair from `x` to the other two members.
+fn dist_pair(npv: usize, x: usize, y: usize, z: usize) -> (usize, usize) {
+    let dy = (y + npv - x) % npv;
+    let dz = (z + npv - x) % npv;
+    (dy.min(dz), dy.max(dz))
+}
+
+/// Canonical owner of a distinct block triple {a, b, c}: the member with
+/// the lexicographically smallest circular-distance pair to the other
+/// two; ties (rotationally symmetric combos) break to the smallest id.
+pub fn volume_owner(npv: usize, a: usize, b: usize, c: usize) -> usize {
+    debug_assert!(a != b && b != c && a != c);
+    let mut best = a;
+    let mut best_d = dist_pair(npv, a, b, c);
+    for &x in &[b, c] {
+        let (p, q) = match x {
+            x if x == b => (a, c),
+            _ => (a, b),
+        };
+        let d = dist_pair(npv, x, p, q);
+        if d < best_d || (d == best_d && x < best) {
+            best = x;
+            best_d = d;
+        }
+    }
+    best
+}
+
+/// All combos owned by slab `pv`, in the deterministic schedule order
+/// (diag first, then faces by circular offset, then volumes by offset
+/// pair) — the order the slice sequence counter follows.
+pub fn combos_owned(npv: usize, pv: usize) -> Vec<Combo3> {
+    let mut out = vec![Combo3::Diag];
+    for d in 1..npv {
+        out.push(Combo3::Face {
+            other: (pv + d) % npv,
+        });
+    }
+    for dj in 1..npv {
+        for dk in (dj + 1)..npv {
+            let b = (pv + dj) % npv;
+            let c = (pv + dk) % npv;
+            if volume_owner(npv, pv, b, c) == pv {
+                out.push(Combo3::Volume { b, c });
+            }
+        }
+    }
+    out
+}
+
+/// All slices for node (pv, pr): each owned combo contributes 6
+/// pivot-stripe sub-slices; slices are round-robined over npr by their
+/// per-slab sequence number (Algorithm 2's `mod(s_b, npr) = p_r`).
+pub fn slices_for_node(npv: usize, npr: usize, pv: usize, pr: usize) -> Vec<Slice3> {
+    let mut out = Vec::new();
+    let mut seq = 0usize;
+    for combo in combos_owned(npv, pv) {
+        for sub in 0..6 {
+            if seq % npr == pr {
+                out.push(Slice3 {
+                    slab: pv,
+                    combo,
+                    sub,
+                    seq,
+                });
+            }
+            seq += 1;
+        }
+    }
+    out
+}
+
+/// Slice count per slab. The paper's count is (npv+1)(npv+2) exactly;
+/// ours matches for the diag + face classes (6 + 6(npv−1)) and averages
+/// (npv−1)(npv−2) for volumes (exact when ownership divides evenly).
+pub fn slices_per_slab(npv: usize, pv: usize) -> usize {
+    combos_owned(npv, pv).len() * 6
+}
+
+/// npr that gives each node approximately `load` slices (§6.7:
+/// npr = ⌈(npv+1)(npv+2)/ℓ⌉).
+pub fn npr_for_load(npv: usize, load: usize) -> usize {
+    ((npv + 1) * (npv + 2)).div_ceil(load).max(1)
+}
+
+/// The pivot indices (local to the pivot block) of one sub-stripe and
+/// stage: pivots j with j ≡ sub (mod 6) restricted to the stage's range
+/// of the stripe (staging divides each slice's pivot pipeline into
+/// n_st parts, §4.2).
+pub fn stripe_pivots(
+    nvb: usize,
+    sub: usize,
+    nst: usize,
+    stage: usize,
+) -> impl Iterator<Item = usize> {
+    assert!(sub < 6 && stage < nst);
+    let stripe: Vec<usize> = (0..nvb).filter(|j| j % 6 == sub).collect();
+    let part = Partition::new(stripe.len(), nst);
+    let range = part.range(stage);
+    stripe.into_iter().enumerate().filter_map(move |(idx, j)| range.contains(&idx).then_some(j))
+}
+
+/// Enumerate the canonical (i < j < k) *global* triples of one slice
+/// (one stage thereof), given the three block id ranges.
+///
+/// `blocks` is the campaign-wide vector partition.
+pub fn slice_triples(
+    slice: &Slice3,
+    blocks: &Partition,
+    nst: usize,
+    stage: usize,
+) -> Vec<(usize, usize, usize)> {
+    let own = blocks.range(slice.slab);
+    let mut out = Vec::new();
+    match slice.combo {
+        Combo3::Diag => {
+            // Unique triples i < j < k inside the slab; pivot = middle.
+            let nvb = own.len();
+            for j_local in stripe_pivots(nvb, slice.sub, nst, stage) {
+                let j = own.start + j_local;
+                for i in own.start..j {
+                    for k in (j + 1)..own.end {
+                        out.push((i, j, k));
+                    }
+                }
+            }
+        }
+        Combo3::Face { other } => {
+            // Pairs (i1 < i2) from own block × pivot j from other block.
+            let ob = blocks.range(other);
+            for j_local in stripe_pivots(ob.len(), slice.sub, nst, stage) {
+                let j = ob.start + j_local;
+                for i1 in own.clone() {
+                    for i2 in (i1 + 1)..own.end {
+                        let mut t = [i1, i2, j];
+                        t.sort_unstable();
+                        out.push((t[0], t[1], t[2]));
+                    }
+                }
+            }
+        }
+        Combo3::Volume { b, c } => {
+            // Full cross product A × B × C, pivot-striped on B.
+            let bb = blocks.range(b);
+            let cb = blocks.range(c);
+            for j_local in stripe_pivots(bb.len(), slice.sub, nst, stage) {
+                let j = bb.start + j_local;
+                for i in own.clone() {
+                    for k in cb.clone() {
+                        let mut t = [i, j, k];
+                        t.sort_unstable();
+                        out.push((t[0], t[1], t[2]));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// The fundamental invariant: across all nodes, slices, and stages,
+    /// every unique triple (i < j < k) appears exactly once.
+    fn coverage_check(nv: usize, npv: usize, npr: usize, nst: usize) {
+        let blocks = Partition::new(nv, npv);
+        let mut counts: HashMap<(usize, usize, usize), usize> = HashMap::new();
+        for pv in 0..npv {
+            for pr in 0..npr {
+                for slice in slices_for_node(npv, npr, pv, pr) {
+                    for stage in 0..nst {
+                        for t in slice_triples(&slice, &blocks, nst, stage) {
+                            assert!(t.0 < t.1 && t.1 < t.2, "non-canonical {t:?}");
+                            *counts.entry(t).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let expected = nv * (nv - 1) * (nv - 2) / 6;
+        assert_eq!(
+            counts.len(),
+            expected,
+            "missing triples nv={nv} npv={npv} npr={npr} nst={nst}"
+        );
+        for (t, c) in counts {
+            assert_eq!(c, 1, "triple {t:?} computed {c} times");
+        }
+    }
+
+    #[test]
+    fn unique_coverage_various_grids() {
+        coverage_check(12, 1, 1, 1);
+        coverage_check(12, 2, 1, 1);
+        coverage_check(12, 3, 2, 1);
+        coverage_check(12, 4, 3, 2);
+        coverage_check(18, 6, 2, 1);
+        coverage_check(15, 5, 4, 3);
+    }
+
+    #[test]
+    fn volume_ownership_is_rotation_invariant() {
+        let npv = 7;
+        for a in 0..npv {
+            for b in 0..npv {
+                for c in 0..npv {
+                    if a == b || b == c || a == c {
+                        continue;
+                    }
+                    let o = volume_owner(npv, a, b, c);
+                    // Rotating the whole triple rotates the owner.
+                    let o2 = volume_owner(npv, (a + 1) % npv, (b + 1) % npv, (c + 1) % npv);
+                    assert_eq!((o + 1) % npv, o2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn volume_ownership_balanced() {
+        // Rotation invariance implies near-equal combo ownership; allow
+        // the symmetric-tie slack the paper also accepts.
+        for npv in [5usize, 6, 7, 8, 9] {
+            let counts: Vec<usize> = (0..npv)
+                .map(|pv| {
+                    combos_owned(npv, pv)
+                        .iter()
+                        .filter(|c| matches!(c, Combo3::Volume { .. }))
+                        .count()
+                })
+                .collect();
+            let total: usize = counts.iter().sum();
+            assert_eq!(total * 6, npv * (npv - 1) * (npv - 2), "npv={npv}");
+            let min = counts.iter().min().unwrap();
+            let max = counts.iter().max().unwrap();
+            assert!(
+                max - min <= 1 + npv / 3,
+                "npv={npv} counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_counts_match_paper_scaling() {
+        // Paper: (npv+1)(npv+2) slices per slab. Our diag+face counts
+        // are exact; volume counts average (npv−1)(npv−2) per slab.
+        for npv in [4usize, 6, 8] {
+            let total: usize = (0..npv).map(|pv| slices_per_slab(npv, pv)).sum();
+            let paper_total = npv * (npv + 1) * (npv + 2);
+            let diff = (total as i64 - paper_total as i64).unsigned_abs() as usize;
+            assert!(
+                diff <= npv * 6,
+                "npv={npv}: ours={total} paper={paper_total}"
+            );
+        }
+    }
+
+    #[test]
+    fn npr_round_robin_partitions_slices() {
+        let (npv, npr) = (5, 4);
+        for pv in 0..npv {
+            let mut seqs = Vec::new();
+            for pr in 0..npr {
+                for s in slices_for_node(npv, npr, pv, pr) {
+                    seqs.push(s.seq);
+                }
+            }
+            seqs.sort_unstable();
+            assert_eq!(seqs, (0..slices_per_slab(npv, pv)).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn stage_partition_covers_stripe() {
+        let nvb = 26;
+        for sub in 0..6 {
+            let whole: Vec<usize> = stripe_pivots(nvb, sub, 1, 0).collect();
+            let mut staged: Vec<usize> = (0..4).flat_map(|s| stripe_pivots(nvb, sub, 4, s)).collect();
+            staged.sort_unstable();
+            let mut expect = whole.clone();
+            expect.sort_unstable();
+            assert_eq!(staged, expect);
+        }
+    }
+
+    #[test]
+    fn npr_for_load_matches_paper_formula() {
+        // §6.7 example shape: npv=30, npr=496 with nst=220 on 14,880
+        // nodes — check the formula direction: load 6 → npr ≈ (31·32)/6.
+        assert_eq!(npr_for_load(30, 6), (31 * 32usize).div_ceil(6));
+    }
+
+    #[test]
+    fn diag_slice_triples_small() {
+        let blocks = Partition::new(6, 1);
+        let mut all = Vec::new();
+        for sub in 0..6 {
+            let s = Slice3 { slab: 0, combo: Combo3::Diag, sub, seq: sub };
+            all.extend(slice_triples(&s, &blocks, 1, 0));
+        }
+        all.sort_unstable();
+        let expect: Vec<_> = crate::metrics::indexing::triples(6).collect();
+        let mut expect_sorted = expect.clone();
+        expect_sorted.sort_unstable();
+        assert_eq!(all, expect_sorted);
+    }
+}

@@ -1,0 +1,241 @@
+//! 2-way block-circulant decomposition (paper §4.1, Figure 2(c)).
+//!
+//! The result matrix M is tiled into npv × npv blocks by the vector
+//! partition. A naive upper-triangular assignment (Figure 2(a)) leaves
+//! block rows with unequal work — up to 2× imbalance (Figure 2(b)). The
+//! paper's fix: compute the block-circulant subset
+//!
+//! ```text
+//!   { (r, (r + Δ) mod npv) : Δ = 0 … ⌊npv/2⌋ }
+//! ```
+//!
+//! which covers every unique vector pair exactly once (for even npv the
+//! Δ = npv/2 band is computed by the lower half of the rows only) and
+//! gives every block row identical work. Steps Δ are round-robined over
+//! the npr axis: node (pv, pr) computes step Δ iff Δ ≡ pr (mod npr).
+
+/// One block of 2-way work for a node: compare own slab (row block)
+/// against `col_block`'s vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block2 {
+    /// Own (row) vector block id.
+    pub row_block: usize,
+    /// Peer (column) vector block id; == row_block for the diagonal.
+    pub col_block: usize,
+    /// Diagonal block: only the strict upper triangle is unique.
+    pub diag: bool,
+}
+
+/// One parallel step of Algorithm 1 on a given node: the ring exchange
+/// plus (possibly) a block computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Step2 {
+    /// Circulant offset Δ of this step.
+    pub dp: usize,
+    /// pv of the node our V block is sent to: (pv − Δ) mod npv.
+    pub send_to_pv: usize,
+    /// pv of the node whose V block we receive: (pv + Δ) mod npv.
+    pub recv_from_pv: usize,
+    /// Block to compute this step, if this (pv, pr) node owns it.
+    pub compute: Option<Block2>,
+}
+
+/// Full Algorithm 1 schedule for node (pv, pr). All nodes execute the
+/// same ring exchanges (so sends/receives pair up); ownership of the
+/// compute differs.
+pub fn plan(npv: usize, npr: usize, pv: usize, pr: usize) -> Vec<Step2> {
+    assert!(pv < npv && pr < npr);
+    let mut steps = Vec::new();
+    for dp in 0..=npv / 2 {
+        let send_to_pv = (pv + npv - dp % npv) % npv;
+        let recv_from_pv = (pv + dp) % npv;
+        let owned = dp % npr == pr && covered(npv, pv, dp);
+        let compute = owned.then_some(Block2 {
+            row_block: pv,
+            col_block: recv_from_pv,
+            diag: dp == 0,
+        });
+        steps.push(Step2 {
+            dp,
+            send_to_pv,
+            recv_from_pv,
+            compute,
+        });
+    }
+    steps
+}
+
+/// Coverage rule: for even npv the Δ = npv/2 band pairs each row r with
+/// r + npv/2; computing it from both rows would duplicate, so only rows
+/// r < npv/2 compute it.
+fn covered(npv: usize, pv: usize, dp: usize) -> bool {
+    if npv % 2 == 0 && dp == npv / 2 {
+        pv < npv / 2
+    } else {
+        dp <= npv / 2
+    }
+}
+
+/// The naive Figure 2(a) assignment (for the load-imbalance ablation):
+/// row block r computes blocks (r, c) for all c ≥ r.
+pub fn plan_naive(npv: usize, pv: usize) -> Vec<Block2> {
+    (pv..npv)
+        .map(|c| Block2 {
+            row_block: pv,
+            col_block: c,
+            diag: c == pv,
+        })
+        .collect()
+}
+
+/// Block count per node for the circulant plan — the paper's "load" ℓ
+/// (§6.3); equal across pv by construction.
+pub fn blocks_per_node(npv: usize, npr: usize, pv: usize, pr: usize) -> usize {
+    plan(npv, npr, pv, pr)
+        .iter()
+        .filter(|s| s.compute.is_some())
+        .count()
+}
+
+/// The npr that assigns exactly one block per node for a given npv
+/// (paper §6.6: npr = ⌈npv/2 + 1⌉ gives ℓ = 1, npr = ⌈(npv/2 + 1)/ℓ⌉
+/// gives load ℓ).
+pub fn npr_for_load(npv: usize, load: usize) -> usize {
+    (npv / 2 + 1).div_ceil(load).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    /// Every unique block pair {a, b} (and each diagonal) is computed
+    /// exactly once across all nodes.
+    fn coverage_check(npv: usize, npr: usize) {
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        for pv in 0..npv {
+            for pr in 0..npr {
+                for s in plan(npv, npr, pv, pr) {
+                    if let Some(b) = s.compute {
+                        let key = (b.row_block.min(b.col_block), b.row_block.max(b.col_block));
+                        seen.push(key);
+                    }
+                }
+            }
+        }
+        let unique: HashSet<_> = seen.iter().copied().collect();
+        assert_eq!(seen.len(), unique.len(), "duplicate blocks npv={npv} npr={npr}");
+        // Expected: npv diagonals + C(npv, 2) off-diagonal unordered pairs.
+        assert_eq!(
+            unique.len(),
+            npv + npv * (npv - 1) / 2,
+            "missing blocks npv={npv} npr={npr}"
+        );
+    }
+
+    #[test]
+    fn unique_coverage_odd_even() {
+        for npv in [1, 2, 3, 4, 5, 6, 7, 8, 12, 16] {
+            for npr in [1, 2, 3] {
+                coverage_check(npv, npr);
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_load_is_balanced() {
+        // Figure 2(c): every block row has the same number of blocks
+        // (within the ±1 of the even-npv half band).
+        for npv in [4usize, 6, 8, 16] {
+            let counts: Vec<usize> = (0..npv).map(|pv| blocks_per_node(npv, 1, pv, 0)).collect();
+            let min = counts.iter().min().unwrap();
+            let max = counts.iter().max().unwrap();
+            assert!(max - min <= 1, "npv={npv} counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn naive_load_is_imbalanced() {
+        // Figure 2(b): the naive plan's first row has npv blocks, the
+        // last row has 1 — the 2× average imbalance the paper avoids.
+        let npv = 8;
+        let first = plan_naive(npv, 0).len();
+        let last = plan_naive(npv, npv - 1).len();
+        assert_eq!(first, npv);
+        assert_eq!(last, 1);
+    }
+
+    #[test]
+    fn naive_covers_everything_too() {
+        let npv = 6;
+        let mut seen = HashSet::new();
+        for pv in 0..npv {
+            for b in plan_naive(npv, pv) {
+                assert!(seen.insert((b.row_block, b.col_block)));
+            }
+        }
+        assert_eq!(seen.len(), npv + npv * (npv - 1) / 2);
+    }
+
+    #[test]
+    fn ring_exchange_pairs_up() {
+        // At each step, the set of (sender, receiver) pairs must be a
+        // permutation: everyone sends exactly once and receives exactly
+        // once, so blocking send/recv pairs match.
+        let (npv, npr) = (6, 2);
+        for dp in 0..=npv / 2 {
+            let mut recv_counts = vec![0; npv];
+            for pv in 0..npv {
+                let steps = plan(npv, npr, pv, 0);
+                let s = &steps[dp];
+                assert_eq!(s.dp, dp);
+                recv_counts[s.recv_from_pv] += 1;
+            }
+            assert!(recv_counts.iter().all(|&c| c == 1));
+        }
+    }
+
+    #[test]
+    fn npr_round_robin_partitions_steps() {
+        let (npv, npr) = (9, 3);
+        for pv in 0..npv {
+            let mut dps = Vec::new();
+            for pr in 0..npr {
+                for s in plan(npv, npr, pv, pr) {
+                    if s.compute.is_some() {
+                        dps.push(s.dp);
+                    }
+                }
+            }
+            dps.sort_unstable();
+            let all: Vec<usize> = (0..=npv / 2).collect();
+            assert_eq!(dps, all);
+        }
+    }
+
+    #[test]
+    fn npr_for_load_matches_paper() {
+        // §6.6: npr = ⌈npv/2 + 1⌉ -> one block per node.
+        let npv = 8;
+        let npr = npr_for_load(npv, 1);
+        assert_eq!(npr, npv / 2 + 1);
+        for pv in 0..npv {
+            for pr in 0..npr {
+                assert!(blocks_per_node(npv, npr, pv, pr) <= 1);
+            }
+        }
+        // Load 13 (the paper's weak-scaling setting) with npv=26:
+        // ⌈(13+1)/13⌉ = 2.
+        assert_eq!(npr_for_load(26, 13), 2);
+    }
+
+    #[test]
+    fn single_node_plan() {
+        let steps = plan(1, 1, 0, 0);
+        assert_eq!(steps.len(), 1);
+        assert_eq!(
+            steps[0].compute,
+            Some(Block2 { row_block: 0, col_block: 0, diag: true })
+        );
+    }
+}

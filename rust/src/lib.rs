@@ -1,0 +1,41 @@
+//! # CoMet-RS — Parallel Accelerated Vector Similarity for Genomics
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *"Parallel Accelerated Vector Similarity Calculations for Genomics
+//! Applications"* (Joubert, Nance, Weighill, Jacobson — Parallel
+//! Computing, 2018; DOI 10.1016/j.parco.2018.03.009): 2-way and 3-way
+//! Proportional Similarity (Czekanowski) metrics computed through a
+//! min-product "modified GEMM" (mGEMM) offloaded to an accelerator, with
+//! block-circulant (2-way) and tetrahedral (3-way) parallel
+//! decompositions, redundancy elimination, staging, and pipelined
+//! communication.
+//!
+//! Layer map (see DESIGN.md):
+//! * **Layer 1/2 (build time)** — Pallas kernels + JAX graphs in
+//!   `python/compile/`, AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the coordinator: loads artifacts through
+//!   the PJRT CPU client ([`runtime`]), runs the paper's Algorithms 1–3
+//!   over a simulated multi-node cluster ([`comm`], [`decomp`],
+//!   [`coordinator`]), and owns denominators, quotients, checksums, and
+//!   output ([`metrics`], [`checksum`], [`output`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `comet` binary is self-contained.
+
+pub mod checksum;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod decomp;
+pub mod linalg;
+pub mod metrics;
+pub mod output;
+pub mod perfmodel;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+pub mod vecdata;
+
+/// Crate-wide result type (anyhow is the only vendored error crate).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,139 @@
+//! Native (host) mGEMM implementations — the paper's CPU comparators.
+//!
+//! The paper ships three versions of every method: "a reference
+//! (CPU-only) version, a (possibly optimized) CPU version, and a GPU
+//! version" (§5). Here:
+//!
+//! * [`reference`] — straight triple loop, no blocking: the correctness
+//!   baseline and the "CPU" row of Table 2.
+//! * [`optimized`] — cache-blocked, accumulator-tiled, autovectorizable:
+//!   the optimized CPU comparator (and the fallback backend when no
+//!   artifacts are built).
+//! * [`sorenson`] — the bit-packed popcount path (§2.3 / Table 6).
+//!
+//! All operate on column-major [`VectorSet`]s and produce row-major
+//! outputs `out[i * n + j]` matching the artifact output layout.
+
+pub mod optimized;
+pub mod reference;
+pub mod sorenson;
+
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+
+/// Dense row-major result matrix from an mGEMM block: out[i, j] =
+/// n2(w_i, v_j), dims m × n.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF64 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Max |a - b| over entries (test helper).
+    pub fn max_abs_diff(&self, other: &MatF64) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Dense row-major jt × m × n slab from a 3-way block:
+/// slab[t, i, k] = n3'(w_i, pivot_t, v_k).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlabF64 {
+    pub jt: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl SlabF64 {
+    pub fn zeros(jt: usize, rows: usize, cols: usize) -> Self {
+        SlabF64 {
+            jt,
+            rows,
+            cols,
+            data: vec![0.0; jt * rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, t: usize, i: usize, k: usize) -> f64 {
+        self.data[(t * self.rows + i) * self.cols + k]
+    }
+
+    #[inline]
+    pub fn set(&mut self, t: usize, i: usize, k: usize, v: f64) {
+        self.data[(t * self.rows + i) * self.cols + k] = v;
+    }
+
+    pub fn max_abs_diff(&self, other: &SlabF64) -> f64 {
+        assert_eq!(
+            (self.jt, self.rows, self.cols),
+            (other.jt, other.rows, other.cols)
+        );
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Convenience: reference mGEMM2 over full sets (tests/benches).
+pub fn mgemm2_ref<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
+    reference::mgemm2(w, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_indexing() {
+        let mut m = MatF64::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.data[5], 5.0);
+    }
+
+    #[test]
+    fn slab_indexing() {
+        let mut s = SlabF64::zeros(2, 3, 4);
+        s.set(1, 2, 3, 7.0);
+        assert_eq!(s.at(1, 2, 3), 7.0);
+        assert_eq!(s.data[(1 * 3 + 2) * 4 + 3], 7.0);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let mut a = MatF64::zeros(2, 2);
+        let mut b = MatF64::zeros(2, 2);
+        a.set(0, 0, 1.0);
+        b.set(0, 0, 1.5);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,190 @@
+//! Optimized native mGEMM — the paper's "(possibly optimized) CPU
+//! version" (§5), adapted to one host core.
+//!
+//! The optimization story mirrors what MAGMA does on the GPU, scaled to
+//! the host cache hierarchy:
+//! * **j-register-tiling**: each inner pass accumulates `JT` output
+//!   columns at once into scalar accumulators, so each load of `w_i[q]`
+//!   is reused JT times (the register-blocking that makes GEMM live).
+//! * **q-contiguity**: vectors are column-contiguous, so the inner loop
+//!   is a pure sequential sweep that the compiler autovectorizes
+//!   (min + add per lane — exactly the paper's two ops per comparison).
+//! * **i×j cache blocking**: outer blocks sized so the working panels
+//!   stay in L1/L2 (the host stand-in for VMEM/shared-memory tiling).
+
+use crate::linalg::{MatF64, SlabF64};
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+
+/// Output-column register tile. 8 f64 accumulators fit comfortably in
+/// the 16 architectural vector registers alongside the streamed operand.
+const JT: usize = 8;
+/// Outer cache-block edge (vectors per block; panels of BI×n_f floats).
+const BI: usize = 32;
+
+/// Blocked N = W^T ∘min V.
+pub fn mgemm2<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let (m, n, nf) = (w.nv, v.nv, w.nf);
+    let mut out = MatF64::zeros(m, n);
+    for i0 in (0..m).step_by(BI) {
+        let i1 = (i0 + BI).min(m);
+        for j0 in (0..n).step_by(BI) {
+            let j1 = (j0 + BI).min(n);
+            for i in i0..i1 {
+                let wi = w.col(i);
+                let mut j = j0;
+                // Register-tiled main loop: JT columns at once.
+                while j + JT <= j1 {
+                    let mut acc = [T::ZERO; JT];
+                    let cols: [&[T]; JT] = std::array::from_fn(|t| v.col(j + t));
+                    for q in 0..nf {
+                        let wq = wi[q];
+                        for t in 0..JT {
+                            acc[t] += wq.min_s(cols[t][q]);
+                        }
+                    }
+                    for t in 0..JT {
+                        out.set(i, j + t, acc[t].to_f64());
+                    }
+                    j += JT;
+                }
+                // Remainder columns.
+                while j < j1 {
+                    let vj = v.col(j);
+                    let mut acc = T::ZERO;
+                    for q in 0..nf {
+                        acc += wi[q].min_s(vj[q]);
+                    }
+                    out.set(i, j, acc.to_f64());
+                    j += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked true GEMM (same schedule, multiply-add inner op) — the native
+/// comparator for the Table 1 min-vs-FMA headroom measurement.
+pub fn gemm<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
+    assert_eq!(w.nf, v.nf);
+    let (m, n, nf) = (w.nv, v.nv, w.nf);
+    let mut out = MatF64::zeros(m, n);
+    for i0 in (0..m).step_by(BI) {
+        let i1 = (i0 + BI).min(m);
+        for j0 in (0..n).step_by(BI) {
+            let j1 = (j0 + BI).min(n);
+            for i in i0..i1 {
+                let wi = w.col(i);
+                let mut j = j0;
+                while j + JT <= j1 {
+                    let mut acc = [T::ZERO; JT];
+                    let cols: [&[T]; JT] = std::array::from_fn(|t| v.col(j + t));
+                    for q in 0..nf {
+                        let wq = wi[q];
+                        for t in 0..JT {
+                            acc[t] += wq * cols[t][q];
+                        }
+                    }
+                    for t in 0..JT {
+                        out.set(i, j + t, acc[t].to_f64());
+                    }
+                    j += JT;
+                }
+                while j < j1 {
+                    let vj = v.col(j);
+                    let mut acc = T::ZERO;
+                    for q in 0..nf {
+                        acc += wi[q] * vj[q];
+                    }
+                    out.set(i, j, acc.to_f64());
+                    j += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked 3-way slab: slab[t, i, k] = Σ_q min(pivot_t, w_i, v_k).
+/// Implemented as the paper's X_j construction (§3.2): materialize
+/// X_t = pivot_t ∘min W once per pivot, then a 2-way pass against V —
+/// this halves the min count vs. the naive triple loop.
+pub fn mgemm3<T: Scalar>(w: &VectorSet<T>, pivots: &VectorSet<T>, v: &VectorSet<T>) -> SlabF64 {
+    assert_eq!(w.nf, v.nf);
+    assert_eq!(w.nf, pivots.nf);
+    let (m, n, nf, jt) = (w.nv, v.nv, w.nf, pivots.nv);
+    let mut out = SlabF64::zeros(jt, m, n);
+    let mut x = VectorSet::<T>::zeros(nf, m); // X_t panel, reused per pivot
+    for t in 0..jt {
+        let pt = pivots.col(t).to_vec(); // detach borrow
+        for i in 0..m {
+            let wi = w.col(i);
+            let xc = x.col_mut(i);
+            for q in 0..nf {
+                xc[q] = pt[q].min_s(wi[q]);
+            }
+        }
+        let plane = mgemm2(&x, v);
+        for i in 0..m {
+            for k in 0..n {
+                out.set(t, i, k, plane.at(i, k));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::reference;
+    use crate::vecdata::SyntheticKind;
+
+    fn gen(nf: usize, nv: usize, seed: u64, first: usize) -> VectorSet<f64> {
+        VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, first)
+    }
+
+    #[test]
+    fn mgemm2_matches_reference_all_shapes() {
+        // Exercise remainder paths: sizes straddling JT and BI multiples.
+        for &(nf, m, n) in &[(7usize, 3usize, 5usize), (64, 8, 8), (33, 37, 41), (128, 32, 64)] {
+            let w = gen(nf, m, 1, 0);
+            let v = gen(nf, n, 1, 1000);
+            let a = mgemm2(&w, &v);
+            let b = reference::mgemm2(&w, &v);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "shape ({nf},{m},{n})");
+        }
+    }
+
+    #[test]
+    fn mgemm2_f32_matches_reference_bitwise() {
+        // Grid-valued f32 inputs: blocked accumulation order differs but
+        // sums are exact, so results are bit-identical (paper §5).
+        let w: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 96, 20, 0);
+        let v: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 96, 24, 50);
+        let a = mgemm2(&w, &v);
+        let b = reference::mgemm2(&w, &v);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn gemm_matches_reference() {
+        let w = gen(48, 19, 3, 0);
+        let v = gen(48, 23, 3, 500);
+        let a = gemm(&w, &v);
+        let b = reference::gemm(&w, &v);
+        assert!(a.max_abs_diff(&b) < 1e-10);
+    }
+
+    #[test]
+    fn mgemm3_matches_reference() {
+        let w = gen(29, 9, 4, 0);
+        let p = gen(29, 5, 4, 200);
+        let v = gen(29, 11, 4, 400);
+        let a = mgemm3(&w, &p, &v);
+        let b = reference::mgemm3(&w, &p, &v);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+}

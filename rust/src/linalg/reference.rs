@@ -1,0 +1,125 @@
+//! Reference (unoptimized) native kernels — the paper's "reference
+//! (CPU-only) version" (§5): direct transcriptions of the definitions,
+//! used as the correctness baseline for every other path and as the
+//! "CPU" side of the Table 2 GPU-vs-CPU comparison.
+
+use crate::linalg::{MatF64, SlabF64};
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+
+/// N[i, j] = Σ_q min(w_i[q], v_j[q]) — straight triple loop.
+pub fn mgemm2<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    for i in 0..w.nv {
+        let wi = w.col(i);
+        for j in 0..v.nv {
+            let vj = v.col(j);
+            let mut acc = T::ZERO;
+            for q in 0..w.nf {
+                acc += wi[q].min_s(vj[q]);
+            }
+            out.set(i, j, acc.to_f64());
+        }
+    }
+    out
+}
+
+/// True GEMM comparator: G[i, j] = Σ_q w_i[q]·v_j[q].
+pub fn gemm<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
+    assert_eq!(w.nf, v.nf);
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    for i in 0..w.nv {
+        let wi = w.col(i);
+        for j in 0..v.nv {
+            let vj = v.col(j);
+            let mut acc = T::ZERO;
+            for q in 0..w.nf {
+                acc += wi[q] * vj[q];
+            }
+            out.set(i, j, acc.to_f64());
+        }
+    }
+    out
+}
+
+/// slab[t, i, k] = Σ_q min(pivots_t[q], w_i[q], v_k[q]).
+pub fn mgemm3<T: Scalar>(w: &VectorSet<T>, pivots: &VectorSet<T>, v: &VectorSet<T>) -> SlabF64 {
+    assert_eq!(w.nf, v.nf);
+    assert_eq!(w.nf, pivots.nf);
+    let mut out = SlabF64::zeros(pivots.nv, w.nv, v.nv);
+    for t in 0..pivots.nv {
+        let pt = pivots.col(t);
+        for i in 0..w.nv {
+            let wi = w.col(i);
+            for k in 0..v.nv {
+                let vk = v.col(k);
+                let mut acc = T::ZERO;
+                for q in 0..w.nf {
+                    acc += pt[q].min_s(wi[q]).min_s(vk[q]);
+                }
+                out.set(t, i, k, acc.to_f64());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics;
+    use crate::vecdata::SyntheticKind;
+
+    #[test]
+    fn mgemm2_matches_scalar_oracle() {
+        let w: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 23, 5, 0);
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 23, 7, 100);
+        let n = mgemm2(&w, &v);
+        for i in 0..5 {
+            for j in 0..7 {
+                assert_eq!(n.at(i, j), metrics::n2(w.col(i), v.col(j)));
+            }
+        }
+    }
+
+    #[test]
+    fn mgemm2_diag_equals_colsum() {
+        // n2(v, v) = Σ v — a cheap strong invariant.
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 31, 6, 0);
+        let n = mgemm2(&v, &v);
+        let sums = v.col_sums();
+        for i in 0..6 {
+            assert!((n.at(i, i) - sums[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mgemm3_matches_scalar_oracle() {
+        let w: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 17, 4, 0);
+        let p: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 17, 3, 50);
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 17, 5, 90);
+        let s = mgemm3(&w, &p, &v);
+        for t in 0..3 {
+            for i in 0..4 {
+                for k in 0..5 {
+                    assert_eq!(
+                        s.at(t, i, k),
+                        metrics::n3_prime(p.col(t), w.col(i), v.col(k))
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_small_case() {
+        let mut w: VectorSet<f64> = VectorSet::zeros(2, 2);
+        w.col_mut(0).copy_from_slice(&[1.0, 2.0]);
+        w.col_mut(1).copy_from_slice(&[3.0, 4.0]);
+        let g = gemm(&w, &w);
+        assert_eq!(g.at(0, 0), 5.0);
+        assert_eq!(g.at(0, 1), 11.0);
+        assert_eq!(g.at(1, 1), 25.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Bitwise Sorenson kernels (paper §2.3 + the Table 6 1-bit baselines).
+//!
+//! On 0/1 data the min-product is a logical AND, so the mGEMM becomes an
+//! AND+popcount GEMM over packed words — the trick behind the very high
+//! comparison rates of the 1-bit codes in Table 6 (Haque et al.): each
+//! 64-bit word op performs 64 elementwise comparisons.
+
+use crate::linalg::MatF64;
+use crate::vecdata::bits::BitVectorSet;
+
+/// Full numerator matrix N[i, j] = |u_i AND v_j| over packed words.
+pub fn sorenson_mgemm(w: &BitVectorSet, v: &BitVectorSet) -> MatF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    for i in 0..w.nv {
+        let wi = w.words(i);
+        for j in 0..v.nv {
+            let vj = v.words(j);
+            let mut acc = 0u64;
+            for (a, b) in wi.iter().zip(vj) {
+                acc += (a & b).count_ones() as u64;
+            }
+            out.set(i, j, acc as f64);
+        }
+    }
+    out
+}
+
+/// Unique-pair Sorenson metric values for one set (upper triangle).
+pub fn sorenson_all_pairs(v: &BitVectorSet) -> crate::metrics::store::PairStore {
+    let pops: Vec<u64> = (0..v.nv).map(|i| v.popcount(i)).collect();
+    let mut store = crate::metrics::store::PairStore::new();
+    for i in 0..v.nv {
+        for j in (i + 1)..v.nv {
+            let d = pops[i] + pops[j];
+            let c = if d == 0 {
+                0.0
+            } else {
+                2.0 * v.and_popcount(i, j) as f64 / d as f64
+            };
+            store.push(i, j, c);
+        }
+    }
+    store
+}
+
+/// Elementwise-comparison count for a bitwise all-pairs study — each
+/// feature of each unique pair is one comparison (the Table 6 unit),
+/// even though 64 of them ride in each word op.
+pub fn cmp_count(nf: usize, nv: usize) -> u64 {
+    nf as u64 * (nv as u64 * (nv as u64 - 1) / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_float_mgemm_on_bits() {
+        let bits = BitVectorSet::generate(3, 150, 12, 0.35);
+        let floats = bits.to_floats();
+        let a = sorenson_mgemm(&bits, &bits);
+        let b = crate::linalg::reference::mgemm2(&floats, &floats);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn all_pairs_matches_scalar() {
+        let bits = BitVectorSet::generate(5, 100, 9, 0.4);
+        let store = sorenson_all_pairs(&bits);
+        assert_eq!(store.len(), 9 * 8 / 2);
+        for e in store.iter() {
+            let direct = bits.sorenson2(e.i as usize, e.j as usize);
+            assert_eq!(e.value, direct);
+        }
+    }
+
+    #[test]
+    fn cmp_count_formula() {
+        assert_eq!(cmp_count(100, 5), 100 * 10);
+    }
+}

@@ -1,0 +1,356 @@
+//! `comet` — launcher CLI for CoMet-RS.
+//!
+//! Subcommands:
+//!   run        execute a 2-way/3-way metrics campaign (config file or flags)
+//!   plan       print the parallel decomposition schedule for a grid
+//!   artifacts  validate the AOT artifact manifest
+//!   model      evaluate the §6.3 performance model
+//!   gen-data   write a synthetic input file (§6.8 binary format)
+//!   info       build/runtime information
+//!
+//! Examples:
+//!   comet run --num-way 2 --nv 1024 --nf 384 --npv 4 --backend pjrt
+//!   comet run --config campaign.toml
+//!   comet plan --num-way 3 --npv 6 --npr 4
+//!   comet model --num-way 2 --nvp 10240 --nfp 5000 --load 13
+
+use anyhow::{bail, Context, Result};
+use comet::cli;
+use comet::comm::cost::CostModel;
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator;
+use comet::decomp::{three_way, two_way, Grid};
+use comet::metrics::counts;
+use comet::perfmodel;
+use comet::runtime::Manifest;
+use comet::util::fmt;
+use comet::vecdata::{io as vio, SyntheticKind, VectorSet};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("comet: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = cli::parse(argv)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "plan" => cmd_plan(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "model" => cmd_model(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "info" => cmd_info(),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; see `comet help`"),
+    }
+}
+
+const HELP: &str = "\
+comet — Parallel Accelerated Vector Similarity Calculations (CoMet-RS)
+
+USAGE: comet <run|plan|artifacts|model|gen-data|info|help> [options]
+
+run options:
+  --config FILE      TOML run config (flags below override it)
+  --num-way 2|3      metric order (default 2)
+  --nv N --nf N      vectors / features
+  --precision f32|f64
+  --backend pjrt|cpu|reference
+  --npf N --npv N --npr N   processor grid (virtual nodes)
+  --num-stage N --stage S   3-way staging
+  --synthetic grid|verifiable|phewas   input generator (default grid)
+  --seed N
+  --input-file FILE  column-major binary input (overrides --synthetic)
+  --output-dir DIR   write per-node metric files
+  --output-threshold X  drop metrics below X ((offset, byte) records)
+  --no-store         do not keep metrics in memory (big runs)
+  --artifacts DIR    artifact directory (default: artifacts)
+
+plan options:    --num-way 2|3 --npv N [--npr N]
+model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
+                 [--tgemm SECS] [--tcpu SECS] [--precision f32|f64]
+gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
+                 [--synthetic grid|verifiable|phewas] [--seed N]
+";
+
+fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+            RunConfig::from_toml_str(&text)?
+        }
+        None => RunConfig::default(),
+    };
+    cfg.num_way = args.parse_or("num-way", cfg.num_way)?;
+    cfg.nv = args.parse_or("nv", cfg.nv)?;
+    cfg.nf = args.parse_or("nf", cfg.nf)?;
+    if let Some(p) = args.opt_str("precision") {
+        cfg.precision = Precision::parse(p)?;
+    }
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    let npf = args.parse_or("npf", cfg.grid.npf)?;
+    let npv = args.parse_or("npv", cfg.grid.npv)?;
+    let npr = args.parse_or("npr", cfg.grid.npr)?;
+    cfg.grid = Grid::new(npf, npv, npr);
+    cfg.num_stage = args.parse_or("num-stage", cfg.num_stage)?;
+    if let Some(s) = args.opt_parse::<usize>("stage")? {
+        cfg.stage = Some(s);
+    }
+    if let Some(f) = args.opt_str("input-file") {
+        cfg.input = InputSource::File { path: f.to_string() };
+    } else if args.opt_str("synthetic").is_some() || args.opt_str("seed").is_some() {
+        let kind = match args.str_or("synthetic", "grid").as_str() {
+            "grid" => SyntheticKind::RandomGrid,
+            "verifiable" => SyntheticKind::Verifiable,
+            "phewas" => SyntheticKind::PhewasLike,
+            other => bail!("unknown --synthetic {other:?}"),
+        };
+        cfg.input = InputSource::Synthetic { kind, seed: args.parse_or("seed", 1u64)? };
+    }
+    if let Some(dir) = args.opt_str("output-dir") {
+        cfg.output_dir = Some(dir.to_string());
+    }
+    if let Some(t) = args.opt_parse::<f64>("output-threshold")? {
+        cfg.output_threshold = Some(t);
+    }
+    if args.switch("no-store") {
+        cfg.store_metrics = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &cli::Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    println!(
+        "comet run: {}-way {} nv={} nf={} grid=({},{},{}) backend={} stages={}{}",
+        cfg.num_way,
+        cfg.precision.tag(),
+        cfg.nv,
+        cfg.nf,
+        cfg.grid.npf,
+        cfg.grid.npv,
+        cfg.grid.npr,
+        cfg.backend.name(),
+        cfg.num_stage,
+        cfg.stage.map(|s| format!(" (stage {s})")).unwrap_or_default(),
+    );
+    let outcome = coordinator::run_with_artifacts(&cfg, std::path::Path::new(&artifacts))?;
+    let s = &outcome.stats;
+    println!("  metrics computed : {}", s.metrics);
+    println!("  checksum         : {}", outcome.checksum.digest());
+    println!(
+        "  mGEMM calls      : {} (2-way) + {} (3-way slabs)",
+        s.mgemm2_calls, s.mgemm3_calls
+    );
+    println!(
+        "  comm             : {} in {} messages",
+        fmt::bytes(s.comm_bytes),
+        s.comm_messages
+    );
+    println!(
+        "  time             : total {} | input {} | compute {} | output {}",
+        fmt::secs(s.t_total),
+        fmt::secs(s.t_input),
+        fmt::secs(s.t_compute),
+        fmt::secs(s.t_output)
+    );
+    if s.t_accel > 0.0 {
+        println!("  accelerator time : {}", fmt::secs(s.t_accel));
+    }
+    let cmps = if cfg.num_way == 2 {
+        counts::cmp_2way(cfg.nf, cfg.nv)
+    } else {
+        counts::cmp_3way(cfg.nf, cfg.nv)
+    };
+    // Comparisons actually computed this run (a single stage computes a
+    // fraction of the campaign).
+    let frac = s.metrics as f64
+        / if cfg.num_way == 2 {
+            comet::metrics::indexing::num_pairs(cfg.nv) as f64
+        } else {
+            comet::metrics::indexing::num_triples(cfg.nv) as f64
+        };
+    let rate = cmps as f64 * frac / s.t_total;
+    println!("  comparison rate  : {} ({}% of campaign)", fmt::cmp_rate(rate), (frac * 100.0).round());
+    Ok(())
+}
+
+fn cmd_plan(args: &cli::Args) -> Result<()> {
+    let num_way: usize = args.parse_or("num-way", 2)?;
+    let npv: usize = args.parse_or("npv", 4)?;
+    let npr: usize = args.parse_or("npr", 1)?;
+    args.reject_unknown()?;
+    let mut table = fmt::Table::new(&["node", "work items", "detail"]);
+    match num_way {
+        2 => {
+            for pv in 0..npv {
+                for pr in 0..npr {
+                    let steps = two_way::plan(npv, npr, pv, pr);
+                    let blocks: Vec<String> = steps
+                        .iter()
+                        .filter_map(|s| s.compute.map(|b| format!("({},{})", b.row_block, b.col_block)))
+                        .collect();
+                    table.row(&[
+                        format!("(pv={pv},pr={pr})"),
+                        blocks.len().to_string(),
+                        blocks.join(" "),
+                    ]);
+                }
+            }
+        }
+        3 => {
+            for pv in 0..npv {
+                for pr in 0..npr {
+                    let slices = three_way::slices_for_node(npv, npr, pv, pr);
+                    let mut diag = 0;
+                    let mut face = 0;
+                    let mut vol = 0;
+                    for s in &slices {
+                        match s.combo {
+                            three_way::Combo3::Diag => diag += 1,
+                            three_way::Combo3::Face { .. } => face += 1,
+                            three_way::Combo3::Volume { .. } => vol += 1,
+                        }
+                    }
+                    table.row(&[
+                        format!("(pv={pv},pr={pr})"),
+                        slices.len().to_string(),
+                        format!("diag={diag} face={face} volume={vol}"),
+                    ]);
+                }
+            }
+        }
+        other => bail!("--num-way must be 2 or 3, got {other}"),
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &cli::Args) -> Result<()> {
+    let dir = args.str_or("dir", "artifacts");
+    let analyze = args.switch("analyze");
+    args.reject_unknown()?;
+    let manifest = Manifest::load(std::path::Path::new(&dir))?;
+    if analyze {
+        // L2 cost analysis: op histogram per artifact (DESIGN.md §6).
+        let mut table =
+            fmt::Table::new(&["artifact", "instrs", "loops", "fusions", "min", "and", "dot"]);
+        for e in &manifest.entries {
+            let path = manifest.dir.join(&e.file);
+            if !path.exists() {
+                continue;
+            }
+            let s = comet::runtime::hloinfo::parse_file(&path)?;
+            table.row(&[
+                e.name.clone(),
+                s.instructions.to_string(),
+                s.loops().to_string(),
+                s.fusions().to_string(),
+                s.count("minimum").to_string(),
+                s.count("and").to_string(),
+                s.count("dot").to_string(),
+            ]);
+        }
+        table.print();
+        return Ok(());
+    }
+    let mut table = fmt::Table::new(&["artifact", "kind", "prec", "nf", "nv", "jt", "built"]);
+    for e in &manifest.entries {
+        let built = manifest.dir.join(&e.file).exists();
+        table.row(&[
+            e.name.clone(),
+            e.kind.clone(),
+            e.precision.tag().to_string(),
+            e.nf.to_string(),
+            e.nv.to_string(),
+            e.jt.to_string(),
+            if built { "yes".into() } else { "MISSING".into() },
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_model(args: &cli::Args) -> Result<()> {
+    let num_way: usize = args.parse_or("num-way", 2)?;
+    let precision = Precision::parse(&args.str_or("precision", "f64"))?;
+    let input = perfmodel::ModelInput {
+        nfp: args.parse_or("nfp", 5000)?,
+        nvp: args.parse_or("nvp", 10_240)?,
+        elem_bytes: precision.bytes(),
+        t_gemm: args.parse_or("tgemm", 6.5)?,
+        t_cpu: args.parse_or("tcpu", 0.1)?,
+        load: args.parse_or("load", 13)?,
+        nst: args.parse_or("nst", 16)?,
+        net: CostModel::gemini(),
+        link: CostModel::pcie2(),
+    };
+    args.reject_unknown()?;
+    let p = match num_way {
+        2 => perfmodel::predict_2way(&input),
+        3 => perfmodel::predict_3way(&input),
+        other => bail!("--num-way must be 2 or 3, got {other}"),
+    };
+    println!("§6.3 model, {num_way}-way, {} elem bytes:", input.elem_bytes);
+    println!("  t_comm      = {}", fmt::secs(p.t_comm));
+    println!("  t_transfer_V= {}", fmt::secs(p.t_transfer_v));
+    println!("  t_transfer_M= {}", fmt::secs(p.t_transfer_m));
+    println!("  t_mGEMM     = {}", fmt::secs(p.t_gemm_total));
+    println!("  t_CPU       = {}", fmt::secs(p.t_cpu));
+    println!("  total       = {}", fmt::secs(p.total));
+    println!("  mGEMM fraction = {:.1}% (the paper's overlap regime indicator)", 100.0 * p.gemm_fraction());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &cli::Args) -> Result<()> {
+    let nv: usize = args.parse_or("nv", 1024)?;
+    let nf: usize = args.parse_or("nf", 385)?;
+    let out = args.require_str("out")?;
+    let precision = Precision::parse(&args.str_or("precision", "f32"))?;
+    let seed: u64 = args.parse_or("seed", 1)?;
+    let kind = match args.str_or("synthetic", "phewas").as_str() {
+        "grid" => SyntheticKind::RandomGrid,
+        "verifiable" => SyntheticKind::Verifiable,
+        "phewas" => SyntheticKind::PhewasLike,
+        other => bail!("unknown --synthetic {other:?}"),
+    };
+    args.reject_unknown()?;
+    let path = std::path::Path::new(&out);
+    match precision {
+        Precision::F32 => {
+            let set: VectorSet<f32> = VectorSet::generate(kind, seed, nf, nv, 0);
+            vio::write_raw(path, &set)?;
+        }
+        Precision::F64 => {
+            let set: VectorSet<f64> = VectorSet::generate(kind, seed, nf, nv, 0);
+            vio::write_raw(path, &set)?;
+        }
+    }
+    println!(
+        "wrote {} ({} vectors × {} features, {})",
+        out,
+        nv,
+        nf,
+        precision.tag()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("comet {} — CoMet-RS", env!("CARGO_PKG_VERSION"));
+    println!("reproduction of Joubert et al., Parallel Computing 2018 (10.1016/j.parco.2018.03.009)");
+    println!("three-layer stack: Pallas mGEMM (L1) → JAX AOT HLO (L2) → rust PJRT coordinator (L3)");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Formulaic index ↔ linear-offset maps for unique pairs and triples.
+//!
+//! Paper §6.8: "No indexing information need be written explicitly since
+//! this information can be computed formulaically offline." These are
+//! those formulas: bijections between the strict upper-triangular pair
+//! set {(i, j) : i < j} (resp. the tetrahedral triple set i < j < k) and
+//! dense linear offsets, used by the output writers and readers.
+
+/// Number of unique pairs among n vectors: n(n−1)/2.
+pub const fn num_pairs(n: usize) -> usize {
+    n * (n - 1) / 2
+}
+
+/// Number of unique triples among n vectors: n(n−1)(n−2)/6.
+pub const fn num_triples(n: usize) -> usize {
+    n * (n - 1) * (n - 2) / 6
+}
+
+/// Linear offset of pair (i, j), i < j: column-major triangular packing
+/// (all pairs with second index j precede those with j+1).
+pub fn pair_offset(i: usize, j: usize) -> usize {
+    debug_assert!(i < j);
+    j * (j - 1) / 2 + i
+}
+
+/// Inverse of [`pair_offset`].
+pub fn pair_from_offset(off: usize) -> (usize, usize) {
+    // Largest j with j(j-1)/2 <= off.
+    let j = ((1.0 + (1.0 + 8.0 * off as f64).sqrt()) / 2.0).floor() as usize;
+    let j = if j * (j - 1) / 2 > off { j - 1 } else { j };
+    let i = off - j * (j - 1) / 2;
+    (i, j)
+}
+
+/// Linear offset of triple (i, j, k), i < j < k: tetrahedral packing.
+pub fn triple_offset(i: usize, j: usize, k: usize) -> usize {
+    debug_assert!(i < j && j < k);
+    k * (k - 1) * (k - 2) / 6 + j * (j - 1) / 2 + i
+}
+
+/// Inverse of [`triple_offset`].
+pub fn triple_from_offset(off: usize) -> (usize, usize, usize) {
+    // Largest k with C(k,3) <= off, found by float seed + local fixup.
+    let mut k = ((6.0 * off as f64).cbrt() as usize).max(2);
+    while k * (k - 1) * (k - 2) / 6 > off {
+        k -= 1;
+    }
+    while (k + 1) * k * (k - 1) / 6 <= off {
+        k += 1;
+    }
+    let rem = off - k * (k - 1) * (k - 2) / 6;
+    let (i, j) = pair_from_offset(rem);
+    (i, j, k)
+}
+
+/// Iterator over all unique pairs (i < j) for n vectors, in offset order.
+pub fn pairs(n: usize) -> impl Iterator<Item = (usize, usize)> {
+    (1..n).flat_map(move |j| (0..j).map(move |i| (i, j)))
+}
+
+/// Iterator over all unique triples (i < j < k), in offset order.
+pub fn triples(n: usize) -> impl Iterator<Item = (usize, usize, usize)> {
+    (2..n).flat_map(move |k| (1..k).flat_map(move |j| (0..j).map(move |i| (i, j, k))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_counts() {
+        assert_eq!(num_pairs(2), 1);
+        assert_eq!(num_pairs(10), 45);
+        // Paper §2.1: n_v(n_v−1)/2 distinct values.
+        assert_eq!(num_pairs(10_240), 10_240 * 10_239 / 2);
+    }
+
+    #[test]
+    fn triple_counts() {
+        assert_eq!(num_triples(3), 1);
+        assert_eq!(num_triples(6), 20);
+    }
+
+    #[test]
+    fn pair_offset_is_dense_bijection() {
+        let n = 50;
+        let mut seen = vec![false; num_pairs(n)];
+        for (i, j) in pairs(n) {
+            let off = pair_offset(i, j);
+            assert!(!seen[off], "duplicate offset {off}");
+            seen[off] = true;
+            assert_eq!(pair_from_offset(off), (i, j));
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn triple_offset_is_dense_bijection() {
+        let n = 20;
+        let mut seen = vec![false; num_triples(n)];
+        for (i, j, k) in triples(n) {
+            let off = triple_offset(i, j, k);
+            assert!(!seen[off], "duplicate offset {off}");
+            seen[off] = true;
+            assert_eq!(triple_from_offset(off), (i, j, k));
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn offset_order_matches_iterator_order() {
+        let offs: Vec<usize> = pairs(8).map(|(i, j)| pair_offset(i, j)).collect();
+        assert_eq!(offs, (0..num_pairs(8)).collect::<Vec<_>>());
+        let offs3: Vec<usize> = triples(8).map(|(i, j, k)| triple_offset(i, j, k)).collect();
+        assert_eq!(offs3, (0..num_triples(8)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn large_offsets_roundtrip() {
+        for off in [0usize, 1, 1000, 123_456, 98_765_432] {
+            let (i, j) = pair_from_offset(off);
+            assert!(i < j);
+            assert_eq!(pair_offset(i, j), off);
+            let (a, b, c) = triple_from_offset(off);
+            assert!(a < b && b < c);
+            assert_eq!(triple_offset(a, b, c), off);
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! The Proportional Similarity (Czekanowski) metrics — definitions,
+//! scalar oracles, combinatorial indexing, and result containers.
+//!
+//! Paper §2: for non-negative vectors u, v, w of length n_f,
+//!
+//! ```text
+//! n2(u,v)   = Σ_q min(u_q, v_q)            d2(u,v)   = Σ u + Σ v
+//! c2(u,v)   = 2 n2 / d2
+//! n3'(u,v,w)= Σ_q min(u_q, v_q, w_q)
+//! n3        = n2(u,v) + n2(u,w) + n2(v,w) − n3'
+//! d3        = Σ u + Σ v + Σ w
+//! c3        = (3/2) n3 / d3
+//! ```
+//!
+//! The scalar functions here are the *oracle* implementations used by
+//! every test; the production paths are `linalg` (native blocked) and
+//! `runtime` (PJRT artifacts).
+
+pub mod counts;
+pub mod indexing;
+pub mod store;
+
+use crate::util::Scalar;
+
+/// Which metric family a run computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// 2-way Proportional Similarity (Czekanowski).
+    Czekanowski2,
+    /// 3-way Proportional Similarity.
+    Czekanowski3,
+    /// Sorenson on 0/1 data (= Czekanowski restricted to bits, §2.3).
+    Sorenson2,
+}
+
+impl MetricKind {
+    pub fn num_way(self) -> usize {
+        match self {
+            MetricKind::Czekanowski2 | MetricKind::Sorenson2 => 2,
+            MetricKind::Czekanowski3 => 3,
+        }
+    }
+}
+
+/// Min-product numerator n2 (the mGEMM's scalar contract).
+pub fn n2<T: Scalar>(u: &[T], v: &[T]) -> f64 {
+    assert_eq!(u.len(), v.len());
+    let mut acc = T::ZERO;
+    for q in 0..u.len() {
+        acc += u[q].min_s(v[q]);
+    }
+    acc.to_f64()
+}
+
+/// Triple min-product numerator n3'.
+pub fn n3_prime<T: Scalar>(u: &[T], v: &[T], w: &[T]) -> f64 {
+    assert_eq!(u.len(), v.len());
+    assert_eq!(u.len(), w.len());
+    let mut acc = T::ZERO;
+    for q in 0..u.len() {
+        acc += u[q].min_s(v[q]).min_s(w[q]);
+    }
+    acc.to_f64()
+}
+
+/// Vector sum Σ_q v_q (denominator ingredient).
+pub fn vsum<T: Scalar>(v: &[T]) -> f64 {
+    let mut acc = T::ZERO;
+    for &x in v {
+        acc += x;
+    }
+    acc.to_f64()
+}
+
+/// 2-way Proportional Similarity c2(u, v).
+pub fn czekanowski2<T: Scalar>(u: &[T], v: &[T]) -> f64 {
+    2.0 * n2(u, v) / (vsum(u) + vsum(v))
+}
+
+/// 3-way Proportional Similarity c3(u, v, w).
+pub fn czekanowski3<T: Scalar>(u: &[T], v: &[T], w: &[T]) -> f64 {
+    let n3 = n2(u, v) + n2(u, w) + n2(v, w) - n3_prime(u, v, w);
+    1.5 * n3 / (vsum(u) + vsum(v) + vsum(w))
+}
+
+/// Assemble c2 from precomputed pieces — the exact arithmetic the
+/// coordinator's "CPU side" performs after an mGEMM block (paper §3.1:
+/// numerators on the GPU, denominators and quotients on the CPU).
+#[inline]
+pub fn c2_from_parts(n2: f64, sum_i: f64, sum_j: f64) -> f64 {
+    2.0 * n2 / (sum_i + sum_j)
+}
+
+/// Assemble c3 from precomputed pieces (paper Eq. (1)).
+#[inline]
+pub fn c3_from_parts(
+    n2_ij: f64,
+    n2_ik: f64,
+    n2_jk: f64,
+    n3_prime: f64,
+    sum_i: f64,
+    sum_j: f64,
+    sum_k: f64,
+) -> f64 {
+    1.5 * (n2_ij + n2_ik + n2_jk - n3_prime) / (sum_i + sum_j + sum_k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Stream;
+
+    fn rand_vec(seed: u64, n: usize) -> Vec<f64> {
+        let mut s = Stream::new(seed);
+        (0..n).map(|_| s.next_f64()).collect()
+    }
+
+    #[test]
+    fn n2_small_case() {
+        let u = [1.0, 2.0, 0.5];
+        let v = [0.5, 3.0, 1.0];
+        assert_eq!(n2(&u, &v), 0.5 + 2.0 + 0.5);
+    }
+
+    #[test]
+    fn c2_self_similarity_is_one() {
+        let u = rand_vec(1, 100);
+        assert!((czekanowski2(&u, &u) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c2_symmetric() {
+        let u = rand_vec(2, 64);
+        let v = rand_vec(3, 64);
+        assert_eq!(czekanowski2(&u, &v), czekanowski2(&v, &u));
+    }
+
+    #[test]
+    fn c2_bounds() {
+        for s in 0..20 {
+            let u = rand_vec(s, 32);
+            let v = rand_vec(s + 100, 32);
+            let c = czekanowski2(&u, &v);
+            assert!((0.0..=1.0 + 1e-12).contains(&c), "c={c}");
+        }
+    }
+
+    #[test]
+    fn c2_disjoint_support_is_zero() {
+        let mut u = vec![0.0; 64];
+        let mut v = vec![0.0; 64];
+        for q in 0..32 {
+            u[q] = 1.0;
+            v[q + 32] = 1.0;
+        }
+        assert_eq!(czekanowski2(&u, &v), 0.0);
+    }
+
+    #[test]
+    fn c3_identical_triple_is_one() {
+        let u = rand_vec(7, 50);
+        assert!((czekanowski3(&u, &u, &u) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn c3_totally_symmetric() {
+        let u = rand_vec(1, 32);
+        let v = rand_vec(2, 32);
+        let w = rand_vec(3, 32);
+        let c = czekanowski3(&u, &v, &w);
+        assert_eq!(c, czekanowski3(&u, &w, &v));
+        assert_eq!(c, czekanowski3(&v, &u, &w));
+        assert_eq!(c, czekanowski3(&w, &v, &u));
+    }
+
+    #[test]
+    fn c3_from_parts_matches_direct() {
+        let u = rand_vec(11, 48);
+        let v = rand_vec(12, 48);
+        let w = rand_vec(13, 48);
+        let direct = czekanowski3(&u, &v, &w);
+        let parts = c3_from_parts(
+            n2(&u, &v),
+            n2(&u, &w),
+            n2(&v, &w),
+            n3_prime(&u, &v, &w),
+            vsum(&u),
+            vsum(&v),
+            vsum(&w),
+        );
+        assert!((direct - parts).abs() < 1e-14);
+    }
+
+    #[test]
+    fn f32_path_agrees_with_f64_on_grid_values() {
+        // On the k/64 grid all sums are exact in both precisions.
+        let mut s = Stream::new(5);
+        let u32v: Vec<f32> = (0..256).map(|_| (s.below(64) as f32) / 64.0).collect();
+        let v32v: Vec<f32> = (0..256).map(|_| (s.below(64) as f32) / 64.0).collect();
+        let u64v: Vec<f64> = u32v.iter().map(|&x| x as f64).collect();
+        let v64v: Vec<f64> = v32v.iter().map(|&x| x as f64).collect();
+        assert_eq!(n2(&u32v, &v32v), n2(&u64v, &v64v));
+        assert_eq!(czekanowski2(&u32v, &v32v), czekanowski2(&u64v, &v64v));
+    }
+
+    #[test]
+    fn metric_kind_ways() {
+        assert_eq!(MetricKind::Czekanowski2.num_way(), 2);
+        assert_eq!(MetricKind::Sorenson2.num_way(), 2);
+        assert_eq!(MetricKind::Czekanowski3.num_way(), 3);
+    }
+}

@@ -1,0 +1,201 @@
+//! In-memory result containers for computed metrics.
+//!
+//! Production campaigns stream metrics straight to per-node output files
+//! (paper §6.8); these containers serve the examples, tests, and the
+//! discovery workflows (top-k similar pairs/triples), and accumulate the
+//! run statistics every driver reports.
+
+use super::indexing;
+
+/// One computed 2-way metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairEntry {
+    pub i: u32,
+    pub j: u32,
+    pub value: f64,
+}
+
+/// One computed 3-way metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TripleEntry {
+    pub i: u32,
+    pub j: u32,
+    pub k: u32,
+    pub value: f64,
+}
+
+/// Sparse store of unique-pair metrics (i < j enforced on insert).
+#[derive(Debug, Default, Clone)]
+pub struct PairStore {
+    entries: Vec<PairEntry>,
+}
+
+impl PairStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, value: f64) {
+        debug_assert!(i < j, "pair must be canonical (i < j): ({i}, {j})");
+        self.entries.push(PairEntry {
+            i: i as u32,
+            j: j as u32,
+            value,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PairEntry> {
+        self.entries.iter()
+    }
+
+    pub fn extend(&mut self, other: PairStore) {
+        self.entries.extend(other.entries);
+    }
+
+    /// Dense lookup table keyed by formulaic offset; None where absent.
+    pub fn to_dense(&self, nv: usize) -> Vec<Option<f64>> {
+        let mut dense = vec![None; indexing::num_pairs(nv)];
+        for e in &self.entries {
+            let off = indexing::pair_offset(e.i as usize, e.j as usize);
+            assert!(dense[off].is_none(), "duplicate pair ({}, {})", e.i, e.j);
+            dense[off] = Some(e.value);
+        }
+        dense
+    }
+
+    /// Top-k entries by metric value (descending) — the GWAS/PheWAS
+    /// discovery question: which profiles share the most genetic signal.
+    pub fn top_k(&self, k: usize) -> Vec<PairEntry> {
+        let mut v = self.entries.clone();
+        v.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+        v.truncate(k);
+        v
+    }
+}
+
+/// Sparse store of unique-triple metrics (i < j < k enforced).
+#[derive(Debug, Default, Clone)]
+pub struct TripleStore {
+    entries: Vec<TripleEntry>,
+}
+
+impl TripleStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, k: usize, value: f64) {
+        debug_assert!(i < j && j < k, "triple must be canonical: ({i},{j},{k})");
+        self.entries.push(TripleEntry {
+            i: i as u32,
+            j: j as u32,
+            k: k as u32,
+            value,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TripleEntry> {
+        self.entries.iter()
+    }
+
+    pub fn extend(&mut self, other: TripleStore) {
+        self.entries.extend(other.entries);
+    }
+
+    pub fn to_dense(&self, nv: usize) -> Vec<Option<f64>> {
+        let mut dense = vec![None; indexing::num_triples(nv)];
+        for e in &self.entries {
+            let off = indexing::triple_offset(e.i as usize, e.j as usize, e.k as usize);
+            assert!(
+                dense[off].is_none(),
+                "duplicate triple ({}, {}, {})",
+                e.i,
+                e.j,
+                e.k
+            );
+            dense[off] = Some(e.value);
+        }
+        dense
+    }
+
+    pub fn top_k(&self, k: usize) -> Vec<TripleEntry> {
+        let mut v = self.entries.clone();
+        v.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+        v.truncate(k);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_store_dense_roundtrip() {
+        let mut s = PairStore::new();
+        s.push(0, 1, 0.5);
+        s.push(1, 3, 0.25);
+        let d = s.to_dense(4);
+        assert_eq!(d.len(), 6);
+        assert_eq!(d[indexing::pair_offset(0, 1)], Some(0.5));
+        assert_eq!(d[indexing::pair_offset(1, 3)], Some(0.25));
+        assert_eq!(d[indexing::pair_offset(2, 3)], None);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate pair")]
+    fn pair_store_rejects_duplicates_in_dense() {
+        let mut s = PairStore::new();
+        s.push(0, 1, 0.5);
+        s.push(0, 1, 0.6);
+        let _ = s.to_dense(4);
+    }
+
+    #[test]
+    fn top_k_orders_descending() {
+        let mut s = PairStore::new();
+        s.push(0, 1, 0.1);
+        s.push(0, 2, 0.9);
+        s.push(1, 2, 0.5);
+        let top = s.top_k(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!((top[0].i, top[0].j), (0, 2));
+        assert_eq!((top[1].i, top[1].j), (1, 2));
+    }
+
+    #[test]
+    fn triple_store_dense() {
+        let mut s = TripleStore::new();
+        s.push(0, 1, 2, 0.7);
+        s.push(1, 2, 3, 0.2);
+        let d = s.to_dense(4);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[indexing::triple_offset(0, 1, 2)], Some(0.7));
+    }
+
+    #[test]
+    fn extend_merges() {
+        let mut a = PairStore::new();
+        a.push(0, 1, 0.5);
+        let mut b = PairStore::new();
+        b.push(1, 2, 0.3);
+        a.extend(b);
+        assert_eq!(a.len(), 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Metric output writing (paper §6.8): one binary file per node, each
+//! metric stored as a single unsigned byte (~2.5 significant figures),
+//! no explicit indexing (offsets are formulaic — `metrics::indexing`),
+//! optional thresholding.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Quantize a metric value in [0, 1.5] to one byte. c2 ∈ [0, 1] and
+/// c3 ∈ [0, 1] in practice (c3 ≤ 1 for the paper's data); we scale by
+/// 1/255 over [0, 1] and saturate, matching "roughly 2-1/2 significant
+/// figures" (§6.8).
+#[inline]
+pub fn quantize(value: f64) -> u8 {
+    (value.clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+/// Inverse of [`quantize`] (midpoint reconstruction).
+#[inline]
+pub fn dequantize(b: u8) -> f64 {
+    b as f64 / 255.0
+}
+
+/// Streaming per-node metrics writer.
+pub struct NodeWriter {
+    path: PathBuf,
+    w: BufWriter<File>,
+    /// Optional threshold: values below it are dropped (with their
+    /// offsets written alongside, since thresholding breaks formulaic
+    /// indexing — §6.8 writes "all metrics … with no thresholding";
+    /// thresholded mode writes (offset u64, byte) records instead).
+    threshold: Option<f64>,
+    pub written: u64,
+    pub dropped: u64,
+}
+
+impl NodeWriter {
+    /// `rank` names the file: `<dir>/metrics_<rank>.bin`.
+    pub fn create(dir: &Path, rank: usize, threshold: Option<f64>) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create output dir {}", dir.display()))?;
+        let path = dir.join(format!("metrics_{rank}.bin"));
+        let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        Ok(NodeWriter {
+            path,
+            w: BufWriter::new(f),
+            threshold,
+            written: 0,
+            dropped: 0,
+        })
+    }
+
+    /// Write one metric at its formulaic offset.
+    pub fn write(&mut self, offset: u64, value: f64) -> Result<()> {
+        match self.threshold {
+            None => {
+                self.w.write_all(&[quantize(value)])?;
+                self.written += 1;
+            }
+            Some(t) if value >= t => {
+                self.w.write_all(&offset.to_le_bytes())?;
+                self.w.write_all(&[quantize(value)])?;
+                self.written += 1;
+            }
+            Some(_) => self.dropped += 1,
+        }
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<(PathBuf, u64)> {
+        self.w.flush()?;
+        Ok((self.path, self.written))
+    }
+}
+
+/// Read back a dense (unthresholded) node file.
+pub fn read_dense(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read back a thresholded node file: (offset, value-byte) records.
+pub fn read_thresholded(path: &Path) -> Result<Vec<(u64, u8)>> {
+    let raw = read_dense(path)?;
+    anyhow::ensure!(raw.len() % 9 == 0, "corrupt thresholded file");
+    Ok(raw
+        .chunks_exact(9)
+        .map(|c| {
+            let mut off = [0u8; 8];
+            off.copy_from_slice(&c[..8]);
+            (u64::from_le_bytes(off), c[8])
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("comet-out-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn quantize_roundtrip_precision() {
+        for v in [0.0, 0.1, 0.5, 0.77, 1.0] {
+            let q = dequantize(quantize(v));
+            assert!((q - v).abs() <= 0.5 / 255.0 + 1e-12, "{v} -> {q}");
+        }
+        assert_eq!(quantize(-0.5), 0);
+        assert_eq!(quantize(2.0), 255);
+    }
+
+    #[test]
+    fn dense_write_read() {
+        let dir = tmpdir();
+        let mut w = NodeWriter::create(&dir, 3, None).unwrap();
+        w.write(0, 0.5).unwrap();
+        w.write(1, 1.0).unwrap();
+        let (path, n) = w.finish().unwrap();
+        assert_eq!(n, 2);
+        let back = read_dense(&path).unwrap();
+        assert_eq!(back, vec![quantize(0.5), quantize(1.0)]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn thresholded_write_read() {
+        let dir = tmpdir();
+        let mut w = NodeWriter::create(&dir, 4, Some(0.5)).unwrap();
+        w.write(10, 0.9).unwrap();
+        w.write(11, 0.1).unwrap(); // dropped
+        w.write(12, 0.6).unwrap();
+        assert_eq!(w.dropped, 1);
+        let (path, n) = w.finish().unwrap();
+        assert_eq!(n, 2);
+        let recs = read_thresholded(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].0, 10);
+        assert_eq!(recs[1], (12, quantize(0.6)));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,229 @@
+//! The §6.3 analytic performance model.
+//!
+//! 2-way:  t = t_C + t_{T,V} + ℓ·t_G + t_{T,M} + t_CPU
+//! 3-way:  t = t_C + t_{T,V} + ℓ·[(3 + (n_vp/6)/n_st)·t_G + 3·t_{T,V} + 4·t_{T,M} + t_CPU]
+//!
+//! where ℓ is the per-node load (blocks / block slices), t_C the
+//! internode communication time per step, t_{T,V} / t_{T,M} the
+//! host↔accelerator transfer times for vector blocks / metric blocks,
+//! t_G one mGEMM, and t_CPU the denominator+quotient work. The
+//! non-mGEMM terms price pipeline startup/drain under the assumption
+//! that mGEMMs hide everything else (the paper's operating regime).
+//!
+//! The model doubles as the *tuning advisor*: it reproduces the paper's
+//! guidance that ℓ should be maximized (limit npr) and n_vp, n_fp grown
+//! to memory limits, and n_st kept small (§6.3, §6.6–6.7).
+
+use crate::comm::cost::CostModel;
+
+/// Per-node problem/machine description for the model.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelInput {
+    /// Vector elements per node (n_fp).
+    pub nfp: usize,
+    /// Vectors per node (n_vp).
+    pub nvp: usize,
+    /// Element width in bytes.
+    pub elem_bytes: usize,
+    /// Measured (or estimated) time of one n_vp×n_vp mGEMM at depth n_fp.
+    pub t_gemm: f64,
+    /// Measured per-step CPU (denominator/quotient) time.
+    pub t_cpu: f64,
+    /// Per-node load ℓ: blocks (2-way) or block slices (3-way).
+    pub load: usize,
+    /// Stage count n_st (3-way).
+    pub nst: usize,
+    /// Internode fabric.
+    pub net: CostModel,
+    /// Host↔accelerator link.
+    pub link: CostModel,
+}
+
+/// Predicted step-time breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct Prediction {
+    pub t_comm: f64,
+    pub t_transfer_v: f64,
+    pub t_transfer_m: f64,
+    pub t_gemm_total: f64,
+    pub t_cpu: f64,
+    pub total: f64,
+}
+
+impl Prediction {
+    /// Fraction of the pipeline spent in mGEMM — the paper's "mGEMM
+    /// hides everything" regime indicator (→ 1 for large blocks).
+    pub fn gemm_fraction(&self) -> f64 {
+        self.t_gemm_total / self.total
+    }
+}
+
+/// Bytes of one vector block (n_fp × n_vp elements).
+fn vblock_bytes(m: &ModelInput) -> u64 {
+    (m.nfp * m.nvp * m.elem_bytes) as u64
+}
+
+/// Bytes of one metrics block (n_vp² values).
+fn mblock_bytes(m: &ModelInput) -> u64 {
+    (m.nvp * m.nvp * m.elem_bytes) as u64
+}
+
+/// 2-way model (§6.3).
+pub fn predict_2way(m: &ModelInput) -> Prediction {
+    let t_comm = m.net.msg_time(vblock_bytes(m));
+    let t_tv = m.link.msg_time(vblock_bytes(m));
+    let t_tm = m.link.msg_time(mblock_bytes(m));
+    let t_gemm_total = m.load as f64 * m.t_gemm;
+    let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu;
+    Prediction {
+        t_comm,
+        t_transfer_v: t_tv,
+        t_transfer_m: t_tm,
+        t_gemm_total,
+        t_cpu: m.t_cpu,
+        total,
+    }
+}
+
+/// 3-way model (§6.3). Each slice runs a pipeline of
+/// (n_vp/6)/n_st mGEMM steps plus 3 startup 2-way mGEMMs.
+pub fn predict_3way(m: &ModelInput) -> Prediction {
+    let t_comm = m.net.msg_time(vblock_bytes(m));
+    let t_tv = m.link.msg_time(vblock_bytes(m));
+    let t_tm = m.link.msg_time(mblock_bytes(m));
+    let steps_per_slice = 3.0 + (m.nvp as f64 / 6.0) / m.nst as f64;
+    let per_slice = steps_per_slice * m.t_gemm + 3.0 * t_tv + 4.0 * t_tm + m.t_cpu;
+    let t_gemm_total = m.load as f64 * steps_per_slice * m.t_gemm;
+    let total = t_comm + t_tv + m.load as f64 * per_slice;
+    Prediction {
+        t_comm,
+        t_transfer_v: t_tv,
+        t_transfer_m: t_tm,
+        t_gemm_total,
+        t_cpu: m.t_cpu,
+        total,
+    }
+}
+
+/// Tuning advice mirroring §6.3: returns (npv, npr, nst) for a target
+/// node count and memory budget, maximizing per-node block size then
+/// load.
+pub fn advise(np: usize, nv: usize, mem_bytes_per_node: u64, elem_bytes: usize, num_way: usize) -> (usize, usize, usize) {
+    // Grow npv only until the per-node block fits memory (vectors +
+    // metrics block + double buffers ≈ 4 blocks).
+    let mut npv = 1;
+    while npv < np {
+        let nvp = nv.div_ceil(npv);
+        let need = 4 * (nvp * nvp * elem_bytes) as u64;
+        if need <= mem_bytes_per_node {
+            break;
+        }
+        npv += 1;
+    }
+    let npv = npv.min(np).max(1);
+    let npr = (np / npv).max(1);
+    let nst = if num_way == 3 {
+        // Keep stages few but big enough that a stage's metrics fit.
+        let nvp = nv.div_ceil(npv);
+        let stage_bytes = |nst: usize| ((nvp / 6 / nst.max(1)) * nvp * nvp * elem_bytes) as u64;
+        let mut nst = 1;
+        while stage_bytes(nst) > mem_bytes_per_node && nst < nvp {
+            nst *= 2;
+        }
+        nst
+    } else {
+        1
+    };
+    (npv, npr, nst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ModelInput {
+        ModelInput {
+            nfp: 5000,
+            nvp: 10_240,
+            elem_bytes: 8,
+            t_gemm: 6.5, // Table 1 scale: DP mGEMM seconds
+            t_cpu: 0.1,
+            load: 13,
+            nst: 16,
+            net: CostModel::gemini(),
+            link: CostModel::pcie2(),
+        }
+    }
+
+    #[test]
+    fn two_way_gemm_dominates_at_paper_scale() {
+        // §6.6's setting: big blocks, load 13 → mGEMM fraction ≳ 0.9.
+        let p = predict_2way(&base());
+        assert!(p.gemm_fraction() > 0.9, "fraction={}", p.gemm_fraction());
+    }
+
+    #[test]
+    fn two_way_small_blocks_lose_efficiency() {
+        // §6.8's n_f=385 regime: shallow mGEMMs hide less of the fixed
+        // transfer cost (the metrics block is n_vp² regardless of n_f),
+        // so the mGEMM fraction must drop vs. the deep-vector setting.
+        let deep = predict_2way(&base()).gemm_fraction();
+        let mut m = base();
+        m.nfp = 385;
+        m.t_gemm *= 385.0 / 5000.0; // GEMM time shrinks with depth
+        m.load = 1; // §6.8 runs npv = np: one block per node
+        let shallow = predict_2way(&m).gemm_fraction();
+        assert!(shallow < deep, "shallow={shallow} deep={deep}");
+        assert!(shallow < 0.9, "shallow={shallow}");
+    }
+
+    #[test]
+    fn higher_load_raises_gemm_fraction() {
+        let mut m = base();
+        m.load = 1;
+        let lo = predict_2way(&m).gemm_fraction();
+        m.load = 13;
+        let hi = predict_2way(&m).gemm_fraction();
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn three_way_fewer_stages_more_efficient() {
+        // §6.3: "The value of n_st should be kept small"; fewer stages →
+        // more mGEMM steps per slice → higher mGEMM fraction.
+        let mut m = base();
+        m.nvp = 2880;
+        m.t_gemm = 0.5;
+        m.load = 6;
+        m.nst = 16;
+        let few = predict_3way(&m).gemm_fraction();
+        m.nst = 480; // maximally staged
+        let many = predict_3way(&m).gemm_fraction();
+        assert!(few > many, "few={few} many={many}");
+    }
+
+    #[test]
+    fn totals_are_sums_of_parts_2way() {
+        let m = base();
+        let p = predict_2way(&m);
+        let sum = p.t_comm + p.t_transfer_v + p.t_gemm_total + p.t_transfer_m + p.t_cpu;
+        assert!((p.total - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advise_shrinks_blocks_until_memory_fits() {
+        // 6 GB GPU memory (Titan) with nv = 200k DP.
+        let (npv, npr, nst) = advise(32, 200_000, 6 << 30, 8, 2);
+        assert!(npv > 1, "must split vectors to fit");
+        assert_eq!(nst, 1);
+        assert!(npv * npr <= 32 * 2);
+        let nvp = 200_000usize.div_ceil(npv);
+        assert!(4 * nvp * nvp * 8 <= (6usize << 30));
+    }
+
+    #[test]
+    fn advise_3way_stages_when_needed() {
+        let (_, _, nst) = advise(4, 50_000, 1 << 30, 8, 3);
+        assert!(nst > 1, "3-way at this size must stage");
+    }
+}

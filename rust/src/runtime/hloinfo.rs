@@ -1,0 +1,166 @@
+//! HLO-text analysis: op histograms and fusion statistics for the AOT
+//! artifacts — the Layer-2 profiling hook (DESIGN.md §6: "HLO cost
+//! analysis on the lowered module"). Used by `comet artifacts --analyze`
+//! and the §Perf workflow to verify that a lowering change did what it
+//! claimed (fusion counts, loop counts, elementwise-op mix).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parsed summary of one HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloSummary {
+    /// Module name from the `HloModule` header.
+    pub module: String,
+    /// Instruction count per opcode.
+    pub op_counts: BTreeMap<String, usize>,
+    /// Number of computations (fusion bodies, loop bodies, …).
+    pub computations: usize,
+    /// Total instruction count.
+    pub instructions: usize,
+}
+
+impl HloSummary {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+
+    /// Ops that indicate the accumulation structure we care about.
+    pub fn loops(&self) -> usize {
+        self.count("while")
+    }
+
+    pub fn fusions(&self) -> usize {
+        self.count("fusion")
+    }
+}
+
+/// Parse HLO text into a summary. The text grammar (one instruction per
+/// line, `%name = type opcode(args)`) is stable across the XLA versions
+/// we target; unknown lines are skipped.
+pub fn parse(text: &str) -> HloSummary {
+    let mut s = HloSummary::default();
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if let Some(rest) = trimmed.strip_prefix("HloModule ") {
+            s.module = rest
+                .split(|c: char| c == ',' || c.is_whitespace())
+                .next()
+                .unwrap_or("")
+                .to_string();
+            continue;
+        }
+        // Computation headers: `region_2.1 {`, `ENTRY main.42 {`.
+        if trimmed.ends_with('{') && !trimmed.starts_with("HloModule") {
+            s.computations += 1;
+            continue;
+        }
+        // Instruction lines: `name.id = shape opcode(args)`, optionally
+        // prefixed with ROOT (both `%name` and bare-name HLO dialects).
+        let body = trimmed.strip_prefix("ROOT ").unwrap_or(trimmed);
+        let Some(eq) = body.find(" = ") else { continue };
+        let lhs = body[..eq].trim();
+        if lhs.is_empty() || lhs.contains(' ') {
+            continue;
+        }
+        let rhs = body[eq + 3..].trim();
+        // rhs = "f32[128,128]{1,0} minimum(...)" — opcode is the first
+        // token after the shape.
+        let mut tokens = rhs.split_whitespace();
+        let Some(first) = tokens.next() else { continue };
+        // Tuple shapes contain spaces: `(s32[], f32[2,2]{1,0})` — consume
+        // tokens until the closing paren before reading the opcode.
+        if first.starts_with('(') && !first.ends_with(')') {
+            for t in tokens.by_ref() {
+                if t.ends_with(')') {
+                    break;
+                }
+            }
+        }
+        let Some(op_tok) = tokens.next() else { continue };
+        let opcode: String = op_tok
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        *s.op_counts.entry(opcode).or_insert(0) += 1;
+        s.instructions += 1;
+    }
+    s
+}
+
+/// Parse an artifact file.
+pub fn parse_file(path: &Path) -> Result<HloSummary> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    Ok(parse(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+HloModule jit_fn, entry_computation_layout={...}
+
+body.1 {
+  p.1 = (s32[], f32[128,128]) parameter(0)
+  i.1 = s32[] get-tuple-element(p.1), index=0
+  one = s32[] constant(1)
+  next = s32[] add(i.1, one)
+  ROOT out = (s32[], f32[128,128]) tuple(next, acc)
+}
+
+ENTRY main.9 {
+  a = f32[384,128]{1,0} parameter(0)
+  b = f32[384,128]{1,0} parameter(1)
+  m = f32[384,128,128]{2,1,0} minimum(ba, bb)
+  w = (s32[], f32[128,128]) while(init), condition=c, body=body.1
+  ROOT t = (f32[128,128]) tuple(r)
+}
+";
+
+    #[test]
+    fn parses_module_name() {
+        let s = parse(SAMPLE);
+        assert_eq!(s.module, "jit_fn");
+    }
+
+    #[test]
+    fn counts_opcodes() {
+        let s = parse(SAMPLE);
+        assert_eq!(s.count("parameter"), 3);
+        assert_eq!(s.count("minimum"), 1);
+        assert_eq!(s.count("while"), 1);
+        assert_eq!(s.count("add"), 1);
+        assert_eq!(s.count("tuple"), 2, "tuple-shaped results must parse");
+        assert_eq!(s.loops(), 1);
+        assert!(s.instructions >= 8);
+    }
+
+    #[test]
+    fn computation_count() {
+        let s = parse(SAMPLE);
+        assert!(s.computations >= 2, "{}", s.computations); // %body + ENTRY
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_built() {
+        // Opportunistic: analyze the real manifest if artifacts exist.
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let m = crate::runtime::Manifest::load(dir).unwrap();
+        let entry = m.entries.iter().find(|e| e.kind == "mgemm2").unwrap();
+        let s = parse_file(&m.dir.join(&entry.file)).unwrap();
+        assert!(s.instructions > 10);
+        // The tiled lowering is loop-structured with a min inside.
+        assert!(s.loops() >= 1, "expected while loops, got ops {:?}", s.op_counts);
+        assert!(s.count("minimum") >= 1);
+    }
+}

@@ -1,0 +1,448 @@
+//! The PJRT runtime: loads AOT HLO-text artifacts and executes them —
+//! the Rust side of the accelerator boundary.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos; see
+//! python/compile/aot.py).
+//!
+//! The `xla` crate's handles wrap raw C pointers and are not `Send`, so
+//! a single **service thread** owns the client and the compiled-
+//! executable cache; virtual-node threads submit [`ExecRequest`]s over a
+//! channel and block on a reply. This mirrors the paper's topology — one
+//! accelerator shared per node, kernels serialized on its stream — and
+//! on this one-core testbed sacrifices nothing.
+
+pub mod hloinfo;
+pub mod ops;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Precision;
+
+/// Element type of an artifact's inputs/outputs. Superset of the run
+/// [`Precision`]: the bitwise Sorenson path (§2.3) moves packed uint32
+/// words across the accelerator boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemKind {
+    F32,
+    F64,
+    U32,
+}
+
+impl ElemKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(ElemKind::F32),
+            "f64" => Ok(ElemKind::F64),
+            "u32" => Ok(ElemKind::U32),
+            other => bail!("unknown element kind {other:?} (want f32|f64|u32)"),
+        }
+    }
+    pub fn tag(self) -> &'static str {
+        match self {
+            ElemKind::F32 => "f32",
+            ElemKind::F64 => "f64",
+            ElemKind::U32 => "u32",
+        }
+    }
+    pub fn bytes(self) -> usize {
+        match self {
+            ElemKind::F32 | ElemKind::U32 => 4,
+            ElemKind::F64 => 8,
+        }
+    }
+    fn xla(self) -> xla::ElementType {
+        match self {
+            ElemKind::F32 => xla::ElementType::F32,
+            ElemKind::F64 => xla::ElementType::F64,
+            ElemKind::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+impl From<Precision> for ElemKind {
+    fn from(p: Precision) -> Self {
+        match p {
+            Precision::F32 => ElemKind::F32,
+            Precision::F64 => ElemKind::F64,
+        }
+    }
+}
+
+/// One artifact from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub precision: ElemKind,
+    pub nf: usize,
+    pub nv: usize,
+    pub jt: usize,
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` to build the AOT artifacts",
+                path.display()
+            )
+        })?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split_whitespace().collect();
+            if cols.len() != 7 {
+                bail!("{}:{}: want 7 columns, got {}", path.display(), lineno + 1, cols.len());
+            }
+            entries.push(ArtifactEntry {
+                name: cols[0].to_string(),
+                kind: cols[1].to_string(),
+                precision: ElemKind::parse(cols[2])?,
+                nf: cols[3].parse().context("nf")?,
+                nv: cols[4].parse().context("nv")?,
+                jt: cols[5].parse().context("jt")?,
+                file: cols[6].to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Smallest artifact of `kind`/`precision` that fits an (nf, nv)
+    /// block (inputs are zero-padded up to the artifact's tier shape).
+    pub fn select(
+        &self,
+        kind: &str,
+        precision: impl Into<ElemKind>,
+        nf: usize,
+        nv: usize,
+    ) -> Result<&ArtifactEntry> {
+        let precision: ElemKind = precision.into();
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.precision == precision
+                    && e.nf >= nf
+                    && e.nv >= nv
+                    && self.dir.join(&e.file).exists()
+            })
+            .min_by_key(|e| (e.nf, e.nv))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact kind={kind} precision={} covering nf={nf}, nv={nv}; \
+                     built tiers: {:?} — adjust block size or add a tier in \
+                     python/compile/aot.py",
+                    precision.tag(),
+                    self.entries
+                        .iter()
+                        .filter(|e| e.kind == kind && e.precision == precision)
+                        .map(|e| (e.nf, e.nv))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+/// One raw input buffer for an execution: dims + row-major bytes.
+pub struct InputBuf {
+    pub dims: Vec<usize>,
+    pub bytes: Vec<u8>,
+    pub precision: ElemKind,
+}
+
+/// One output tensor: dims + values widened to f64.
+#[derive(Debug, Clone)]
+pub struct OutputBuf {
+    pub dims: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+/// A request to the service thread.
+struct ExecRequest {
+    artifact: String,
+    inputs: Vec<InputBuf>,
+    reply: Sender<Result<Vec<OutputBuf>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    /// Compile (warm the cache) without executing.
+    Warm(String, Sender<Result<()>>),
+    Quit,
+}
+
+/// Shared handle to the PJRT service. Cheap to clone; all methods are
+/// callable from any thread.
+#[derive(Clone)]
+pub struct RuntimeClient {
+    tx: Sender<Msg>,
+    manifest: Arc<Manifest>,
+    /// Cumulative executions + accelerator-side wall time (profiling).
+    stats: Arc<RuntimeStats>,
+}
+
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: std::sync::atomic::AtomicU64,
+    pub exec_nanos: std::sync::atomic::AtomicU64,
+}
+
+impl RuntimeClient {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> (u64, f64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (
+            self.stats.executions.load(Relaxed),
+            self.stats.exec_nanos.load(Relaxed) as f64 * 1e-9,
+        )
+    }
+
+    /// Execute an artifact by name. Blocks until the service replies.
+    pub fn execute(&self, artifact: &str, inputs: Vec<InputBuf>) -> Result<Vec<OutputBuf>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            }))
+            .map_err(|_| anyhow!("PJRT service thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+
+    /// Pre-compile an artifact (pipeline warmup).
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warm(artifact.to_string(), reply))
+            .map_err(|_| anyhow!("PJRT service thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped reply"))?
+    }
+}
+
+/// The owning service: spawns the thread; dropping shuts it down.
+pub struct PjrtService {
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    manifest: Arc<Manifest>,
+    stats: Arc<RuntimeStats>,
+}
+
+impl PjrtService {
+    /// Start the service over an artifact directory.
+    pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let stats = Arc::new(RuntimeStats::default());
+        let (tx, rx) = channel();
+        let m = Arc::clone(&manifest);
+        let s = Arc::clone(&stats);
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(rx, m, s))
+            .context("spawn pjrt service")?;
+        Ok(PjrtService {
+            tx,
+            join: Some(join),
+            manifest,
+            stats,
+        })
+    }
+
+    pub fn client(&self) -> RuntimeClient {
+        RuntimeClient {
+            tx: self.tx.clone(),
+            manifest: Arc::clone(&self.manifest),
+            stats: Arc::clone(&self.stats),
+        }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Quit);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn service_main(rx: Receiver<Msg>, manifest: Arc<Manifest>, stats: Arc<RuntimeStats>) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Poison all future requests with a clear message.
+            let err = format!("PjRtClient::cpu failed: {e}");
+            for msg in rx {
+                match msg {
+                    Msg::Exec(req) => {
+                        let _ = req.reply.send(Err(anyhow!("{err}")));
+                    }
+                    Msg::Warm(_, reply) => {
+                        let _ = reply.send(Err(anyhow!("{err}")));
+                    }
+                    Msg::Quit => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let compile = |cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+                   name: &str|
+     -> Result<()> {
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    };
+
+    for msg in rx {
+        match msg {
+            Msg::Quit => break,
+            Msg::Warm(name, reply) => {
+                let _ = reply.send(compile(&mut cache, &name));
+            }
+            Msg::Exec(req) => {
+                let result = (|| -> Result<Vec<OutputBuf>> {
+                    compile(&mut cache, &req.artifact)?;
+                    let exe = cache.get(&req.artifact).unwrap();
+                    let literals: Vec<xla::Literal> = req
+                        .inputs
+                        .iter()
+                        .map(|inp| {
+                            let ty = inp.precision.xla();
+                            xla::Literal::create_from_shape_and_untyped_data(
+                                ty, &inp.dims, &inp.bytes,
+                            )
+                            .map_err(|e| anyhow!("literal: {e}"))
+                        })
+                        .collect::<Result<_>>()?;
+                    let t0 = std::time::Instant::now();
+                    let out = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| anyhow!("execute {}: {e}", req.artifact))?;
+                    let root = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetch result: {e}"))?;
+                    stats.executions.fetch_add(1, Relaxed);
+                    stats
+                        .exec_nanos
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Relaxed);
+                    let parts = root
+                        .to_tuple()
+                        .map_err(|e| anyhow!("untuple: {e}"))?;
+                    parts
+                        .into_iter()
+                        .map(|lit| {
+                            let shape = lit
+                                .array_shape()
+                                .map_err(|e| anyhow!("shape: {e}"))?;
+                            let dims: Vec<usize> =
+                                shape.dims().iter().map(|&d| d as usize).collect();
+                            let values = match lit.ty().map_err(|e| anyhow!("ty: {e}"))? {
+                                xla::ElementType::F32 => lit
+                                    .to_vec::<f32>()
+                                    .map_err(|e| anyhow!("to_vec f32: {e}"))?
+                                    .into_iter()
+                                    .map(|x| x as f64)
+                                    .collect(),
+                                xla::ElementType::F64 => lit
+                                    .to_vec::<f64>()
+                                    .map_err(|e| anyhow!("to_vec f64: {e}"))?,
+                                xla::ElementType::U32 => lit
+                                    .to_vec::<u32>()
+                                    .map_err(|e| anyhow!("to_vec u32: {e}"))?
+                                    .into_iter()
+                                    .map(|x| x as f64)
+                                    .collect(),
+                                other => bail!("unsupported output element type {other:?}"),
+                            };
+                            Ok(OutputBuf { dims, values })
+                        })
+                        .collect()
+                })();
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("comet-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# name kind dtype nf nv jt file\n\
+             mgemm2_f32_s mgemm2 f32 384 128 0 mgemm2_f32_s.hlo.txt\n\
+             mgemm2_f64_m mgemm2 f64 1536 256 0 mgemm2_f64_m.hlo.txt\n",
+        )
+        .unwrap();
+        // Only the f32 artifact file "exists".
+        std::fs::write(dir.join("mgemm2_f32_s.hlo.txt"), "HloModule x").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.select("mgemm2", Precision::F32, 100, 100).unwrap();
+        assert_eq!(e.name, "mgemm2_f32_s");
+        // f64 file missing -> select must fail with a hint.
+        let err = m.select("mgemm2", Precision::F64, 100, 100).unwrap_err();
+        assert!(err.to_string().contains("make artifacts") || err.to_string().contains("tier"));
+        // Block too large for any tier.
+        assert!(m.select("mgemm2", Precision::F32, 9999, 128).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_rows() {
+        let dir = std::env::temp_dir().join(format!("comet-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "too few columns\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,412 @@
+//! Typed block operations over the PJRT service: padding, literal
+//! packing, output slicing. These run on the node threads (cheap CPU
+//! work); only the execute itself serializes through the service.
+//!
+//! Padding contract (DESIGN.md): artifacts are shape-specialized; blocks
+//! are zero-padded up to the artifact tier. Zero features contribute
+//! nothing to a min-product over non-negative data, and padded vector
+//! columns produce output rows/columns that are sliced off here.
+
+use anyhow::{ensure, Result};
+
+use crate::config::Precision;
+use crate::linalg::{MatF64, SlabF64};
+use crate::runtime::{ArtifactEntry, ElemKind, InputBuf, RuntimeClient};
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+
+/// Block-level accelerator operations at a fixed precision.
+#[derive(Clone)]
+pub struct BlockOps {
+    pub client: RuntimeClient,
+    pub precision: Precision,
+}
+
+fn precision_of<T: Scalar>() -> Precision {
+    match T::BYTES {
+        4 => Precision::F32,
+        8 => Precision::F64,
+        _ => unreachable!("Scalar is f32 or f64"),
+    }
+}
+
+fn to_bytes<T: Scalar>(v: &[T]) -> Vec<u8> {
+    let mut out = vec![0u8; std::mem::size_of_val(v)];
+    unsafe {
+        std::ptr::copy_nonoverlapping(v.as_ptr() as *const u8, out.as_mut_ptr(), out.len());
+    }
+    out
+}
+
+impl BlockOps {
+    pub fn new(client: RuntimeClient, precision: Precision) -> Self {
+        BlockOps { client, precision }
+    }
+
+    fn input<T: Scalar>(&self, set: &VectorSet<T>, nf_pad: usize, nv_pad: usize) -> InputBuf {
+        let padded = set.to_rowmajor_padded(nf_pad, nv_pad);
+        InputBuf {
+            dims: vec![nf_pad, nv_pad],
+            bytes: to_bytes(&padded),
+            precision: self.precision.into(),
+        }
+    }
+
+    fn pick(&self, kind: &str, nf: usize, nv: usize) -> Result<ArtifactEntry> {
+        Ok(self
+            .client
+            .manifest()
+            .select(kind, self.precision, nf, nv)?
+            .clone())
+    }
+
+    /// Largest artifact tier of a kind (the tiling unit when a block
+    /// exceeds every tier).
+    fn largest(&self, kind: &str) -> Result<ArtifactEntry> {
+        self.client
+            .manifest()
+            .entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.precision == ElemKind::from(self.precision)
+                    && self.client.manifest().dir.join(&e.file).exists()
+            })
+            .max_by_key(|e| (e.nf, e.nv))
+            .cloned()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {kind} artifacts built for {} — run `make artifacts`",
+                    self.precision.tag()
+                )
+            })
+    }
+
+    /// N = W^T ∘min V through an mGEMM artifact (`kind` selects the
+    /// lowering: "mgemm2", "mgemm2pallas", "mgemm2ternary", "gemm", …).
+    ///
+    /// Blocks larger than every artifact tier are tiled over the largest
+    /// tier — feature panels accumulate (Σ_q is additive over feature
+    /// chunks) and vector panels concatenate — the "mGEMM broken into
+    /// blocks" pipeline of paper §3.1.
+    pub fn mgemm2<T: Scalar>(
+        &self,
+        kind: &str,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64> {
+        ensure!(precision_of::<T>() == self.precision, "precision mismatch");
+        ensure!(w.nf == v.nf, "feature depth mismatch");
+        if self
+            .client
+            .manifest()
+            .select(kind, self.precision, w.nf, w.nv.max(v.nv))
+            .is_err()
+        {
+            return self.mgemm2_tiled(kind, w, v);
+        }
+        let entry = self.pick(kind, w.nf, w.nv.max(v.nv))?;
+        let inputs = vec![
+            self.input(w, entry.nf, entry.nv),
+            self.input(v, entry.nf, entry.nv),
+        ];
+        let out = self.client.execute(&entry.name, inputs)?;
+        ensure!(out.len() == 1, "{kind}: want 1 output, got {}", out.len());
+        ensure!(
+            out[0].dims == vec![entry.nv, entry.nv],
+            "{kind}: bad output dims {:?}",
+            out[0].dims
+        );
+        // Slice the padded [entry.nv, entry.nv] down to [w.nv, v.nv].
+        let mut mat = MatF64::zeros(w.nv, v.nv);
+        for i in 0..w.nv {
+            let row = &out[0].values[i * entry.nv..i * entry.nv + v.nv];
+            mat.data[i * v.nv..(i + 1) * v.nv].copy_from_slice(row);
+        }
+        Ok(mat)
+    }
+
+    /// As [`Self::mgemm2`] but against one specific artifact by name
+    /// (kernel benches / lowering sweeps).
+    pub fn mgemm2_named<T: Scalar>(
+        &self,
+        name: &str,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64> {
+        ensure!(precision_of::<T>() == self.precision, "precision mismatch");
+        let entry = self
+            .client
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        ensure!(entry.nf >= w.nf && entry.nv >= w.nv.max(v.nv), "block exceeds {name}");
+        let inputs = vec![
+            self.input(w, entry.nf, entry.nv),
+            self.input(v, entry.nf, entry.nv),
+        ];
+        let out = self.client.execute(&entry.name, inputs)?;
+        ensure!(out.len() == 1 && out[0].dims == vec![entry.nv, entry.nv]);
+        let mut mat = MatF64::zeros(w.nv, v.nv);
+        for i in 0..w.nv {
+            let row = &out[0].values[i * entry.nv..i * entry.nv + v.nv];
+            mat.data[i * v.nv..(i + 1) * v.nv].copy_from_slice(row);
+        }
+        Ok(mat)
+    }
+
+    /// Tiled mGEMM2 over the largest artifact tier (see [`Self::mgemm2`]).
+    fn mgemm2_tiled<T: Scalar>(
+        &self,
+        kind: &str,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64> {
+        let tier = self.largest(kind)?;
+        let (tf, tv) = (tier.nf, tier.nv);
+        let mut out = MatF64::zeros(w.nv, v.nv);
+        let mut f0 = 0;
+        while f0 < w.nf {
+            let flen = tf.min(w.nf - f0);
+            let wf = w.feature_slice(f0, flen);
+            let vf = v.feature_slice(f0, flen);
+            for i0 in (0..w.nv).step_by(tv) {
+                let ilen = tv.min(w.nv - i0);
+                let wi = wf.select_cols(&(i0..i0 + ilen).collect::<Vec<_>>());
+                for j0 in (0..v.nv).step_by(tv) {
+                    let jlen = tv.min(v.nv - j0);
+                    let vj = vf.select_cols(&(j0..j0 + jlen).collect::<Vec<_>>());
+                    let part = self.mgemm2(kind, &wi, &vj)?;
+                    for i in 0..ilen {
+                        for j in 0..jlen {
+                            out.data[(i0 + i) * v.nv + (j0 + j)] += part.at(i, j);
+                        }
+                    }
+                }
+            }
+            f0 += flen;
+        }
+        Ok(out)
+    }
+
+    /// 3-way slab B[t, i, k] = Σ_q min(pivot_t, w_i, v_k) via an
+    /// "mgemm3"-kind artifact. `pivots.nv` ≤ the artifact's jt tier.
+    pub fn mgemm3<T: Scalar>(
+        &self,
+        kind: &str,
+        w: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        ensure!(precision_of::<T>() == self.precision, "precision mismatch");
+        ensure!(w.nf == v.nf && w.nf == pivots.nf, "feature depth mismatch");
+        let manifest = self.client.manifest();
+        let fits = manifest.entries.iter().any(|e| {
+            e.kind == kind
+                && e.precision == ElemKind::from(self.precision)
+                && e.nf >= w.nf
+                && e.nv >= w.nv.max(v.nv)
+                && e.jt >= pivots.nv
+                && manifest.dir.join(&e.file).exists()
+        });
+        if !fits {
+            return self.mgemm3_tiled(kind, w, pivots, v);
+        }
+        let entry = manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.precision == ElemKind::from(self.precision)
+                    && e.nf >= w.nf
+                    && e.nv >= w.nv.max(v.nv)
+                    && e.jt >= pivots.nv
+                    && manifest.dir.join(&e.file).exists()
+            })
+            .min_by_key(|e| (e.nf, e.nv, e.jt))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {kind} artifact for nf={} nv={} jt={} at {} — run `make artifacts`",
+                    w.nf,
+                    w.nv.max(v.nv),
+                    pivots.nv,
+                    self.precision.tag()
+                )
+            })?
+            .clone();
+        let inputs = vec![
+            self.input(w, entry.nf, entry.nv),
+            InputBuf {
+                dims: vec![entry.nf, entry.jt],
+                bytes: to_bytes(&pivots.to_rowmajor_padded(entry.nf, entry.jt)),
+                precision: self.precision.into(),
+            },
+            self.input(v, entry.nf, entry.nv),
+        ];
+        let out = self.client.execute(&entry.name, inputs)?;
+        ensure!(out.len() == 1, "{kind}: want 1 output, got {}", out.len());
+        ensure!(
+            out[0].dims == vec![entry.jt, entry.nv, entry.nv],
+            "{kind}: bad output dims {:?}",
+            out[0].dims
+        );
+        let mut slab = SlabF64::zeros(pivots.nv, w.nv, v.nv);
+        for t in 0..pivots.nv {
+            for i in 0..w.nv {
+                let base = (t * entry.nv + i) * entry.nv;
+                let row = &out[0].values[base..base + v.nv];
+                let dst = (t * w.nv + i) * v.nv;
+                slab.data[dst..dst + v.nv].copy_from_slice(row);
+            }
+        }
+        Ok(slab)
+    }
+
+    /// Tiled 3-way slab over the largest artifact tier: pivot chunks by
+    /// the tier's jt, vector panels by its nv, feature panels accumulate.
+    fn mgemm3_tiled<T: Scalar>(
+        &self,
+        kind: &str,
+        w: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        let tier = self.largest(kind)?;
+        let (tf, tv, tj) = (tier.nf, tier.nv, tier.jt.max(1));
+        let mut out = SlabF64::zeros(pivots.nv, w.nv, v.nv);
+        let mut f0 = 0;
+        while f0 < w.nf {
+            let flen = tf.min(w.nf - f0);
+            let wf = w.feature_slice(f0, flen);
+            let pf = pivots.feature_slice(f0, flen);
+            let vf = v.feature_slice(f0, flen);
+            for t0 in (0..pivots.nv).step_by(tj) {
+                let tlen = tj.min(pivots.nv - t0);
+                let pt = pf.select_cols(&(t0..t0 + tlen).collect::<Vec<_>>());
+                for i0 in (0..w.nv).step_by(tv) {
+                    let ilen = tv.min(w.nv - i0);
+                    let wi = wf.select_cols(&(i0..i0 + ilen).collect::<Vec<_>>());
+                    for k0 in (0..v.nv).step_by(tv) {
+                        let klen = tv.min(v.nv - k0);
+                        let vk = vf.select_cols(&(k0..k0 + klen).collect::<Vec<_>>());
+                        let part = self.mgemm3(kind, &wi, &pt, &vk)?;
+                        for t in 0..tlen {
+                            for i in 0..ilen {
+                                for k in 0..klen {
+                                    let idx = ((t0 + t) * w.nv + i0 + i) * v.nv + k0 + k;
+                                    out.data[idx] += part.at(t, i, k);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            f0 += flen;
+        }
+        Ok(out)
+    }
+
+    /// Bitwise Sorenson numerators (§2.3): N[i, j] = popcount(b_i & b_j)
+    /// through a packed-uint32 artifact ("sorenson2" or
+    /// "sorenson2pallas"). Zero-padding words/columns is exact (AND with
+    /// 0 contributes no bits).
+    pub fn sorenson2(
+        &self,
+        kind: &str,
+        w: &crate::vecdata::bits::BitVectorSet,
+        v: &crate::vecdata::bits::BitVectorSet,
+    ) -> Result<MatF64> {
+        ensure!(w.nf == v.nf, "feature depth mismatch");
+        let manifest = self.client.manifest();
+        let entry = manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.precision == ElemKind::U32
+                    && e.nf >= w.nf
+                    && e.nv >= w.nv.max(v.nv)
+                    && manifest.dir.join(&e.file).exists()
+            })
+            .min_by_key(|e| (e.nf, e.nv))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {kind} artifact for nf={} nv={} — run `make artifacts`",
+                    w.nf,
+                    w.nv.max(v.nv)
+                )
+            })?
+            .clone();
+        let nw_pad = entry.nf / 32; // artifact word depth
+        let pack = |set: &crate::vecdata::bits::BitVectorSet| -> InputBuf {
+            // u64 words -> row-major padded [nw_pad, entry.nv] of u32.
+            let mut data = vec![0u32; nw_pad * entry.nv];
+            for col in 0..set.nv {
+                for (wi, &word) in set.words(col).iter().enumerate() {
+                    let lo = (word & 0xFFFF_FFFF) as u32;
+                    let hi = (word >> 32) as u32;
+                    if 2 * wi < nw_pad {
+                        data[(2 * wi) * entry.nv + col] = lo;
+                    }
+                    if 2 * wi + 1 < nw_pad {
+                        data[(2 * wi + 1) * entry.nv + col] = hi;
+                    }
+                }
+            }
+            let mut bytes = vec![0u8; data.len() * 4];
+            for (i, x) in data.iter().enumerate() {
+                bytes[i * 4..(i + 1) * 4].copy_from_slice(&x.to_le_bytes());
+            }
+            InputBuf {
+                dims: vec![nw_pad, entry.nv],
+                bytes,
+                precision: ElemKind::U32,
+            }
+        };
+        // Any u32 word beyond nw_pad holds only bits ≥ entry.nf ≥ n_f,
+        // which are never set (tail bits stay clear) — safe to drop.
+        let out = self.client.execute(&entry.name, vec![pack(w), pack(v)])?;
+        ensure!(out.len() == 1 && out[0].dims == vec![entry.nv, entry.nv]);
+        let mut mat = MatF64::zeros(w.nv, v.nv);
+        for i in 0..w.nv {
+            let row = &out[0].values[i * entry.nv..i * entry.nv + v.nv];
+            mat.data[i * v.nv..(i + 1) * v.nv].copy_from_slice(row);
+        }
+        Ok(mat)
+    }
+
+    /// Column sums via the "rowsum" artifact (the denominator offload —
+    /// normally done natively, exposed for artifact validation).
+    pub fn rowsum<T: Scalar>(&self, v: &VectorSet<T>) -> Result<Vec<f64>> {
+        ensure!(precision_of::<T>() == self.precision, "precision mismatch");
+        let entry = self.pick("rowsum", v.nf, v.nv)?;
+        let inputs = vec![self.input(v, entry.nf, entry.nv)];
+        let out = self.client.execute(&entry.name, inputs)?;
+        ensure!(out.len() == 1 && out[0].dims == vec![entry.nv]);
+        Ok(out[0].values[..v.nv].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Execution tests live in rust/tests/runtime_pjrt.rs (they need the
+    // built artifacts); here we only test the pure packing helpers.
+    use super::*;
+
+    #[test]
+    fn to_bytes_le_layout() {
+        let b = to_bytes(&[1.0f32, 2.0f32]);
+        assert_eq!(b.len(), 8);
+        assert_eq!(&b[0..4], &1.0f32.to_le_bytes());
+        assert_eq!(&b[4..8], &2.0f32.to_le_bytes());
+    }
+
+    #[test]
+    fn precision_of_widths() {
+        assert_eq!(precision_of::<f32>(), Precision::F32);
+        assert_eq!(precision_of::<f64>(), Precision::F64);
+    }
+}

@@ -1,0 +1,158 @@
+//! Human-readable formatting for the bench tables (the paper reports
+//! GOps/s per node and petacomparisons/s; we print the same units).
+
+/// Format an operations-per-second rate with SI-style scaling
+/// (the paper's "GOps" / "petacomparisons" vocabulary).
+pub fn rate(ops_per_sec: f64) -> String {
+    let (val, unit) = scale(ops_per_sec);
+    format!("{val:.3} {unit}op/s")
+}
+
+/// Format a comparisons-per-second rate.
+pub fn cmp_rate(cmps_per_sec: f64) -> String {
+    let (val, unit) = scale(cmps_per_sec);
+    format!("{val:.3} {unit}cmp/s")
+}
+
+fn scale(x: f64) -> (f64, &'static str) {
+    const UNITS: [(f64, &str); 5] = [
+        (1e15, "P"),
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+    ];
+    for (f, u) in UNITS {
+        if x >= f {
+            return (x / f, u);
+        }
+    }
+    (x, "")
+}
+
+/// Format seconds compactly.
+pub fn secs(t: f64) -> String {
+    if t >= 100.0 {
+        format!("{t:.0} s")
+    } else if t >= 1.0 {
+        format!("{t:.2} s")
+    } else if t >= 1e-3 {
+        format!("{:.2} ms", t * 1e3)
+    } else {
+        format!("{:.1} µs", t * 1e6)
+    }
+}
+
+/// Format a byte count.
+pub fn bytes(b: u64) -> String {
+    let b = b as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} kB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Fixed-width table printer for the bench binaries: prints a header row
+/// and separator, then rows, all aligned to the widest cell per column.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{:>w$}", s, w = widths[c]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        assert_eq!(rate(5.0e15), "5.000 Pop/s");
+        assert_eq!(rate(3.2e9), "3.200 Gop/s");
+        assert_eq!(cmp_rate(1.7e15), "1.700 Pcmp/s");
+        assert_eq!(rate(12.0), "12.000 op/s");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert_eq!(secs(250.0), "250 s");
+        assert_eq!(secs(1.5), "1.50 s");
+        assert_eq!(secs(0.002), "2.00 ms");
+        assert_eq!(secs(5e-6), "5.0 µs");
+    }
+
+    #[test]
+    fn bytes_ranges() {
+        assert_eq!(bytes(500), "500 B");
+        assert_eq!(bytes(2_000_000), "2.00 MB");
+        assert_eq!(bytes(3_000_000_000), "3.00 GB");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["123456".into(), "x".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("long_header"));
+        assert!(lines[2].ends_with('2'));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Small in-tree substrates the offline environment forces us to own:
+//! deterministic PRNG streams, stopwatches, human-readable rate
+//! formatting, and a generic scalar trait shared by the f32/f64 paths.
+
+pub mod fmt;
+pub mod prng;
+pub mod timer;
+
+/// Scalar abstraction over the two precisions the paper evaluates
+/// (single and double; compile-time in CoMet, runtime-selected here).
+pub trait Scalar:
+    Copy
+    + PartialOrd
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::AddAssign
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Bytes per element (4 or 8) — used for literal construction and
+    /// the communication-volume accounting.
+    const BYTES: usize;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// Scalar min — the paper's "min-product" inner operation.
+    #[inline]
+    fn min_s(self, other: Self) -> Self {
+        if self <= other {
+            self
+        } else {
+            other
+        }
+    }
+    /// Raw little-endian bytes (literal construction + checksums).
+    fn to_bits_u64(self) -> u64;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 4;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits() as u64
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 8;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn to_bits_u64(self) -> u64 {
+        self.to_bits()
+    }
+}
+
+/// Ceiling division for schedule arithmetic (`⌈a/b⌉`, paper §6.6/§6.7).
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_min_matches_partialord() {
+        assert_eq!(2.0f64.min_s(3.0), 2.0);
+        assert_eq!(3.0f32.min_s(2.0), 2.0);
+        assert_eq!(2.0f32.min_s(2.0), 2.0);
+        assert_eq!(0.0f64.min_s(-1.0), -1.0);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(f32::from_f64(0.5).to_f64(), 0.5);
+        assert_eq!(f64::from_f64(0.25).to_f64(), 0.25);
+        assert_eq!(f32::BYTES, 4);
+        assert_eq!(f64::BYTES, 8);
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Deterministic PRNG streams (splitmix64 + xoshiro256++).
+//!
+//! The paper's synthetic test problems must produce "the exact same
+//! bit-for-bit result for all code versions and for all parallel
+//! decompositions" (§5). That requires every vector's entries to be a
+//! pure function of (campaign seed, global vector id, feature index) —
+//! never of which node generates them. [`Stream::for_vector`] derives an
+//! independent, stable stream per vector for exactly this.
+//!
+//! (No `rand` crate offline; these are the standard public-domain
+//! xoshiro/splitmix constructions.)
+
+/// splitmix64 step — used for seeding and for one-shot hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// One-shot 64-bit mix of a key (stateless hash built from splitmix64).
+#[inline]
+pub fn mix64(key: u64) -> u64 {
+    let mut s = key;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256++ generator.
+#[derive(Clone, Debug)]
+pub struct Stream {
+    s: [u64; 4],
+}
+
+impl Stream {
+    /// Seed via splitmix64 (the reference seeding procedure).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        // xoshiro must not start from the all-zero state.
+        let mut st = Stream { s };
+        if st.s == [0; 4] {
+            st.s = [0x9E3779B97F4A7C15, 1, 2, 3];
+        }
+        st
+    }
+
+    /// Stable per-vector stream: a pure function of (seed, vector id),
+    /// independent of node assignment (see module docs).
+    pub fn for_vector(campaign_seed: u64, vector_id: u64) -> Self {
+        Stream::new(campaign_seed ^ mix64(vector_id.wrapping_add(0xC0FFEE)))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our
+    /// non-cryptographic needs: 128-bit multiply-shift).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates) — used for the paper's
+    /// MPICH_RANK_REORDER random node mapping experiment.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Stream::new(42);
+        let mut b = Stream::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Stream::new(1);
+        let mut b = Stream::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut s = Stream::new(7);
+        for _ in 0..10_000 {
+            let x = s.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_roughly_uniform() {
+        let mut s = Stream::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| s.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut s = Stream::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = s.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn vector_streams_are_node_independent() {
+        // Same (seed, id) -> same stream, regardless of construction order.
+        let mut x = Stream::for_vector(99, 12345);
+        let _ = Stream::for_vector(99, 1); // unrelated interleaved stream
+        let mut y = Stream::for_vector(99, 12345);
+        for _ in 0..32 {
+            assert_eq!(x.next_u64(), y.next_u64());
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut s = Stream::new(5);
+        let p = s.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

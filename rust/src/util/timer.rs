@@ -1,0 +1,108 @@
+//! Stopwatches and a tiny repeated-measurement harness (criterion is not
+//! available offline; the bench binaries use [`bench_run`]).
+
+use std::time::{Duration, Instant};
+
+/// Cumulative stopwatch for pipeline-phase accounting (the paper reports
+/// input / metrics-comp / output phases separately, Table 5).
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Time a closure, accumulating into this stopwatch.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn secs(&self) -> f64 {
+        let mut t = self.total;
+        if let Some(t0) = self.started {
+            t += t0.elapsed();
+        }
+        t.as_secs_f64()
+    }
+}
+
+/// One measurement series from [`bench_run`].
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub label: String,
+    pub iters: usize,
+    pub secs: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn min(&self) -> f64 {
+        self.secs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn mean(&self) -> f64 {
+        self.secs.iter().sum::<f64>() / self.secs.len() as f64
+    }
+    pub fn median(&self) -> f64 {
+        let mut s = self.secs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+}
+
+/// Minimal bench harness: `warmup` unmeasured runs then `iters` timed runs.
+pub fn bench_run(label: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats {
+        label: label.to_string(),
+        iters,
+        secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "{}", sw.secs());
+    }
+
+    #[test]
+    fn bench_run_counts() {
+        let mut n = 0;
+        let stats = bench_run("x", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.secs.len(), 5);
+        assert!(stats.min() <= stats.mean());
+        assert!(stats.median() >= stats.min());
+    }
+}

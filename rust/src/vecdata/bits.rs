@@ -1,0 +1,179 @@
+//! Bit-packed binary vectors for the Sorenson metric (paper §2.3).
+//!
+//! "The computation can be made much faster … by representing vector
+//! entries as bits packed into words and operated upon using binary
+//! arithmetic, based on the coincidence of the min-product and the
+//! bitwise logical AND" — this module is that representation, and the
+//! substrate for the Table 6 bitwise-baseline comparisons (Haque-style
+//! 1-bit popcount codes).
+
+use crate::util::prng::Stream;
+
+/// n_v binary vectors of n_f features, each packed into ⌈n_f/64⌉ words.
+#[derive(Debug, Clone)]
+pub struct BitVectorSet {
+    pub nf: usize,
+    pub nv: usize,
+    pub words_per_vec: usize,
+    data: Vec<u64>,
+}
+
+impl BitVectorSet {
+    pub fn zeros(nf: usize, nv: usize) -> Self {
+        let words_per_vec = nf.div_ceil(64);
+        BitVectorSet {
+            nf,
+            nv,
+            words_per_vec,
+            data: vec![0; words_per_vec * nv],
+        }
+    }
+
+    /// Random binary vectors with the given bit density.
+    pub fn generate(seed: u64, nf: usize, nv: usize, density: f64) -> Self {
+        let mut set = Self::zeros(nf, nv);
+        for v in 0..nv {
+            let mut s = Stream::for_vector(seed, v as u64);
+            for q in 0..nf {
+                if s.next_f64() < density {
+                    set.set_bit(v, q);
+                }
+            }
+        }
+        set
+    }
+
+    /// Quantize a non-negative float vector set: bit = (value > threshold).
+    pub fn from_threshold<T: crate::util::Scalar>(
+        set: &crate::vecdata::VectorSet<T>,
+        threshold: f64,
+    ) -> Self {
+        let mut out = Self::zeros(set.nf, set.nv);
+        for v in 0..set.nv {
+            for (q, &x) in set.col(v).iter().enumerate() {
+                if x.to_f64() > threshold {
+                    out.set_bit(v, q);
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn set_bit(&mut self, v: usize, q: usize) {
+        debug_assert!(v < self.nv && q < self.nf);
+        self.data[v * self.words_per_vec + q / 64] |= 1u64 << (q % 64);
+    }
+
+    #[inline]
+    pub fn get_bit(&self, v: usize, q: usize) -> bool {
+        (self.data[v * self.words_per_vec + q / 64] >> (q % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn words(&self, v: usize) -> &[u64] {
+        &self.data[v * self.words_per_vec..(v + 1) * self.words_per_vec]
+    }
+
+    /// Population count of vector v (its Sorenson denominator half).
+    pub fn popcount(&self, v: usize) -> u64 {
+        self.words(v).iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Sorenson numerator: |u AND v| — the bitwise min-product.
+    pub fn and_popcount(&self, u: usize, v: usize) -> u64 {
+        self.words(u)
+            .iter()
+            .zip(self.words(v))
+            .map(|(a, b)| (a & b).count_ones() as u64)
+            .sum()
+    }
+
+    /// Sorenson metric c2 = 2|u∧v| / (|u| + |v|).
+    pub fn sorenson2(&self, u: usize, v: usize) -> f64 {
+        let d = self.popcount(u) + self.popcount(v);
+        if d == 0 {
+            return 0.0;
+        }
+        2.0 * self.and_popcount(u, v) as f64 / d as f64
+    }
+
+    /// Expand to a float VectorSet (for cross-checking the coincidence of
+    /// Sorenson with the Proportional Similarity on 0/1 data, §2.3).
+    pub fn to_floats(&self) -> crate::vecdata::VectorSet<f64> {
+        let mut out = crate::vecdata::VectorSet::<f64>::zeros(self.nf, self.nv);
+        for v in 0..self.nv {
+            for q in 0..self.nf {
+                if self.get_bit(v, q) {
+                    out.col_mut(v)[q] = 1.0;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = BitVectorSet::zeros(130, 3);
+        s.set_bit(1, 0);
+        s.set_bit(1, 63);
+        s.set_bit(1, 64);
+        s.set_bit(2, 129);
+        assert!(s.get_bit(1, 0) && s.get_bit(1, 63) && s.get_bit(1, 64));
+        assert!(s.get_bit(2, 129));
+        assert!(!s.get_bit(0, 0));
+        assert_eq!(s.popcount(1), 3);
+    }
+
+    #[test]
+    fn tail_bits_stay_clear() {
+        // nf=130 -> 3 words; bits 130..192 must never be set by generate.
+        let s = BitVectorSet::generate(5, 130, 8, 0.5);
+        for v in 0..8 {
+            let manual: u64 = (0..130).filter(|&q| s.get_bit(v, q)).count() as u64;
+            assert_eq!(s.popcount(v), manual);
+        }
+    }
+
+    #[test]
+    fn and_popcount_matches_direct() {
+        let s = BitVectorSet::generate(7, 200, 6, 0.3);
+        for u in 0..6 {
+            for v in 0..6 {
+                let direct = (0..200).filter(|&q| s.get_bit(u, q) && s.get_bit(v, q)).count();
+                assert_eq!(s.and_popcount(u, v), direct as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn sorenson_equals_czekanowski_on_bits() {
+        // Paper §2.3: the metrics coincide on 0/1 data.
+        let s = BitVectorSet::generate(9, 96, 10, 0.4);
+        let f = s.to_floats();
+        for u in 0..10 {
+            for v in (u + 1)..10 {
+                let a = s.sorenson2(u, v);
+                let b = crate::metrics::czekanowski2(f.col(u), f.col(v));
+                assert!((a - b).abs() < 1e-12, "({u},{v}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_quantization() {
+        let fs: crate::vecdata::VectorSet<f64> =
+            crate::vecdata::VectorSet::generate(crate::vecdata::SyntheticKind::RandomGrid, 3, 64, 4, 0);
+        let bits = BitVectorSet::from_threshold(&fs, 0.5);
+        for v in 0..4 {
+            for q in 0..64 {
+                assert_eq!(bits.get_bit(v, q), fs.col(v)[q] > 0.5);
+            }
+        }
+    }
+}

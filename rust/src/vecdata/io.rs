@@ -1,0 +1,120 @@
+//! The paper's on-disk input format (§6.8): a single column-major raw
+//! binary file of vector data, from which "each compute node reads the
+//! required portion" — i.e. a contiguous span of columns. No header; the
+//! dimensions travel in the run config, exactly as on Titan.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::util::Scalar;
+use crate::vecdata::VectorSet;
+use anyhow::{bail, Context, Result};
+
+/// Write a full vector set as a raw column-major binary file.
+pub fn write_raw<T: Scalar>(path: &Path, set: &VectorSet<T>) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for v in 0..set.nv {
+        w.write_all(as_bytes(set.col(v)))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read columns [first_col, first_col + ncols) of an n_f × n_v file —
+/// the per-node portion read (§6.8).
+pub fn read_raw_cols<T: Scalar>(
+    path: &Path,
+    nf: usize,
+    nv: usize,
+    first_col: usize,
+    ncols: usize,
+) -> Result<VectorSet<T>> {
+    if first_col + ncols > nv {
+        bail!("column range [{first_col}, {}) exceeds nv={nv}", first_col + ncols);
+    }
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let expected = (nf * nv * T::BYTES) as u64;
+    let actual = f.metadata()?.len();
+    if actual != expected {
+        bail!(
+            "{}: size {actual} != expected {expected} (nf={nf} nv={nv} elem={}B)",
+            path.display(),
+            T::BYTES
+        );
+    }
+    let mut r = BufReader::new(f);
+    r.seek(SeekFrom::Start((first_col * nf * T::BYTES) as u64))?;
+    let mut set = VectorSet::<T>::zeros(nf, ncols);
+    set.first_id = first_col;
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(
+            set.raw_mut().as_mut_ptr() as *mut u8,
+            nf * ncols * T::BYTES,
+        )
+    };
+    r.read_exact(bytes)?;
+    Ok(set)
+}
+
+fn as_bytes<T: Scalar>(slice: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(slice.as_ptr() as *const u8, std::mem::size_of_val(slice))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::SyntheticKind;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("comet-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_full() {
+        let set: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 17, 9, 0);
+        let p = tmp("roundtrip-f64");
+        write_raw(&p, &set).unwrap();
+        let back: VectorSet<f64> = read_raw_cols(&p, 17, 9, 0, 9).unwrap();
+        assert_eq!(set.raw(), back.raw());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn partial_read_matches_columns() {
+        let set: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 11, 8, 0);
+        let p = tmp("partial-f32");
+        write_raw(&p, &set).unwrap();
+        let part: VectorSet<f32> = read_raw_cols(&p, 11, 8, 3, 4).unwrap();
+        assert_eq!(part.nv, 4);
+        assert_eq!(part.first_id, 3);
+        for v in 0..4 {
+            assert_eq!(part.col(v), set.col(3 + v));
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let set: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 5, 5, 0);
+        let p = tmp("badsize");
+        write_raw(&p, &set).unwrap();
+        let err = read_raw_cols::<f64>(&p, 6, 5, 0, 5).unwrap_err();
+        assert!(err.to_string().contains("size"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let set: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 5, 5, 0);
+        let p = tmp("range");
+        write_raw(&p, &set).unwrap();
+        assert!(read_raw_cols::<f64>(&p, 5, 5, 3, 4).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,300 @@
+//! Vector datasets: synthetic generators, the paper's binary file
+//! format, and bit-packed Sorenson vectors.
+//!
+//! Paper §5 defines two synthetic problem types, both reproduced here:
+//! 1. **RandomGrid** — "each vector entry is set to a randomized value".
+//!    We snap values to the k/64 grid so every partial sum is exact in
+//!    f32 and f64, which is what makes results bit-identical across all
+//!    code versions and parallel decompositions (the checksum contract).
+//! 2. **Verifiable** — "randomized placement of entries specifically
+//!    chosen so that the correctness of every result value can be
+//!    verified analytically": each vector is an indicator of a single
+//!    feature bucket, so c2 ∈ {0, 1} and c3 ∈ {0, 1/2, 1} in closed form
+//!    (see [`SyntheticKind::Verifiable`] docs).
+//! 3. **PhewasLike** — the realistic §6.8 stand-in: sparse, non-negative
+//!    grid-valued profiles with n_f = 385-style shapes.
+//!
+//! Every entry is a pure function of (seed, global vector id, feature) —
+//! node-assignment independent, per the bit-for-bit requirement.
+
+pub mod bits;
+pub mod io;
+
+use crate::util::prng::Stream;
+use crate::util::Scalar;
+
+/// Synthetic dataset families (paper §5 + §6.8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyntheticKind {
+    /// Dense values on the k/64 grid, k ∈ [1, 64] (strictly positive so
+    /// denominators never vanish).
+    RandomGrid,
+    /// Single-bucket indicator vectors with analytically-known metrics:
+    /// vector i holds value 1 at feature `bucket(i)` and 0 elsewhere.
+    /// Then n2(i,j) = [bucket(i) = bucket(j)], d2 = 2, and
+    /// c2 ∈ {0, 1}; similarly c3(i,j,k) = 1 if all three buckets match,
+    /// 1/2 if exactly two match, 0 otherwise.
+    Verifiable,
+    /// Sparse PheWAS-profile stand-in: ~10% density, grid-valued.
+    PhewasLike,
+}
+
+/// A set of n_v vectors of n_f features, stored column-major
+/// (vector-contiguous — the paper's layout; each vector is one column).
+#[derive(Debug, Clone)]
+pub struct VectorSet<T: Scalar> {
+    pub nf: usize,
+    pub nv: usize,
+    /// First global vector id in this set (block offset within the
+    /// campaign-wide vector numbering).
+    pub first_id: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> VectorSet<T> {
+    pub fn zeros(nf: usize, nv: usize) -> Self {
+        VectorSet {
+            nf,
+            nv,
+            first_id: 0,
+            data: vec![T::ZERO; nf * nv],
+        }
+    }
+
+    /// Generate the block of global vectors [first_id, first_id + nv).
+    pub fn generate(kind: SyntheticKind, seed: u64, nf: usize, nv: usize, first_id: usize) -> Self {
+        let mut set = VectorSet::zeros(nf, nv);
+        set.first_id = first_id;
+        for local in 0..nv {
+            let gid = (first_id + local) as u64;
+            let mut s = Stream::for_vector(seed, gid);
+            let col = set.col_mut(local);
+            match kind {
+                SyntheticKind::RandomGrid => {
+                    for x in col.iter_mut() {
+                        // k/64 with k in [1, 64]: exact sums, no zeros.
+                        *x = T::from_f64((s.below(64) + 1) as f64 / 64.0);
+                    }
+                }
+                SyntheticKind::Verifiable => {
+                    let bucket = s.below(nf as u64) as usize;
+                    col[bucket] = T::ONE;
+                }
+                SyntheticKind::PhewasLike => {
+                    for x in col.iter_mut() {
+                        if s.next_f64() < 0.1 {
+                            *x = T::from_f64((s.below(64) + 1) as f64 / 64.0);
+                        }
+                    }
+                    // Guarantee at least one nonzero so d2 > 0.
+                    let fallback = s.below(nf as u64) as usize;
+                    if col.iter().all(|x| x.to_f64() == 0.0) {
+                        col[fallback] = T::from_f64(1.0 / 64.0);
+                    }
+                }
+            }
+        }
+        set
+    }
+
+    /// The feature bucket of a Verifiable vector (for analytic checks).
+    pub fn verifiable_bucket(seed: u64, nf: usize, gid: usize) -> usize {
+        Stream::for_vector(seed, gid as u64).below(nf as u64) as usize
+    }
+
+    #[inline]
+    pub fn col(&self, v: usize) -> &[T] {
+        &self.data[v * self.nf..(v + 1) * self.nf]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, v: usize) -> &mut [T] {
+        &mut self.data[v * self.nf..(v + 1) * self.nf]
+    }
+
+    pub fn raw(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Column sums Σ_q v_q — the denominator ingredients, computed on
+    /// the coordinator ("CPU") side exactly as in the paper (§3.1).
+    pub fn col_sums(&self) -> Vec<f64> {
+        (0..self.nv)
+            .map(|v| {
+                let mut acc = T::ZERO;
+                for &x in self.col(v) {
+                    acc += x;
+                }
+                acc.to_f64()
+            })
+            .collect()
+    }
+
+    /// Restrict to a feature subrange [f0, f0 + len) — the n_pf
+    /// (vector-elements) decomposition axis (§4.1).
+    pub fn feature_slice(&self, f0: usize, len: usize) -> VectorSet<T> {
+        assert!(f0 + len <= self.nf);
+        let mut out = VectorSet::zeros(len, self.nv);
+        out.first_id = self.first_id;
+        for v in 0..self.nv {
+            out.col_mut(v).copy_from_slice(&self.col(v)[f0..f0 + len]);
+        }
+        out
+    }
+
+    /// Row-major [nf, nv] buffer zero-padded to (nf_pad, nv_pad) — the
+    /// layout the AOT artifacts expect (jax arrays are row-major).
+    /// Zero padding is exact for the min-product over non-negative data.
+    pub fn to_rowmajor_padded(&self, nf_pad: usize, nv_pad: usize) -> Vec<T> {
+        assert!(nf_pad >= self.nf && nv_pad >= self.nv);
+        let mut out = vec![T::ZERO; nf_pad * nv_pad];
+        for v in 0..self.nv {
+            let col = self.col(v);
+            for q in 0..self.nf {
+                out[q * nv_pad + v] = col[q];
+            }
+        }
+        out
+    }
+
+    /// Select a subset of columns into a new (dense) set.
+    pub fn select_cols(&self, cols: &[usize]) -> VectorSet<T> {
+        let mut out = VectorSet::zeros(self.nf, cols.len());
+        out.first_id = self.first_id;
+        for (local, &c) in cols.iter().enumerate() {
+            out.col_mut(local).copy_from_slice(self.col(c));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_decomposition_independent() {
+        // Generating [0, 8) at once must equal generating [0,4) and [4,8)
+        // separately — the bit-for-bit requirement.
+        let all: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 7, 33, 8, 0);
+        let lo: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 7, 33, 4, 0);
+        let hi: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 7, 33, 4, 4);
+        for v in 0..4 {
+            assert_eq!(all.col(v), lo.col(v));
+            assert_eq!(all.col(v + 4), hi.col(v));
+        }
+    }
+
+    #[test]
+    fn random_grid_values_on_grid_and_positive() {
+        let s: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 64, 16, 0);
+        for v in 0..16 {
+            for &x in s.col(v) {
+                let k = (x as f64 * 64.0).round();
+                assert!((1.0..=64.0).contains(&k));
+                assert_eq!(x as f64, k / 64.0);
+            }
+        }
+    }
+
+    #[test]
+    fn verifiable_has_single_unit_entry() {
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::Verifiable, 3, 50, 20, 0);
+        for v in 0..20 {
+            let col = s.col(v);
+            let nnz = col.iter().filter(|&&x| x != 0.0).count();
+            assert_eq!(nnz, 1);
+            let bucket = VectorSet::<f64>::verifiable_bucket(3, 50, v);
+            assert_eq!(col[bucket], 1.0);
+        }
+    }
+
+    #[test]
+    fn verifiable_metric_values_are_analytic() {
+        let seed = 11;
+        let (nf, nv) = (10, 30); // small nf forces bucket collisions
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::Verifiable, seed, nf, nv, 0);
+        for i in 0..nv {
+            for j in (i + 1)..nv {
+                let c = crate::metrics::czekanowski2(s.col(i), s.col(j));
+                let bi = VectorSet::<f64>::verifiable_bucket(seed, nf, i);
+                let bj = VectorSet::<f64>::verifiable_bucket(seed, nf, j);
+                let expect = if bi == bj { 1.0 } else { 0.0 };
+                assert_eq!(c, expect, "pair ({i}, {j})");
+            }
+        }
+    }
+
+    #[test]
+    fn verifiable_c3_three_levels() {
+        let seed = 13;
+        let (nf, nv) = (4, 24);
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::Verifiable, seed, nf, nv, 0);
+        let b: Vec<usize> = (0..nv)
+            .map(|g| VectorSet::<f64>::verifiable_bucket(seed, nf, g))
+            .collect();
+        let mut seen = [false; 3];
+        for (i, j, k) in crate::metrics::indexing::triples(nv) {
+            let c = crate::metrics::czekanowski3(s.col(i), s.col(j), s.col(k));
+            let matches =
+                (b[i] == b[j]) as usize + (b[i] == b[k]) as usize + (b[j] == b[k]) as usize;
+            let expect = match matches {
+                3 => 1.0,
+                1 => 0.5,
+                0 => 0.0,
+                _ => unreachable!("two equalities imply the third"),
+            };
+            assert_eq!(c, expect, "triple ({i},{j},{k})");
+            seen[matches.min(2)] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "want all three analytic levels");
+    }
+
+    #[test]
+    fn phewas_like_sparse_and_nonzero() {
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::PhewasLike, 5, 385, 50, 0);
+        let sums = s.col_sums();
+        assert!(sums.iter().all(|&x| x > 0.0));
+        let nnz: usize = (0..50)
+            .map(|v| s.col(v).iter().filter(|&&x| x != 0.0).count())
+            .sum();
+        let density = nnz as f64 / (385.0 * 50.0);
+        assert!((0.05..0.2).contains(&density), "density={density}");
+    }
+
+    #[test]
+    fn rowmajor_padding_layout() {
+        let mut s: VectorSet<f64> = VectorSet::zeros(2, 2);
+        s.col_mut(0).copy_from_slice(&[1.0, 2.0]);
+        s.col_mut(1).copy_from_slice(&[3.0, 4.0]);
+        let rm = s.to_rowmajor_padded(3, 3);
+        // row-major [nf_pad=3, nv_pad=3]: element (q, v) at q*3 + v.
+        assert_eq!(rm, vec![1.0, 3.0, 0.0, 2.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn feature_slice_partitions_sums() {
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 40, 6, 0);
+        let a = s.feature_slice(0, 25);
+        let b = s.feature_slice(25, 15);
+        let total = s.col_sums();
+        let pa = a.col_sums();
+        let pb = b.col_sums();
+        for v in 0..6 {
+            assert!((total[v] - (pa[v] + pb[v])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_cols_copies() {
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 16, 6, 0);
+        let sub = s.select_cols(&[1, 4]);
+        assert_eq!(sub.nv, 2);
+        assert_eq!(sub.col(0), s.col(1));
+        assert_eq!(sub.col(1), s.col(4));
+    }
+}

@@ -1,0 +1,129 @@
+//! End-to-end tests over the FULL three-layer stack: synthetic data →
+//! virtual cluster → Algorithm 1/2+3 schedules → PJRT-executed AOT
+//! artifacts (Pallas/XLA lowerings) → denominators/quotients →
+//! checksums. Requires `make artifacts`.
+
+use std::path::Path;
+
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run_with_artifacts;
+use comet::decomp::Grid;
+use comet::vecdata::SyntheticKind;
+
+fn artifacts() -> &'static Path {
+    let p = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    assert!(
+        p.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    p
+}
+
+fn cfg(num_way: usize, nv: usize, nf: usize, precision: Precision) -> RunConfig {
+    RunConfig {
+        num_way,
+        nv,
+        nf,
+        precision,
+        backend: BackendKind::Pjrt,
+        grid: Grid::new(1, 1, 1),
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 11 },
+        ..Default::default()
+    }
+}
+
+/// PJRT coordinator run must equal the native-backend coordinator run
+/// bit-for-bit (grid-valued data ⇒ exact sums everywhere).
+#[test]
+fn e2e_2way_pjrt_equals_native_f64() {
+    let mut c = cfg(2, 48, 64, Precision::F64);
+    c.grid = Grid::new(1, 3, 1);
+    let pjrt = run_with_artifacts(&c, artifacts()).unwrap();
+    c.backend = BackendKind::CpuOptimized;
+    let native = run_with_artifacts(&c, artifacts()).unwrap();
+    assert_eq!(pjrt.checksum, native.checksum);
+    assert!(pjrt.stats.t_accel > 0.0, "accelerator time must be recorded");
+}
+
+#[test]
+fn e2e_2way_pjrt_f32_multinode() {
+    let mut c = cfg(2, 64, 96, Precision::F32);
+    c.grid = Grid::new(1, 4, 2);
+    let pjrt = run_with_artifacts(&c, artifacts()).unwrap();
+    c.backend = BackendKind::CpuOptimized;
+    let native = run_with_artifacts(&c, artifacts()).unwrap();
+    assert_eq!(pjrt.checksum, native.checksum);
+}
+
+#[test]
+fn e2e_3way_pjrt_equals_native() {
+    let mut c = cfg(3, 24, 48, Precision::F64);
+    c.grid = Grid::new(1, 2, 1);
+    let pjrt = run_with_artifacts(&c, artifacts()).unwrap();
+    c.backend = BackendKind::CpuOptimized;
+    let native = run_with_artifacts(&c, artifacts()).unwrap();
+    assert_eq!(pjrt.checksum, native.checksum);
+    assert!(pjrt.stats.mgemm3_calls > 0);
+}
+
+#[test]
+fn e2e_3way_staged_pjrt() {
+    // Single computed stage of a staged campaign (the §6.8 pattern:
+    // "only the last stage of n_st = 220 stages is computed").
+    let mut c = cfg(3, 18, 32, Precision::F64);
+    c.grid = Grid::new(1, 3, 1);
+    c.num_stage = 3;
+    c.stage = Some(2);
+    let part = run_with_artifacts(&c, artifacts()).unwrap();
+    // Against native, same stage.
+    c.backend = BackendKind::CpuOptimized;
+    let native = run_with_artifacts(&c, artifacts()).unwrap();
+    assert_eq!(part.checksum, native.checksum);
+    assert!(part.stats.metrics < 18 * 17 * 16 / 6, "a stage is a strict subset");
+}
+
+#[test]
+fn e2e_pallas_kernel_lowering_through_coordinator() {
+    // Force the coordinator's PJRT backend onto the Pallas-kernel
+    // artifacts: full L1→L2→L3 compose check.
+    use comet::coordinator::backend::{Backend, PjrtBackend};
+    use comet::runtime::PjrtService;
+    use comet::vecdata::VectorSet;
+    let svc = PjrtService::start(artifacts()).unwrap();
+    let be = PjrtBackend::new(svc.client(), Precision::F32).with_kinds("mgemm2pallas", "mgemm3pallas");
+    let v: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 13, 64, 20, 0);
+    let backend: std::sync::Arc<dyn Backend<f32>> = std::sync::Arc::new(be);
+    let pairs = comet::coordinator::serial::all_pairs(&backend, &v).unwrap();
+    let triples = comet::coordinator::serial::all_triples(&backend, &v).unwrap();
+    // Scalar oracle comparison.
+    for e in pairs.iter() {
+        let want = comet::metrics::czekanowski2(v.col(e.i as usize), v.col(e.j as usize));
+        assert!((e.value - want).abs() < 1e-6, "pair ({},{})", e.i, e.j);
+    }
+    for e in triples.iter().take(200) {
+        let want = comet::metrics::czekanowski3(
+            v.col(e.i as usize),
+            v.col(e.j as usize),
+            v.col(e.k as usize),
+        );
+        assert!((e.value - want).abs() < 1e-6, "triple ({},{},{})", e.i, e.j, e.k);
+    }
+}
+
+#[test]
+fn e2e_output_campaign_with_pjrt() {
+    let dir = std::env::temp_dir().join(format!("comet-e2e-out-{}", std::process::id()));
+    let mut c = cfg(2, 32, 48, Precision::F32);
+    c.grid = Grid::new(1, 2, 1);
+    c.output_dir = Some(dir.to_string_lossy().into_owned());
+    let out = run_with_artifacts(&c, artifacts()).unwrap();
+    let mut total = 0usize;
+    for rank in 0..c.grid.np() {
+        total += comet::output::read_dense(&dir.join(format!("metrics_{rank}.bin")))
+            .unwrap()
+            .len();
+    }
+    assert_eq!(total as u64, out.stats.metrics);
+    assert_eq!(total, 32 * 31 / 2);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,301 @@
+//! Coordinator integration tests (native backends — fast): Algorithm 1
+//! and Algorithms 2+3 against the scalar oracle, decomposition
+//! invariance of the checksum, staging, output files, file input, and
+//! the analytically-verifiable synthetic problem (paper §5).
+
+use comet::checksum::Checksum;
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::{self, run};
+use comet::decomp::Grid;
+use comet::metrics;
+use comet::vecdata::{io as vio, SyntheticKind, VectorSet};
+
+fn base_cfg(num_way: usize, nv: usize, nf: usize) -> RunConfig {
+    RunConfig {
+        num_way,
+        nv,
+        nf,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, 1, 1),
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 7 },
+        ..Default::default()
+    }
+}
+
+/// Oracle checksum: direct scalar evaluation of every unique pair.
+fn oracle_checksum_2way(cfg: &RunConfig) -> (Checksum, usize) {
+    let (kind, seed) = match cfg.input {
+        InputSource::Synthetic { kind, seed } => (kind, seed),
+        _ => unreachable!(),
+    };
+    let v: VectorSet<f64> = VectorSet::generate(kind, seed, cfg.nf, cfg.nv, 0);
+    let mut cs = Checksum::new();
+    let mut n = 0;
+    for (i, j) in metrics::indexing::pairs(cfg.nv) {
+        cs.add_pair(i, j, metrics::czekanowski2(v.col(i), v.col(j)));
+        n += 1;
+    }
+    (cs, n)
+}
+
+fn oracle_checksum_3way(cfg: &RunConfig) -> (Checksum, usize) {
+    let (kind, seed) = match cfg.input {
+        InputSource::Synthetic { kind, seed } => (kind, seed),
+        _ => unreachable!(),
+    };
+    let v: VectorSet<f64> = VectorSet::generate(kind, seed, cfg.nf, cfg.nv, 0);
+    let mut cs = Checksum::new();
+    let mut n = 0;
+    for (i, j, k) in metrics::indexing::triples(cfg.nv) {
+        cs.add_triple(i, j, k, metrics::czekanowski3(v.col(i), v.col(j), v.col(k)));
+        n += 1;
+    }
+    (cs, n)
+}
+
+#[test]
+fn two_way_single_node_matches_oracle() {
+    let cfg = base_cfg(2, 40, 32);
+    let out = run(&cfg).unwrap();
+    let (want, n) = oracle_checksum_2way(&cfg);
+    assert_eq!(out.checksum, want);
+    assert_eq!(out.stats.metrics as usize, n);
+    let pairs = out.pairs.unwrap();
+    assert_eq!(pairs.len(), n);
+}
+
+#[test]
+fn two_way_checksum_invariant_across_decompositions() {
+    // The paper's §5 bit-for-bit claim: same results for every parallel
+    // decomposition. Grid-valued inputs make f64 sums exact, so the
+    // checksums must be *identical*.
+    let mut cfg = base_cfg(2, 48, 40);
+    let reference = run(&cfg).unwrap().checksum;
+    for (npf, npv, npr) in [(1, 2, 1), (1, 3, 2), (1, 4, 3), (2, 2, 1), (2, 3, 2), (1, 6, 4)] {
+        cfg.grid = Grid::new(npf, npv, npr);
+        let got = run(&cfg).unwrap();
+        assert_eq!(
+            got.checksum, reference,
+            "checksum mismatch at grid ({npf},{npv},{npr})"
+        );
+    }
+}
+
+#[test]
+fn two_way_all_backends_agree() {
+    let mut cfg = base_cfg(2, 36, 24);
+    cfg.grid = Grid::new(1, 3, 1);
+    cfg.backend = BackendKind::CpuReference;
+    let a = run(&cfg).unwrap().checksum;
+    cfg.backend = BackendKind::CpuOptimized;
+    let b = run(&cfg).unwrap().checksum;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn two_way_f32_grid_inputs_still_decomposition_invariant() {
+    let mut cfg = base_cfg(2, 32, 64);
+    cfg.precision = Precision::F32;
+    let a = run(&cfg).unwrap().checksum;
+    cfg.grid = Grid::new(1, 4, 2);
+    let b = run(&cfg).unwrap().checksum;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn three_way_single_node_matches_oracle() {
+    let cfg = base_cfg(3, 18, 24);
+    let out = run(&cfg).unwrap();
+    let (want, n) = oracle_checksum_3way(&cfg);
+    assert_eq!(out.checksum, want);
+    assert_eq!(out.stats.metrics as usize, n);
+}
+
+#[test]
+fn three_way_checksum_invariant_across_decompositions() {
+    let mut cfg = base_cfg(3, 24, 20);
+    let reference = run(&cfg).unwrap().checksum;
+    for (npv, npr) in [(2, 1), (3, 2), (4, 3), (4, 6)] {
+        cfg.grid = Grid::new(1, npv, npr);
+        let got = run(&cfg).unwrap();
+        assert_eq!(got.checksum, reference, "grid npv={npv} npr={npr}");
+    }
+}
+
+#[test]
+fn three_way_staging_partitions_the_campaign() {
+    // Union of all stages == unstaged run; stages are disjoint.
+    let mut cfg = base_cfg(3, 18, 16);
+    cfg.grid = Grid::new(1, 3, 1);
+    let whole = run(&cfg).unwrap();
+    cfg.num_stage = 4;
+    let mut merged = Checksum::new();
+    let mut total = 0u64;
+    for s in 0..4 {
+        cfg.stage = Some(s);
+        let part = run(&cfg).unwrap();
+        merged.merge(part.checksum);
+        total += part.stats.metrics;
+    }
+    assert_eq!(merged, whole.checksum);
+    assert_eq!(total, whole.stats.metrics);
+}
+
+#[test]
+fn three_way_all_stages_at_once_equals_unstaged() {
+    let mut cfg = base_cfg(3, 15, 16);
+    cfg.grid = Grid::new(1, 3, 2);
+    let whole = run(&cfg).unwrap();
+    cfg.num_stage = 5;
+    cfg.stage = None; // run all stages in one go
+    let staged = run(&cfg).unwrap();
+    assert_eq!(staged.checksum, whole.checksum);
+}
+
+#[test]
+fn verifiable_synthetic_analytic_2way() {
+    // Paper §5's second synthetic type: every value checkable exactly.
+    let mut cfg = base_cfg(2, 30, 10);
+    cfg.input = InputSource::Synthetic { kind: SyntheticKind::Verifiable, seed: 3 };
+    cfg.grid = Grid::new(1, 3, 2);
+    let out = run(&cfg).unwrap();
+    let pairs = out.pairs.unwrap();
+    for e in pairs.iter() {
+        let bi = VectorSet::<f64>::verifiable_bucket(3, 10, e.i as usize);
+        let bj = VectorSet::<f64>::verifiable_bucket(3, 10, e.j as usize);
+        let expect = if bi == bj { 1.0 } else { 0.0 };
+        assert_eq!(e.value, expect, "pair ({}, {})", e.i, e.j);
+    }
+}
+
+#[test]
+fn verifiable_synthetic_analytic_3way() {
+    let mut cfg = base_cfg(3, 20, 6);
+    cfg.input = InputSource::Synthetic { kind: SyntheticKind::Verifiable, seed: 5 };
+    cfg.grid = Grid::new(1, 4, 1);
+    let out = run(&cfg).unwrap();
+    let triples = out.triples.unwrap();
+    let b: Vec<usize> = (0..20)
+        .map(|g| VectorSet::<f64>::verifiable_bucket(5, 6, g))
+        .collect();
+    for e in triples.iter() {
+        let (i, j, k) = (e.i as usize, e.j as usize, e.k as usize);
+        let m = (b[i] == b[j]) as usize + (b[i] == b[k]) as usize + (b[j] == b[k]) as usize;
+        let expect = match m {
+            3 => 1.0,
+            1 => 0.5,
+            _ => 0.0,
+        };
+        assert_eq!(e.value, expect, "triple ({i},{j},{k})");
+    }
+}
+
+#[test]
+fn file_input_equals_synthetic_run() {
+    // gen-data → file-driven run must equal the synthetic-driven run.
+    let dir = std::env::temp_dir().join(format!("comet-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("v.bin");
+    let set: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 7, 32, 40, 0);
+    vio::write_raw(&path, &set).unwrap();
+
+    let mut cfg = base_cfg(2, 40, 32);
+    cfg.grid = Grid::new(1, 4, 1);
+    let synth = run(&cfg).unwrap();
+    cfg.input = InputSource::File { path: path.to_string_lossy().into_owned() };
+    let filed = run(&cfg).unwrap();
+    assert_eq!(synth.checksum, filed.checksum);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn output_files_roundtrip_quantized() {
+    let dir = std::env::temp_dir().join(format!("comet-out-it-{}", std::process::id()));
+    let mut cfg = base_cfg(2, 24, 16);
+    cfg.grid = Grid::new(1, 2, 1);
+    cfg.output_dir = Some(dir.to_string_lossy().into_owned());
+    let out = run(&cfg).unwrap();
+    // Every node wrote a file; total bytes == total metrics (1B each).
+    let mut total = 0usize;
+    for rank in 0..cfg.grid.np() {
+        let p = dir.join(format!("metrics_{rank}.bin"));
+        total += comet::output::read_dense(&p).unwrap().len();
+    }
+    assert_eq!(total as u64, out.stats.metrics);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn thresholded_output_keeps_only_strong_metrics() {
+    // §6.8 discussion: thresholding cuts the output-data burden; the
+    // file format switches to (offset, byte) records.
+    let dir = std::env::temp_dir().join(format!("comet-thresh-{}", std::process::id()));
+    let mut cfg = base_cfg(2, 24, 16);
+    cfg.grid = Grid::new(1, 2, 1);
+    cfg.output_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.output_threshold = Some(0.8);
+    let out = run(&cfg).unwrap();
+    let pairs = out.pairs.unwrap();
+    let strong: Vec<_> = pairs.iter().filter(|e| e.value >= 0.8).collect();
+    let mut records = Vec::new();
+    for rank in 0..cfg.grid.np() {
+        records.extend(
+            comet::output::read_thresholded(&dir.join(format!("metrics_{rank}.bin"))).unwrap(),
+        );
+    }
+    assert_eq!(records.len(), strong.len());
+    for (off, qb) in records {
+        let (i, j) = comet::metrics::indexing::pair_from_offset(off as usize);
+        let e = strong
+            .iter()
+            .find(|e| (e.i as usize, e.j as usize) == (i, j))
+            .unwrap_or_else(|| panic!("unexpected record for pair ({i},{j})"));
+        assert!((comet::output::dequantize(qb) - e.value).abs() <= 0.5 / 255.0 + 1e-12);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn comm_accounting_scales_with_grid() {
+    let mut cfg = base_cfg(2, 48, 32);
+    cfg.grid = Grid::new(1, 1, 1);
+    let single = run(&cfg).unwrap();
+    assert_eq!(single.stats.comm_bytes, 0, "single node sends nothing");
+    cfg.grid = Grid::new(1, 4, 1);
+    let multi = run(&cfg).unwrap();
+    assert!(multi.stats.comm_bytes > 0);
+    assert!(multi.stats.comm_messages > 0);
+}
+
+#[test]
+fn no_store_suppresses_memory_results() {
+    let mut cfg = base_cfg(2, 30, 16);
+    cfg.store_metrics = false;
+    let out = run(&cfg).unwrap();
+    assert!(out.pairs.is_none());
+    assert!(out.stats.metrics > 0);
+}
+
+#[test]
+fn run_stats_load_matches_decomp() {
+    let cfg = {
+        let mut c = base_cfg(2, 64, 16);
+        c.grid = Grid::new(1, 4, 1);
+        c
+    };
+    let out = run(&cfg).unwrap();
+    // Total mGEMM block calls == unique block count of the circulant plan.
+    let expected: usize = (0..4)
+        .map(|pv| coordinator::two_way::load_for(&cfg, pv, 0))
+        .sum();
+    assert_eq!(out.stats.mgemm2_calls as usize, expected);
+}
+
+#[test]
+fn rejects_3way_with_npf() {
+    let mut cfg = base_cfg(3, 12, 16);
+    cfg.grid = Grid::new(2, 2, 1);
+    let err = run(&cfg).unwrap_err();
+    assert!(err.to_string().contains("npf"));
+}

@@ -1,0 +1,284 @@
+//! Property tests (hand-rolled harness — `comet::testkit`): randomized
+//! sweeps of the decomposition, checksum, indexing, and coordinator
+//! invariants that the paper's correctness story depends on.
+
+use std::collections::HashMap;
+
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run;
+use comet::decomp::partition::Partition;
+use comet::decomp::{three_way, two_way, Grid};
+use comet::metrics::{self, indexing};
+use comet::testkit::{assert_close, forall};
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+#[test]
+fn prop_partition_covers_and_balances() {
+    forall(
+        "partition-coverage",
+        200,
+        |g| (g.usize_in(0, 200), g.usize_in(1, 17)),
+        |&(n, parts)| {
+            let p = Partition::new(n, parts);
+            let mut seen = vec![0u8; n];
+            let mut min = usize::MAX;
+            let mut max = 0;
+            for part in 0..parts {
+                let len = p.len(part);
+                min = min.min(len);
+                max = max.max(len);
+                for i in p.range(part) {
+                    seen[i] += 1;
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err("not a partition".into());
+            }
+            if max - min > 1 {
+                return Err(format!("imbalance {min}..{max}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_2way_plan_unique_coverage() {
+    forall(
+        "2way-circulant-coverage",
+        100,
+        |g| (g.usize_in(1, 20), g.usize_in(1, 5)),
+        |&(npv, npr)| {
+            let mut seen: HashMap<(usize, usize), usize> = HashMap::new();
+            for pv in 0..npv {
+                for pr in 0..npr {
+                    for s in two_way::plan(npv, npr, pv, pr) {
+                        if let Some(b) = s.compute {
+                            let key =
+                                (b.row_block.min(b.col_block), b.row_block.max(b.col_block));
+                            *seen.entry(key).or_insert(0) += 1;
+                        }
+                    }
+                }
+            }
+            let expect = npv + npv * (npv - 1) / 2;
+            if seen.len() != expect {
+                return Err(format!("{} blocks, want {expect}", seen.len()));
+            }
+            if let Some((k, c)) = seen.iter().find(|(_, &c)| c != 1) {
+                return Err(format!("block {k:?} computed {c} times"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_3way_slices_unique_triple_coverage() {
+    forall(
+        "3way-slice-coverage",
+        25,
+        |g| {
+            let npv = g.usize_in(1, 6);
+            let nvb = g.usize_in(1, 4);
+            let npr = g.usize_in(1, 3);
+            let nst = g.usize_in(1, 3);
+            (npv * nvb.max(3), npv, npr, nst)
+        },
+        |&(nv, npv, npr, nst)| {
+            let blocks = Partition::new(nv, npv);
+            let mut counts: HashMap<(usize, usize, usize), usize> = HashMap::new();
+            for pv in 0..npv {
+                for pr in 0..npr {
+                    for slice in three_way::slices_for_node(npv, npr, pv, pr) {
+                        for stage in 0..nst {
+                            for t in three_way::slice_triples(&slice, &blocks, nst, stage) {
+                                *counts.entry(t).or_insert(0) += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            let expect = nv * (nv - 1) * (nv - 2) / 6;
+            if counts.len() != expect {
+                return Err(format!("{} triples, want {expect}", counts.len()));
+            }
+            if let Some((t, c)) = counts.iter().find(|(_, &c)| c != 1) {
+                return Err(format!("triple {t:?} seen {c}×"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pair_triple_offset_bijection() {
+    forall(
+        "offset-bijection",
+        300,
+        |g| g.usize_in(0, 5_000_000),
+        |&off| {
+            let (i, j) = indexing::pair_from_offset(off);
+            if !(i < j && indexing::pair_offset(i, j) == off) {
+                return Err(format!("pair offset {off} -> ({i},{j})"));
+            }
+            let (a, b, c) = indexing::triple_from_offset(off);
+            if !(a < b && b < c && indexing::triple_offset(a, b, c) == off) {
+                return Err(format!("triple offset {off} -> ({a},{b},{c})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_metric_bounds_and_symmetry() {
+    forall(
+        "metric-bounds",
+        60,
+        |g| {
+            let nf = g.usize_in(4, 64);
+            let seed = g.stream.next_u64();
+            let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, 6, 0);
+            v
+        },
+        |v| {
+            for (i, j) in indexing::pairs(v.nv) {
+                let c = metrics::czekanowski2(v.col(i), v.col(j));
+                if !(0.0..=1.0 + 1e-12).contains(&c) {
+                    return Err(format!("c2({i},{j}) = {c} out of range"));
+                }
+                if c != metrics::czekanowski2(v.col(j), v.col(i)) {
+                    return Err("c2 asymmetric".into());
+                }
+            }
+            for (i, j, k) in indexing::triples(v.nv) {
+                let c = metrics::czekanowski3(v.col(i), v.col(j), v.col(k));
+                if !(0.0..=1.0 + 1e-12).contains(&c) {
+                    return Err(format!("c3({i},{j},{k}) = {c} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_min_product_gemm_identity_on_self() {
+    // n2(v, v) = Σv and the mGEMM matrix is symmetric for W = V.
+    forall(
+        "mgemm-self",
+        40,
+        |g| {
+            let nf = g.usize_in(2, 48);
+            let nv = g.usize_in(2, 10);
+            let seed = g.stream.next_u64();
+            VectorSet::<f64>::generate(SyntheticKind::RandomGrid, seed, nf, nv, 0)
+        },
+        |v| {
+            let n = comet::linalg::optimized::mgemm2(v, v);
+            let sums = v.col_sums();
+            for i in 0..v.nv {
+                assert_close(n.at(i, i), sums[i], 1e-12, "diag")?;
+                for j in 0..v.nv {
+                    if n.at(i, j) != n.at(j, i) {
+                        return Err(format!("asymmetric at ({i},{j})"));
+                    }
+                    // n2 ≤ min(Σv_i, Σv_j) — min-product domination.
+                    if n.at(i, j) > sums[i].min(sums[j]) + 1e-12 {
+                        return Err(format!("n2({i},{j}) exceeds bound"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_checksum_decomposition_invariant() {
+    // The headline §5 property, randomized over grids: checksums are
+    // bit-identical for every decomposition of the same problem.
+    forall(
+        "coordinator-invariance",
+        8,
+        |g| {
+            let nv = g.usize_in(12, 36);
+            let nf = g.usize_in(8, 48);
+            let npv = g.usize_in(1, 4.min(nv));
+            let npr = g.usize_in(1, 3);
+            let seed = g.stream.next_u64();
+            (nv, nf, npv, npr, seed)
+        },
+        |&(nv, nf, npv, npr, seed)| {
+            let mut cfg = RunConfig {
+                num_way: 2,
+                nv,
+                nf,
+                precision: Precision::F64,
+                backend: BackendKind::CpuOptimized,
+                grid: Grid::new(1, 1, 1),
+                input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed },
+                store_metrics: false,
+                ..Default::default()
+            };
+            let a = run(&cfg).map_err(|e| e.to_string())?.checksum;
+            cfg.grid = Grid::new(1, npv, npr);
+            let b = run(&cfg).map_err(|e| e.to_string())?.checksum;
+            if a != b {
+                return Err(format!("checksum differs for grid (1,{npv},{npr})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sorenson_popcount_equals_float_path() {
+    forall(
+        "sorenson-bits",
+        30,
+        |g| {
+            let nf = g.usize_in(1, 200);
+            let nv = g.usize_in(2, 10);
+            let seed = g.stream.next_u64();
+            comet::vecdata::bits::BitVectorSet::generate(seed, nf, nv, 0.3)
+        },
+        |bits| {
+            let floats = bits.to_floats();
+            let a = comet::linalg::sorenson::sorenson_mgemm(bits, bits);
+            let b = comet::linalg::reference::mgemm2(&floats, &floats);
+            if a.max_abs_diff(&b) != 0.0 {
+                return Err("popcount vs float mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_checksum_detects_any_single_mutation() {
+    forall(
+        "checksum-sensitivity",
+        50,
+        |g| {
+            let n = g.usize_in(2, 30);
+            let vals: Vec<f64> = (0..n).map(|_| g.f64_unit()).collect();
+            let victim = g.usize_in(0, n - 1);
+            (vals, victim)
+        },
+        |(vals, victim)| {
+            let mut a = comet::checksum::Checksum::new();
+            let mut b = comet::checksum::Checksum::new();
+            for (idx, &v) in vals.iter().enumerate() {
+                a.add_pair(idx, idx + 1, v);
+                let v2 = if idx == *victim { v + 1e-9 } else { v };
+                b.add_pair(idx, idx + 1, v2);
+            }
+            if a == b {
+                return Err("mutation not detected".into());
+            }
+            Ok(())
+        },
+    );
+}

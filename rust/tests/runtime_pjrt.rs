@@ -1,0 +1,246 @@
+//! PJRT runtime integration: every artifact kind executed through the
+//! real HLO-load → compile → execute path and checked against the
+//! native reference kernels. Requires `make artifacts`.
+
+use std::path::Path;
+
+use comet::config::Precision;
+use comet::coordinator::backend::{Backend, CpuReference, PjrtBackend};
+use comet::linalg::reference;
+use comet::runtime::ops::BlockOps;
+use comet::runtime::PjrtService;
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn service() -> PjrtService {
+    assert!(
+        artifacts_dir().join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    PjrtService::start(artifacts_dir()).expect("start PJRT service")
+}
+
+fn gen64(nf: usize, nv: usize, seed: u64, first: usize) -> VectorSet<f64> {
+    VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, first)
+}
+
+fn gen32(nf: usize, nv: usize, seed: u64, first: usize) -> VectorSet<f32> {
+    VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, first)
+}
+
+#[test]
+fn mgemm2_xla_matches_reference_f64_exact() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    // Off-tier shape: exercises feature and vector padding.
+    let w = gen64(100, 48, 1, 0);
+    let v = gen64(100, 32, 1, 100);
+    let got = ops.mgemm2("mgemm2", &w, &v).unwrap();
+    let want = reference::mgemm2(&w, &v);
+    // Grid-valued data -> exact sums -> bit-identical across paths.
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn mgemm2_variants_agree_bitwise_f32() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F32);
+    let w = gen32(384, 64, 2, 0);
+    let v = gen32(384, 64, 2, 64);
+    let want = reference::mgemm2(&w, &v);
+    for kind in ["mgemm2", "mgemm2ternary", "mgemm2pallas", "mgemm2pallasternary"] {
+        let got = ops.mgemm2(kind, &w, &v).unwrap();
+        assert_eq!(got.max_abs_diff(&want), 0.0, "kind={kind}");
+    }
+}
+
+#[test]
+fn pallas_tier_exact_shape_f64() {
+    // Exact tier shape (no padding) through the Pallas kernel lowering.
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let w = gen64(384, 128, 3, 0);
+    let v = gen64(384, 128, 3, 128);
+    let got = ops.mgemm2("mgemm2pallas", &w, &v).unwrap();
+    let want = reference::mgemm2(&w, &v);
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn gemm_artifacts_match_reference() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let w = gen64(128, 32, 4, 0);
+    let v = gen64(128, 32, 4, 32);
+    let want = reference::gemm(&w, &v);
+    for kind in ["gemm", "gemmpallas"] {
+        let got = ops.mgemm2(kind, &w, &v).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-9, "kind={kind}");
+    }
+}
+
+#[test]
+fn mgemm3_artifacts_match_reference() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let vi = gen64(96, 24, 5, 0);
+    let pivots = gen64(96, 6, 5, 24);
+    let vk = gen64(96, 30, 5, 60);
+    let want = reference::mgemm3(&vi, &pivots, &vk);
+    for kind in ["mgemm3", "mgemm3pallas"] {
+        let got = ops.mgemm3(kind, &vi, &pivots, &vk).unwrap();
+        assert_eq!(got.max_abs_diff(&want), 0.0, "kind={kind}");
+    }
+}
+
+#[test]
+fn rowsum_artifact() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let v = gen64(200, 40, 6, 0);
+    let got = ops.rowsum(&v).unwrap();
+    let want = v.col_sums();
+    assert_eq!(got, want);
+}
+
+fn raw_bytes(v: &[f64]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+#[test]
+fn block2_fused_artifact() {
+    let svc = service();
+    let client = svc.client();
+    // block2 returns (N, sums_w, sums_v); exercise via raw execute.
+    let entry = client
+        .manifest()
+        .select("block2", Precision::F64, 100, 50)
+        .unwrap()
+        .clone();
+    let w = gen64(100, 50, 7, 0);
+    let v = gen64(100, 50, 7, 50);
+    let inputs = vec![
+        comet::runtime::InputBuf {
+            dims: vec![entry.nf, entry.nv],
+            bytes: raw_bytes(&w.to_rowmajor_padded(entry.nf, entry.nv)),
+            precision: Precision::F64.into(),
+        },
+        comet::runtime::InputBuf {
+            dims: vec![entry.nf, entry.nv],
+            bytes: raw_bytes(&v.to_rowmajor_padded(entry.nf, entry.nv)),
+            precision: Precision::F64.into(),
+        },
+    ];
+    let out = client.execute(&entry.name, inputs).unwrap();
+    assert_eq!(out.len(), 3, "block2 is a fused 3-output artifact");
+    let want_n = reference::mgemm2(&w, &v);
+    for i in 0..w.nv {
+        for j in 0..v.nv {
+            assert_eq!(out[0].values[i * entry.nv + j], want_n.at(i, j));
+        }
+    }
+    assert_eq!(&out[1].values[..w.nv], w.col_sums().as_slice());
+    assert_eq!(&out[2].values[..v.nv], v.col_sums().as_slice());
+}
+
+#[test]
+fn pjrt_backend_trait_paths() {
+    let svc = service();
+    let be = PjrtBackend::new(svc.client(), Precision::F32);
+    let w = gen32(64, 16, 8, 0);
+    let v = gen32(64, 16, 8, 16);
+    let got = Backend::<f32>::mgemm2(&be, &w, &v).unwrap();
+    let want = Backend::<f32>::mgemm2(&CpuReference, &w, &v).unwrap();
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+    assert!(Backend::<f32>::pivot_batch(&be) >= 8);
+}
+
+#[test]
+fn service_shared_across_threads() {
+    let svc = service();
+    let client = svc.client();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let ops = BlockOps::new(client.clone(), Precision::F64);
+            std::thread::spawn(move || {
+                let w = gen64(64, 16, 100 + t, 0);
+                let v = gen64(64, 16, 200 + t, 16);
+                let got = ops.mgemm2("mgemm2", &w, &v).unwrap();
+                let want = reference::mgemm2(&w, &v);
+                assert_eq!(got.max_abs_diff(&want), 0.0);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (execs, secs) = client.stats();
+    assert_eq!(execs, 4);
+    assert!(secs > 0.0);
+}
+
+#[test]
+fn sorenson_artifacts_match_popcount_reference() {
+    // §2.3 through all three layers: packed-u32 AND+popcount artifact
+    // vs the native popcount kernel, exact.
+    use comet::vecdata::bits::BitVectorSet;
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F32); // precision unused for u32 path
+    for (nf, nv) in [(512usize, 128usize), (100, 40), (512, 64)] {
+        let bits = BitVectorSet::generate(17, nf, nv, 0.35);
+        let want = comet::linalg::sorenson::sorenson_mgemm(&bits, &bits);
+        for kind in ["sorenson2", "sorenson2pallas"] {
+            let got = ops.sorenson2(kind, &bits, &bits).unwrap();
+            assert_eq!(got.max_abs_diff(&want), 0.0, "kind={kind} nf={nf} nv={nv}");
+        }
+    }
+}
+
+#[test]
+fn missing_artifact_errors_helpfully() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let w = gen64(64, 16, 9, 0);
+    let err = ops.mgemm2("nonexistent-kind", &w, &w).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("artifact") || msg.contains("tier"), "{msg}");
+}
+
+#[test]
+fn oversized_feature_depth_tiles_and_accumulates() {
+    // Deeper than any tier (max 1536): feature panels must accumulate.
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let w = gen64(2000, 16, 9, 0);
+    let v = gen64(2000, 12, 9, 16);
+    let got = ops.mgemm2("mgemm2", &w, &v).unwrap();
+    let want = reference::mgemm2(&w, &v);
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn oversized_vector_count_tiles() {
+    // Wider than any tier (max 256): vector panels must concatenate.
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F32);
+    let w = gen32(100, 300, 10, 0);
+    let v = gen32(100, 280, 10, 300);
+    let got = ops.mgemm2("mgemm2", &w, &v).unwrap();
+    let want = reference::mgemm2(&w, &v);
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn oversized_mgemm3_tiles() {
+    let svc = service();
+    let ops = BlockOps::new(svc.client(), Precision::F64);
+    let vi = gen64(1600, 20, 11, 0); // deeper than the 1536 tier
+    let pivots = gen64(1600, 20, 11, 20); // more pivots than jt=16
+    let vk = gen64(1600, 18, 11, 60);
+    let got = ops.mgemm3("mgemm3", &vi, &pivots, &vk).unwrap();
+    let want = reference::mgemm3(&vi, &pivots, &vk);
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+}
