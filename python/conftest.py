@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make `compile.*` importable when the suite is run
+from the repository root (`python -m pytest python/tests -q`, as CI
+does) as well as from inside `python/`."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -15,17 +15,41 @@
 use crate::util::prng::mix64;
 
 /// Accumulating checksum over a multiset of indexed metric values.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+///
+/// A per-run `salt` (the metric's checksum contribution — see
+/// `metrics::engine::MetricId::checksum_salt`) is folded into every
+/// item hash, so equal value multisets computed under *different*
+/// metrics can never produce colliding checksums. Equality compares
+/// only the accumulated (sum, count): a merged checksum matches an
+/// oracle built with the same salt regardless of which instance the
+/// salt was set on.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct Checksum {
     /// 128-bit wrapping sum of item hashes.
     pub sum: u128,
     /// Item count (guards against silently missing values).
     pub count: u64,
+    /// Hash salt applied to items added *through this instance*.
+    salt: u64,
 }
+
+impl PartialEq for Checksum {
+    fn eq(&self, other: &Self) -> bool {
+        (self.sum, self.count) == (other.sum, other.count)
+    }
+}
+
+impl Eq for Checksum {}
 
 impl Checksum {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A checksum whose item hashes are salted (salt 0 ≡ [`Self::new`],
+    /// hash-compatible with the unsalted historical digests).
+    pub fn with_salt(salt: u64) -> Self {
+        Checksum { salt, ..Self::default() }
     }
 
     fn add_item(&mut self, h: u128) {
@@ -36,7 +60,7 @@ impl Checksum {
     /// Add a 2-way metric value for global pair (i, j), i < j.
     pub fn add_pair(&mut self, i: usize, j: usize, value: f64) {
         debug_assert!(i < j);
-        let hi = mix64(mix64(i as u64) ^ mix64((j as u64) << 1));
+        let hi = mix64(mix64(i as u64) ^ mix64((j as u64) << 1) ^ self.salt);
         let hv = mix64(value.to_bits());
         self.add_item(((hi as u128) << 64) | hv as u128);
     }
@@ -44,7 +68,8 @@ impl Checksum {
     /// Add a 3-way metric value for global triple (i, j, k), i < j < k.
     pub fn add_triple(&mut self, i: usize, j: usize, k: usize, value: f64) {
         debug_assert!(i < j && j < k);
-        let hi = mix64(mix64(i as u64) ^ mix64((j as u64) << 1) ^ mix64((k as u64) << 2));
+        let hi =
+            mix64(mix64(i as u64) ^ mix64((j as u64) << 1) ^ mix64((k as u64) << 2) ^ self.salt);
         let hv = mix64(value.to_bits());
         self.add_item(((hi as u128) << 64) | hv as u128);
     }
@@ -111,6 +136,27 @@ mod tests {
         let mut c = Checksum::new();
         c.add_triple(0, 1, 2, 0.5);
         assert_ne!(a.sum, c.sum);
+    }
+
+    #[test]
+    fn salt_separates_metrics_but_not_equal_runs() {
+        // Same items, same salt → equal (even if one side was merged
+        // into an unsalted accumulator).
+        let mut a = Checksum::with_salt(7);
+        a.add_pair(0, 1, 0.5);
+        let mut merged = Checksum::new();
+        merged.merge(a);
+        assert_eq!(a, merged);
+        // Same items, different salt → different checksum.
+        let mut b = Checksum::with_salt(8);
+        b.add_pair(0, 1, 0.5);
+        assert_ne!(a, b);
+        // Salt 0 is hash-compatible with the historical unsalted form.
+        let mut c = Checksum::with_salt(0);
+        c.add_pair(0, 1, 0.5);
+        let mut d = Checksum::new();
+        d.add_pair(0, 1, 0.5);
+        assert_eq!(c, d);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 pub mod toml;
 
 use crate::decomp::Grid;
+use crate::metrics::MetricId;
 use crate::vecdata::SyntheticKind;
 use anyhow::{bail, Context, Result};
 
@@ -82,6 +83,8 @@ pub enum InputSource {
 /// A fully validated run description.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Which metric family the run computes (czekanowski|ccc|sorenson).
+    pub metric: MetricId,
     /// 2 or 3 (the paper's `num_way`).
     pub num_way: usize,
     /// Total vectors n_v.
@@ -111,6 +114,7 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            metric: MetricId::Czekanowski,
             num_way: 2,
             nv: 256,
             nf: 384,
@@ -135,6 +139,28 @@ impl RunConfig {
     pub fn validate(&self) -> Result<()> {
         if !(self.num_way == 2 || self.num_way == 3) {
             bail!("num_way must be 2 or 3, got {}", self.num_way);
+        }
+        if !self.metric.supports_way(self.num_way) {
+            bail!(
+                "metric {} has no {}-way form",
+                self.metric.name(),
+                self.num_way
+            );
+        }
+        // Strict element domains: pairing CCC with a non-allele
+        // generator would silently compute meaningless frequencies.
+        // (File inputs are the user's responsibility; Binary metrics
+        // threshold real inputs by design.)
+        if self.metric.domain() == crate::metrics::Domain::AlleleCounts {
+            if let InputSource::Synthetic { kind, .. } = &self.input {
+                if *kind != SyntheticKind::Alleles {
+                    bail!(
+                        "metric {} expects allele-count vectors (entries in {{0,1,2}}); \
+                         use `--synthetic alleles` or a {{0,1,2}}-valued input file",
+                        self.metric.name()
+                    );
+                }
+            }
         }
         if self.nv < self.num_way {
             bail!("nv={} too small for {}-way", self.nv, self.num_way);
@@ -162,6 +188,9 @@ impl RunConfig {
     /// Build from a parsed TOML document.
     pub fn from_toml(doc: &toml::Doc) -> Result<Self> {
         let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("run", "metric") {
+            cfg.metric = MetricId::parse(v.as_str().context("run.metric")?)?;
+        }
         if let Some(v) = doc.get("run", "num_way") {
             cfg.num_way = v.as_int().context("run.num_way")? as usize;
         }
@@ -207,6 +236,7 @@ impl RunConfig {
                     Some("grid") | None => SyntheticKind::RandomGrid,
                     Some("verifiable") => SyntheticKind::Verifiable,
                     Some("phewas") => SyntheticKind::PhewasLike,
+                    Some("alleles") => SyntheticKind::Alleles,
                     Some(other) => bail!("unknown input.synthetic {other:?}"),
                 };
                 let seed = doc
@@ -298,6 +328,49 @@ seed = 42
     fn rejects_oversized_grid() {
         let err = RunConfig::from_toml_str("[run]\nnv = 4\n[decomp]\nnpv = 8\n").unwrap_err();
         assert!(err.to_string().contains("npv"));
+    }
+
+    #[test]
+    fn parses_metric_and_alleles_input() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nmetric = \"ccc\"\n[input]\nsynthetic = \"alleles\"\nseed = 9\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.metric, MetricId::Ccc);
+        assert!(matches!(
+            cfg.input,
+            InputSource::Synthetic { kind: SyntheticKind::Alleles, seed: 9 }
+        ));
+    }
+
+    #[test]
+    fn default_metric_is_czekanowski() {
+        assert_eq!(RunConfig::default().metric, MetricId::Czekanowski);
+    }
+
+    #[test]
+    fn rejects_ccc_over_non_allele_synthetic() {
+        // Defaulting to the grid generator under CCC would silently
+        // compute meaningless frequencies — must be rejected.
+        let err = RunConfig::from_toml_str("[run]\nmetric = \"ccc\"\n").unwrap_err();
+        assert!(err.to_string().contains("alleles"), "{err}");
+        // File inputs are the user's responsibility.
+        RunConfig::from_toml_str("[run]\nmetric = \"ccc\"\n[input]\nfile = \"/d/v.bin\"\n")
+            .unwrap();
+        // Binary metrics threshold real inputs by design — grid is fine.
+        RunConfig::from_toml_str("[run]\nmetric = \"sorenson\"\n").unwrap();
+    }
+
+    #[test]
+    fn rejects_3way_for_2way_only_metrics() {
+        for m in ["ccc", "sorenson"] {
+            let err =
+                RunConfig::from_toml_str(&format!("[run]\nmetric = \"{m}\"\nnum_way = 3\n"))
+                    .unwrap_err();
+            assert!(err.to_string().contains("3-way"), "{m}: {err}");
+        }
+        // Czekanowski keeps its 3-way form.
+        RunConfig::from_toml_str("[run]\nmetric = \"czekanowski\"\nnum_way = 3\n").unwrap();
     }
 
     #[test]

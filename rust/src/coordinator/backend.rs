@@ -4,26 +4,34 @@
 //! version, an optimized CPU version, and the accelerator version
 //! (PJRT artifacts here, CUDA/MAGMA there). The coordinator is generic
 //! over the backend, which is what the Table 2 GPU-vs-CPU comparison
-//! swaps.
+//! swaps. Each backend provides one kernel per numerator family
+//! (min-product, dot-product, bitwise AND+popcount); the metric engine
+//! (`metrics::engine`) picks which family a run drives.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::{BackendKind, Precision};
-use crate::linalg::{optimized, reference, MatF64, SlabF64};
-use crate::runtime::ops::BlockOps;
+use crate::linalg::{optimized, reference, sorenson, MatF64, SlabF64};
+use crate::runtime::ops::{BlockOps, KernelFamily};
 use crate::runtime::RuntimeClient;
 use crate::util::Scalar;
+use crate::vecdata::bits::BitVectorSet;
 use crate::vecdata::VectorSet;
 
 /// Block-kernel provider at element type `T`.
 pub trait Backend<T: Scalar>: Send + Sync {
-    /// N = W^T ∘min V.
+    /// N = W^T ∘min V (min-product family — Czekanowski numerators).
     fn mgemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64>;
     /// slab[t, i, k] = Σ_q min(pivot_t, w_i, v_k).
     fn mgemm3(&self, w: &VectorSet<T>, pivots: &VectorSet<T>, v: &VectorSet<T>)
         -> Result<SlabF64>;
+    /// N = W^T V (dot-product family — CCC numerators).
+    fn gemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64>;
+    /// N[i, j] = |w_i AND v_j| over packed words (bitwise family —
+    /// Sorensen numerators).
+    fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64>;
     fn name(&self) -> &'static str;
     /// Max pivot batch (jt) a single mgemm3 call should receive.
     fn pivot_batch(&self) -> usize {
@@ -52,6 +60,12 @@ impl<T: Scalar> Backend<T> for CpuReference {
     ) -> Result<SlabF64> {
         Ok(reference::mgemm3(w, pivots, v))
     }
+    fn gemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(reference::gemm(w, v))
+    }
+    fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64> {
+        Ok(sorenson::sorenson_mgemm_ref(w, v))
+    }
     fn name(&self) -> &'static str {
         "cpu-reference"
     }
@@ -72,18 +86,35 @@ impl<T: Scalar> Backend<T> for CpuOptimized {
     ) -> Result<SlabF64> {
         Ok(optimized::mgemm3(w, pivots, v))
     }
+    fn gemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(optimized::gemm(w, v))
+    }
+    fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64> {
+        Ok(sorenson::sorenson_mgemm(w, v))
+    }
     fn name(&self) -> &'static str {
         "cpu-optimized"
     }
 }
 
 /// AOT artifacts through the PJRT service — the accelerator version.
+/// Default artifact kinds come from the metric engine's kernel
+/// families ([`KernelFamily::artifact_kind`]); lowering sweeps
+/// override the min-product kinds via [`PjrtBackend::with_kinds`] and
+/// the dot/bitwise kinds via [`PjrtBackend::with_dot_kind`] /
+/// [`PjrtBackend::with_bits_kind`].
 pub struct PjrtBackend {
     ops: BlockOps,
-    /// Artifact kind for 2-way blocks ("mgemm2", "mgemm2pallas", …).
+    /// Artifact kind for 2-way min-product blocks ("mgemm2",
+    /// "mgemm2pallas", …).
     pub kind2: String,
     /// Artifact kind for 3-way slabs ("mgemm3", "mgemm3pallas").
     pub kind3: String,
+    /// Artifact kind for dot-product blocks ("gemm", "gemmpallas").
+    pub kind_dot: String,
+    /// Artifact kind for bitwise blocks ("sorenson2",
+    /// "sorenson2pallas").
+    pub kind_bits: String,
     /// jt tier used when batching pivots.
     jt: usize,
 }
@@ -95,21 +126,39 @@ impl PjrtBackend {
             .manifest()
             .entries
             .iter()
-            .filter(|e| e.kind == "mgemm3" && e.precision == precision.into())
+            .filter(|e| {
+                e.kind == KernelFamily::MinProduct3.artifact_kind()
+                    && e.precision == precision.into()
+            })
             .map(|e| e.jt)
             .max()
             .unwrap_or(8);
         PjrtBackend {
             ops: BlockOps::new(client, precision),
-            kind2: "mgemm2".to_string(),
-            kind3: "mgemm3".to_string(),
+            kind2: KernelFamily::MinProduct2.artifact_kind().to_string(),
+            kind3: KernelFamily::MinProduct3.artifact_kind().to_string(),
+            kind_dot: KernelFamily::Dot2.artifact_kind().to_string(),
+            kind_bits: KernelFamily::BitAnd2.artifact_kind().to_string(),
             jt,
         }
     }
 
+    /// Override the min-product artifact kinds ("mgemm2pallas", …).
     pub fn with_kinds(mut self, kind2: &str, kind3: &str) -> Self {
         self.kind2 = kind2.to_string();
         self.kind3 = kind3.to_string();
+        self
+    }
+
+    /// Override the dot-product artifact kind ("gemmpallas", …).
+    pub fn with_dot_kind(mut self, kind: &str) -> Self {
+        self.kind_dot = kind.to_string();
+        self
+    }
+
+    /// Override the bitwise artifact kind ("sorenson2pallas", …).
+    pub fn with_bits_kind(mut self, kind: &str) -> Self {
+        self.kind_bits = kind.to_string();
         self
     }
 }
@@ -125,6 +174,12 @@ impl<T: Scalar> Backend<T> for PjrtBackend {
         v: &VectorSet<T>,
     ) -> Result<SlabF64> {
         self.ops.mgemm3(&self.kind3, w, pivots, v)
+    }
+    fn gemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
+        self.ops.mgemm2(&self.kind_dot, w, v)
+    }
+    fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64> {
+        self.ops.sorenson2(&self.kind_bits, w, v)
     }
     fn name(&self) -> &'static str {
         "pjrt"
@@ -182,6 +237,23 @@ mod tests {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 32, 8, 8);
         let a = Backend::<f64>::mgemm2(&CpuReference, &w, &v).unwrap();
         let b = Backend::<f64>::mgemm2(&CpuOptimized, &w, &v).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn cpu_backends_agree_on_dot_family() {
+        let w: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 2, 40, 6, 0);
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 2, 40, 6, 6);
+        let a = Backend::<f64>::gemm2(&CpuReference, &w, &v).unwrap();
+        let b = Backend::<f64>::gemm2(&CpuOptimized, &w, &v).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn cpu_backends_agree_on_bitwise_family() {
+        let bits = BitVectorSet::generate(5, 130, 9, 0.35);
+        let a = Backend::<f64>::sorenson2(&CpuReference, &bits, &bits).unwrap();
+        let b = Backend::<f64>::sorenson2(&CpuOptimized, &bits, &bits).unwrap();
         assert_eq!(a.max_abs_diff(&b), 0.0);
     }
 

@@ -7,9 +7,13 @@
 //!   pipeline, staging.
 //! * [`serial`] — single-node convenience drivers (examples/tests).
 //!
-//! Division of labor matches §3.1: numerators (mGEMM) go to the
-//! backend/accelerator; denominators, quotients, checksums, and output
-//! stay on the coordinator ("CPU") side.
+//! Division of labor matches §3.1: numerators (mGEMM/GEMM/popcount)
+//! go to the backend/accelerator; denominators, quotients, checksums,
+//! and output stay on the coordinator ("CPU") side. Both halves are
+//! dispatched through the run's [`crate::metrics::Metric`], so the
+//! node programs contain no metric-specific branches — swapping
+//! `--metric` swaps the kernel family, the denominator precomputation,
+//! and the quotient combination in one place.
 
 pub mod backend;
 pub mod serial;
@@ -55,10 +59,18 @@ impl RunStats {
         self.mgemm2_calls += o.mgemm2_calls;
         self.mgemm3_calls += o.mgemm3_calls;
         self.metrics += o.metrics;
+        // Counters sum across nodes; wall-clock phases take the max
+        // (makespan). comm_* and t_accel previously fell through this
+        // merge entirely — at this call site the cluster-level counters
+        // overwrite them afterwards, but any other caller merging
+        // per-node stats silently lost them.
+        self.comm_bytes += o.comm_bytes;
+        self.comm_messages += o.comm_messages;
         self.t_input = self.t_input.max(o.t_input);
         self.t_compute = self.t_compute.max(o.t_compute);
         self.t_output = self.t_output.max(o.t_output);
         self.t_total = self.t_total.max(o.t_total);
+        self.t_accel = self.t_accel.max(o.t_accel);
     }
 }
 
@@ -127,6 +139,7 @@ fn run_typed<T: Scalar>(
     client: Option<crate::runtime::RuntimeClient>,
 ) -> Result<RunOutcome> {
     let backend = backend::make_backend::<T>(cfg.backend, cfg.precision, client)?;
+    let metric = crate::metrics::make_metric::<T>(cfg.metric, cfg);
     let np = cfg.grid.np();
     let mut cluster = VirtualCluster::new(np, cfg.precision.bytes());
     let counters = cluster.counters();
@@ -137,15 +150,16 @@ fn run_typed<T: Scalar>(
     for ep in endpoints {
         let cfg = cfg.clone();
         let backend = Arc::clone(&backend);
+        let metric = Arc::clone(&metric);
         handles.push(
             std::thread::Builder::new()
                 .name(format!("node-{}", ep.rank))
                 .spawn(move || -> Result<NodeResult> {
                     let coord = cfg.grid.coords(ep.rank);
                     if cfg.num_way == 2 {
-                        two_way::node_main::<T>(&cfg, coord, ep, backend)
+                        two_way::node_main::<T>(&cfg, coord, ep, backend, metric)
                     } else {
-                        three_way::node_main::<T>(&cfg, coord, ep, backend)
+                        three_way::node_main::<T>(&cfg, coord, ep, backend, metric)
                     }
                 })
                 .context("spawn node thread")?,
@@ -153,8 +167,8 @@ fn run_typed<T: Scalar>(
     }
 
     let mut outcome = RunOutcome::default();
-    let mut pairs = PairStore::new();
-    let mut triples = TripleStore::new();
+    let mut pairs = PairStore::for_metric(cfg.metric);
+    let mut triples = TripleStore::for_metric(cfg.metric);
     for h in handles {
         let res = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
         outcome.checksum.merge(res.checksum);
@@ -171,6 +185,9 @@ fn run_typed<T: Scalar>(
         } else {
             outcome.triples = Some(triples);
         }
+    }
+    if let Some(dir) = &cfg.output_dir {
+        crate::output::write_run_meta(std::path::Path::new(dir), cfg, &outcome.stats)?;
     }
     Ok(outcome)
 }

@@ -1,62 +1,91 @@
 //! Single-node convenience drivers: compute full metric sets directly
 //! through a backend, without the cluster machinery. Used by examples,
 //! tests (as the end-to-end oracle path) and kernel-level benches.
+//!
+//! The `*_with` variants take an explicit [`Metric`]; the plain
+//! functions keep the historical Czekanowski behavior.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::backend::Backend;
-use crate::metrics::c2_from_parts;
+use crate::metrics::engine::Czekanowski;
 use crate::metrics::store::{PairStore, TripleStore};
+use crate::metrics::Metric;
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
 
-/// All unique 2-way Proportional Similarity metrics of one vector set.
-pub fn all_pairs<T: Scalar>(
+/// All unique 2-way metrics of one vector set under `metric`.
+pub fn all_pairs_with<T: Scalar>(
     backend: &Arc<dyn Backend<T>>,
+    metric: &dyn Metric<T>,
     v: &VectorSet<T>,
 ) -> Result<PairStore> {
-    let n = backend.mgemm2(v, v)?;
-    let sums = v.col_sums();
-    let mut store = PairStore::new();
+    let n = metric.numerators2(backend.as_ref(), v, v)?;
+    let dens = metric.denominators(v);
+    let mut store = PairStore::for_metric(metric.id());
     for j in 1..v.nv {
         for i in 0..j {
             store.push(
                 v.first_id + i,
                 v.first_id + j,
-                c2_from_parts(n.at(i, j), sums[i], sums[j]),
+                metric.combine2(n.at(i, j), dens[i], dens[j]),
             );
         }
     }
     Ok(store)
 }
 
-/// All unique 3-way Proportional Similarity metrics of one vector set
-/// (O(n_v³) output — small sets only).
-pub fn all_triples<T: Scalar>(
+/// All unique 2-way Proportional Similarity metrics of one vector set.
+pub fn all_pairs<T: Scalar>(
     backend: &Arc<dyn Backend<T>>,
     v: &VectorSet<T>,
+) -> Result<PairStore> {
+    all_pairs_with(backend, &Czekanowski, v)
+}
+
+/// All unique 3-way metrics of one vector set under `metric`
+/// (O(n_v³) output — small sets only).
+pub fn all_triples_with<T: Scalar>(
+    backend: &Arc<dyn Backend<T>>,
+    metric: &dyn Metric<T>,
+    v: &VectorSet<T>,
 ) -> Result<TripleStore> {
-    let n2 = backend.mgemm2(v, v)?;
-    let sums = v.col_sums();
-    let mut store = TripleStore::new();
+    let n2 = metric.numerators2(backend.as_ref(), v, v)?;
+    let dens = metric.denominators(v);
+    let mut store = TripleStore::for_metric(metric.id());
     let jt = backend.pivot_batch_for(v.nf, v.nv);
     let pivot_ids: Vec<usize> = (0..v.nv).collect();
     for chunk in pivot_ids.chunks(jt) {
         let pivots = v.select_cols(chunk);
-        let slab = backend.mgemm3(v, &pivots, v)?;
+        let slab = metric.numerators3(backend.as_ref(), v, &pivots, v)?;
         for (t, &j) in chunk.iter().enumerate() {
             for i in 0..j {
                 for k in (j + 1)..v.nv {
-                    let n3 = n2.at(i, j) + n2.at(i, k) + n2.at(j, k) - slab.at(t, i, k);
-                    let c3 = 1.5 * n3 / (sums[i] + sums[j] + sums[k]);
+                    let c3 = metric.combine3(
+                        n2.at(i, j),
+                        n2.at(i, k),
+                        n2.at(j, k),
+                        slab.at(t, i, k),
+                        dens[i],
+                        dens[j],
+                        dens[k],
+                    );
                     store.push(v.first_id + i, v.first_id + j, v.first_id + k, c3);
                 }
             }
         }
     }
     Ok(store)
+}
+
+/// All unique 3-way Proportional Similarity metrics of one vector set.
+pub fn all_triples<T: Scalar>(
+    backend: &Arc<dyn Backend<T>>,
+    v: &VectorSet<T>,
+) -> Result<TripleStore> {
+    all_triples_with(backend, &Czekanowski, v)
 }
 
 #[cfg(test)]
@@ -91,6 +120,34 @@ mod tests {
                 v.col(e.k as usize),
             );
             assert!((e.value - want).abs() < 1e-12, "({},{},{})", e.i, e.j, e.k);
+        }
+    }
+
+    #[test]
+    fn all_pairs_with_ccc_matches_scalar_oracle() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 4, 52, 10, 0);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let metric = crate::metrics::engine::Ccc::new(v.nf);
+        let store = all_pairs_with(&backend, &metric, &v).unwrap();
+        assert_eq!(store.len(), 45);
+        assert_eq!(store.metric, crate::metrics::MetricId::Ccc);
+        for e in store.iter() {
+            let want = metrics::ccc2(v.col(e.i as usize), v.col(e.j as usize));
+            assert_eq!(e.value, want, "pair ({}, {})", e.i, e.j);
+        }
+    }
+
+    #[test]
+    fn all_pairs_with_sorenson_matches_bit_oracle() {
+        let bits = crate::vecdata::bits::BitVectorSet::generate(6, 190, 8, 0.3);
+        let v = bits.to_floats();
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let metric = crate::metrics::engine::Sorenson::default();
+        let store = all_pairs_with(&backend, &metric, &v).unwrap();
+        assert_eq!(store.len(), 28);
+        for e in store.iter() {
+            let want = bits.sorenson2(e.i as usize, e.j as usize);
+            assert_eq!(e.value, want, "pair ({}, {})", e.i, e.j);
         }
     }
 

@@ -20,7 +20,7 @@ use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
 use crate::decomp::three_way::{stripe_pivots, Combo3};
 use crate::decomp::{partition::Partition, three_way, NodeCoord};
 use crate::linalg::MatF64;
-use crate::metrics::{c3_from_parts, indexing, store::PairStore, store::TripleStore};
+use crate::metrics::{indexing, store::PairStore, store::TripleStore, Metric};
 use crate::output::NodeWriter;
 use crate::util::{timer::Stopwatch, Scalar};
 use crate::vecdata::VectorSet;
@@ -33,13 +33,14 @@ pub(crate) fn node_main<T: Scalar>(
     coord: NodeCoord,
     mut ep: Endpoint,
     backend: Arc<dyn Backend<T>>,
+    metric: Arc<dyn Metric<T>>,
 ) -> Result<NodeResult> {
     let grid = cfg.grid;
     let (pv, pr) = (coord.pv, coord.pr);
     let npv = grid.npv;
     let mut stats = RunStats::default();
-    let mut checksum = Checksum::new();
-    let mut triples = TripleStore::new();
+    let mut checksum = Checksum::with_salt(metric.checksum_salt());
+    let mut triples = TripleStore::for_metric(metric.id());
     let mut t_in = Stopwatch::new();
     let mut t_comp = Stopwatch::new();
     let mut t_out = Stopwatch::new();
@@ -47,7 +48,7 @@ pub(crate) fn node_main<T: Scalar>(
     // --- Input phase -----------------------------------------------------
     t_in.start();
     let own = load_block::<T>(cfg, pv, 0)?;
-    let own_sums = own.col_sums();
+    let own_sums = metric.denominators(&own);
     t_in.stop();
 
     let mut writer = match &cfg.output_dir {
@@ -130,7 +131,7 @@ pub(crate) fn node_main<T: Scalar>(
         if let Some(m) = n2_cache.get(&key) {
             return Ok(Arc::clone(m));
         }
-        let m = Arc::new(backend.mgemm2(&blocks[&key.0], &blocks[&key.1])?);
+        let m = Arc::new(metric.numerators2(backend.as_ref(), &blocks[&key.0], &blocks[&key.1])?);
         stats.mgemm2_calls += 1;
         n2_cache.insert(key, Arc::clone(&m));
         Ok(m)
@@ -168,7 +169,7 @@ pub(crate) fn node_main<T: Scalar>(
                 stripe_pivots(p_blk.nv, slice.sub, cfg.num_stage, stage).collect();
             for chunk in pivots.chunks(jt_max) {
                 let pivot_set = p_blk.select_cols(chunk);
-                let slab = backend.mgemm3(&a_blk, &pivot_set, &r_blk)?;
+                let slab = metric.numerators3(backend.as_ref(), &a_blk, &pivot_set, &r_blk)?;
                 stats.mgemm3_calls += 1;
                 for (t, &j_local) in chunk.iter().enumerate() {
                     let gj = vparts.start(b_pivot) + j_local;
@@ -178,7 +179,7 @@ pub(crate) fn node_main<T: Scalar>(
                                 let gi = vparts.start(pv) + i;
                                 for k in 0..r_blk.nv {
                                     let gk = vparts.start(b_right) + k;
-                                    let c3 = c3_from_parts(
+                                    let c3 = metric.combine3(
                                         n2_at(&t_ap, pv, i, b_pivot, j_local),
                                         n2_at(&t_ar, pv, i, b_right, k),
                                         n2_at(&t_pr, b_pivot, j_local, b_right, k),
@@ -197,7 +198,7 @@ pub(crate) fn node_main<T: Scalar>(
                                 let g1 = vparts.start(pv) + i1;
                                 for i2 in (i1 + 1)..a_blk.nv {
                                     let g2 = vparts.start(pv) + i2;
-                                    let c3 = c3_from_parts(
+                                    let c3 = metric.combine3(
                                         n2_at(&t_ar, pv, i1, pv, i2),
                                         n2_at(&t_ap, pv, i1, b_pivot, j_local),
                                         n2_at(&t_ap, pv, i2, b_pivot, j_local),
@@ -216,7 +217,7 @@ pub(crate) fn node_main<T: Scalar>(
                                 let gi = vparts.start(pv) + i;
                                 for k in (j_local + 1)..a_blk.nv {
                                     let gk = vparts.start(pv) + k;
-                                    let c3 = c3_from_parts(
+                                    let c3 = metric.combine3(
                                         t_ap.at(i, j_local),
                                         t_ap.at(i, k),
                                         t_ap.at(j_local, k),

@@ -1,11 +1,14 @@
 //! Algorithm 1 — the 2-way metrics node program.
 //!
 //! Each parallel step Δ: exchange vector blocks around the ring
-//! (send own block to pv−Δ, receive pv+Δ's), offload the mGEMM
-//! N = V_recv^T ∘min V_own to the backend, reduce partials across the
-//! npf axis if present, then assemble denominators and quotients on the
-//! coordinator side. The block-circulant schedule (`decomp::two_way`)
-//! guarantees unique coverage and load balance (Figure 2(c)).
+//! (send own block to pv−Δ, receive pv+Δ's), offload the numerator
+//! block N to the backend through the run's metric (min-product mGEMM,
+//! GEMM, or bit-packed AND+popcount), reduce partials across the npf
+//! axis if present, then assemble denominators and quotients on the
+//! coordinator side — again through the metric. The block-circulant
+//! schedule (`decomp::two_way`) guarantees unique coverage and load
+//! balance (Figure 2(c)); it is metric-independent, which is what lets
+//! all three metric families share this one node program.
 
 use std::sync::Arc;
 
@@ -16,7 +19,7 @@ use crate::comm::{Endpoint, Payload};
 use crate::config::RunConfig;
 use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
 use crate::decomp::{partition::Partition, two_way, NodeCoord};
-use crate::metrics::{c2_from_parts, indexing, store::PairStore, store::TripleStore};
+use crate::metrics::{indexing, store::PairStore, store::TripleStore, Metric};
 use crate::output::NodeWriter;
 use crate::util::{Scalar, timer::Stopwatch};
 use crate::vecdata::VectorSet;
@@ -31,12 +34,13 @@ pub(crate) fn node_main<T: Scalar>(
     coord: NodeCoord,
     mut ep: Endpoint,
     backend: Arc<dyn Backend<T>>,
+    metric: Arc<dyn Metric<T>>,
 ) -> Result<NodeResult> {
     let grid = cfg.grid;
     let (pv, pr, pf) = (coord.pv, coord.pr, coord.pf);
     let mut stats = RunStats::default();
-    let mut checksum = Checksum::new();
-    let mut pairs = PairStore::new();
+    let mut checksum = Checksum::with_salt(metric.checksum_salt());
+    let mut pairs = PairStore::for_metric(metric.id());
     let mut t_in = Stopwatch::new();
     let mut t_comp = Stopwatch::new();
     let mut t_out = Stopwatch::new();
@@ -44,8 +48,9 @@ pub(crate) fn node_main<T: Scalar>(
     // --- Input phase -----------------------------------------------------
     t_in.start();
     let block = load_block::<T>(cfg, pv, pf)?;
-    // Full-feature column sums (allreduced across the npf axis).
-    let local_sums = block.col_sums();
+    // Full-feature denominator ingredients (allreduced across the npf
+    // axis — metric denominators are additive over feature slices).
+    let local_sums = metric.denominators(&block);
     let own_sums = if grid.npf > 1 {
         let group = pf_group(&grid, pv, pr);
         ep.allreduce_sum(&group, TAG_REDUCE, local_sums)
@@ -110,15 +115,15 @@ pub(crate) fn node_main<T: Scalar>(
 
         let Some(info) = step.compute else { continue };
 
-        // Offload the numerator block.
+        // Offload the numerator block through the metric's kernel.
         let (n_block, peer_first, peer_sums_ref): (_, usize, &[f64]) = match &peer_block {
             None => (
-                backend.mgemm2(&block, &block)?,
+                metric.numerators2(backend.as_ref(), &block, &block)?,
                 block.first_id,
                 &own_sums,
             ),
             Some(pb) => (
-                backend.mgemm2(&block, pb)?,
+                metric.numerators2(backend.as_ref(), &block, pb)?,
                 pb.first_id,
                 peer_sums.as_deref().unwrap(),
             ),
@@ -149,7 +154,7 @@ pub(crate) fn node_main<T: Scalar>(
         if info.diag {
             for j in 1..n_block.cols {
                 for i in 0..j {
-                    let value = c2_from_parts(n_block.at(i, j), own_sums[i], own_sums[j]);
+                    let value = metric.combine2(n_block.at(i, j), own_sums[i], own_sums[j]);
                     emit(
                         my_first + i,
                         my_first + j,
@@ -166,7 +171,7 @@ pub(crate) fn node_main<T: Scalar>(
         } else {
             for i in 0..n_block.rows {
                 for j in 0..n_block.cols {
-                    let value = c2_from_parts(n_block.at(i, j), own_sums[i], peer_sums_ref[j]);
+                    let value = metric.combine2(n_block.at(i, j), own_sums[i], peer_sums_ref[j]);
                     let (a, b) = canonical(my_first + i, peer_first + j);
                     emit(a, b, value, cfg, &mut checksum, &mut pairs, &mut writer, &mut t_out, &mut stats)?;
                 }

@@ -3,21 +3,44 @@
 //! A three-layer Rust + JAX + Pallas reproduction of
 //! *"Parallel Accelerated Vector Similarity Calculations for Genomics
 //! Applications"* (Joubert, Nance, Weighill, Jacobson — Parallel
-//! Computing, 2018; DOI 10.1016/j.parco.2018.03.009): 2-way and 3-way
-//! Proportional Similarity (Czekanowski) metrics computed through a
-//! min-product "modified GEMM" (mGEMM) offloaded to an accelerator, with
+//! Computing, 2018; DOI 10.1016/j.parco.2018.03.009) and its companion
+//! *"Parallel Accelerated Custom Correlation Coefficient Calculations
+//! for Genomics Applications"* (arXiv 1705.08213): similarity metrics
+//! computed through accelerator-offloaded block kernels, with
 //! block-circulant (2-way) and tetrahedral (3-way) parallel
 //! decompositions, redundancy elimination, staging, and pipelined
 //! communication.
 //!
-//! Layer map (see DESIGN.md):
+//! ## The metric engine
+//!
+//! Every run is parameterized by a [`metrics::Metric`] — the bundle of
+//! numerator kernel family, denominator precomputation, quotient
+//! combination, element domain, and checksum contribution. Three
+//! families are registered (`--metric` on the CLI):
+//!
+//! * **czekanowski** — Proportional Similarity via the min-product
+//!   "modified GEMM" (mGEMM), 2-way and 3-way (the source paper).
+//! * **ccc** — the companion paper's Custom Correlation Coefficient:
+//!   plain-GEMM numerators over allele-count vectors, 2-way.
+//! * **sorenson** — bit-packed Sorensen (§2.3 / Table 6): vectors are
+//!   binarized into words, numerators are AND+popcount, 2-way.
+//!
+//! The coordinator layers are generic over the metric — the node
+//! programs contain no metric-specific branches, so a new metric is
+//! one `Metric` impl plus (optionally) a backend kernel.
+//!
+//! ## Layer map (see DESIGN.md)
+//!
 //! * **Layer 1/2 (build time)** — Pallas kernels + JAX graphs in
-//!   `python/compile/`, AOT-lowered to HLO text artifacts.
-//! * **Layer 3 (this crate)** — the coordinator: loads artifacts through
-//!   the PJRT CPU client ([`runtime`]), runs the paper's Algorithms 1–3
-//!   over a simulated multi-node cluster ([`comm`], [`decomp`],
-//!   [`coordinator`]), and owns denominators, quotients, checksums, and
-//!   output ([`metrics`], [`checksum`], [`output`]).
+//!   `python/compile/` (min-product, GEMM, and packed-u32 popcount
+//!   lowerings), AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the coordinator: loads artifacts
+//!   through the PJRT CPU client ([`runtime`], with artifact kinds
+//!   keyed by the metric's kernel family), runs the paper's
+//!   Algorithms 1–3 over a simulated multi-node cluster ([`comm`],
+//!   [`decomp`], [`coordinator`]), and owns denominators, quotients,
+//!   checksums, and metric-tagged output ([`metrics`], [`checksum`],
+//!   [`output`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `comet` binary is self-contained.

@@ -8,6 +8,25 @@
 use crate::linalg::MatF64;
 use crate::vecdata::bits::BitVectorSet;
 
+/// Reference bit kernel: N[i, j] = |u_i AND v_j| counted bit-by-bit
+/// through `get_bit` — no word-level tricks. The correctness baseline
+/// for [`sorenson_mgemm`], mirroring the reference/optimized split of
+/// the float kernels (§5).
+pub fn sorenson_mgemm_ref(w: &BitVectorSet, v: &BitVectorSet) -> MatF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    for i in 0..w.nv {
+        for j in 0..v.nv {
+            let mut acc = 0u64;
+            for q in 0..w.nf {
+                acc += (w.get_bit(i, q) && v.get_bit(j, q)) as u64;
+            }
+            out.set(i, j, acc as f64);
+        }
+    }
+    out
+}
+
 /// Full numerator matrix N[i, j] = |u_i AND v_j| over packed words.
 pub fn sorenson_mgemm(w: &BitVectorSet, v: &BitVectorSet) -> MatF64 {
     assert_eq!(w.nf, v.nf, "feature depth mismatch");
@@ -54,6 +73,18 @@ pub fn cmp_count(nf: usize, nv: usize) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn packed_kernel_matches_bitwise_reference() {
+        // Widths straddling word boundaries exercise the partial
+        // trailing word of the packed path.
+        for nf in [1, 63, 64, 65, 127, 128, 129, 150] {
+            let bits = BitVectorSet::generate(17, nf, 7, 0.4);
+            let a = sorenson_mgemm(&bits, &bits);
+            let b = sorenson_mgemm_ref(&bits, &bits);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "nf={nf}");
+        }
+    }
 
     #[test]
     fn matches_float_mgemm_on_bits() {

@@ -59,16 +59,21 @@ USAGE: comet <run|plan|artifacts|model|gen-data|info|help> [options]
 
 run options:
   --config FILE      TOML run config (flags below override it)
+  --metric NAME      metric family (default czekanowski):
+                       czekanowski  Proportional Similarity, min-product mGEMM (2/3-way)
+                       ccc          Custom Correlation Coefficient, GEMM over
+                                    allele counts (2-way; pair with --synthetic alleles)
+                       sorenson     bit-packed Sorensen, AND+popcount (2-way)
   --num-way 2|3      metric order (default 2)
   --nv N --nf N      vectors / features
   --precision f32|f64
   --backend pjrt|cpu|reference
   --npf N --npv N --npr N   processor grid (virtual nodes)
   --num-stage N --stage S   3-way staging
-  --synthetic grid|verifiable|phewas   input generator (default grid)
+  --synthetic grid|verifiable|phewas|alleles   input generator (default grid)
   --seed N
   --input-file FILE  column-major binary input (overrides --synthetic)
-  --output-dir DIR   write per-node metric files
+  --output-dir DIR   write per-node metric files + run.meta sidecar
   --output-threshold X  drop metrics below X ((offset, byte) records)
   --no-store         do not keep metrics in memory (big runs)
   --artifacts DIR    artifact directory (default: artifacts)
@@ -77,7 +82,7 @@ plan options:    --num-way 2|3 --npv N [--npr N]
 model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                  [--tgemm SECS] [--tcpu SECS] [--precision f32|f64]
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
-                 [--synthetic grid|verifiable|phewas] [--seed N]
+                 [--synthetic grid|verifiable|phewas|alleles] [--seed N]
 ";
 
 fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
@@ -88,6 +93,9 @@ fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
         }
         None => RunConfig::default(),
     };
+    if let Some(m) = args.opt_str("metric") {
+        cfg.metric = comet::metrics::MetricId::parse(m)?;
+    }
     cfg.num_way = args.parse_or("num-way", cfg.num_way)?;
     cfg.nv = args.parse_or("nv", cfg.nv)?;
     cfg.nf = args.parse_or("nf", cfg.nf)?;
@@ -112,6 +120,7 @@ fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
             "grid" => SyntheticKind::RandomGrid,
             "verifiable" => SyntheticKind::Verifiable,
             "phewas" => SyntheticKind::PhewasLike,
+            "alleles" => SyntheticKind::Alleles,
             other => bail!("unknown --synthetic {other:?}"),
         };
         cfg.input = InputSource::Synthetic { kind, seed: args.parse_or("seed", 1u64)? };
@@ -134,8 +143,9 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     args.reject_unknown()?;
     println!(
-        "comet run: {}-way {} nv={} nf={} grid=({},{},{}) backend={} stages={}{}",
+        "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} stages={}{}",
         cfg.num_way,
+        cfg.metric.name(),
         cfg.precision.tag(),
         cfg.nv,
         cfg.nf,
@@ -324,6 +334,7 @@ fn cmd_gen_data(args: &cli::Args) -> Result<()> {
         "grid" => SyntheticKind::RandomGrid,
         "verifiable" => SyntheticKind::Verifiable,
         "phewas" => SyntheticKind::PhewasLike,
+        "alleles" => SyntheticKind::Alleles,
         other => bail!("unknown --synthetic {other:?}"),
     };
     args.reject_unknown()?;

@@ -1,0 +1,512 @@
+//! The metric engine: a [`Metric`] abstraction threaded through
+//! linalg → backend → coordinator → output.
+//!
+//! A metric is the bundle the coordinator is generic over:
+//!
+//! * a **numerator kernel family** — which block kernel the backend
+//!   runs (min-product mGEMM for Czekanowski, plain GEMM for CCC,
+//!   AND+popcount over packed words for Sorensen);
+//! * a **denominator precomputation** — the per-vector ingredient
+//!   (column sums, popcounts) assembled on the coordinator side and
+//!   allreduced across the n_pf axis, so it must be additive over
+//!   feature slices;
+//! * a **quotient combination** — how one metric value is assembled
+//!   from a numerator entry and two (or three) denominators;
+//! * an **element domain** — what the input vectors must look like for
+//!   the metric to be meaningful;
+//! * a **checksum contribution** — a per-metric salt folded into the
+//!   §5 bit-for-bit checksum so runs of different metrics can never
+//!   collide.
+//!
+//! Metrics:
+//! * [`Czekanowski`] — the source paper's Proportional Similarity
+//!   (2-way and 3-way), via the min-product mGEMM.
+//! * [`Ccc`] — the Custom Correlation Coefficient of the companion
+//!   paper (arXiv 1705.08213, Joubert/Nance/Climer/Weighill/Jacobson):
+//!   same decomposition/pipeline machinery, GEMM numerators over
+//!   allele-count vectors, nonlinear frequency-weighted combination.
+//! * [`Sorenson`] — the §2.3 bit-packed Sorensen metric, promoted from
+//!   an orphaned kernel into a first-class coordinated 2-way run:
+//!   vectors are binarized and packed into words, numerators are
+//!   AND+popcount (64 elementwise comparisons per word op, the Table 6
+//!   trick).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::backend::Backend;
+use crate::linalg::{MatF64, SlabF64};
+use crate::util::prng::mix64;
+use crate::util::Scalar;
+use crate::vecdata::bits::BitVectorSet;
+use crate::vecdata::VectorSet;
+
+use super::{c2_from_parts, c3_from_parts, ccc_from_parts};
+
+/// Binarization threshold for [`Sorenson`] over real-valued inputs
+/// (bit = value > threshold; 0/1 data is preserved exactly).
+pub const SORENSON_BIT_THRESHOLD: f64 = 0.5;
+
+/// Registry key for a metric family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum MetricId {
+    /// Proportional Similarity (Czekanowski), 2-way and 3-way.
+    #[default]
+    Czekanowski,
+    /// Custom Correlation Coefficient (companion paper), 2-way.
+    Ccc,
+    /// Bit-packed Sorensen (§2.3 / Table 6), 2-way.
+    Sorenson,
+}
+
+impl MetricId {
+    /// Every registered metric (the registry the CLI help prints).
+    pub const ALL: [MetricId; 3] = [MetricId::Czekanowski, MetricId::Ccc, MetricId::Sorenson];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "czekanowski" | "proportional" | "ps" => Ok(MetricId::Czekanowski),
+            "ccc" => Ok(MetricId::Ccc),
+            "sorenson" | "sorensen" => Ok(MetricId::Sorenson),
+            other => bail!("unknown metric {other:?} (want czekanowski|ccc|sorenson)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricId::Czekanowski => "czekanowski",
+            MetricId::Ccc => "ccc",
+            MetricId::Sorenson => "sorenson",
+        }
+    }
+
+    /// One-line registry description (CLI help / run banners).
+    pub fn describe(self) -> &'static str {
+        match self {
+            MetricId::Czekanowski => {
+                "Proportional Similarity via min-product mGEMM (2-way and 3-way)"
+            }
+            MetricId::Ccc => {
+                "Custom Correlation Coefficient via GEMM over allele counts (2-way)"
+            }
+            MetricId::Sorenson => {
+                "Sorensen via AND+popcount over bit-packed vectors (2-way)"
+            }
+        }
+    }
+
+    /// Which metric orders this family defines.
+    pub fn supports_way(self, num_way: usize) -> bool {
+        match self {
+            MetricId::Czekanowski => num_way == 2 || num_way == 3,
+            MetricId::Ccc | MetricId::Sorenson => num_way == 2,
+        }
+    }
+
+    /// Per-metric checksum salt. Czekanowski is 0 so its digests are
+    /// unchanged from the single-metric era.
+    pub fn checksum_salt(self) -> u64 {
+        match self {
+            MetricId::Czekanowski => 0,
+            MetricId::Ccc => mix64(0x1705_0821_3),
+            MetricId::Sorenson => mix64(0x5023_0000_6),
+        }
+    }
+
+    /// Element domain of this family (config validation pairs strict
+    /// domains with compatible input generators).
+    pub fn domain(self) -> Domain {
+        match self {
+            MetricId::Czekanowski => Domain::NonNegative,
+            MetricId::Ccc => Domain::AlleleCounts,
+            MetricId::Sorenson => Domain::Binary,
+        }
+    }
+}
+
+/// Element domain a metric is defined over. Inputs are not policed
+/// element-by-element, but config validation rejects synthetic
+/// generators that cannot produce a strict domain (CCC over
+/// non-allele data would silently compute meaningless frequencies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    /// Non-negative reals (min-product metrics).
+    NonNegative,
+    /// Allele counts {0, 1, 2} (2-bit genomics encodings) — strict.
+    AlleleCounts,
+    /// Binary 0/1; real inputs are thresholded by design.
+    Binary,
+}
+
+/// A metric family at element type `T`: everything the coordinator
+/// needs that is not generic across metrics. The two-way and three-way
+/// node programs contain **no** metric-specific branches — they only
+/// call through this trait.
+pub trait Metric<T: Scalar>: Send + Sync {
+    fn id(&self) -> MetricId;
+
+    fn name(&self) -> &'static str {
+        self.id().name()
+    }
+
+    fn domain(&self) -> Domain {
+        self.id().domain()
+    }
+
+    /// 2-way numerator block N[i, j] through the backend's kernel for
+    /// this metric's family.
+    fn numerators2(
+        &self,
+        backend: &dyn Backend<T>,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64>;
+
+    /// 3-way numerator slab (only metrics with a 3-way form).
+    fn numerators3(
+        &self,
+        _backend: &dyn Backend<T>,
+        _w: &VectorSet<T>,
+        _pivots: &VectorSet<T>,
+        _v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        bail!("metric {:?} has no 3-way form", self.name())
+    }
+
+    /// Per-vector denominator ingredients (Σv, popcount, …), computed
+    /// on the coordinator side. Must be **additive across feature
+    /// slices**: the n_pf axis allreduces these with a plain sum.
+    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64>;
+
+    /// Assemble one 2-way metric value from a numerator and the two
+    /// vectors' denominator ingredients.
+    fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64;
+
+    /// Assemble one 3-way metric value (only metrics with a 3-way
+    /// form; config validation keeps 2-way-only metrics away from the
+    /// 3-way coordinator).
+    #[allow(clippy::too_many_arguments)]
+    fn combine3(
+        &self,
+        _n2_ij: f64,
+        _n2_ik: f64,
+        _n2_jk: f64,
+        _n3_prime: f64,
+        _d_i: f64,
+        _d_j: f64,
+        _d_k: f64,
+    ) -> f64 {
+        unreachable!("metric {:?} has no 3-way form", self.name())
+    }
+
+    /// Salt folded into every checksum item hash for this metric.
+    fn checksum_salt(&self) -> u64 {
+        self.id().checksum_salt()
+    }
+}
+
+/// Proportional Similarity (the source paper's metric):
+/// c2 = 2 n2 / (Σv_i + Σv_j), c3 per Eq. (1).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Czekanowski;
+
+impl<T: Scalar> Metric<T> for Czekanowski {
+    fn id(&self) -> MetricId {
+        MetricId::Czekanowski
+    }
+
+    fn numerators2(
+        &self,
+        backend: &dyn Backend<T>,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64> {
+        backend.mgemm2(w, v)
+    }
+
+    fn numerators3(
+        &self,
+        backend: &dyn Backend<T>,
+        w: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<SlabF64> {
+        backend.mgemm3(w, pivots, v)
+    }
+
+    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64> {
+        v.col_sums()
+    }
+
+    fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
+        c2_from_parts(n, d_i, d_j)
+    }
+
+    fn combine3(
+        &self,
+        n2_ij: f64,
+        n2_ik: f64,
+        n2_jk: f64,
+        n3_prime: f64,
+        d_i: f64,
+        d_j: f64,
+        d_k: f64,
+    ) -> f64 {
+        c3_from_parts(n2_ij, n2_ik, n2_jk, n3_prime, d_i, d_j, d_k)
+    }
+}
+
+/// Custom Correlation Coefficient (companion paper, arXiv 1705.08213):
+/// over allele-count vectors u, v ∈ {0, 1, 2}^n_f,
+///
+/// ```text
+/// n(u,v) = Σ_q u_q v_q            (plain GEMM numerator)
+/// f_i    = Σu / (2 n_f)           (allele frequency)
+/// f_ij   = n / (4 n_f)            (co-occurrence frequency)
+/// ccc    = (9/2) f_ij (1 − (2/3) f_i)(1 − (2/3) f_j)
+/// ```
+///
+/// `nf` is the **global** feature count of the campaign: feature-sliced
+/// (n_pf > 1) nodes hold partial numerators/sums that are allreduced
+/// before combination, so the frequencies must be normalized by the
+/// full depth.
+#[derive(Debug, Clone, Copy)]
+pub struct Ccc {
+    pub nf: usize,
+}
+
+impl Ccc {
+    pub fn new(nf: usize) -> Self {
+        Ccc { nf }
+    }
+}
+
+impl<T: Scalar> Metric<T> for Ccc {
+    fn id(&self) -> MetricId {
+        MetricId::Ccc
+    }
+
+    fn numerators2(
+        &self,
+        backend: &dyn Backend<T>,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64> {
+        backend.gemm2(w, v)
+    }
+
+    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64> {
+        v.col_sums()
+    }
+
+    fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
+        ccc_from_parts(n, d_i, d_j, self.nf)
+    }
+}
+
+/// Bit-packed Sorensen (§2.3): inputs are binarized at
+/// [`SORENSON_BIT_THRESHOLD`] and packed into words; numerators are
+/// AND+popcount; denominators are popcounts; the quotient is the
+/// Czekanowski form restricted to bits, with a 0/0 → 0 guard for empty
+/// vectors.
+#[derive(Debug, Clone, Copy)]
+pub struct Sorenson {
+    pub threshold: f64,
+}
+
+impl Default for Sorenson {
+    fn default() -> Self {
+        Sorenson { threshold: SORENSON_BIT_THRESHOLD }
+    }
+}
+
+impl<T: Scalar> Metric<T> for Sorenson {
+    fn id(&self) -> MetricId {
+        MetricId::Sorenson
+    }
+
+    fn numerators2(
+        &self,
+        backend: &dyn Backend<T>,
+        w: &VectorSet<T>,
+        v: &VectorSet<T>,
+    ) -> Result<MatF64> {
+        let wb = BitVectorSet::from_threshold(w, self.threshold);
+        let vb = BitVectorSet::from_threshold(v, self.threshold);
+        backend.sorenson2(&wb, &vb)
+    }
+
+    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64> {
+        BitVectorSet::from_threshold(v, self.threshold).popcounts()
+    }
+
+    fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
+        if d_i + d_j == 0.0 {
+            0.0
+        } else {
+            c2_from_parts(n, d_i, d_j)
+        }
+    }
+}
+
+/// The registry: instantiate a metric for a run. CCC binds the
+/// campaign's global n_f; Sorensen binds its binarization threshold.
+pub fn make_metric<T: Scalar>(id: MetricId, cfg: &RunConfig) -> Arc<dyn Metric<T>> {
+    match id {
+        MetricId::Czekanowski => Arc::new(Czekanowski),
+        MetricId::Ccc => Arc::new(Ccc::new(cfg.nf)),
+        MetricId::Sorenson => Arc::new(Sorenson::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{CpuOptimized, CpuReference};
+    use crate::metrics;
+    use crate::vecdata::SyntheticKind;
+
+    #[test]
+    fn registry_parse_roundtrip() {
+        for id in MetricId::ALL {
+            assert_eq!(MetricId::parse(id.name()).unwrap(), id);
+            assert!(!id.describe().is_empty());
+        }
+        assert_eq!(MetricId::parse("sorensen").unwrap(), MetricId::Sorenson);
+        assert!(MetricId::parse("pearson").is_err());
+    }
+
+    #[test]
+    fn way_support() {
+        assert!(MetricId::Czekanowski.supports_way(2));
+        assert!(MetricId::Czekanowski.supports_way(3));
+        assert!(MetricId::Ccc.supports_way(2));
+        assert!(!MetricId::Ccc.supports_way(3));
+        assert!(MetricId::Sorenson.supports_way(2));
+        assert!(!MetricId::Sorenson.supports_way(3));
+    }
+
+    #[test]
+    fn domains_match_families() {
+        assert_eq!(MetricId::Czekanowski.domain(), Domain::NonNegative);
+        assert_eq!(MetricId::Ccc.domain(), Domain::AlleleCounts);
+        assert_eq!(MetricId::Sorenson.domain(), Domain::Binary);
+        let m: &dyn Metric<f64> = &Czekanowski;
+        assert_eq!(m.domain(), Domain::NonNegative);
+    }
+
+    #[test]
+    fn checksum_salts_distinct() {
+        assert_eq!(MetricId::Czekanowski.checksum_salt(), 0);
+        assert_ne!(MetricId::Ccc.checksum_salt(), MetricId::Sorenson.checksum_salt());
+        assert_ne!(MetricId::Ccc.checksum_salt(), 0);
+        assert_ne!(MetricId::Sorenson.checksum_salt(), 0);
+    }
+
+    #[test]
+    fn czekanowski_engine_matches_scalar_oracle() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 48, 8, 0);
+        let m: &dyn Metric<f64> = &Czekanowski;
+        let n = m.numerators2(&CpuOptimized, &v, &v).unwrap();
+        let d = m.denominators(&v);
+        for i in 0..v.nv {
+            for j in 0..v.nv {
+                let got = m.combine2(n.at(i, j), d[i], d[j]);
+                let want = metrics::czekanowski2(v.col(i), v.col(j));
+                assert!((got - want).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn ccc_engine_matches_scalar_oracle() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 5, 60, 9, 0);
+        let ccc = Ccc::new(v.nf);
+        let m: &dyn Metric<f64> = &ccc;
+        let n = m.numerators2(&CpuOptimized, &v, &v).unwrap();
+        let d = m.denominators(&v);
+        for i in 0..v.nv {
+            for j in 0..v.nv {
+                let got = m.combine2(n.at(i, j), d[i], d[j]);
+                let want = metrics::ccc2(v.col(i), v.col(j));
+                assert_eq!(got, want, "({i},{j})"); // integer-valued parts: exact
+            }
+        }
+    }
+
+    #[test]
+    fn ccc_value_range_on_alleles() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 7, 128, 12, 0);
+        let ccc = Ccc::new(v.nf);
+        let m: &dyn Metric<f64> = &ccc;
+        let n = m.numerators2(&CpuReference, &v, &v).unwrap();
+        let d = m.denominators(&v);
+        for i in 0..v.nv {
+            for j in 0..v.nv {
+                let c = m.combine2(n.at(i, j), d[i], d[j]);
+                assert!((0.0..=1.0 + 1e-12).contains(&c), "ccc({i},{j}) = {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn sorenson_engine_matches_bit_oracle() {
+        let bits = BitVectorSet::generate(9, 130, 10, 0.4);
+        let v = bits.to_floats();
+        let sor = Sorenson::default();
+        let m: &dyn Metric<f64> = &sor;
+        let n = m.numerators2(&CpuOptimized, &v, &v).unwrap();
+        let d = m.denominators(&v);
+        for i in 0..v.nv {
+            for j in 0..v.nv {
+                let got = m.combine2(n.at(i, j), d[i], d[j]);
+                assert_eq!(got, bits.sorenson2(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sorenson_reference_and_optimized_backends_agree() {
+        let bits = BitVectorSet::generate(11, 97, 8, 0.3);
+        let v = bits.to_floats();
+        let sor = Sorenson::default();
+        let m: &dyn Metric<f64> = &sor;
+        let a = m.numerators2(&CpuReference, &v, &v).unwrap();
+        let b = m.numerators2(&CpuOptimized, &v, &v).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn sorenson_empty_vectors_give_zero() {
+        let sor = Sorenson::default();
+        let m: &dyn Metric<f64> = &sor;
+        assert_eq!(m.combine2(0.0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn make_metric_binds_config() {
+        let cfg = RunConfig { nf: 77, ..Default::default() };
+        let m = make_metric::<f64>(MetricId::Ccc, &cfg);
+        assert_eq!(m.id(), MetricId::Ccc);
+        assert_eq!(m.name(), "ccc");
+        // Frequencies must be normalized by the configured global nf:
+        // a full numerator over nf features combines to the same value
+        // as the scalar oracle on nf-long vectors.
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 1, 77, 2, 0);
+        let want = metrics::ccc2(v.col(0), v.col(1));
+        let n = metrics::n_dot(v.col(0), v.col(1));
+        let d = m.denominators(&v);
+        assert_eq!(m.combine2(n, d[0], d[1]), want);
+    }
+
+    #[test]
+    fn numerators3_rejected_for_2way_metrics() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 1, 16, 3, 0);
+        let ccc = Ccc::new(16);
+        let m: &dyn Metric<f64> = &ccc;
+        let err = m.numerators3(&CpuReference, &v, &v, &v).unwrap_err();
+        assert!(err.to_string().contains("3-way"));
+    }
+}

@@ -1,7 +1,8 @@
-//! The Proportional Similarity (Czekanowski) metrics — definitions,
-//! scalar oracles, combinatorial indexing, and result containers.
+//! Metric definitions — scalar oracles, the pluggable metric
+//! [`engine`], combinatorial indexing, and result containers.
 //!
-//! Paper §2: for non-negative vectors u, v, w of length n_f,
+//! Paper §2 (Proportional Similarity / Czekanowski): for non-negative
+//! vectors u, v, w of length n_f,
 //!
 //! ```text
 //! n2(u,v)   = Σ_q min(u_q, v_q)            d2(u,v)   = Σ u + Σ v
@@ -12,35 +13,27 @@
 //! c3        = (3/2) n3 / d3
 //! ```
 //!
+//! Companion paper (arXiv 1705.08213, CCC): for allele-count vectors
+//! u, v ∈ {0, 1, 2}^n_f,
+//!
+//! ```text
+//! n(u,v)  = Σ_q u_q v_q
+//! ccc     = (9/2) · n/(4 n_f) · (1 − (2/3)·Σu/(2 n_f)) (1 − (2/3)·Σv/(2 n_f))
+//! ```
+//!
 //! The scalar functions here are the *oracle* implementations used by
 //! every test; the production paths are `linalg` (native blocked) and
-//! `runtime` (PJRT artifacts).
+//! `runtime` (PJRT artifacts), dispatched per-metric by
+//! [`engine::Metric`].
 
 pub mod counts;
+pub mod engine;
 pub mod indexing;
 pub mod store;
 
+pub use engine::{make_metric, Domain, Metric, MetricId};
+
 use crate::util::Scalar;
-
-/// Which metric family a run computes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MetricKind {
-    /// 2-way Proportional Similarity (Czekanowski).
-    Czekanowski2,
-    /// 3-way Proportional Similarity.
-    Czekanowski3,
-    /// Sorenson on 0/1 data (= Czekanowski restricted to bits, §2.3).
-    Sorenson2,
-}
-
-impl MetricKind {
-    pub fn num_way(self) -> usize {
-        match self {
-            MetricKind::Czekanowski2 | MetricKind::Sorenson2 => 2,
-            MetricKind::Czekanowski3 => 3,
-        }
-    }
-}
 
 /// Min-product numerator n2 (the mGEMM's scalar contract).
 pub fn n2<T: Scalar>(u: &[T], v: &[T]) -> f64 {
@@ -89,6 +82,42 @@ pub fn czekanowski3<T: Scalar>(u: &[T], v: &[T], w: &[T]) -> f64 {
 #[inline]
 pub fn c2_from_parts(n2: f64, sum_i: f64, sum_j: f64) -> f64 {
     2.0 * n2 / (sum_i + sum_j)
+}
+
+/// CCC weighting constants (companion paper): overall multiplier 9/2
+/// and frequency weight 2/3.
+pub const CCC_MULTIPLIER: f64 = 9.0 / 2.0;
+pub const CCC_PARAM: f64 = 2.0 / 3.0;
+
+/// Plain dot-product numerator n(u, v) = Σ_q u_q v_q — the CCC's GEMM
+/// scalar contract.
+pub fn n_dot<T: Scalar>(u: &[T], v: &[T]) -> f64 {
+    assert_eq!(u.len(), v.len());
+    let mut acc = T::ZERO;
+    for q in 0..u.len() {
+        acc += u[q] * v[q];
+    }
+    acc.to_f64()
+}
+
+/// Assemble a CCC value from precomputed pieces — the exact arithmetic
+/// the coordinator performs after a GEMM block. `nf` is the global
+/// feature depth (frequencies are normalized by the full campaign
+/// depth even when numerators were accumulated from feature slices).
+#[inline]
+pub fn ccc_from_parts(n: f64, sum_i: f64, sum_j: f64, nf: usize) -> f64 {
+    let nf = nf as f64;
+    let f_ij = n / (4.0 * nf);
+    let f_i = sum_i / (2.0 * nf);
+    let f_j = sum_j / (2.0 * nf);
+    CCC_MULTIPLIER * f_ij * (1.0 - CCC_PARAM * f_i) * (1.0 - CCC_PARAM * f_j)
+}
+
+/// 2-way Custom Correlation Coefficient ccc(u, v) — the scalar oracle
+/// (companion paper §2). Frequencies are normalized by the vector
+/// length.
+pub fn ccc2<T: Scalar>(u: &[T], v: &[T]) -> f64 {
+    ccc_from_parts(n_dot(u, v), vsum(u), vsum(v), u.len())
 }
 
 /// Assemble c3 from precomputed pieces (paper Eq. (1)).
@@ -204,9 +233,43 @@ mod tests {
     }
 
     #[test]
-    fn metric_kind_ways() {
-        assert_eq!(MetricKind::Czekanowski2.num_way(), 2);
-        assert_eq!(MetricKind::Sorenson2.num_way(), 2);
-        assert_eq!(MetricKind::Czekanowski3.num_way(), 3);
+    fn n_dot_small_case() {
+        let u = [1.0, 2.0, 0.0];
+        let v = [2.0, 1.0, 2.0];
+        assert_eq!(n_dot(&u, &v), 4.0);
+    }
+
+    #[test]
+    fn ccc2_symmetric_and_bounded() {
+        // Allele-count vectors: entries in {0, 1, 2}.
+        let mut s = Stream::new(9);
+        let u: Vec<f64> = (0..96).map(|_| s.below(3) as f64).collect();
+        let v: Vec<f64> = (0..96).map(|_| s.below(3) as f64).collect();
+        assert_eq!(ccc2(&u, &v), ccc2(&v, &u));
+        let c = ccc2(&u, &v);
+        assert!((0.0..=1.0 + 1e-12).contains(&c), "ccc = {c}");
+    }
+
+    #[test]
+    fn ccc2_zero_vector_gives_zero() {
+        let u = vec![0.0; 32];
+        let v: Vec<f64> = (0..32).map(|q| (q % 3) as f64).collect();
+        assert_eq!(ccc2(&u, &v), 0.0);
+    }
+
+    #[test]
+    fn ccc_from_parts_matches_direct() {
+        let mut s = Stream::new(21);
+        let u: Vec<f64> = (0..50).map(|_| s.below(3) as f64).collect();
+        let v: Vec<f64> = (0..50).map(|_| s.below(3) as f64).collect();
+        let parts = ccc_from_parts(n_dot(&u, &v), vsum(&u), vsum(&v), 50);
+        assert_eq!(parts, ccc2(&u, &v));
+    }
+
+    #[test]
+    fn ccc_all_twos_saturates_to_half() {
+        // f_ij = f_i = f_j = 1 → ccc = (9/2)(1/3)² = 1/2.
+        let u = vec![2.0; 64];
+        assert!((ccc2(&u, &u) - 0.5).abs() < 1e-12);
     }
 }

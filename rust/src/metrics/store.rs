@@ -6,6 +6,7 @@
 //! run statistics every driver reports.
 
 use super::indexing;
+use super::MetricId;
 
 /// One computed 2-way metric.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,15 +25,23 @@ pub struct TripleEntry {
     pub value: f64,
 }
 
-/// Sparse store of unique-pair metrics (i < j enforced on insert).
+/// Sparse store of unique-pair metrics (i < j enforced on insert),
+/// tagged with the metric family that produced it.
 #[derive(Debug, Default, Clone)]
 pub struct PairStore {
     entries: Vec<PairEntry>,
+    /// Which metric these values are (defaults to Czekanowski).
+    pub metric: MetricId,
 }
 
 impl PairStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty store tagged with `metric`.
+    pub fn for_metric(metric: MetricId) -> Self {
+        PairStore { metric, ..Self::default() }
     }
 
     pub fn push(&mut self, i: usize, j: usize, value: f64) {
@@ -57,6 +66,12 @@ impl PairStore {
     }
 
     pub fn extend(&mut self, other: PairStore) {
+        debug_assert!(
+            self.entries.is_empty() || other.entries.is_empty() || self.metric == other.metric,
+            "merging stores of different metrics ({:?} vs {:?})",
+            self.metric,
+            other.metric
+        );
         self.entries.extend(other.entries);
     }
 
@@ -81,15 +96,23 @@ impl PairStore {
     }
 }
 
-/// Sparse store of unique-triple metrics (i < j < k enforced).
+/// Sparse store of unique-triple metrics (i < j < k enforced),
+/// tagged with the metric family that produced it.
 #[derive(Debug, Default, Clone)]
 pub struct TripleStore {
     entries: Vec<TripleEntry>,
+    /// Which metric these values are (defaults to Czekanowski).
+    pub metric: MetricId,
 }
 
 impl TripleStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty store tagged with `metric`.
+    pub fn for_metric(metric: MetricId) -> Self {
+        TripleStore { metric, ..Self::default() }
     }
 
     pub fn push(&mut self, i: usize, j: usize, k: usize, value: f64) {
@@ -115,6 +138,12 @@ impl TripleStore {
     }
 
     pub fn extend(&mut self, other: TripleStore) {
+        debug_assert!(
+            self.entries.is_empty() || other.entries.is_empty() || self.metric == other.metric,
+            "merging stores of different metrics ({:?} vs {:?})",
+            self.metric,
+            other.metric
+        );
         self.entries.extend(other.entries);
     }
 
@@ -197,5 +226,25 @@ mod tests {
         b.push(1, 2, 0.3);
         a.extend(b);
         assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn stores_carry_metric_tags() {
+        let s = PairStore::for_metric(MetricId::Ccc);
+        assert_eq!(s.metric, MetricId::Ccc);
+        assert_eq!(PairStore::new().metric, MetricId::Czekanowski);
+        let t = TripleStore::for_metric(MetricId::Czekanowski);
+        assert_eq!(t.metric, MetricId::Czekanowski);
+    }
+
+    #[test]
+    fn extend_tolerates_empty_stores_of_other_metrics() {
+        // The coordinator merges empty default-tagged stores from node
+        // results into the run's tagged store; that must not trip the
+        // same-metric guard.
+        let mut a = PairStore::for_metric(MetricId::Sorenson);
+        a.push(0, 1, 0.5);
+        a.extend(PairStore::new());
+        assert_eq!(a.len(), 1);
     }
 }

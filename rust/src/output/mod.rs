@@ -2,12 +2,19 @@
 //! metric stored as a single unsigned byte (~2.5 significant figures),
 //! no explicit indexing (offsets are formulaic — `metrics::indexing`),
 //! optional thresholding.
+//!
+//! The per-node byte files stay headerless, so a run also writes one
+//! `run.meta` sidecar tagging the directory with the metric family
+//! that produced it (plus the shape needed to interpret the offsets).
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::RunStats;
 
 /// Quantize a metric value in [0, 1.5] to one byte. c2 ∈ [0, 1] and
 /// c3 ∈ [0, 1] in practice (c3 ≤ 1 for the paper's data); we scale by
@@ -76,6 +83,41 @@ impl NodeWriter {
     }
 }
 
+/// Write the `run.meta` sidecar for an output directory: the §6.8
+/// metric files are raw byte streams, so this records which metric
+/// family produced them and the shape needed to decode the formulaic
+/// offsets. The format is the same TOML subset `config::toml` parses,
+/// so [`read_run_meta`] round-trips it.
+pub fn write_run_meta(dir: &Path, cfg: &RunConfig, stats: &RunStats) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create output dir {}", dir.display()))?;
+    let path = dir.join("run.meta");
+    let mut text = String::new();
+    text.push_str("# CoMet-RS run metadata (decodes the metrics_<rank>.bin files)\n");
+    text.push_str("[run]\n");
+    text.push_str(&format!("metric = \"{}\"\n", cfg.metric.name()));
+    text.push_str(&format!("num_way = {}\n", cfg.num_way));
+    text.push_str(&format!("nv = {}\n", cfg.nv));
+    text.push_str(&format!("nf = {}\n", cfg.nf));
+    text.push_str(&format!("precision = \"{}\"\n", cfg.precision.tag()));
+    text.push_str(&format!("backend = \"{}\"\n", cfg.backend.name()));
+    text.push_str(&format!("nodes = {}\n", cfg.grid.np()));
+    text.push_str(&format!("metrics = {}\n", stats.metrics));
+    if let Some(t) = cfg.output_threshold {
+        text.push_str(&format!("threshold = {t}\n"));
+    }
+    std::fs::write(&path, text).with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// Parse an output directory's `run.meta` sidecar.
+pub fn read_run_meta(dir: &Path) -> Result<crate::config::toml::Doc> {
+    let path = dir.join("run.meta");
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+    crate::config::toml::parse(&text)
+}
+
 /// Read back a dense (unthresholded) node file.
 pub fn read_dense(path: &Path) -> Result<Vec<u8>> {
     let mut buf = Vec::new();
@@ -130,6 +172,27 @@ mod tests {
         let back = read_dense(&path).unwrap();
         assert_eq!(back, vec![quantize(0.5), quantize(1.0)]);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn run_meta_roundtrip() {
+        let dir = tmpdir().join("meta");
+        let cfg = RunConfig {
+            metric: crate::metrics::MetricId::Ccc,
+            num_way: 2,
+            nv: 40,
+            nf: 64,
+            output_threshold: Some(0.25),
+            ..Default::default()
+        };
+        let stats = RunStats { metrics: 780, ..Default::default() };
+        write_run_meta(&dir, &cfg, &stats).unwrap();
+        let doc = read_run_meta(&dir).unwrap();
+        assert_eq!(doc.get("run", "metric").unwrap().as_str().unwrap(), "ccc");
+        assert_eq!(doc.get("run", "nv").unwrap().as_int().unwrap(), 40);
+        assert_eq!(doc.get("run", "metrics").unwrap().as_int().unwrap(), 780);
+        assert_eq!(doc.get("run", "threshold").unwrap().as_float().unwrap(), 0.25);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

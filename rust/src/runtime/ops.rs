@@ -15,6 +15,36 @@ use crate::runtime::{ArtifactEntry, ElemKind, InputBuf, RuntimeClient};
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
 
+/// Numerator kernel families the metric engine dispatches over. Each
+/// family names the artifact kind its accelerator lowering carries in
+/// the manifest, so artifact selection is keyed by the metric (via
+/// `Metric::numerators*` → `Backend` → here), not hard-coded per call
+/// site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// Min-product mGEMM, 2-way block (Czekanowski numerators).
+    MinProduct2,
+    /// Min-product 3-way slab (Czekanowski n3' numerators).
+    MinProduct3,
+    /// True GEMM, 2-way block (CCC numerators).
+    Dot2,
+    /// AND+popcount over packed u32 words (bit-packed Sorensen).
+    BitAnd2,
+}
+
+impl KernelFamily {
+    /// Default artifact kind of this family ("mgemm2pallas"-style
+    /// overrides stay available through `PjrtBackend::with_kinds`).
+    pub fn artifact_kind(self) -> &'static str {
+        match self {
+            KernelFamily::MinProduct2 => "mgemm2",
+            KernelFamily::MinProduct3 => "mgemm3",
+            KernelFamily::Dot2 => "gemm",
+            KernelFamily::BitAnd2 => "sorenson2",
+        }
+    }
+}
+
 /// Block-level accelerator operations at a fixed precision.
 #[derive(Clone)]
 pub struct BlockOps {
@@ -408,5 +438,13 @@ mod tests {
     fn precision_of_widths() {
         assert_eq!(precision_of::<f32>(), Precision::F32);
         assert_eq!(precision_of::<f64>(), Precision::F64);
+    }
+
+    #[test]
+    fn kernel_families_name_manifest_kinds() {
+        assert_eq!(KernelFamily::MinProduct2.artifact_kind(), "mgemm2");
+        assert_eq!(KernelFamily::MinProduct3.artifact_kind(), "mgemm3");
+        assert_eq!(KernelFamily::Dot2.artifact_kind(), "gemm");
+        assert_eq!(KernelFamily::BitAnd2.artifact_kind(), "sorenson2");
     }
 }

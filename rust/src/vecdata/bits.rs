@@ -80,6 +80,13 @@ impl BitVectorSet {
         self.words(v).iter().map(|w| w.count_ones() as u64).sum()
     }
 
+    /// Popcounts of every vector as f64 — the Sorensen metric's
+    /// denominator ingredients (the bit analogue of
+    /// [`crate::vecdata::VectorSet::col_sums`]).
+    pub fn popcounts(&self) -> Vec<f64> {
+        (0..self.nv).map(|v| self.popcount(v) as f64).collect()
+    }
+
     /// Sorenson numerator: |u AND v| — the bitwise min-product.
     pub fn and_popcount(&self, u: usize, v: usize) -> u64 {
         self.words(u)

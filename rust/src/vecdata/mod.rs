@@ -37,6 +37,11 @@ pub enum SyntheticKind {
     Verifiable,
     /// Sparse PheWAS-profile stand-in: ~10% density, grid-valued.
     PhewasLike,
+    /// Allele-count vectors for the CCC metric (companion paper):
+    /// entries uniform over {0, 1, 2} (2-bit genotype encodings),
+    /// exact in both precisions. A fallback entry guarantees each
+    /// vector is nonzero.
+    Alleles,
 }
 
 /// A set of n_v vectors of n_f features, stored column-major
@@ -90,6 +95,17 @@ impl<T: Scalar> VectorSet<T> {
                     let fallback = s.below(nf as u64) as usize;
                     if col.iter().all(|x| x.to_f64() == 0.0) {
                         col[fallback] = T::from_f64(1.0 / 64.0);
+                    }
+                }
+                SyntheticKind::Alleles => {
+                    for x in col.iter_mut() {
+                        *x = T::from_f64(s.below(3) as f64);
+                    }
+                    // Guarantee at least one nonzero so denominators of
+                    // sum-based metrics never vanish.
+                    let fallback = s.below(nf as u64) as usize;
+                    if col.iter().all(|x| x.to_f64() == 0.0) {
+                        col[fallback] = T::ONE;
                     }
                 }
             }
@@ -252,6 +268,29 @@ mod tests {
             seen[matches.min(2)] = true;
         }
         assert!(seen.iter().all(|&x| x), "want all three analytic levels");
+    }
+
+    #[test]
+    fn alleles_values_in_count_domain() {
+        let s: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 3, 80, 20, 0);
+        let mut seen = [false; 3];
+        for v in 0..20 {
+            for &x in s.col(v) {
+                assert!(x == 0.0 || x == 1.0 || x == 2.0, "x={x}");
+                seen[x as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "want all of {{0,1,2}} to occur");
+        assert!(s.col_sums().iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn alleles_generation_is_decomposition_independent() {
+        let all: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 5, 40, 8, 0);
+        let hi: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 5, 40, 4, 4);
+        for v in 0..4 {
+            assert_eq!(all.col(v + 4), hi.col(v));
+        }
     }
 
     #[test]

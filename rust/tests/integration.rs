@@ -1,13 +1,15 @@
 //! Coordinator integration tests (native backends — fast): Algorithm 1
-//! and Algorithms 2+3 against the scalar oracle, decomposition
-//! invariance of the checksum, staging, output files, file input, and
-//! the analytically-verifiable synthetic problem (paper §5).
+//! and Algorithms 2+3 against the scalar oracles (all three metric
+//! families), decomposition invariance of the checksum, staging,
+//! output files, file input, and the analytically-verifiable synthetic
+//! problem (paper §5).
 
 use comet::checksum::Checksum;
 use comet::config::{BackendKind, InputSource, Precision, RunConfig};
 use comet::coordinator::{self, run};
 use comet::decomp::Grid;
-use comet::metrics;
+use comet::metrics::{self, MetricId};
+use comet::vecdata::bits::BitVectorSet;
 use comet::vecdata::{io as vio, SyntheticKind, VectorSet};
 
 fn base_cfg(num_way: usize, nv: usize, nf: usize) -> RunConfig {
@@ -253,6 +255,139 @@ fn thresholded_output_keeps_only_strong_metrics() {
             .unwrap_or_else(|| panic!("unexpected record for pair ({i},{j})"));
         assert!((comet::output::dequantize(qb) - e.value).abs() <= 0.5 / 255.0 + 1e-12);
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --- Metric engine: CCC and bit-packed Sorensen through the SAME
+// two-way coordinator (no metric-specific branches in the node
+// program — only the Metric implementation differs) -------------------
+
+fn ccc_cfg(nv: usize, nf: usize) -> RunConfig {
+    RunConfig {
+        metric: MetricId::Ccc,
+        nv,
+        nf,
+        backend: BackendKind::CpuOptimized,
+        input: InputSource::Synthetic { kind: SyntheticKind::Alleles, seed: 17 },
+        ..Default::default()
+    }
+}
+
+fn sorenson_cfg(nv: usize, nf: usize) -> RunConfig {
+    RunConfig {
+        metric: MetricId::Sorenson,
+        nv,
+        nf,
+        backend: BackendKind::CpuOptimized,
+        // RandomGrid values are in (0, 1]; the metric binarizes at 0.5.
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 23 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn ccc_two_way_matches_scalar_oracle() {
+    let mut cfg = ccc_cfg(30, 24);
+    cfg.grid = Grid::new(1, 3, 2);
+    let out = run(&cfg).unwrap();
+    let pairs = out.pairs.unwrap();
+    assert_eq!(pairs.metric, MetricId::Ccc);
+    assert_eq!(pairs.len(), 30 * 29 / 2);
+    let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 17, 24, 30, 0);
+    for e in pairs.iter() {
+        let want = metrics::ccc2(v.col(e.i as usize), v.col(e.j as usize));
+        // Integer-valued numerators/sums: exact in f64 on every path.
+        assert_eq!(e.value, want, "pair ({}, {})", e.i, e.j);
+    }
+}
+
+#[test]
+fn ccc_checksum_invariant_across_decompositions() {
+    let mut cfg = ccc_cfg(36, 32);
+    let reference = run(&cfg).unwrap().checksum;
+    for (npf, npv, npr) in [(1, 2, 1), (1, 4, 3), (2, 3, 2)] {
+        cfg.grid = Grid::new(npf, npv, npr);
+        let got = run(&cfg).unwrap();
+        assert_eq!(got.checksum, reference, "grid ({npf},{npv},{npr})");
+    }
+}
+
+#[test]
+fn ccc_backends_agree() {
+    let mut cfg = ccc_cfg(24, 40);
+    cfg.grid = Grid::new(1, 2, 1);
+    cfg.backend = BackendKind::CpuReference;
+    let a = run(&cfg).unwrap().checksum;
+    cfg.backend = BackendKind::CpuOptimized;
+    let b = run(&cfg).unwrap().checksum;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn sorenson_two_way_matches_bit_oracle() {
+    let mut cfg = sorenson_cfg(28, 70); // 70 features: partial packed word
+    cfg.grid = Grid::new(1, 4, 1);
+    let out = run(&cfg).unwrap();
+    let pairs = out.pairs.unwrap();
+    assert_eq!(pairs.metric, MetricId::Sorenson);
+    assert_eq!(pairs.len(), 28 * 27 / 2);
+    let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 23, 70, 28, 0);
+    let bits = BitVectorSet::from_threshold(&v, 0.5);
+    for e in pairs.iter() {
+        let want = bits.sorenson2(e.i as usize, e.j as usize);
+        assert_eq!(e.value, want, "pair ({}, {})", e.i, e.j);
+    }
+}
+
+#[test]
+fn sorenson_checksum_invariant_across_decompositions() {
+    let mut cfg = sorenson_cfg(32, 96);
+    let reference = run(&cfg).unwrap().checksum;
+    for (npf, npv, npr) in [(1, 3, 1), (1, 4, 2), (2, 2, 1)] {
+        cfg.grid = Grid::new(npf, npv, npr);
+        let got = run(&cfg).unwrap();
+        assert_eq!(got.checksum, reference, "grid ({npf},{npv},{npr})");
+    }
+}
+
+#[test]
+fn sorenson_backends_agree() {
+    let mut cfg = sorenson_cfg(20, 130);
+    cfg.grid = Grid::new(1, 2, 1);
+    cfg.backend = BackendKind::CpuReference;
+    let a = run(&cfg).unwrap().checksum;
+    cfg.backend = BackendKind::CpuOptimized;
+    let b = run(&cfg).unwrap().checksum;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn different_metrics_never_collide_in_checksum() {
+    // Same problem, three metrics: the per-metric checksum salt keeps
+    // even identical value multisets apart, and the value streams
+    // differ anyway.
+    let mut cfg = sorenson_cfg(20, 48);
+    let sor = run(&cfg).unwrap().checksum;
+    cfg.metric = MetricId::Czekanowski;
+    let cz = run(&cfg).unwrap().checksum;
+    assert_ne!(sor, cz);
+    assert_eq!(sor.count, cz.count);
+}
+
+#[test]
+fn output_dir_gets_metric_tagged_run_meta() {
+    let dir = std::env::temp_dir().join(format!("comet-meta-{}", std::process::id()));
+    let mut cfg = ccc_cfg(16, 20);
+    cfg.grid = Grid::new(1, 2, 1);
+    cfg.output_dir = Some(dir.to_string_lossy().into_owned());
+    let out = run(&cfg).unwrap();
+    let doc = comet::output::read_run_meta(&dir).unwrap();
+    assert_eq!(doc.get("run", "metric").unwrap().as_str().unwrap(), "ccc");
+    assert_eq!(doc.get("run", "num_way").unwrap().as_int().unwrap(), 2);
+    assert_eq!(
+        doc.get("run", "metrics").unwrap().as_int().unwrap() as u64,
+        out.stats.metrics
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -257,6 +257,86 @@ fn prop_sorenson_popcount_equals_float_path() {
 }
 
 #[test]
+fn prop_bitpacked_sorenson_matches_reference_mgemm2_on_01_vectors() {
+    // Satellite: the bit-packed popcount numerators must equal the
+    // float min-product mGEMM on 0/1-valued f64 vectors, across widths
+    // that exercise partial trailing words (nf not a multiple of 64).
+    forall(
+        "sorenson-01-float-agreement",
+        60,
+        |g| {
+            // Half the cases pin nf to a word-boundary neighborhood;
+            // the rest roam freely.
+            let nf = if g.bool() {
+                *g.pick(&[1usize, 63, 64, 65, 127, 128, 129, 191, 192, 193])
+            } else {
+                g.usize_in(1, 200)
+            };
+            let nv = g.usize_in(2, 9);
+            let density = 0.2 + 0.6 * g.f64_unit();
+            let mut v = VectorSet::<f64>::zeros(nf, nv);
+            for c in 0..nv {
+                for q in 0..nf {
+                    if g.f64_unit() < density {
+                        v.col_mut(c)[q] = 1.0;
+                    }
+                }
+            }
+            v
+        },
+        |v| {
+            let bits = comet::vecdata::bits::BitVectorSet::from_threshold(v, 0.5);
+            let a = comet::linalg::sorenson::sorenson_mgemm(&bits, &bits);
+            let b = comet::linalg::reference::mgemm2(v, v);
+            if a.max_abs_diff(&b) != 0.0 {
+                return Err(format!(
+                    "popcount numerators diverge from float mGEMM at nf={}",
+                    v.nf
+                ));
+            }
+            let c = comet::linalg::sorenson::sorenson_mgemm_ref(&bits, &bits);
+            if a.max_abs_diff(&c) != 0.0 {
+                return Err("packed kernel diverges from bitwise reference".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ccc_engine_matches_scalar_oracle() {
+    use comet::coordinator::backend::{Backend, CpuOptimized};
+    use std::sync::Arc;
+    forall(
+        "ccc-engine-oracle",
+        30,
+        |g| {
+            let nf = g.usize_in(2, 96);
+            let nv = g.usize_in(2, 10);
+            let seed = g.stream.next_u64();
+            VectorSet::<f64>::generate(SyntheticKind::Alleles, seed, nf, nv, 0)
+        },
+        |v| {
+            let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+            let metric = comet::metrics::engine::Ccc::new(v.nf);
+            let store =
+                comet::coordinator::serial::all_pairs_with(&backend, &metric, v)
+                    .map_err(|e| e.to_string())?;
+            for e in store.iter() {
+                let want = metrics::ccc2(v.col(e.i as usize), v.col(e.j as usize));
+                if e.value != want {
+                    return Err(format!("ccc({}, {}) = {} want {}", e.i, e.j, e.value, want));
+                }
+                if !(0.0..=1.0 + 1e-12).contains(&e.value) {
+                    return Err(format!("ccc({}, {}) = {} out of range", e.i, e.j, e.value));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_checksum_detects_any_single_mutation() {
     forall(
         "checksum-sensitivity",
