@@ -16,17 +16,21 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
+use crate::vecdata::block::BlockData;
+
 /// Message payload: a block of vector data or a small control value.
-/// Blocks travel as `Arc<Vec<f64>>` — the simulation's "wire" — and the
-/// byte accounting charges them at the run precision's width.
+/// Blocks travel in their metric-preferred representation
+/// ([`BlockData`]): f64 elements for float metrics (charged at the run
+/// precision's width) or packed u64 words for bit-domain metrics
+/// (charged at 8 B/word — the ~64× wire saving of pack-once Sorensen).
 #[derive(Debug, Clone)]
 pub enum Payload {
-    /// Vector block: (nf, nv, first_id, column-major data).
+    /// Vector block: (nf, nv, first_id, representation-tagged data).
     Block {
         nf: usize,
         nv: usize,
         first_id: usize,
-        data: Arc<Vec<f64>>,
+        data: BlockData,
     },
     /// Partial result row for reductions (npf axis).
     Partial(Arc<Vec<f64>>),
@@ -37,10 +41,13 @@ pub enum Payload {
 }
 
 impl Payload {
-    /// Simulated wire size in bytes, at `elem_bytes` per element.
-    pub fn wire_bytes(&self, elem_bytes: usize) -> u64 {
+    /// Simulated wire size in bytes. `elem_bytes` is the run
+    /// precision's element width; it applies to float payloads
+    /// (blocks, partials, sums), while packed block words are always
+    /// 8 B/word and tokens 8 B flat.
+    pub fn bytes(&self, elem_bytes: usize) -> u64 {
         match self {
-            Payload::Block { data, .. } => (data.len() * elem_bytes) as u64,
+            Payload::Block { data, .. } => data.wire_bytes(elem_bytes),
             Payload::Partial(d) | Payload::Sums(d) => (d.len() * elem_bytes) as u64,
             Payload::Token(_) => 8,
         }
@@ -107,6 +114,8 @@ impl VirtualCluster {
                 stash: HashMap::new(),
                 counters: Arc::clone(&self.counters),
                 elem_bytes: self.elem_bytes,
+                sent_messages: 0,
+                sent_bytes: 0,
             })
             .collect()
     }
@@ -123,16 +132,21 @@ pub struct Endpoint {
     stash: HashMap<(usize, u64), Vec<Payload>>,
     counters: Arc<CommCounters>,
     elem_bytes: usize,
+    /// This rank's own sent totals (mirrored into `RunStats` by the
+    /// node programs so `RunStats::absorb` sums match cluster totals).
+    sent_messages: u64,
+    sent_bytes: u64,
 }
 
 impl Endpoint {
     /// Non-blocking tagged send (buffered — never deadlocks on unpaired
     /// sends, like MPI_Isend with ample buffering).
-    pub fn send(&self, to: usize, tag: u64, payload: Payload) {
+    pub fn send(&mut self, to: usize, tag: u64, payload: Payload) {
+        let bytes = payload.bytes(self.elem_bytes);
         self.counters.messages.fetch_add(1, Ordering::Relaxed);
-        self.counters
-            .bytes
-            .fetch_add(payload.wire_bytes(self.elem_bytes), Ordering::Relaxed);
+        self.counters.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.sent_messages += 1;
+        self.sent_bytes += bytes;
         self.senders[to]
             .send(Envelope {
                 from: self.rank,
@@ -140,6 +154,11 @@ impl Endpoint {
                 payload,
             })
             .expect("peer endpoint dropped");
+    }
+
+    /// (messages, bytes) this endpoint has sent so far.
+    pub fn sent(&self) -> (u64, u64) {
+        (self.sent_messages, self.sent_bytes)
     }
 
     /// Blocking tagged receive from a specific source.
@@ -235,7 +254,7 @@ mod tests {
         let mut cluster = VirtualCluster::new(2, 8);
         let mut eps = cluster.endpoints();
         let mut e1 = eps.pop().unwrap();
-        let e0 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
         // Send two tags out of order; recv must match by tag.
         e0.send(1, 7, Payload::Token(77));
         e0.send(1, 5, Payload::Token(55));
@@ -310,7 +329,7 @@ mod tests {
         let counters = cluster.counters();
         let mut eps = cluster.endpoints();
         let mut e1 = eps.pop().unwrap();
-        let e0 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
         e0.send(
             1,
             1,
@@ -318,12 +337,74 @@ mod tests {
                 nf: 10,
                 nv: 2,
                 first_id: 0,
-                data: Arc::new(vec![0.0; 20]),
+                data: BlockData::F64(Arc::new(vec![0.0; 20])),
             },
         );
         let _ = e1.recv(0, 1);
         assert_eq!(counters.messages.load(Ordering::Relaxed), 1);
         assert_eq!(counters.bytes.load(Ordering::Relaxed), 80); // 20 × 4B
+        assert_eq!(e0.sent(), (1, 80));
+        assert_eq!(e1.sent(), (0, 0));
+    }
+
+    #[test]
+    fn payload_bytes_all_variants() {
+        // Float blocks charge at the caller-supplied element width …
+        let f64_block = Payload::Block {
+            nf: 10,
+            nv: 2,
+            first_id: 0,
+            data: BlockData::F64(Arc::new(vec![0.0; 20])),
+        };
+        assert_eq!(f64_block.bytes(8), 160);
+        assert_eq!(f64_block.bytes(4), 80);
+        // … packed blocks always charge 8 B per u64 word, regardless of
+        // the run precision (the pack-once wire saving must not be
+        // silently inflated or shrunk by a precision switch).
+        let packed = Payload::Block {
+            nf: 130,
+            nv: 2,
+            first_id: 0,
+            data: BlockData::Packed(crate::vecdata::block::PackedBlock {
+                words_per_vec: 3,
+                words: Arc::new(vec![0; 6]),
+            }),
+        };
+        assert_eq!(packed.bytes(8), 48);
+        assert_eq!(packed.bytes(4), 48);
+        // Partials and sums are float vectors at element width.
+        assert_eq!(Payload::Partial(Arc::new(vec![0.0; 5])).bytes(8), 40);
+        assert_eq!(Payload::Sums(Arc::new(vec![0.0; 5])).bytes(4), 20);
+        // Tokens are a flat 8 bytes.
+        assert_eq!(Payload::Token(0).bytes(4), 8);
+        assert_eq!(Payload::Token(u64::MAX).bytes(8), 8);
+    }
+
+    #[test]
+    fn packed_block_counted_at_word_width_on_the_wire() {
+        // End-to-end through a send: an f32-precision cluster must still
+        // account packed words at 8 B each.
+        let mut cluster = VirtualCluster::new(2, 4);
+        let counters = cluster.counters();
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(
+            1,
+            3,
+            Payload::Block {
+                nf: 64,
+                nv: 4,
+                first_id: 0,
+                data: BlockData::Packed(crate::vecdata::block::PackedBlock {
+                    words_per_vec: 1,
+                    words: Arc::new(vec![0; 4]),
+                }),
+            },
+        );
+        let _ = e1.recv(0, 3);
+        assert_eq!(counters.bytes.load(Ordering::Relaxed), 32);
+        assert_eq!(e0.sent(), (1, 32));
     }
 
     #[test]

@@ -42,7 +42,10 @@ pub struct RunStats {
     pub mgemm3_calls: u64,
     /// Metric values produced.
     pub metrics: u64,
-    /// Comm volume (bytes, at run precision) and message count.
+    /// Comm volume in bytes — float payloads at run precision, packed
+    /// payloads at 8 B/word — and message count. Recorded per node from
+    /// its endpoint's sent totals and summed by [`RunStats::absorb`]
+    /// (the cluster-level counters are only a cross-check now).
     pub comm_bytes: u64,
     pub comm_messages: u64,
     /// Wall-clock phases (seconds; max across nodes = makespan).
@@ -61,9 +64,9 @@ impl RunStats {
         self.metrics += o.metrics;
         // Counters sum across nodes; wall-clock phases take the max
         // (makespan). comm_* and t_accel previously fell through this
-        // merge entirely — at this call site the cluster-level counters
-        // overwrite them afterwards, but any other caller merging
-        // per-node stats silently lost them.
+        // merge entirely; the comm totals of a run now flow exclusively
+        // through this sum (per-node endpoint counts → absorb), with
+        // the cluster-level counters kept as a debug cross-check.
         self.comm_bytes += o.comm_bytes;
         self.comm_messages += o.comm_messages;
         self.t_input = self.t_input.max(o.t_input);
@@ -177,8 +180,17 @@ fn run_typed<T: Scalar>(
         triples.extend(res.triples);
     }
     outcome.stats.t_total = t0.elapsed().as_secs_f64();
-    outcome.stats.comm_bytes = counters.bytes.load(std::sync::atomic::Ordering::Relaxed);
-    outcome.stats.comm_messages = counters.messages.load(std::sync::atomic::Ordering::Relaxed);
+    // The absorbed per-node sent totals must reproduce the fabric's own
+    // accounting exactly — if they diverge, a node program forgot to
+    // record its endpoint counts (see tests/comm_accounting.rs).
+    debug_assert_eq!(
+        outcome.stats.comm_bytes,
+        counters.bytes.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    debug_assert_eq!(
+        outcome.stats.comm_messages,
+        counters.messages.load(std::sync::atomic::Ordering::Relaxed)
+    );
     if cfg.store_metrics {
         if cfg.num_way == 2 {
             outcome.pairs = Some(pairs);
@@ -187,7 +199,12 @@ fn run_typed<T: Scalar>(
         }
     }
     if let Some(dir) = &cfg.output_dir {
-        crate::output::write_run_meta(std::path::Path::new(dir), cfg, &outcome.stats)?;
+        crate::output::write_run_meta(
+            std::path::Path::new(dir),
+            cfg,
+            metric.preferred_repr(),
+            &outcome.stats,
+        )?;
     }
     Ok(outcome)
 }

@@ -16,14 +16,17 @@ use crate::metrics::Metric;
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
 
-/// All unique 2-way metrics of one vector set under `metric`.
+/// All unique 2-way metrics of one vector set under `metric`. The set
+/// is ingested into the metric's preferred representation first (the
+/// same pack-once path the coordinated runs use).
 pub fn all_pairs_with<T: Scalar>(
     backend: &Arc<dyn Backend<T>>,
     metric: &dyn Metric<T>,
     v: &VectorSet<T>,
 ) -> Result<PairStore> {
-    let n = metric.numerators2(backend.as_ref(), v, v)?;
-    let dens = metric.denominators(v);
+    let block = metric.ingest(v.clone());
+    let n = metric.numerators2(backend.as_ref(), &block, &block)?;
+    let dens = metric.denominators(&block)?;
     let mut store = PairStore::for_metric(metric.id());
     for j in 1..v.nv {
         for i in 0..j {
@@ -52,14 +55,15 @@ pub fn all_triples_with<T: Scalar>(
     metric: &dyn Metric<T>,
     v: &VectorSet<T>,
 ) -> Result<TripleStore> {
-    let n2 = metric.numerators2(backend.as_ref(), v, v)?;
-    let dens = metric.denominators(v);
+    let block = metric.ingest(v.clone());
+    let n2 = metric.numerators2(backend.as_ref(), &block, &block)?;
+    let dens = metric.denominators(&block)?;
     let mut store = TripleStore::for_metric(metric.id());
     let jt = backend.pivot_batch_for(v.nf, v.nv);
     let pivot_ids: Vec<usize> = (0..v.nv).collect();
     for chunk in pivot_ids.chunks(jt) {
-        let pivots = v.select_cols(chunk);
-        let slab = metric.numerators3(backend.as_ref(), v, &pivots, v)?;
+        let pivots = block.select_cols(chunk)?;
+        let slab = metric.numerators3(backend.as_ref(), &block, &pivots, &block)?;
         for (t, &j) in chunk.iter().enumerate() {
             for i in 0..j {
                 for k in (j + 1)..v.nv {

@@ -23,7 +23,7 @@ use crate::linalg::MatF64;
 use crate::metrics::{indexing, store::PairStore, store::TripleStore, Metric};
 use crate::output::NodeWriter;
 use crate::util::{timer::Stopwatch, Scalar};
-use crate::vecdata::VectorSet;
+use crate::vecdata::block::Block;
 
 const TAG_BLOCK3: u64 = 5_000;
 const TAG_SUMS3: u64 = 6_000;
@@ -47,8 +47,11 @@ pub(crate) fn node_main<T: Scalar>(
 
     // --- Input phase -----------------------------------------------------
     t_in.start();
-    let own = load_block::<T>(cfg, pv, 0)?;
-    let own_sums = metric.denominators(&own);
+    // Ingest once into the metric's preferred representation (3-way
+    // metrics are float families today, but the node program stays
+    // representation-agnostic like the 2-way one).
+    let own = metric.ingest(load_block::<T>(cfg, pv, 0)?);
+    let own_sums = metric.denominators(&own)?;
     t_in.stop();
 
     let mut writer = match &cfg.output_dir {
@@ -76,14 +79,15 @@ pub(crate) fn node_main<T: Scalar>(
     }
 
     // --- Outer communication pipeline (Algorithm 2's ring) ---------------
-    // Circulate own block; keep the peers our slices reference. Sums are
-    // small and always kept.
+    // Circulate own block (in its wire representation, converted once);
+    // keep the peers our slices reference. Sums are small and always
+    // kept.
     t_comp.start();
-    let wire: Arc<Vec<f64>> = Arc::new(own.raw().iter().map(|x| x.to_f64()).collect());
+    let wire = own.to_wire();
     let sums_wire = Arc::new(own_sums.clone());
-    let mut blocks: HashMap<usize, Arc<VectorSet<T>>> = HashMap::new();
+    let mut blocks: HashMap<usize, Block<T>> = HashMap::new();
     let mut sums: HashMap<usize, Arc<Vec<f64>>> = HashMap::new();
-    blocks.insert(pv, Arc::new(own));
+    blocks.insert(pv, own);
     sums.insert(pv, Arc::new(own_sums));
     for d in 1..npv {
         let to = grid.rank(NodeCoord { pf: 0, pv: (pv + npv - d) % npv, pr });
@@ -91,26 +95,22 @@ pub(crate) fn node_main<T: Scalar>(
         let from = grid.rank(NodeCoord { pf: 0, pv: from_pv, pr });
         let payload = Payload::Block {
             nf: cfg.nf,
-            nv: blocks[&pv].nv,
-            first_id: blocks[&pv].first_id,
-            data: Arc::clone(&wire),
+            nv: blocks[&pv].nv(),
+            first_id: blocks[&pv].first_id(),
+            data: wire.clone(),
         };
         let got = ep.sendrecv(to, from, TAG_BLOCK3 + d as u64, payload);
         let Payload::Block { nf, nv, first_id, data } = got else {
             bail!("expected Block payload");
         };
-        let got_sums = ep.sendrecv(to, from, TAG_SUMS3 + d as u64, Payload::Sums(Arc::clone(&sums_wire)));
+        let got_sums =
+            ep.sendrecv(to, from, TAG_SUMS3 + d as u64, Payload::Sums(Arc::clone(&sums_wire)));
         let Payload::Sums(ps) = got_sums else {
             bail!("expected Sums payload");
         };
         sums.insert(from_pv, ps);
         if needed.contains(&from_pv) {
-            let mut vs = VectorSet::<T>::zeros(nf, nv);
-            vs.first_id = first_id;
-            for (dst, src) in vs.raw_mut().iter_mut().zip(data.iter()) {
-                *dst = T::from_f64(*src);
-            }
-            blocks.insert(from_pv, Arc::new(vs));
+            blocks.insert(from_pv, Block::<T>::from_wire(nf, nv, first_id, &data)?);
         }
     }
 
@@ -124,7 +124,7 @@ pub(crate) fn node_main<T: Scalar>(
     let mut n2_cache: HashMap<(usize, usize), Arc<MatF64>> = HashMap::new();
     let mut n2_table = |a: usize,
                         b: usize,
-                        blocks: &HashMap<usize, Arc<VectorSet<T>>>,
+                        blocks: &HashMap<usize, Block<T>>,
                         stats: &mut RunStats|
      -> Result<Arc<MatF64>> {
         let key = (a.min(b), a.max(b));
@@ -152,9 +152,9 @@ pub(crate) fn node_main<T: Scalar>(
             Combo3::Face { other } => (other, pv),
             Combo3::Volume { b, c } => (b, c),
         };
-        let a_blk = Arc::clone(&blocks[&pv]);
-        let p_blk = Arc::clone(&blocks[&b_pivot]);
-        let r_blk = Arc::clone(&blocks[&b_right]);
+        let a_blk = blocks[&pv].clone();
+        let p_blk = blocks[&b_pivot].clone();
+        let r_blk = blocks[&b_right].clone();
         let s_a = Arc::clone(&sums[&pv]);
         let s_p = Arc::clone(&sums[&b_pivot]);
         let s_r = Arc::clone(&sums[&b_right]);
@@ -163,21 +163,21 @@ pub(crate) fn node_main<T: Scalar>(
         let t_ar = n2_table(pv, b_right, &blocks, &mut stats)?;
         let t_pr = n2_table(b_pivot, b_right, &blocks, &mut stats)?;
 
-        let jt_max = backend.pivot_batch_for(a_blk.nf, a_blk.nv.max(r_blk.nv));
+        let jt_max = backend.pivot_batch_for(a_blk.nf(), a_blk.nv().max(r_blk.nv()));
         for &stage in &stages {
             let pivots: Vec<usize> =
-                stripe_pivots(p_blk.nv, slice.sub, cfg.num_stage, stage).collect();
+                stripe_pivots(p_blk.nv(), slice.sub, cfg.num_stage, stage).collect();
             for chunk in pivots.chunks(jt_max) {
-                let pivot_set = p_blk.select_cols(chunk);
+                let pivot_set = p_blk.select_cols(chunk)?;
                 let slab = metric.numerators3(backend.as_ref(), &a_blk, &pivot_set, &r_blk)?;
                 stats.mgemm3_calls += 1;
                 for (t, &j_local) in chunk.iter().enumerate() {
                     let gj = vparts.start(b_pivot) + j_local;
                     match slice.combo {
                         Combo3::Volume { .. } => {
-                            for i in 0..a_blk.nv {
+                            for i in 0..a_blk.nv() {
                                 let gi = vparts.start(pv) + i;
-                                for k in 0..r_blk.nv {
+                                for k in 0..r_blk.nv() {
                                     let gk = vparts.start(b_right) + k;
                                     let c3 = metric.combine3(
                                         n2_at(&t_ap, pv, i, b_pivot, j_local),
@@ -194,9 +194,9 @@ pub(crate) fn node_main<T: Scalar>(
                         }
                         Combo3::Face { .. } => {
                             // (i1 < i2) ∈ own block, pivot j ∈ other.
-                            for i1 in 0..a_blk.nv {
+                            for i1 in 0..a_blk.nv() {
                                 let g1 = vparts.start(pv) + i1;
-                                for i2 in (i1 + 1)..a_blk.nv {
+                                for i2 in (i1 + 1)..a_blk.nv() {
                                     let g2 = vparts.start(pv) + i2;
                                     let c3 = metric.combine3(
                                         n2_at(&t_ar, pv, i1, pv, i2),
@@ -215,7 +215,7 @@ pub(crate) fn node_main<T: Scalar>(
                             // i < j_local < k, all in own block.
                             for i in 0..j_local {
                                 let gi = vparts.start(pv) + i;
-                                for k in (j_local + 1)..a_blk.nv {
+                                for k in (j_local + 1)..a_blk.nv() {
                                     let gk = vparts.start(pv) + k;
                                     let c3 = metric.combine3(
                                         t_ap.at(i, j_local),
@@ -243,6 +243,9 @@ pub(crate) fn node_main<T: Scalar>(
     stats.t_input = t_in.secs();
     stats.t_compute = t_comp.secs() - t_out.secs();
     stats.t_output = t_out.secs();
+    // Per-node comm accounting: RunStats::absorb sums these across
+    // nodes to reproduce the cluster totals.
+    (stats.comm_messages, stats.comm_bytes) = ep.sent();
     Ok(NodeResult {
         checksum,
         pairs: PairStore::new(),

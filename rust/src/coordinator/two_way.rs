@@ -9,6 +9,12 @@
 //! schedule (`decomp::two_way`) guarantees unique coverage and load
 //! balance (Figure 2(c)); it is metric-independent, which is what lets
 //! all three metric families share this one node program.
+//!
+//! Blocks live in the metric's preferred representation
+//! ([`crate::metrics::Metric::ingest`], once in the input phase) and
+//! travel on the wire in that same representation — bit-domain metrics
+//! exchange packed u64 words (~64× less volume than f64 elements) and
+//! never re-pack inside the step loop.
 
 use std::sync::Arc;
 
@@ -21,8 +27,8 @@ use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
 use crate::decomp::{partition::Partition, two_way, NodeCoord};
 use crate::metrics::{indexing, store::PairStore, store::TripleStore, Metric};
 use crate::output::NodeWriter;
-use crate::util::{Scalar, timer::Stopwatch};
-use crate::vecdata::VectorSet;
+use crate::util::{timer::Stopwatch, Scalar};
+use crate::vecdata::block::Block;
 
 /// Tag bases (unique per logical channel; see comm::Endpoint stash).
 const TAG_BLOCK: u64 = 1_000;
@@ -47,10 +53,13 @@ pub(crate) fn node_main<T: Scalar>(
 
     // --- Input phase -----------------------------------------------------
     t_in.start();
-    let block = load_block::<T>(cfg, pv, pf)?;
+    // Ingest converts the loaded floats into the metric's working
+    // representation exactly once (pack-once for bit-domain metrics);
+    // the step loop below only ever touches the cached form.
+    let block = metric.ingest(load_block::<T>(cfg, pv, pf)?);
     // Full-feature denominator ingredients (allreduced across the npf
     // axis — metric denominators are additive over feature slices).
-    let local_sums = metric.denominators(&block);
+    let local_sums = metric.denominators(&block)?;
     let own_sums = if grid.npf > 1 {
         let group = pf_group(&grid, pv, pr);
         ep.allreduce_sum(&group, TAG_REDUCE, local_sums)
@@ -67,8 +76,10 @@ pub(crate) fn node_main<T: Scalar>(
         _ => None,
     };
 
-    // Own block as wire payload (f64), sent at each exchange step.
-    let wire: Arc<Vec<f64>> = Arc::new(block.raw().iter().map(|x| x.to_f64()).collect());
+    // Own block as wire payload, converted once: float metrics ship f64
+    // elements, bit-domain metrics ship their cached packed words.
+    // Each step clones the Arc inside — no per-step conversion.
+    let wire = block.to_wire();
     let sums_wire = Arc::new(own_sums.clone());
 
     // --- Parallel step loop (Algorithm 1) ---------------------------------
@@ -87,20 +98,16 @@ pub(crate) fn node_main<T: Scalar>(
             let from = grid.rank(NodeCoord { pf, pv: step.recv_from_pv, pr });
             let tag = TAG_BLOCK + step.dp as u64;
             let payload = Payload::Block {
-                nf: block.nf,
-                nv: block.nv,
-                first_id: block.first_id,
-                data: Arc::clone(&wire),
+                nf: block.nf(),
+                nv: block.nv(),
+                first_id: block.first_id(),
+                data: wire.clone(),
             };
             let got = ep.sendrecv(to, from, tag, payload);
             let Payload::Block { nf, nv, first_id, data } = got else {
                 anyhow::bail!("expected Block payload");
             };
-            let mut vs = VectorSet::<T>::zeros(nf, nv);
-            vs.first_id = first_id;
-            for (dst, src) in vs.raw_mut().iter_mut().zip(data.iter()) {
-                *dst = T::from_f64(*src);
-            }
+            let peer = Block::<T>::from_wire(nf, nv, first_id, &data)?;
             let got_sums = ep.sendrecv(
                 to,
                 from,
@@ -110,21 +117,22 @@ pub(crate) fn node_main<T: Scalar>(
             let Payload::Sums(ps) = got_sums else {
                 anyhow::bail!("expected Sums payload");
             };
-            (Some(vs), Some(ps))
+            (Some(peer), Some(ps))
         };
 
         let Some(info) = step.compute else { continue };
 
-        // Offload the numerator block through the metric's kernel.
+        // Offload the numerator block through the metric's kernel —
+        // cached representations in, zero re-packing.
         let (n_block, peer_first, peer_sums_ref): (_, usize, &[f64]) = match &peer_block {
             None => (
                 metric.numerators2(backend.as_ref(), &block, &block)?,
-                block.first_id,
+                block.first_id(),
                 &own_sums,
             ),
             Some(pb) => (
                 metric.numerators2(backend.as_ref(), &block, pb)?,
-                pb.first_id,
+                pb.first_id(),
                 peer_sums.as_deref().unwrap(),
             ),
         };
@@ -138,7 +146,11 @@ pub(crate) fn node_main<T: Scalar>(
                 TAG_REDUCE + 2 * (step.dp as u64 + 1),
                 n_block.data,
             );
-            crate::linalg::MatF64 { rows: block.nv, cols: reduced.len() / block.nv, data: reduced }
+            crate::linalg::MatF64 {
+                rows: block.nv(),
+                cols: reduced.len() / block.nv(),
+                data: reduced,
+            }
         } else {
             n_block
         };
@@ -150,7 +162,7 @@ pub(crate) fn node_main<T: Scalar>(
         }
 
         // --- Denominators + quotients on the coordinator side ---------
-        let my_first = block.first_id;
+        let my_first = block.first_id();
         if info.diag {
             for j in 1..n_block.cols {
                 for i in 0..j {
@@ -187,6 +199,9 @@ pub(crate) fn node_main<T: Scalar>(
     stats.t_input = t_in.secs();
     stats.t_compute = t_comp.secs() - t_out.secs();
     stats.t_output = t_out.secs();
+    // Per-node comm accounting: RunStats::absorb sums these across
+    // nodes to reproduce the cluster totals.
+    (stats.comm_messages, stats.comm_bytes) = ep.sent();
     Ok(NodeResult {
         checksum,
         pairs,

@@ -29,6 +29,20 @@
 //! programs contain no metric-specific branches, so a new metric is
 //! one `Metric` impl plus (optionally) a backend kernel.
 //!
+//! ## Block representations (pack-once)
+//!
+//! Each metric declares a preferred block representation
+//! ([`metrics::Metric::preferred_repr`]): float metrics keep dense
+//! [`vecdata::VectorSet`]s, bit-domain metrics cache packed bit-planes
+//! ([`vecdata::bits::BitVectorSet`]). Conversion happens **once per
+//! node block** at ingest ([`metrics::Metric::ingest`]); the
+//! coordinator then circulates blocks as [`vecdata::block::Block`] and
+//! ships them over the simulated wire as
+//! [`vecdata::block::BlockData`] — packed u64 words for Sorensen
+//! (~64× less comm volume than f64 elements, accounted per variant by
+//! `comm::Payload::bytes`), f64 elements for the float families. The
+//! step loops never re-pack (`tests/comm_accounting.rs` pins this).
+//!
 //! ## Layer map (see DESIGN.md)
 //!
 //! * **Layer 1/2 (build time)** — Pallas kernels + JAX graphs in

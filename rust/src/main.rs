@@ -143,7 +143,7 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     args.reject_unknown()?;
     println!(
-        "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} stages={}{}",
+        "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} repr={} stages={}{}",
         cfg.num_way,
         cfg.metric.name(),
         cfg.precision.tag(),
@@ -153,6 +153,7 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
         cfg.grid.npv,
         cfg.grid.npr,
         cfg.backend.name(),
+        cfg.metric.preferred_repr().name(),
         cfg.num_stage,
         cfg.stage.map(|s| format!(" (stage {s})")).unwrap_or_default(),
     );

@@ -41,6 +41,7 @@ use crate::linalg::{MatF64, SlabF64};
 use crate::util::prng::mix64;
 use crate::util::Scalar;
 use crate::vecdata::bits::BitVectorSet;
+use crate::vecdata::block::{Block, Repr};
 use crate::vecdata::VectorSet;
 
 use super::{c2_from_parts, c3_from_parts, ccc_from_parts};
@@ -124,6 +125,16 @@ impl MetricId {
             MetricId::Sorenson => Domain::Binary,
         }
     }
+
+    /// Block representation this family's kernels consume. Bit-domain
+    /// metrics cache packed bit-planes at ingest and exchange packed
+    /// words on the wire; float families keep dense `VectorSet`s.
+    pub fn preferred_repr(self) -> Repr {
+        match self {
+            MetricId::Czekanowski | MetricId::Ccc => Repr::Float,
+            MetricId::Sorenson => Repr::Packed,
+        }
+    }
 }
 
 /// Element domain a metric is defined over. Inputs are not policed
@@ -155,22 +166,46 @@ pub trait Metric<T: Scalar>: Send + Sync {
         self.id().domain()
     }
 
+    /// Which representation this metric wants blocks in. Defaults to
+    /// the registry entry; metrics returning [`Repr::Packed`] must
+    /// override [`Metric::ingest`] as well (it owns the packing
+    /// parameters, e.g. the binarization threshold).
+    fn preferred_repr(&self) -> Repr {
+        self.id().preferred_repr()
+    }
+
+    /// Convert a freshly loaded float block into this metric's working
+    /// representation. Called **once per node block** in the input
+    /// phase — never inside the parallel step loop (the pack-once
+    /// contract; `tests/comm_accounting.rs` counts packing calls).
+    fn ingest(&self, v: VectorSet<T>) -> Block<T> {
+        debug_assert_eq!(
+            self.preferred_repr(),
+            Repr::Float,
+            "metric {} declares a packed repr but does not override ingest()",
+            self.name()
+        );
+        Block::Float(Arc::new(v))
+    }
+
     /// 2-way numerator block N[i, j] through the backend's kernel for
-    /// this metric's family.
+    /// this metric's family. Operands arrive in the representation
+    /// [`Metric::ingest`] produced — packed metrics consume cached
+    /// bit-planes directly, with zero per-call re-packing.
     fn numerators2(
         &self,
         backend: &dyn Backend<T>,
-        w: &VectorSet<T>,
-        v: &VectorSet<T>,
+        w: &Block<T>,
+        v: &Block<T>,
     ) -> Result<MatF64>;
 
     /// 3-way numerator slab (only metrics with a 3-way form).
     fn numerators3(
         &self,
         _backend: &dyn Backend<T>,
-        _w: &VectorSet<T>,
-        _pivots: &VectorSet<T>,
-        _v: &VectorSet<T>,
+        _w: &Block<T>,
+        _pivots: &Block<T>,
+        _v: &Block<T>,
     ) -> Result<SlabF64> {
         bail!("metric {:?} has no 3-way form", self.name())
     }
@@ -178,7 +213,9 @@ pub trait Metric<T: Scalar>: Send + Sync {
     /// Per-vector denominator ingredients (Σv, popcount, …), computed
     /// on the coordinator side. Must be **additive across feature
     /// slices**: the n_pf axis allreduces these with a plain sum.
-    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64>;
+    /// Errors (not panics) on a representation mismatch, like
+    /// [`Metric::numerators2`].
+    fn denominators(&self, v: &Block<T>) -> Result<Vec<f64>>;
 
     /// Assemble one 2-way metric value from a numerator and the two
     /// vectors' denominator ingredients.
@@ -207,6 +244,24 @@ pub trait Metric<T: Scalar>: Send + Sync {
     }
 }
 
+/// Extract the float operand a float-family kernel needs. Blocks always
+/// come from the same metric's [`Metric::ingest`], so a representation
+/// mismatch is a coordinator bug, not a user error.
+fn float_operand<'a, T: Scalar>(b: &'a Block<T>, metric: &str) -> Result<&'a VectorSet<T>> {
+    match b.as_float() {
+        Some(v) => Ok(v),
+        None => bail!("metric {metric} expects float blocks, got a packed block"),
+    }
+}
+
+/// Extract the packed operand a bitwise kernel needs.
+fn packed_operand<'a, T: Scalar>(b: &'a Block<T>, metric: &str) -> Result<&'a BitVectorSet> {
+    match b.as_packed() {
+        Some(bits) => Ok(bits),
+        None => bail!("metric {metric} expects packed blocks, got a float block"),
+    }
+}
+
 /// Proportional Similarity (the source paper's metric):
 /// c2 = 2 n2 / (Σv_i + Σv_j), c3 per Eq. (1).
 #[derive(Debug, Default, Clone, Copy)]
@@ -220,24 +275,28 @@ impl<T: Scalar> Metric<T> for Czekanowski {
     fn numerators2(
         &self,
         backend: &dyn Backend<T>,
-        w: &VectorSet<T>,
-        v: &VectorSet<T>,
+        w: &Block<T>,
+        v: &Block<T>,
     ) -> Result<MatF64> {
-        backend.mgemm2(w, v)
+        backend.mgemm2(float_operand(w, "czekanowski")?, float_operand(v, "czekanowski")?)
     }
 
     fn numerators3(
         &self,
         backend: &dyn Backend<T>,
-        w: &VectorSet<T>,
-        pivots: &VectorSet<T>,
-        v: &VectorSet<T>,
+        w: &Block<T>,
+        pivots: &Block<T>,
+        v: &Block<T>,
     ) -> Result<SlabF64> {
-        backend.mgemm3(w, pivots, v)
+        backend.mgemm3(
+            float_operand(w, "czekanowski")?,
+            float_operand(pivots, "czekanowski")?,
+            float_operand(v, "czekanowski")?,
+        )
     }
 
-    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64> {
-        v.col_sums()
+    fn denominators(&self, v: &Block<T>) -> Result<Vec<f64>> {
+        Ok(float_operand(v, "czekanowski")?.col_sums())
     }
 
     fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
@@ -291,14 +350,14 @@ impl<T: Scalar> Metric<T> for Ccc {
     fn numerators2(
         &self,
         backend: &dyn Backend<T>,
-        w: &VectorSet<T>,
-        v: &VectorSet<T>,
+        w: &Block<T>,
+        v: &Block<T>,
     ) -> Result<MatF64> {
-        backend.gemm2(w, v)
+        backend.gemm2(float_operand(w, "ccc")?, float_operand(v, "ccc")?)
     }
 
-    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64> {
-        v.col_sums()
+    fn denominators(&self, v: &Block<T>) -> Result<Vec<f64>> {
+        Ok(float_operand(v, "ccc")?.col_sums())
     }
 
     fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
@@ -307,10 +366,10 @@ impl<T: Scalar> Metric<T> for Ccc {
 }
 
 /// Bit-packed Sorensen (§2.3): inputs are binarized at
-/// [`SORENSON_BIT_THRESHOLD`] and packed into words; numerators are
-/// AND+popcount; denominators are popcounts; the quotient is the
-/// Czekanowski form restricted to bits, with a 0/0 → 0 guard for empty
-/// vectors.
+/// [`SORENSON_BIT_THRESHOLD`] and packed into words **once at ingest**;
+/// numerators are AND+popcount over the cached bit-planes; denominators
+/// are popcounts of the same; the quotient is the Czekanowski form
+/// restricted to bits, with a 0/0 → 0 guard for empty vectors.
 #[derive(Debug, Clone, Copy)]
 pub struct Sorenson {
     pub threshold: f64,
@@ -327,19 +386,23 @@ impl<T: Scalar> Metric<T> for Sorenson {
         MetricId::Sorenson
     }
 
+    fn ingest(&self, v: VectorSet<T>) -> Block<T> {
+        // The only packing site on the run path: one conversion per
+        // node block, in the input phase.
+        Block::Packed(Arc::new(BitVectorSet::from_threshold(&v, self.threshold)))
+    }
+
     fn numerators2(
         &self,
         backend: &dyn Backend<T>,
-        w: &VectorSet<T>,
-        v: &VectorSet<T>,
+        w: &Block<T>,
+        v: &Block<T>,
     ) -> Result<MatF64> {
-        let wb = BitVectorSet::from_threshold(w, self.threshold);
-        let vb = BitVectorSet::from_threshold(v, self.threshold);
-        backend.sorenson2(&wb, &vb)
+        backend.sorenson2(packed_operand(w, "sorenson")?, packed_operand(v, "sorenson")?)
     }
 
-    fn denominators(&self, v: &VectorSet<T>) -> Vec<f64> {
-        BitVectorSet::from_threshold(v, self.threshold).popcounts()
+    fn denominators(&self, v: &Block<T>) -> Result<Vec<f64>> {
+        Ok(packed_operand(v, "sorenson")?.popcounts())
     }
 
     fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
@@ -409,8 +472,9 @@ mod tests {
     fn czekanowski_engine_matches_scalar_oracle() {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 48, 8, 0);
         let m: &dyn Metric<f64> = &Czekanowski;
-        let n = m.numerators2(&CpuOptimized, &v, &v).unwrap();
-        let d = m.denominators(&v);
+        let b = m.ingest(v.clone());
+        let n = m.numerators2(&CpuOptimized, &b, &b).unwrap();
+        let d = m.denominators(&b).unwrap();
         for i in 0..v.nv {
             for j in 0..v.nv {
                 let got = m.combine2(n.at(i, j), d[i], d[j]);
@@ -425,8 +489,9 @@ mod tests {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 5, 60, 9, 0);
         let ccc = Ccc::new(v.nf);
         let m: &dyn Metric<f64> = &ccc;
-        let n = m.numerators2(&CpuOptimized, &v, &v).unwrap();
-        let d = m.denominators(&v);
+        let b = m.ingest(v.clone());
+        let n = m.numerators2(&CpuOptimized, &b, &b).unwrap();
+        let d = m.denominators(&b).unwrap();
         for i in 0..v.nv {
             for j in 0..v.nv {
                 let got = m.combine2(n.at(i, j), d[i], d[j]);
@@ -441,8 +506,9 @@ mod tests {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 7, 128, 12, 0);
         let ccc = Ccc::new(v.nf);
         let m: &dyn Metric<f64> = &ccc;
-        let n = m.numerators2(&CpuReference, &v, &v).unwrap();
-        let d = m.denominators(&v);
+        let b = m.ingest(v.clone());
+        let n = m.numerators2(&CpuReference, &b, &b).unwrap();
+        let d = m.denominators(&b).unwrap();
         for i in 0..v.nv {
             for j in 0..v.nv {
                 let c = m.combine2(n.at(i, j), d[i], d[j]);
@@ -457,8 +523,9 @@ mod tests {
         let v = bits.to_floats();
         let sor = Sorenson::default();
         let m: &dyn Metric<f64> = &sor;
-        let n = m.numerators2(&CpuOptimized, &v, &v).unwrap();
-        let d = m.denominators(&v);
+        let b = m.ingest(v.clone());
+        let n = m.numerators2(&CpuOptimized, &b, &b).unwrap();
+        let d = m.denominators(&b).unwrap();
         for i in 0..v.nv {
             for j in 0..v.nv {
                 let got = m.combine2(n.at(i, j), d[i], d[j]);
@@ -473,9 +540,51 @@ mod tests {
         let v = bits.to_floats();
         let sor = Sorenson::default();
         let m: &dyn Metric<f64> = &sor;
-        let a = m.numerators2(&CpuReference, &v, &v).unwrap();
-        let b = m.numerators2(&CpuOptimized, &v, &v).unwrap();
-        assert_eq!(a.max_abs_diff(&b), 0.0);
+        let b = m.ingest(v);
+        let a = m.numerators2(&CpuReference, &b, &b).unwrap();
+        let o = m.numerators2(&CpuOptimized, &b, &b).unwrap();
+        assert_eq!(a.max_abs_diff(&o), 0.0);
+    }
+
+    #[test]
+    fn preferred_reprs_per_family() {
+        use crate::vecdata::block::Repr;
+        assert_eq!(MetricId::Czekanowski.preferred_repr(), Repr::Float);
+        assert_eq!(MetricId::Ccc.preferred_repr(), Repr::Float);
+        assert_eq!(MetricId::Sorenson.preferred_repr(), Repr::Packed);
+        let m: &dyn Metric<f64> = &Sorenson::default();
+        assert_eq!(m.preferred_repr(), Repr::Packed);
+        assert_eq!(Repr::Float.name(), "float");
+        assert_eq!(Repr::Packed.name(), "packed");
+    }
+
+    #[test]
+    fn ingest_produces_the_preferred_repr() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 70, 4, 8);
+        for id in MetricId::ALL {
+            let cfg = RunConfig { nf: 70, ..Default::default() };
+            let m = make_metric::<f64>(id, &cfg);
+            let b = m.ingest(v.clone());
+            assert_eq!(b.repr(), m.preferred_repr(), "{}", id.name());
+            assert_eq!((b.nf(), b.nv(), b.first_id()), (70, 4, 8), "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn repr_mismatch_is_rejected_not_miscomputed() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 64, 4, 0);
+        let sor_metric = Sorenson::default();
+        let sor: &dyn Metric<f64> = &sor_metric;
+        let cz: &dyn Metric<f64> = &Czekanowski;
+        let float_block = cz.ingest(v.clone());
+        let packed_block = sor.ingest(v);
+        let err = sor.numerators2(&CpuOptimized, &float_block, &float_block).unwrap_err();
+        assert!(err.to_string().contains("expects packed"), "{err}");
+        let err = cz.numerators2(&CpuOptimized, &packed_block, &packed_block).unwrap_err();
+        assert!(err.to_string().contains("expects float"), "{err}");
+        // Denominators fail the same way — an error, not a panic.
+        assert!(sor.denominators(&float_block).is_err());
+        assert!(cz.denominators(&packed_block).is_err());
     }
 
     #[test]
@@ -497,7 +606,7 @@ mod tests {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 1, 77, 2, 0);
         let want = metrics::ccc2(v.col(0), v.col(1));
         let n = metrics::n_dot(v.col(0), v.col(1));
-        let d = m.denominators(&v);
+        let d = m.denominators(&m.ingest(v.clone())).unwrap();
         assert_eq!(m.combine2(n, d[0], d[1]), want);
     }
 
@@ -506,7 +615,8 @@ mod tests {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 1, 16, 3, 0);
         let ccc = Ccc::new(16);
         let m: &dyn Metric<f64> = &ccc;
-        let err = m.numerators3(&CpuReference, &v, &v, &v).unwrap_err();
+        let b = m.ingest(v);
+        let err = m.numerators3(&CpuReference, &b, &b, &b).unwrap_err();
         assert!(err.to_string().contains("3-way"));
     }
 }

@@ -88,7 +88,16 @@ impl NodeWriter {
 /// family produced them and the shape needed to decode the formulaic
 /// offsets. The format is the same TOML subset `config::toml` parses,
 /// so [`read_run_meta`] round-trips it.
-pub fn write_run_meta(dir: &Path, cfg: &RunConfig, stats: &RunStats) -> Result<PathBuf> {
+/// `repr` is the block representation the run's *metric instance*
+/// actually used (`Metric::preferred_repr`) — passed explicitly rather
+/// than derived from `cfg.metric` so an instance overriding the
+/// registry default can never write a lying sidecar.
+pub fn write_run_meta(
+    dir: &Path,
+    cfg: &RunConfig,
+    repr: crate::vecdata::block::Repr,
+    stats: &RunStats,
+) -> Result<PathBuf> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("create output dir {}", dir.display()))?;
     let path = dir.join("run.meta");
@@ -96,6 +105,7 @@ pub fn write_run_meta(dir: &Path, cfg: &RunConfig, stats: &RunStats) -> Result<P
     text.push_str("# CoMet-RS run metadata (decodes the metrics_<rank>.bin files)\n");
     text.push_str("[run]\n");
     text.push_str(&format!("metric = \"{}\"\n", cfg.metric.name()));
+    text.push_str(&format!("repr = \"{}\"\n", repr.name()));
     text.push_str(&format!("num_way = {}\n", cfg.num_way));
     text.push_str(&format!("nv = {}\n", cfg.nv));
     text.push_str(&format!("nf = {}\n", cfg.nf));
@@ -186,9 +196,10 @@ mod tests {
             ..Default::default()
         };
         let stats = RunStats { metrics: 780, ..Default::default() };
-        write_run_meta(&dir, &cfg, &stats).unwrap();
+        write_run_meta(&dir, &cfg, cfg.metric.preferred_repr(), &stats).unwrap();
         let doc = read_run_meta(&dir).unwrap();
         assert_eq!(doc.get("run", "metric").unwrap().as_str().unwrap(), "ccc");
+        assert_eq!(doc.get("run", "repr").unwrap().as_str().unwrap(), "float");
         assert_eq!(doc.get("run", "nv").unwrap().as_int().unwrap(), 40);
         assert_eq!(doc.get("run", "metrics").unwrap().as_int().unwrap(), 780);
         assert_eq!(doc.get("run", "threshold").unwrap().as_float().unwrap(), 0.25);

@@ -7,7 +7,20 @@
 //! substrate for the Table 6 bitwise-baseline comparisons (Haque-style
 //! 1-bit popcount codes).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::prng::Stream;
+
+/// Global count of packing conversions ([`BitVectorSet::from_threshold`]
+/// calls). Test instrumentation for the pack-once contract: packing must
+/// happen once per block at ingest, never inside the parallel step loop
+/// (see `tests/comm_accounting.rs`).
+static PACK_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of packing conversions performed so far (process-wide).
+pub fn pack_calls() -> u64 {
+    PACK_CALLS.load(Ordering::Relaxed)
+}
 
 /// n_v binary vectors of n_f features, each packed into ⌈n_f/64⌉ words.
 #[derive(Debug, Clone)]
@@ -15,6 +28,9 @@ pub struct BitVectorSet {
     pub nf: usize,
     pub nv: usize,
     pub words_per_vec: usize,
+    /// First global vector id (block offset within the campaign-wide
+    /// numbering — the packed analogue of `VectorSet::first_id`).
+    pub first_id: usize,
     data: Vec<u64>,
 }
 
@@ -25,8 +41,23 @@ impl BitVectorSet {
             nf,
             nv,
             words_per_vec,
+            first_id: 0,
             data: vec![0; words_per_vec * nv],
         }
+    }
+
+    /// Rehydrate a packed set from raw words (the wire → block path:
+    /// `comm::Payload` carries packed words, not floats, for bit-domain
+    /// metrics). `words` must hold exactly ⌈nf/64⌉ × nv words.
+    pub fn from_words(nf: usize, nv: usize, first_id: usize, words: Vec<u64>) -> Self {
+        let words_per_vec = nf.div_ceil(64);
+        assert_eq!(
+            words.len(),
+            words_per_vec * nv,
+            "packed payload shape mismatch: {} words for nf={nf} nv={nv}",
+            words.len()
+        );
+        BitVectorSet { nf, nv, words_per_vec, first_id, data: words }
     }
 
     /// Random binary vectors with the given bit density.
@@ -48,7 +79,9 @@ impl BitVectorSet {
         set: &crate::vecdata::VectorSet<T>,
         threshold: f64,
     ) -> Self {
+        PACK_CALLS.fetch_add(1, Ordering::Relaxed);
         let mut out = Self::zeros(set.nf, set.nv);
+        out.first_id = set.first_id;
         for v in 0..set.nv {
             for (q, &x) in set.col(v).iter().enumerate() {
                 if x.to_f64() > threshold {
@@ -73,6 +106,12 @@ impl BitVectorSet {
     #[inline]
     pub fn words(&self, v: usize) -> &[u64] {
         &self.data[v * self.words_per_vec..(v + 1) * self.words_per_vec]
+    }
+
+    /// All packed words, vector-contiguous (the wire layout).
+    #[inline]
+    pub fn raw_words(&self) -> &[u64] {
+        &self.data
     }
 
     /// Population count of vector v (its Sorenson denominator half).
@@ -109,6 +148,7 @@ impl BitVectorSet {
     /// Sorenson with the Proportional Similarity on 0/1 data, §2.3).
     pub fn to_floats(&self) -> crate::vecdata::VectorSet<f64> {
         let mut out = crate::vecdata::VectorSet::<f64>::zeros(self.nf, self.nv);
+        out.first_id = self.first_id;
         for v in 0..self.nv {
             for q in 0..self.nf {
                 if self.get_bit(v, q) {
@@ -170,6 +210,37 @@ mod tests {
                 assert!((a - b).abs() < 1e-12, "({u},{v}): {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn from_words_roundtrip_preserves_bits_and_first_id() {
+        let mut s = BitVectorSet::generate(3, 130, 4, 0.5);
+        s.first_id = 12;
+        let r = BitVectorSet::from_words(130, 4, 12, s.raw_words().to_vec());
+        assert_eq!(r.first_id, 12);
+        assert_eq!(r.words_per_vec, s.words_per_vec);
+        for v in 0..4 {
+            assert_eq!(r.words(v), s.words(v));
+        }
+        // first_id survives both representation conversions.
+        let f = s.to_floats();
+        assert_eq!(f.first_id, 12);
+        assert_eq!(BitVectorSet::from_threshold(&f, 0.5).first_id, 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "packed payload shape mismatch")]
+    fn from_words_rejects_wrong_shape() {
+        let _ = BitVectorSet::from_words(130, 4, 0, vec![0u64; 5]);
+    }
+
+    #[test]
+    fn pack_call_counter_increments() {
+        let fs: crate::vecdata::VectorSet<f64> =
+            crate::vecdata::VectorSet::generate(crate::vecdata::SyntheticKind::RandomGrid, 4, 64, 2, 0);
+        let before = pack_calls();
+        let _ = BitVectorSet::from_threshold(&fs, 0.5);
+        assert!(pack_calls() > before);
     }
 
     #[test]

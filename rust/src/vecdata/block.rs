@@ -1,0 +1,257 @@
+//! First-class block representations: float vector blocks and cached
+//! packed bit-planes, plus their wire forms.
+//!
+//! The paper's bit-packed Sorensen path (§2.3 / Table 6) gets its
+//! throughput from operating on 64-element words. Before this module,
+//! `--metric sorenson` runs still circulated f64 blocks and re-packed
+//! both operands inside the numerator kernel on every parallel step.
+//! Here packing happens **once at ingest** ([`crate::metrics::Metric::ingest`])
+//! and the packed words themselves travel on the simulated wire
+//! (~64× communication-volume reduction vs f64 elements) — the same
+//! keep-it-packed discipline PLINK 2 applies to genotype data.
+//!
+//! Two layers of representation:
+//! * [`Block`] — a coordinator-resident block in the metric's preferred
+//!   representation (cached; cheap to clone — `Arc` inside).
+//! * [`BlockData`] — the representation-tagged wire form carried by
+//!   `comm::Payload::Block`, with byte accounting per variant (f64
+//!   elements at run-precision width, packed words at 8 B/word).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::util::Scalar;
+use crate::vecdata::bits::BitVectorSet;
+use crate::vecdata::VectorSet;
+
+/// Which block representation a metric wants its operands in
+/// (`metrics::Metric::preferred_repr`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Repr {
+    /// Dense float elements (`VectorSet<T>`): min-product / dot-product
+    /// metric families.
+    #[default]
+    Float,
+    /// Packed bit-planes (`BitVectorSet`): bitwise AND+popcount
+    /// families.
+    Packed,
+}
+
+impl Repr {
+    pub fn name(self) -> &'static str {
+        match self {
+            Repr::Float => "float",
+            Repr::Packed => "packed",
+        }
+    }
+}
+
+/// Packed-word wire payload: `words_per_vec` = ⌈nf/64⌉ words per
+/// vector, vector-contiguous. 8 bytes per word on the simulated wire,
+/// independent of the run's float precision.
+#[derive(Debug, Clone)]
+pub struct PackedBlock {
+    pub words_per_vec: usize,
+    pub words: Arc<Vec<u64>>,
+}
+
+/// Wire form of a vector block — what `comm::Payload::Block` carries.
+#[derive(Debug, Clone)]
+pub enum BlockData {
+    /// Column-major f64 elements, charged at the run precision's width.
+    F64(Arc<Vec<f64>>),
+    /// Bit-packed u64 words, charged at 8 bytes per word.
+    Packed(PackedBlock),
+}
+
+impl BlockData {
+    /// Simulated wire size in bytes. `elem_bytes` is the run
+    /// precision's element width and applies only to float payloads;
+    /// packed words are precision-independent.
+    pub fn wire_bytes(&self, elem_bytes: usize) -> u64 {
+        match self {
+            BlockData::F64(d) => (d.len() * elem_bytes) as u64,
+            BlockData::Packed(p) => (p.words.len() * 8) as u64,
+        }
+    }
+}
+
+/// A coordinator-resident vector block in its metric-preferred
+/// representation. Cloning is cheap (shared `Arc` payloads), which is
+/// what lets the 3-way node program keep a whole ring of peer blocks
+/// cached without copies.
+#[derive(Debug, Clone)]
+pub enum Block<T: Scalar> {
+    Float(Arc<VectorSet<T>>),
+    Packed(Arc<BitVectorSet>),
+}
+
+impl<T: Scalar> Block<T> {
+    pub fn repr(&self) -> Repr {
+        match self {
+            Block::Float(_) => Repr::Float,
+            Block::Packed(_) => Repr::Packed,
+        }
+    }
+
+    pub fn nf(&self) -> usize {
+        match self {
+            Block::Float(v) => v.nf,
+            Block::Packed(b) => b.nf,
+        }
+    }
+
+    pub fn nv(&self) -> usize {
+        match self {
+            Block::Float(v) => v.nv,
+            Block::Packed(b) => b.nv,
+        }
+    }
+
+    pub fn first_id(&self) -> usize {
+        match self {
+            Block::Float(v) => v.first_id,
+            Block::Packed(b) => b.first_id,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<&VectorSet<T>> {
+        match self {
+            Block::Float(v) => Some(v),
+            Block::Packed(_) => None,
+        }
+    }
+
+    pub fn as_packed(&self) -> Option<&BitVectorSet> {
+        match self {
+            Block::Float(_) => None,
+            Block::Packed(b) => Some(b),
+        }
+    }
+
+    /// Wire payload of this block. Called once per node block (before
+    /// the step loop); each exchange step then clones the `Arc`, so no
+    /// per-step conversion or packing ever happens.
+    pub fn to_wire(&self) -> BlockData {
+        match self {
+            Block::Float(v) => {
+                BlockData::F64(Arc::new(v.raw().iter().map(|x| x.to_f64()).collect()))
+            }
+            Block::Packed(b) => BlockData::Packed(PackedBlock {
+                words_per_vec: b.words_per_vec,
+                words: Arc::new(b.raw_words().to_vec()),
+            }),
+        }
+    }
+
+    /// Rehydrate a received wire payload into a resident block. The
+    /// packed arm never re-packs — it adopts the words as sent.
+    pub fn from_wire(nf: usize, nv: usize, first_id: usize, data: &BlockData) -> Result<Self> {
+        match data {
+            BlockData::F64(d) => {
+                if d.len() != nf * nv {
+                    bail!("float payload shape mismatch: {} elements for nf={nf} nv={nv}", d.len());
+                }
+                let mut vs = VectorSet::<T>::zeros(nf, nv);
+                vs.first_id = first_id;
+                for (dst, src) in vs.raw_mut().iter_mut().zip(d.iter()) {
+                    *dst = T::from_f64(*src);
+                }
+                Ok(Block::Float(Arc::new(vs)))
+            }
+            BlockData::Packed(p) => {
+                if p.words_per_vec != nf.div_ceil(64) {
+                    bail!(
+                        "packed payload words_per_vec {} inconsistent with nf={nf}",
+                        p.words_per_vec
+                    );
+                }
+                Ok(Block::Packed(Arc::new(BitVectorSet::from_words(
+                    nf,
+                    nv,
+                    first_id,
+                    p.words.as_ref().clone(),
+                ))))
+            }
+        }
+    }
+
+    /// Select a subset of columns into a new block (3-way pivot
+    /// batching). Float-only: every registered 3-way metric is a float
+    /// family, and config validation keeps 2-way-only metrics away from
+    /// the 3-way coordinator.
+    pub fn select_cols(&self, cols: &[usize]) -> Result<Self> {
+        match self {
+            Block::Float(v) => Ok(Block::Float(Arc::new(v.select_cols(cols)))),
+            Block::Packed(_) => bail!("column selection is not defined for packed blocks"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::SyntheticKind;
+
+    #[test]
+    fn float_wire_roundtrip() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 5, 33, 6, 18);
+        let b = Block::Float(Arc::new(v.clone()));
+        assert_eq!((b.nf(), b.nv(), b.first_id()), (33, 6, 18));
+        assert_eq!(b.repr(), Repr::Float);
+        let wire = b.to_wire();
+        let back = Block::<f64>::from_wire(33, 6, 18, &wire).unwrap();
+        let bv = back.as_float().unwrap();
+        for c in 0..6 {
+            assert_eq!(bv.col(c), v.col(c));
+        }
+        assert_eq!(bv.first_id, 18);
+    }
+
+    #[test]
+    fn packed_wire_roundtrip_is_bit_exact() {
+        // (Repack-freedom is asserted via the pack-call counter in
+        // tests/comm_accounting.rs, where a mutex serializes access to
+        // the process-global counter; lib tests run in parallel.)
+        let mut bits = BitVectorSet::generate(7, 130, 5, 0.4);
+        bits.first_id = 40;
+        let b: Block<f64> = Block::Packed(Arc::new(bits.clone()));
+        assert_eq!(b.repr(), Repr::Packed);
+        let wire = b.to_wire();
+        let back = Block::<f64>::from_wire(130, 5, 40, &wire).unwrap();
+        let rb = back.as_packed().unwrap();
+        assert_eq!(rb.first_id, 40);
+        for v in 0..5 {
+            assert_eq!(rb.words(v), bits.words(v));
+        }
+    }
+
+    #[test]
+    fn wire_bytes_per_variant() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 100, 3, 0);
+        let f = Block::Float(Arc::new(v)).to_wire();
+        assert_eq!(f.wire_bytes(8), 100 * 3 * 8);
+        assert_eq!(f.wire_bytes(4), 100 * 3 * 4); // charged at run precision
+        let bits = BitVectorSet::generate(1, 100, 3, 0.5);
+        let p = Block::<f64>::Packed(Arc::new(bits)).to_wire();
+        // ⌈100/64⌉ = 2 words per vector, 8 B each, precision-independent.
+        assert_eq!(p.wire_bytes(8), 2 * 3 * 8);
+        assert_eq!(p.wire_bytes(4), 2 * 3 * 8);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let wire = BlockData::F64(Arc::new(vec![0.0; 10]));
+        assert!(Block::<f64>::from_wire(3, 4, 0, &wire).is_err());
+        let p = BlockData::Packed(PackedBlock { words_per_vec: 3, words: Arc::new(vec![0; 6]) });
+        assert!(Block::<f64>::from_wire(64, 2, 0, &p).is_err());
+    }
+
+    #[test]
+    fn packed_blocks_refuse_column_selection() {
+        let bits = BitVectorSet::generate(2, 64, 4, 0.5);
+        let b: Block<f64> = Block::Packed(Arc::new(bits));
+        assert!(b.select_cols(&[0, 1]).is_err());
+    }
+}

@@ -18,6 +18,7 @@
 //! node-assignment independent, per the bit-for-bit requirement.
 
 pub mod bits;
+pub mod block;
 pub mod io;
 
 use crate::util::prng::Stream;

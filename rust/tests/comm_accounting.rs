@@ -1,0 +1,168 @@
+//! Comm/accounting lock-down suite for pack-once Sorensen.
+//!
+//! The pack-once representation work (cached bit-planes + packed-word
+//! wire exchange) is invisible to result-level tests by design — the
+//! whole point is bit-identical output. These tests pin the *resource*
+//! contract instead:
+//!
+//! * packed u64 words travel on the wire (comm volume drops ≥32× vs
+//!   the float exchange, pinned to the exact byte count for one shape);
+//! * packing happens exactly once per node block, at ingest — never
+//!   inside the parallel step loop;
+//! * per-node comm/accel stats round-trip through `RunStats::absorb`
+//!   into the run outcome (the PR 1 absorb fix, guarded end-to-end);
+//! * results and checksums stay bit-identical across backends and
+//!   parallel decompositions while all of the above holds.
+//!
+//! Tests in this binary share a lock: the pack-call counter is
+//! process-global, so packing tests must not interleave.
+
+use std::sync::Mutex;
+
+use comet::checksum::Checksum;
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run;
+use comet::decomp::Grid;
+use comet::metrics::{indexing, MetricId};
+use comet::vecdata::bits::{pack_calls, BitVectorSet};
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The pinned shape: nv=64, nf=4096 over a (1,4,1) grid. Each of the
+/// 4 nodes holds 16 vectors × 4096 features = 64 packed words/vector.
+fn pinned_cfg(metric: MetricId) -> RunConfig {
+    RunConfig {
+        metric,
+        num_way: 2,
+        nv: 64,
+        nf: 4096,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, 4, 1),
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 7 },
+        store_metrics: false,
+        ..Default::default()
+    }
+}
+
+// Exact wire accounting for the pinned shape (npv=4, npr=1):
+// steps Δ ∈ {1, 2} each make every node send one block + one sums
+// payload → 8 block sends + 8 sums sends = 16 messages.
+//
+// Packed block: ⌈4096/64⌉ × 16 = 1024 words × 8 B   =   8192 B
+// Float block:  4096 × 16 elements × 8 B (f64)      = 524288 B
+// Sums payload: 16 f64 × 8 B                        =    128 B
+const PINNED_MESSAGES: u64 = 16;
+const PINNED_SORENSON_BYTES: u64 = 8 * 8192 + 8 * 128; // = 66_560
+const PINNED_FLOAT_BYTES: u64 = 8 * 524_288 + 8 * 128; // = 4_195_328
+
+#[test]
+fn sorenson_packed_wire_cuts_comm_bytes_at_least_32x() {
+    let _g = lock();
+    let sor = run(&pinned_cfg(MetricId::Sorenson)).unwrap();
+    let cz = run(&pinned_cfg(MetricId::Czekanowski)).unwrap();
+
+    // Identical schedule, identical message count — only the block
+    // representation differs.
+    assert_eq!(sor.stats.comm_messages, PINNED_MESSAGES);
+    assert_eq!(cz.stats.comm_messages, PINNED_MESSAGES);
+
+    // Pin the exact byte counts so any accounting regression is loud.
+    assert_eq!(sor.stats.comm_bytes, PINNED_SORENSON_BYTES);
+    assert_eq!(cz.stats.comm_bytes, PINNED_FLOAT_BYTES);
+
+    let ratio = cz.stats.comm_bytes as f64 / sor.stats.comm_bytes as f64;
+    assert!(ratio >= 32.0, "packed wire saves only {ratio:.1}× (< 32×)");
+}
+
+#[test]
+fn sorenson_packs_once_per_node_block_never_in_the_step_loop() {
+    let _g = lock();
+    let mut cfg = pinned_cfg(MetricId::Sorenson);
+    cfg.nv = 36;
+    cfg.nf = 130; // partial trailing word
+    cfg.grid = Grid::new(1, 3, 2); // 6 nodes, multi-step schedule
+    let before = pack_calls();
+    let out = run(&cfg).unwrap();
+    let packs = pack_calls() - before;
+    // Exactly one packing conversion per node block (at ingest). The
+    // (1,3,2) grid runs 2 circulant steps per pr plane; any per-step or
+    // per-kernel re-packing would at least double this count.
+    assert_eq!(packs, 6, "expected 6 ingest-time packs, saw {packs}");
+    assert!(out.stats.metrics > 0);
+
+    // Same problem, serial grid: still exactly one pack per node block.
+    cfg.grid = Grid::new(1, 1, 1);
+    let before = pack_calls();
+    let _ = run(&cfg).unwrap();
+    assert_eq!(pack_calls() - before, 1);
+}
+
+#[test]
+fn absorb_roundtrips_comm_and_accel_stats_end_to_end() {
+    let _g = lock();
+    // RunStats::absorb is the only path from per-node endpoint counts
+    // to the outcome now (the cluster-level counters are a debug-only
+    // cross-check), so these equalities guard the PR 1 absorb fix
+    // end-to-end: dropping comm_* or t_accel in the merge would zero
+    // them here.
+    let out = run(&pinned_cfg(MetricId::Sorenson)).unwrap();
+    assert_eq!(out.stats.comm_messages, PINNED_MESSAGES);
+    assert_eq!(out.stats.comm_bytes, PINNED_SORENSON_BYTES);
+    assert_eq!(out.stats.t_accel, 0.0, "native backends spend no accel time");
+
+    // Single node: nothing on the wire, and absorb must preserve that.
+    let mut cfg = pinned_cfg(MetricId::Sorenson);
+    cfg.grid = Grid::new(1, 1, 1);
+    let solo = run(&cfg).unwrap();
+    assert_eq!(solo.stats.comm_messages, 0);
+    assert_eq!(solo.stats.comm_bytes, 0);
+}
+
+#[test]
+fn packed_runs_stay_bit_identical_across_backends_and_decompositions() {
+    let _g = lock();
+    let (nv, nf, seed) = (36, 130, 23);
+    // Bit-level oracle checksum, salted like the engine's.
+    let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, 0);
+    let bits = BitVectorSet::from_threshold(&v, 0.5);
+    let mut want = Checksum::with_salt(MetricId::Sorenson.checksum_salt());
+    for (i, j) in indexing::pairs(nv) {
+        want.add_pair(i, j, bits.sorenson2(i, j));
+    }
+
+    let mut cfg = pinned_cfg(MetricId::Sorenson);
+    cfg.nv = nv;
+    cfg.nf = nf;
+    cfg.input = InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed };
+    for backend in [BackendKind::CpuReference, BackendKind::CpuOptimized] {
+        for (npf, npv, npr) in [(1, 1, 1), (1, 3, 1), (1, 4, 2), (2, 2, 1), (1, 6, 1)] {
+            cfg.backend = backend;
+            cfg.grid = Grid::new(npf, npv, npr);
+            let out = run(&cfg).unwrap();
+            assert_eq!(
+                out.checksum, want,
+                "checksum drift: backend {backend:?}, grid ({npf},{npv},{npr})"
+            );
+        }
+    }
+}
+
+#[test]
+fn float_metrics_keep_the_float_wire_untouched() {
+    let _g = lock();
+    // preferred_repr() gates the representation: czekanowski and ccc
+    // must still move f64 elements (their kernels consume floats), and
+    // their byte accounting must still scale with the precision width.
+    let mut cfg = pinned_cfg(MetricId::Czekanowski);
+    let f64_run = run(&cfg).unwrap();
+    assert_eq!(f64_run.stats.comm_bytes, PINNED_FLOAT_BYTES);
+    cfg.precision = Precision::F32;
+    let f32_run = run(&cfg).unwrap();
+    assert_eq!(f32_run.stats.comm_bytes, PINNED_FLOAT_BYTES / 2);
+}

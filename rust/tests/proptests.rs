@@ -337,6 +337,76 @@ fn prop_ccc_engine_matches_scalar_oracle() {
 }
 
 #[test]
+fn prop_pack_once_coordinator_matches_repack_per_call_oracle() {
+    // Satellite: the pack-once cached path (pack at ingest, packed
+    // words on the wire) must be bit-for-bit identical — values AND
+    // checksum — to the old repack-per-call semantics (freshly pack
+    // both operands for every pair), across random 0/1 matrices, rank
+    // counts (grids), and partial trailing-word widths.
+    forall(
+        "pack-once-vs-repack",
+        10,
+        |g| {
+            let nf = if g.bool() {
+                *g.pick(&[1usize, 63, 64, 65, 127, 128, 129, 190])
+            } else {
+                g.usize_in(2, 200)
+            };
+            let nv = g.usize_in(6, 24);
+            let npv = g.usize_in(1, 4.min(nv));
+            let npr = g.usize_in(1, 3);
+            let npf = g.usize_in(1, 2.min(nf));
+            let seed = g.stream.next_u64();
+            (nf, nv, npf, npv, npr, seed)
+        },
+        |&(nf, nv, npf, npv, npr, seed)| {
+            let cfg = RunConfig {
+                metric: metrics::MetricId::Sorenson,
+                num_way: 2,
+                nv,
+                nf,
+                precision: Precision::F64,
+                backend: BackendKind::CpuOptimized,
+                grid: Grid::new(npf, npv, npr),
+                input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed },
+                store_metrics: true,
+                ..Default::default()
+            };
+            let out = run(&cfg).map_err(|e| e.to_string())?;
+            let pairs = out.pairs.as_ref().ok_or("no pairs stored")?;
+            if pairs.len() != nv * (nv - 1) / 2 {
+                return Err(format!("{} pairs, want {}", pairs.len(), nv * (nv - 1) / 2));
+            }
+            // Old repack-per-call path: pack both operands freshly for
+            // every single pair, straight from the float matrix.
+            let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, 0);
+            let mut want_cs = comet::checksum::Checksum::with_salt(
+                metrics::MetricId::Sorenson.checksum_salt(),
+            );
+            for e in pairs.iter() {
+                let (i, j) = (e.i as usize, e.j as usize);
+                let bi = comet::vecdata::bits::BitVectorSet::from_threshold(&v.select_cols(&[i]), 0.5);
+                let bj = comet::vecdata::bits::BitVectorSet::from_threshold(&v.select_cols(&[j]), 0.5);
+                let n = comet::linalg::sorenson::sorenson_mgemm(&bi, &bj).at(0, 0);
+                let d = (bi.popcount(0) + bj.popcount(0)) as f64;
+                let want = if d == 0.0 { 0.0 } else { 2.0 * n / d };
+                if e.value.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "pair ({i},{j}): cached {} vs repack {} at nf={nf}",
+                        e.value, want
+                    ));
+                }
+                want_cs.add_pair(i, j, want);
+            }
+            if out.checksum != want_cs {
+                return Err("checksum differs from repack-per-call oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_checksum_detects_any_single_mutation() {
     forall(
         "checksum-sensitivity",
