@@ -20,11 +20,11 @@ fn main() -> anyhow::Result<()> {
     let (service, backend): (Option<PjrtService>, Arc<dyn Backend<f32>>) =
         if artifacts.join("manifest.txt").exists() {
             let svc = PjrtService::start(artifacts)?;
-            let be = make_backend::<f32>(BackendKind::Pjrt, Precision::F32, Some(svc.client()))?;
+            let be = make_backend::<f32>(BackendKind::Pjrt, Precision::F32, Some(svc.client()), 1)?;
             (Some(svc), be)
         } else {
             eprintln!("note: artifacts not built; using native CPU backend");
-            (None, make_backend::<f32>(BackendKind::CpuOptimized, Precision::F32, None)?)
+            (None, make_backend::<f32>(BackendKind::CpuOptimized, Precision::F32, None, 1)?)
         };
 
     // 160 sparse profiles; sparse supports make 3-way structure likely.

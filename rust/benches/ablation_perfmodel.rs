@@ -41,7 +41,9 @@ fn main() {
     let nf = 384;
     let nvp = 192;
     let (t_single, _) = measured_total(nvp, nf, 1);
-    let blocks_single = 1.0; // npv=1: one diagonal block
+    // npv=1: one diagonal block, served by the triangular kernel
+    // (~0.5 effective full blocks).
+    let blocks_single = 0.5;
     let t_gemm = t_single / blocks_single;
 
     let mut table = fmt::Table::new(&["npv", "load ℓ", "predicted/node", "measured/node", "ratio"]);
@@ -54,6 +56,9 @@ fn main() {
             t_gemm,
             t_cpu: 0.1 * t_gemm,
             load,
+            diag_load: 1, // every node owns its Δ=0 diagonal block
+            threads: 1,
+            triangular: true,
             nst: 1,
             net: host_net(),
             link: host_net(),
@@ -81,6 +86,9 @@ fn main() {
         t_gemm: 6.5,
         t_cpu: 0.1,
         load: 13,
+        diag_load: 0,
+        threads: 1,
+        triangular: false,
         nst: 16,
         net: CostModel::gemini(),
         link: CostModel::pcie2(),

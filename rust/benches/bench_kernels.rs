@@ -1,0 +1,205 @@
+//! Perf-trajectory bench harness: times every native kernel family
+//! (full + triangular, across thread counts) and appends a run to
+//! `BENCH_kernels.json` at the repository root.
+//!
+//!   cargo bench --bench bench_kernels            # full sizes
+//!   cargo bench --bench bench_kernels -- --quick # CI smoke sizes
+//!   cargo bench --bench bench_kernels -- --fresh # overwrite the file
+//!
+//! ## `BENCH_kernels.json` schema (`comet-bench-kernels/v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "comet-bench-kernels/v1",
+//!   "unit": "elementwise comparisons per second",
+//!   "runs": [
+//!     {
+//!       "created_unix": 1700000000,
+//!       "quick": false,
+//!       "source": "measured",
+//!       "entries": [
+//!         { "metric": "czekanowski", "repr": "float", "kernel": "full",
+//!           "threads": 1, "nf": 512, "nv": 256, "iters": 3,
+//!           "secs_median": 0.0123, "comparisons_per_sec": 2.7e9 }
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! * `runs` is append-only: each harness invocation adds one run object
+//!   (oldest first), so the file accumulates a perf trajectory across
+//!   PRs. `--fresh` restarts it.
+//! * `comparisons_per_sec` is the paper's Table 1 figure of merit: one
+//!   elementwise comparison per feature of each computed output entry
+//!   (`linalg::opcount::{ops_full, ops_tri}` / median seconds).
+//! * `kernel` is "full" (square block) or "tri" (symmetry-halved
+//!   diagonal block); `repr` matches the metric's block representation
+//!   ("float" | "packed").
+//! * `source` is "measured" for harness output; seed points generated
+//!   without a local toolchain are marked "estimate" and are replaced
+//!   in spirit by the first measured run appended after them.
+
+use std::path::PathBuf;
+
+use comet::linalg::{opcount, optimized, sorenson};
+use comet::util::timer::bench_run;
+use comet::vecdata::bits::BitVectorSet;
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+struct Entry {
+    metric: &'static str,
+    repr: &'static str,
+    kernel: &'static str,
+    threads: usize,
+    nf: usize,
+    nv: usize,
+    iters: usize,
+    secs: f64,
+    cps: f64,
+}
+
+fn time_kernel(label: &str, iters: usize, ops: u64, mut f: impl FnMut()) -> (f64, f64) {
+    let secs = bench_run(label, 1, iters, || {
+        f();
+    })
+    .median();
+    (secs, ops as f64 / secs)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let fresh = args.iter().any(|a| a == "--fresh");
+    let (nf, nv, iters) = if quick { (96, 64, 2) } else { (512, 256, 3) };
+
+    let grid: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, nf, nv, 0);
+    let alleles: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 1, nf, nv, 0);
+    let bits = BitVectorSet::generate(1, nf, nv, 0.4);
+
+    let full_ops = opcount::ops_full(nf, nv, nv);
+    let tri_ops = opcount::ops_tri(nf, nv);
+    let mut entries: Vec<Entry> = Vec::new();
+
+    for threads in THREADS {
+        let mut push = |metric, repr, kernel, secs: f64, cps: f64| {
+            entries.push(Entry { metric, repr, kernel, threads, nf, nv, iters, secs, cps });
+        };
+        let (s, c) = time_kernel("czekanowski-full", iters, full_ops, || {
+            std::hint::black_box(optimized::mgemm2_mt(&grid, &grid, threads));
+        });
+        push("czekanowski", "float", "full", s, c);
+        let (s, c) = time_kernel("czekanowski-tri", iters, tri_ops, || {
+            std::hint::black_box(optimized::mgemm2_tri_mt(&grid, threads));
+        });
+        push("czekanowski", "float", "tri", s, c);
+        let (s, c) = time_kernel("ccc-full", iters, full_ops, || {
+            std::hint::black_box(optimized::gemm_mt(&alleles, &alleles, threads));
+        });
+        push("ccc", "float", "full", s, c);
+        let (s, c) = time_kernel("ccc-tri", iters, tri_ops, || {
+            std::hint::black_box(optimized::gemm_tri_mt(&alleles, threads));
+        });
+        push("ccc", "float", "tri", s, c);
+        let (s, c) = time_kernel("sorenson-full", iters, full_ops, || {
+            std::hint::black_box(sorenson::sorenson_mgemm_mt(&bits, &bits, threads));
+        });
+        push("sorenson", "packed", "full", s, c);
+        let (s, c) = time_kernel("sorenson-tri", iters, tri_ops, || {
+            std::hint::black_box(sorenson::sorenson_mgemm_tri_mt(&bits, threads));
+        });
+        push("sorenson", "packed", "tri", s, c);
+    }
+
+    println!(
+        "bench_kernels: nf={nf} nv={nv} iters={iters}{}",
+        if quick { " (quick)" } else { "" }
+    );
+    println!("{:<14} {:<7} {:<6} {:>7} {:>12} {:>16}", "metric", "repr", "kernel", "threads", "median (s)", "cmp/s");
+    for e in &entries {
+        println!(
+            "{:<14} {:<7} {:<6} {:>7} {:>12.6} {:>16.3e}",
+            e.metric, e.repr, e.kernel, e.threads, e.secs, e.cps
+        );
+    }
+
+    let run_json = render_run(&entries, quick);
+    let path = bench_file();
+    write_trajectory(&path, &run_json, fresh);
+    println!("\nappended run to {}", path.display());
+}
+
+fn bench_file() -> PathBuf {
+    // rust/ is a workspace member; the trajectory lives at the repo root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_kernels.json")
+}
+
+fn render_run(entries: &[Entry], quick: bool) -> String {
+    let created = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut s = String::new();
+    s.push_str("    {\n");
+    s.push_str(&format!("      \"created_unix\": {created},\n"));
+    s.push_str(&format!("      \"quick\": {quick},\n"));
+    s.push_str("      \"source\": \"measured\",\n");
+    s.push_str("      \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        s.push_str(&format!(
+            "        {{ \"metric\": \"{}\", \"repr\": \"{}\", \"kernel\": \"{}\", \"threads\": {}, \
+             \"nf\": {}, \"nv\": {}, \"iters\": {}, \"secs_median\": {:.9}, \
+             \"comparisons_per_sec\": {:.6e} }}{}\n",
+            e.metric,
+            e.repr,
+            e.kernel,
+            e.threads,
+            e.nf,
+            e.nv,
+            e.iters,
+            e.secs,
+            e.cps,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("      ]\n");
+    s.push_str("    }");
+    s
+}
+
+/// Append `run_json` to the trajectory file (creating it if absent or
+/// unrecognized). The writer controls the exact layout, so appending is
+/// a suffix splice at the closing `]` of "runs".
+fn write_trajectory(path: &std::path::Path, run_json: &str, fresh: bool) {
+    const SCHEMA: &str = "comet-bench-kernels/v1";
+    const TAIL: &str = "\n  ]\n}\n";
+    let header = format!(
+        "{{\n  \"schema\": \"{SCHEMA}\",\n  \"unit\": \"elementwise comparisons per second\",\n  \"runs\": [\n"
+    );
+    let existing = if fresh { None } else { std::fs::read_to_string(path).ok() };
+    let text = match existing {
+        Some(t) if t.contains(SCHEMA) && t.ends_with(TAIL) => {
+            format!("{},\n{}{}", &t[..t.len() - TAIL.len()], run_json, TAIL)
+        }
+        Some(old) => {
+            // Unrecognized layout (hand-edited, CRLF checkout, …):
+            // never destroy the accumulated trajectory silently — park
+            // it next to the fresh file.
+            let bak = path.with_extension("json.bak");
+            std::fs::write(&bak, old).expect("back up BENCH_kernels.json");
+            eprintln!(
+                "bench_kernels: {} is not in splice format; backed it up to {} and restarted the trajectory",
+                path.display(),
+                bak.display()
+            );
+            format!("{header}{run_json}{TAIL}")
+        }
+        None => format!("{header}{run_json}{TAIL}"),
+    };
+    std::fs::write(path, text).expect("write BENCH_kernels.json");
+}

@@ -72,6 +72,9 @@ fn main() {
             t_gemm: t_block,
             t_cpu: 0.05 * t_block,
             load: lmax,
+            diag_load: 0,
+            threads: 1,
+            triangular: false,
             nst: 1,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
@@ -94,6 +97,9 @@ fn main() {
             t_gemm: t_block3,
             t_cpu: 0.05 * t_block3,
             load: smax,
+            diag_load: 0,
+            threads: 1,
+            triangular: false,
             nst: 1,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),

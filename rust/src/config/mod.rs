@@ -93,6 +93,12 @@ pub struct RunConfig {
     pub nf: usize,
     pub precision: Precision,
     pub backend: BackendKind,
+    /// Host compute threads per node for the optimized CPU backend's
+    /// row-panel-parallel kernels (1 = serial; grid-valued sums are
+    /// bit-identical across any thread count). Ignored by the
+    /// reference backend (single-core baseline) and PJRT (the
+    /// accelerator owns its parallelism).
+    pub threads: usize,
     pub grid: Grid,
     /// Stage count n_st (3-way only; 1 = no staging).
     pub num_stage: usize,
@@ -120,6 +126,7 @@ impl Default for RunConfig {
             nf: 384,
             precision: Precision::F64,
             backend: BackendKind::CpuOptimized,
+            threads: 1,
             grid: Grid::new(1, 1, 1),
             num_stage: 1,
             stage: None,
@@ -161,6 +168,11 @@ impl RunConfig {
                     );
                 }
             }
+        }
+        // Upper bound also catches negative TOML values wrapping
+        // through the i64 → usize cast (e.g. threads = -1).
+        if self.threads == 0 || self.threads > 1024 {
+            bail!("threads must be in 1..=1024, got {}", self.threads);
         }
         if self.nv < self.num_way {
             bail!("nv={} too small for {}-way", self.nv, self.num_way);
@@ -205,6 +217,9 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("run", "backend") {
             cfg.backend = BackendKind::parse(v.as_str().context("run.backend")?)?;
+        }
+        if let Some(v) = doc.get("run", "threads") {
+            cfg.threads = v.as_int().context("run.threads")? as usize;
         }
         if let Some(v) = doc.get("run", "store_metrics") {
             cfg.store_metrics = v.as_bool().context("run.store_metrics")?;
@@ -309,6 +324,19 @@ seed = 42
         )
         .unwrap();
         assert_eq!(cfg.input, InputSource::File { path: "/data/v.bin".into() });
+    }
+
+    #[test]
+    fn parses_threads_and_rejects_zero() {
+        let cfg = RunConfig::from_toml_str("[run]\nthreads = 4\n").unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(RunConfig::default().threads, 1);
+        let err = RunConfig::from_toml_str("[run]\nthreads = 0\n").unwrap_err();
+        assert!(err.to_string().contains("threads"), "{err}");
+        // Negative values must not wrap into astronomically large
+        // thread counts through the usize cast.
+        let err = RunConfig::from_toml_str("[run]\nthreads = -1\n").unwrap_err();
+        assert!(err.to_string().contains("threads"), "{err}");
     }
 
     #[test]

@@ -32,6 +32,47 @@ pub trait Backend<T: Scalar>: Send + Sync {
     /// N[i, j] = |w_i AND v_j| over packed words (bitwise family —
     /// Sorensen numerators).
     fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64>;
+
+    // --- Diagonal-block (symmetry-halved) kernels -----------------------
+    // A diagonal block pairs a vector set with itself; the coordinator
+    // only reads the strict upper triangle, so backends may compute a
+    // triangular result (~2× fewer elementwise ops). Defaults fall back
+    // to the full square kernel — correct everywhere, required for
+    // backends whose kernels are shape-specialized (PJRT artifacts).
+
+    /// Upper triangle of V^T ∘min V (entries elsewhere unspecified —
+    /// the triangular impls leave them zero).
+    fn mgemm2_diag(&self, v: &VectorSet<T>) -> Result<MatF64> {
+        self.mgemm2(v, v)
+    }
+    /// Upper triangle of V^T V.
+    fn gemm2_diag(&self, v: &VectorSet<T>) -> Result<MatF64> {
+        self.gemm2(v, v)
+    }
+    /// Upper triangle of V AND V popcounts.
+    fn sorenson2_diag(&self, v: &BitVectorSet) -> Result<MatF64> {
+        self.sorenson2(v, v)
+    }
+    /// Diagonal 3-way slab: pivots are columns `pivot_locals` of `v`
+    /// itself; only slab[t, i, k] with i < pivot_locals[t] < k is
+    /// meaningful (the unique-triple region).
+    fn mgemm3_diag(
+        &self,
+        v: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        _pivot_locals: &[usize],
+    ) -> Result<SlabF64> {
+        self.mgemm3(v, pivots, v)
+    }
+    /// Which kernel services **2-way** diagonal blocks: "triangular"
+    /// (symmetry halved — all three numerator families) or "full"
+    /// (square fallback). Reported in the CLI banner and the
+    /// `run.meta` sidecar. 3-way diag slabs may independently fall
+    /// back to [`Backend::mgemm3`].
+    fn diag_kernel(&self) -> &'static str {
+        "full"
+    }
+
     fn name(&self) -> &'static str;
     /// Max pivot batch (jt) a single mgemm3 call should receive.
     fn pivot_batch(&self) -> usize {
@@ -46,6 +87,10 @@ pub trait Backend<T: Scalar>: Send + Sync {
 }
 
 /// Naive scalar loops — the paper's "reference (CPU-only) version".
+/// Stays single-core by design (it is the baseline the speedups are
+/// measured against) but still serves triangular diagonal blocks, so
+/// checksum comparisons against the optimized backend exercise the
+/// same coverage.
 pub struct CpuReference;
 
 impl<T: Scalar> Backend<T> for CpuReference {
@@ -66,17 +111,49 @@ impl<T: Scalar> Backend<T> for CpuReference {
     fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64> {
         Ok(sorenson::sorenson_mgemm_ref(w, v))
     }
+    fn mgemm2_diag(&self, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(reference::mgemm2_tri(v))
+    }
+    fn gemm2_diag(&self, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(reference::gemm_tri(v))
+    }
+    fn sorenson2_diag(&self, v: &BitVectorSet) -> Result<MatF64> {
+        Ok(sorenson::sorenson_mgemm_ref_tri(v))
+    }
+    // 3-way diag slabs keep the default full-square fallback: the
+    // reference backend is the naive correctness baseline, and
+    // `diag_kernel` only describes the 2-way diagonal-block family.
+    fn diag_kernel(&self) -> &'static str {
+        "triangular"
+    }
     fn name(&self) -> &'static str {
         "cpu-reference"
     }
 }
 
-/// Blocked native kernels — the paper's optimized CPU version.
-pub struct CpuOptimized;
+/// Blocked native kernels — the paper's optimized CPU version, with
+/// symmetry-halved diagonal blocks and row-panel thread parallelism
+/// (`threads` from the run config's `--threads`; 1 = serial, always
+/// bit-identical to any other count).
+pub struct CpuOptimized {
+    pub threads: usize,
+}
+
+impl Default for CpuOptimized {
+    fn default() -> Self {
+        CpuOptimized { threads: 1 }
+    }
+}
+
+impl CpuOptimized {
+    pub fn with_threads(threads: usize) -> Self {
+        CpuOptimized { threads: threads.max(1) }
+    }
+}
 
 impl<T: Scalar> Backend<T> for CpuOptimized {
     fn mgemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
-        Ok(optimized::mgemm2(w, v))
+        Ok(optimized::mgemm2_mt(w, v, self.threads))
     }
     fn mgemm3(
         &self,
@@ -84,13 +161,33 @@ impl<T: Scalar> Backend<T> for CpuOptimized {
         pivots: &VectorSet<T>,
         v: &VectorSet<T>,
     ) -> Result<SlabF64> {
-        Ok(optimized::mgemm3(w, pivots, v))
+        Ok(optimized::mgemm3_mt(w, pivots, v, self.threads))
     }
     fn gemm2(&self, w: &VectorSet<T>, v: &VectorSet<T>) -> Result<MatF64> {
-        Ok(optimized::gemm(w, v))
+        Ok(optimized::gemm_mt(w, v, self.threads))
     }
     fn sorenson2(&self, w: &BitVectorSet, v: &BitVectorSet) -> Result<MatF64> {
-        Ok(sorenson::sorenson_mgemm(w, v))
+        Ok(sorenson::sorenson_mgemm_mt(w, v, self.threads))
+    }
+    fn mgemm2_diag(&self, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(optimized::mgemm2_tri_mt(v, self.threads))
+    }
+    fn gemm2_diag(&self, v: &VectorSet<T>) -> Result<MatF64> {
+        Ok(optimized::gemm_tri_mt(v, self.threads))
+    }
+    fn sorenson2_diag(&self, v: &BitVectorSet) -> Result<MatF64> {
+        Ok(sorenson::sorenson_mgemm_tri_mt(v, self.threads))
+    }
+    fn mgemm3_diag(
+        &self,
+        v: &VectorSet<T>,
+        pivots: &VectorSet<T>,
+        pivot_locals: &[usize],
+    ) -> Result<SlabF64> {
+        Ok(optimized::mgemm3_diag_mt(v, pivots, pivot_locals, self.threads))
+    }
+    fn diag_kernel(&self) -> &'static str {
+        "triangular"
     }
     fn name(&self) -> &'static str {
         "cpu-optimized"
@@ -207,16 +304,34 @@ impl<T: Scalar> Backend<T> for PjrtBackend {
     }
 }
 
+/// The diag-kernel report ([`Backend::diag_kernel`]) of the backend a
+/// config names, without constructing it — for the CLI banner, which
+/// prints before any backend (or PJRT service) exists. CPU arms
+/// delegate to the real impls so they cannot drift; `run.meta` records
+/// the constructed instance's own report.
+pub fn diag_kernel_for(kind: BackendKind) -> &'static str {
+    match kind {
+        BackendKind::CpuReference => Backend::<f64>::diag_kernel(&CpuReference),
+        BackendKind::CpuOptimized => Backend::<f64>::diag_kernel(&CpuOptimized::default()),
+        // PJRT artifacts are shape-specialized full squares (trait
+        // default); a triangular artifact tier is a ROADMAP follow-up.
+        BackendKind::Pjrt => "full",
+    }
+}
+
 /// Build the backend a config names. `runtime` must be Some for
-/// [`BackendKind::Pjrt`].
+/// [`BackendKind::Pjrt`]. `threads` drives the optimized CPU backend's
+/// row-panel parallelism; the reference backend is single-core by
+/// design and the PJRT path owns its own accelerator parallelism.
 pub fn make_backend<T: Scalar>(
     kind: BackendKind,
     precision: Precision,
     runtime: Option<RuntimeClient>,
+    threads: usize,
 ) -> Result<Arc<dyn Backend<T>>> {
     Ok(match kind {
         BackendKind::CpuReference => Arc::new(CpuReference),
-        BackendKind::CpuOptimized => Arc::new(CpuOptimized),
+        BackendKind::CpuOptimized => Arc::new(CpuOptimized::with_threads(threads)),
         BackendKind::Pjrt => {
             let client = runtime.ok_or_else(|| {
                 anyhow::anyhow!("pjrt backend requires a running PjrtService (artifacts built?)")
@@ -236,7 +351,7 @@ mod tests {
         let w: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 32, 8, 0);
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 32, 8, 8);
         let a = Backend::<f64>::mgemm2(&CpuReference, &w, &v).unwrap();
-        let b = Backend::<f64>::mgemm2(&CpuOptimized, &w, &v).unwrap();
+        let b = Backend::<f64>::mgemm2(&CpuOptimized::default(), &w, &v).unwrap();
         assert_eq!(a.max_abs_diff(&b), 0.0);
     }
 
@@ -245,7 +360,7 @@ mod tests {
         let w: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 2, 40, 6, 0);
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 2, 40, 6, 6);
         let a = Backend::<f64>::gemm2(&CpuReference, &w, &v).unwrap();
-        let b = Backend::<f64>::gemm2(&CpuOptimized, &w, &v).unwrap();
+        let b = Backend::<f64>::gemm2(&CpuOptimized::default(), &w, &v).unwrap();
         assert_eq!(a.max_abs_diff(&b), 0.0);
     }
 
@@ -253,13 +368,29 @@ mod tests {
     fn cpu_backends_agree_on_bitwise_family() {
         let bits = BitVectorSet::generate(5, 130, 9, 0.35);
         let a = Backend::<f64>::sorenson2(&CpuReference, &bits, &bits).unwrap();
-        let b = Backend::<f64>::sorenson2(&CpuOptimized, &bits, &bits).unwrap();
+        let b = Backend::<f64>::sorenson2(&CpuOptimized::default(), &bits, &bits).unwrap();
         assert_eq!(a.max_abs_diff(&b), 0.0);
     }
 
     #[test]
+    fn diag_kernels_agree_across_cpu_backends_and_threads() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 48, 9, 0);
+        let a = Backend::<f64>::mgemm2_diag(&CpuReference, &v).unwrap();
+        for threads in [1, 2, 4] {
+            let b = Backend::<f64>::mgemm2_diag(&CpuOptimized::with_threads(threads), &v).unwrap();
+            assert_eq!(a.max_abs_diff(&b), 0.0, "threads={threads}");
+        }
+        assert_eq!(Backend::<f64>::diag_kernel(&CpuReference), "triangular");
+        assert_eq!(Backend::<f64>::diag_kernel(&CpuOptimized::default()), "triangular");
+        // The banner helper must agree with the instances it names.
+        assert_eq!(diag_kernel_for(BackendKind::CpuReference), "triangular");
+        assert_eq!(diag_kernel_for(BackendKind::CpuOptimized), "triangular");
+        assert_eq!(diag_kernel_for(BackendKind::Pjrt), "full");
+    }
+
+    #[test]
     fn make_backend_pjrt_requires_runtime() {
-        let err = match make_backend::<f64>(BackendKind::Pjrt, Precision::F64, None) {
+        let err = match make_backend::<f64>(BackendKind::Pjrt, Precision::F64, None, 1) {
             Err(e) => e,
             Ok(_) => panic!("expected error without a runtime client"),
         };
@@ -267,8 +398,18 @@ mod tests {
     }
 
     #[test]
+    fn make_backend_threads_reach_cpu_optimized() {
+        let b = make_backend::<f64>(BackendKind::CpuOptimized, Precision::F64, None, 4).unwrap();
+        assert_eq!(b.name(), "cpu-optimized");
+        // Thread count must not change values (bit-identity contract).
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 7, 33, 7, 0);
+        let serial = Backend::<f64>::mgemm2(&CpuOptimized::default(), &v, &v).unwrap();
+        assert_eq!(serial.max_abs_diff(&b.mgemm2(&v, &v).unwrap()), 0.0);
+    }
+
+    #[test]
     fn backend_names() {
         assert_eq!(Backend::<f64>::name(&CpuReference), "cpu-reference");
-        assert_eq!(Backend::<f32>::name(&CpuOptimized), "cpu-optimized");
+        assert_eq!(Backend::<f32>::name(&CpuOptimized::default()), "cpu-optimized");
     }
 }

@@ -141,7 +141,7 @@ fn run_typed<T: Scalar>(
     cfg: &RunConfig,
     client: Option<crate::runtime::RuntimeClient>,
 ) -> Result<RunOutcome> {
-    let backend = backend::make_backend::<T>(cfg.backend, cfg.precision, client)?;
+    let backend = backend::make_backend::<T>(cfg.backend, cfg.precision, client, cfg.threads)?;
     let metric = crate::metrics::make_metric::<T>(cfg.metric, cfg);
     let np = cfg.grid.np();
     let mut cluster = VirtualCluster::new(np, cfg.precision.bytes());
@@ -203,6 +203,7 @@ fn run_typed<T: Scalar>(
             std::path::Path::new(dir),
             cfg,
             metric.preferred_repr(),
+            backend.diag_kernel(),
             &outcome.stats,
         )?;
     }

@@ -25,7 +25,10 @@ pub fn all_pairs_with<T: Scalar>(
     v: &VectorSet<T>,
 ) -> Result<PairStore> {
     let block = metric.ingest(v.clone());
-    let n = metric.numerators2(backend.as_ref(), &block, &block)?;
+    // One set against itself — only i < j is read, so the
+    // symmetry-halved diagonal kernel applies (same as the coordinated
+    // runs' diag blocks).
+    let n = metric.numerators2_diag(backend.as_ref(), &block)?;
     let dens = metric.denominators(&block)?;
     let mut store = PairStore::for_metric(metric.id());
     for j in 1..v.nv {
@@ -56,14 +59,16 @@ pub fn all_triples_with<T: Scalar>(
     v: &VectorSet<T>,
 ) -> Result<TripleStore> {
     let block = metric.ingest(v.clone());
-    let n2 = metric.numerators2(backend.as_ref(), &block, &block)?;
+    let n2 = metric.numerators2_diag(backend.as_ref(), &block)?;
     let dens = metric.denominators(&block)?;
     let mut store = TripleStore::for_metric(metric.id());
     let jt = backend.pivot_batch_for(v.nf, v.nv);
     let pivot_ids: Vec<usize> = (0..v.nv).collect();
     for chunk in pivot_ids.chunks(jt) {
         let pivots = block.select_cols(chunk)?;
-        let slab = metric.numerators3(backend.as_ref(), &block, &pivots, &block)?;
+        // Only i < chunk[t] < k is read below — the diag-aware slab
+        // kernel skips the rest.
+        let slab = metric.numerators3_diag(backend.as_ref(), &block, &pivots, chunk)?;
         for (t, &j) in chunk.iter().enumerate() {
             for i in 0..j {
                 for k in (j + 1)..v.nv {
@@ -102,7 +107,7 @@ mod tests {
     #[test]
     fn all_pairs_matches_scalar_oracle() {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 1, 48, 10, 0);
-        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
         let store = all_pairs(&backend, &v).unwrap();
         assert_eq!(store.len(), 45);
         for e in store.iter() {
@@ -114,7 +119,7 @@ mod tests {
     #[test]
     fn all_triples_matches_scalar_oracle() {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 2, 32, 9, 0);
-        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
         let store = all_triples(&backend, &v).unwrap();
         assert_eq!(store.len(), 9 * 8 * 7 / 6);
         for e in store.iter() {
@@ -130,7 +135,7 @@ mod tests {
     #[test]
     fn all_pairs_with_ccc_matches_scalar_oracle() {
         let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 4, 52, 10, 0);
-        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
         let metric = crate::metrics::engine::Ccc::new(v.nf);
         let store = all_pairs_with(&backend, &metric, &v).unwrap();
         assert_eq!(store.len(), 45);
@@ -145,7 +150,7 @@ mod tests {
     fn all_pairs_with_sorenson_matches_bit_oracle() {
         let bits = crate::vecdata::bits::BitVectorSet::generate(6, 190, 8, 0.3);
         let v = bits.to_floats();
-        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
         let metric = crate::metrics::engine::Sorenson::default();
         let store = all_pairs_with(&backend, &metric, &v).unwrap();
         assert_eq!(store.len(), 28);
@@ -162,7 +167,7 @@ mod tests {
             s.first_id = 100;
             s
         };
-        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
         let store = all_pairs(&backend, &v).unwrap();
         for e in store.iter() {
             assert!(e.i >= 100 && e.j >= 100);

@@ -121,6 +121,9 @@ pub(crate) fn node_main<T: Scalar>(
         None => (0..cfg.num_stage).collect(),
     };
     // Cache of 2-way numerator tables, keyed by ordered block pair.
+    // Self-pair tables (a == b) are only ever read at i < j below
+    // (Diag's i < j_local < k, Face's i1 < i2), so they go through the
+    // metric's symmetry-halved diagonal kernel.
     let mut n2_cache: HashMap<(usize, usize), Arc<MatF64>> = HashMap::new();
     let mut n2_table = |a: usize,
                         b: usize,
@@ -131,7 +134,11 @@ pub(crate) fn node_main<T: Scalar>(
         if let Some(m) = n2_cache.get(&key) {
             return Ok(Arc::clone(m));
         }
-        let m = Arc::new(metric.numerators2(backend.as_ref(), &blocks[&key.0], &blocks[&key.1])?);
+        let m = Arc::new(if key.0 == key.1 {
+            metric.numerators2_diag(backend.as_ref(), &blocks[&key.0])?
+        } else {
+            metric.numerators2(backend.as_ref(), &blocks[&key.0], &blocks[&key.1])?
+        });
         stats.mgemm2_calls += 1;
         n2_cache.insert(key, Arc::clone(&m));
         Ok(m)
@@ -169,7 +176,14 @@ pub(crate) fn node_main<T: Scalar>(
                 stripe_pivots(p_blk.nv(), slice.sub, cfg.num_stage, stage).collect();
             for chunk in pivots.chunks(jt_max) {
                 let pivot_set = p_blk.select_cols(chunk)?;
-                let slab = metric.numerators3(backend.as_ref(), &a_blk, &pivot_set, &r_blk)?;
+                // Diag slices read only slab[t, i, k] with
+                // i < chunk[t] < k, so the diag-aware slab kernel skips
+                // the redundant sub-slices entirely.
+                let slab = if matches!(slice.combo, Combo3::Diag) {
+                    metric.numerators3_diag(backend.as_ref(), &a_blk, &pivot_set, chunk)?
+                } else {
+                    metric.numerators3(backend.as_ref(), &a_blk, &pivot_set, &r_blk)?
+                };
                 stats.mgemm3_calls += 1;
                 for (t, &j_local) in chunk.iter().enumerate() {
                     let gj = vparts.start(b_pivot) + j_local;

@@ -43,6 +43,23 @@
 //! `comm::Payload::bytes`), f64 elements for the float families. The
 //! step loops never re-pack (`tests/comm_accounting.rs` pins this).
 //!
+//! ## Symmetry-halved + thread-parallel compute core
+//!
+//! Diagonal blocks (a vector block paired with itself) go through
+//! triangular kernels ([`linalg::optimized::mgemm2_tri`] and friends;
+//! `Metric::numerators2_diag` → `Backend::*_diag`): only the strict
+//! upper triangle is computed, ~2× fewer elementwise ops, with entries
+//! bit-identical to the full kernel ([`linalg::opcount`] proves the
+//! reduction; `tests/triangular_threads.rs` pins it). The 3-way diag
+//! slices use a diag-aware slab kernel that skips redundant sub-slices
+//! and writes planes directly into the slab. `--threads N` (config
+//! `run.threads`, reported in `run.meta`) drives row-panel-parallel
+//! variants of every kernel family — output tiles are disjoint per
+//! thread, so grid-valued sums stay **bit-identical across thread
+//! counts, backends, and decompositions**. `cargo bench --bench
+//! bench_kernels` appends comparisons/sec trajectory points to
+//! `BENCH_kernels.json` at the repo root.
+//!
 //! ## Layer map (see DESIGN.md)
 //!
 //! * **Layer 1/2 (build time)** — Pallas kernels + JAX graphs in

@@ -10,16 +10,70 @@
 //!   the optimized CPU comparator (and the fallback backend when no
 //!   artifacts are built).
 //! * [`sorenson`] — the bit-packed popcount path (§2.3 / Table 6).
+//! * [`opcount`] — process-wide elementwise-operation accounting
+//!   (proves the triangular diag-block halving in tests/benches).
+//!
+//! Every family ships a symmetry-halved `*_tri` variant (strict upper
+//! triangle of a self-block, §4's redundancy elimination) and an `*_mt`
+//! thread-parallel variant (row panels / slab planes partitioned over
+//! independent output tiles — bit-identical across thread counts).
 //!
 //! All operate on column-major [`VectorSet`]s and produce row-major
 //! outputs `out[i * n + j]` matching the artifact output layout.
 
+pub mod opcount;
 pub mod optimized;
 pub mod reference;
 pub mod sorenson;
 
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
+
+/// Near-equal contiguous ranges covering `0..total` for `parts`
+/// workers (empty ranges dropped) — the row/plane partition every
+/// `*_mt` kernel shares.
+pub(crate) fn split_rows(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.clamp(1, total.max(1));
+    let base = total / parts;
+    let extra = total % parts;
+    let mut ranges = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        if len > 0 {
+            ranges.push(start..start + len);
+            start += len;
+        }
+    }
+    ranges
+}
+
+/// Run `f` over contiguous chunks of `total` output rows (or slab
+/// planes) of `unit` elements each, on up to `threads` scoped OS
+/// threads. Each invocation owns a disjoint `&mut` slice of `data`, so
+/// the parallelism needs no synchronization and cannot reorder any
+/// element's accumulation — the substrate of the `*_mt` kernels'
+/// bit-identity-across-thread-counts contract.
+pub(crate) fn par_chunks<F>(data: &mut [f64], unit: usize, total: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(data.len(), unit * total, "chunk geometry mismatch");
+    if threads <= 1 || total < 2 {
+        f(0..total, data);
+        return;
+    }
+    let ranges = split_rows(total, threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        for r in ranges {
+            let (chunk, tail) = rest.split_at_mut((r.end - r.start) * unit);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(r, chunk));
+        }
+    });
+}
 
 /// Dense row-major result matrix from an mGEMM block: out[i, j] =
 /// n2(w_i, v_j), dims m × n.
@@ -135,5 +189,34 @@ mod tests {
         a.set(0, 0, 1.0);
         b.set(0, 0, 1.5);
         assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn split_rows_covers_everything_contiguously() {
+        for (rows, parts) in [(10usize, 3usize), (1, 4), (0, 2), (7, 7), (64, 5)] {
+            let ranges = split_rows(rows, parts);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, rows);
+        }
+    }
+
+    #[test]
+    fn par_chunks_visits_disjoint_ranges_once() {
+        let (unit, total) = (3usize, 10usize);
+        let mut data = vec![0.0f64; unit * total];
+        par_chunks(&mut data, unit, total, 4, |rows, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x += (rows.start * unit + off) as f64 + 1.0;
+            }
+        });
+        // Every element written exactly once with its global index + 1.
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as f64 + 1.0);
+        }
     }
 }

@@ -1,5 +1,6 @@
-//! Optimized native mGEMM — the paper's "(possibly optimized) CPU
-//! version" (§5), adapted to one host core.
+//! Optimized native kernels — the paper's "(possibly optimized) CPU
+//! version" (§5), with symmetry-halved triangular variants and
+//! row-panel thread parallelism.
 //!
 //! The optimization story mirrors what MAGMA does on the GPU, scaled to
 //! the host cache hierarchy:
@@ -11,128 +12,280 @@
 //!   (min + add per lane — exactly the paper's two ops per comparison).
 //! * **i×j cache blocking**: outer blocks sized so the working panels
 //!   stay in L1/L2 (the host stand-in for VMEM/shared-memory tiling).
+//! * **Triangular (`*_tri`) variants** (§4's "eliminating redundant
+//!   calculations due to symmetries"): a diagonal block pairs a vector
+//!   set with itself, so only the strict upper triangle is meaningful —
+//!   these skip the diagonal and below, ~halving the elementwise ops
+//!   while producing bit-identical upper-triangle entries (each output
+//!   element's q-accumulation order is unchanged).
+//! * **Thread parallelism (`*_mt` variants)**: output rows (or slab
+//!   planes for mgemm3) are partitioned into contiguous panels, one per
+//!   thread. Every output element is computed by exactly one thread
+//!   with the identical sequential accumulation, so grid-valued sums
+//!   are **bit-identical across thread counts**.
 
-use crate::linalg::{MatF64, SlabF64};
+use std::ops::Range;
+
+use crate::linalg::{opcount, MatF64, SlabF64};
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
 
 /// Output-column register tile. 8 f64 accumulators fit comfortably in
 /// the 16 architectural vector registers alongside the streamed operand.
-const JT: usize = 8;
+pub const JT: usize = 8;
 /// Outer cache-block edge (vectors per block; panels of BI×n_f floats).
-const BI: usize = 32;
+pub const BI: usize = 32;
+
+#[inline(always)]
+fn op_min<T: Scalar>(a: T, b: T) -> T {
+    a.min_s(b)
+}
+
+#[inline(always)]
+fn op_mul<T: Scalar>(a: T, b: T) -> T {
+    a * b
+}
+
+/// The one blocked inner kernel every 2-way variant shares: compute
+/// out rows `rows` × columns `cols` of W^T ∘f V, writing
+/// `out[(i - rows.start) * ldo + j]` (absolute column indexing, so a
+/// row panel of a larger matrix or a slab plane can be written in
+/// place). `tri` restricts each row i to columns j > i (diagonal
+/// blocks). The per-element accumulation is a sequential q sweep
+/// regardless of blocking, so every variant built on this kernel is
+/// bit-identical per element.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn panel<T: Scalar, F: Fn(T, T) -> T + Copy>(
+    w: &VectorSet<T>,
+    v: &VectorSet<T>,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tri: bool,
+    out: &mut [f64],
+    ldo: usize,
+    f: F,
+) {
+    debug_assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let nf = w.nf;
+    let mut elems: u64 = 0;
+    for i0 in (rows.start..rows.end).step_by(BI) {
+        let i1 = (i0 + BI).min(rows.end);
+        let mut j0 = cols.start;
+        while j0 < cols.end {
+            let j1 = (j0 + BI).min(cols.end);
+            // A block entirely at or below the diagonal contributes
+            // nothing in triangular mode.
+            if !(tri && j1 <= i0 + 1) {
+                for i in i0..i1 {
+                    let wi = w.col(i);
+                    let row = (i - rows.start) * ldo;
+                    let mut j = if tri { j0.max(i + 1) } else { j0 };
+                    // Register-tiled main loop: JT columns at once.
+                    while j + JT <= j1 {
+                        let mut acc = [T::ZERO; JT];
+                        let vcols: [&[T]; JT] = std::array::from_fn(|t| v.col(j + t));
+                        for q in 0..nf {
+                            let wq = wi[q];
+                            for t in 0..JT {
+                                acc[t] += f(wq, vcols[t][q]);
+                            }
+                        }
+                        for t in 0..JT {
+                            out[row + j + t] = acc[t].to_f64();
+                        }
+                        elems += JT as u64;
+                        j += JT;
+                    }
+                    // Remainder columns.
+                    while j < j1 {
+                        let vj = v.col(j);
+                        let mut acc = T::ZERO;
+                        for q in 0..nf {
+                            acc += f(wi[q], vj[q]);
+                        }
+                        out[row + j] = acc.to_f64();
+                        elems += 1;
+                        j += 1;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+    }
+    opcount::record(elems * nf as u64);
+}
+
+/// Run `panel` over contiguous row panels on `threads` OS threads
+/// (via the shared [`crate::linalg::par_chunks`] partition — disjoint
+/// output tiles, bit-identical for any thread count).
+fn par_panels<T: Scalar, F: Fn(T, T) -> T + Copy + Sync>(
+    w: &VectorSet<T>,
+    v: &VectorSet<T>,
+    tri: bool,
+    threads: usize,
+    out: &mut MatF64,
+    f: F,
+) {
+    let (m, n) = (out.rows, out.cols);
+    crate::linalg::par_chunks(&mut out.data, n, m, threads, |rows, chunk| {
+        panel(w, v, rows, 0..n, tri, chunk, n, f)
+    });
+}
 
 /// Blocked N = W^T ∘min V.
 pub fn mgemm2<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
+    mgemm2_mt(w, v, 1)
+}
+
+/// [`mgemm2`] over row panels on `threads` threads (bit-identical to
+/// the serial kernel for any thread count).
+pub fn mgemm2_mt<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>, threads: usize) -> MatF64 {
     assert_eq!(w.nf, v.nf, "feature depth mismatch");
-    let (m, n, nf) = (w.nv, v.nv, w.nf);
-    let mut out = MatF64::zeros(m, n);
-    for i0 in (0..m).step_by(BI) {
-        let i1 = (i0 + BI).min(m);
-        for j0 in (0..n).step_by(BI) {
-            let j1 = (j0 + BI).min(n);
-            for i in i0..i1 {
-                let wi = w.col(i);
-                let mut j = j0;
-                // Register-tiled main loop: JT columns at once.
-                while j + JT <= j1 {
-                    let mut acc = [T::ZERO; JT];
-                    let cols: [&[T]; JT] = std::array::from_fn(|t| v.col(j + t));
-                    for q in 0..nf {
-                        let wq = wi[q];
-                        for t in 0..JT {
-                            acc[t] += wq.min_s(cols[t][q]);
-                        }
-                    }
-                    for t in 0..JT {
-                        out.set(i, j + t, acc[t].to_f64());
-                    }
-                    j += JT;
-                }
-                // Remainder columns.
-                while j < j1 {
-                    let vj = v.col(j);
-                    let mut acc = T::ZERO;
-                    for q in 0..nf {
-                        acc += wi[q].min_s(vj[q]);
-                    }
-                    out.set(i, j, acc.to_f64());
-                    j += 1;
-                }
-            }
-        }
-    }
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    par_panels(w, v, false, threads, &mut out, op_min::<T>);
+    out
+}
+
+/// Diagonal-block mGEMM: N = V^T ∘min V, strict upper triangle only
+/// (entries at and below the diagonal stay zero). ~2× fewer
+/// elementwise ops than [`mgemm2`] on the same block; computed entries
+/// are bit-identical to the full kernel's.
+pub fn mgemm2_tri<T: Scalar>(v: &VectorSet<T>) -> MatF64 {
+    mgemm2_tri_mt(v, 1)
+}
+
+/// [`mgemm2_tri`] on `threads` threads.
+pub fn mgemm2_tri_mt<T: Scalar>(v: &VectorSet<T>, threads: usize) -> MatF64 {
+    let mut out = MatF64::zeros(v.nv, v.nv);
+    par_panels(v, v, true, threads, &mut out, op_min::<T>);
     out
 }
 
 /// Blocked true GEMM (same schedule, multiply-add inner op) — the native
 /// comparator for the Table 1 min-vs-FMA headroom measurement.
 pub fn gemm<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
-    assert_eq!(w.nf, v.nf);
-    let (m, n, nf) = (w.nv, v.nv, w.nf);
-    let mut out = MatF64::zeros(m, n);
-    for i0 in (0..m).step_by(BI) {
-        let i1 = (i0 + BI).min(m);
-        for j0 in (0..n).step_by(BI) {
-            let j1 = (j0 + BI).min(n);
-            for i in i0..i1 {
-                let wi = w.col(i);
-                let mut j = j0;
-                while j + JT <= j1 {
-                    let mut acc = [T::ZERO; JT];
-                    let cols: [&[T]; JT] = std::array::from_fn(|t| v.col(j + t));
-                    for q in 0..nf {
-                        let wq = wi[q];
-                        for t in 0..JT {
-                            acc[t] += wq * cols[t][q];
-                        }
-                    }
-                    for t in 0..JT {
-                        out.set(i, j + t, acc[t].to_f64());
-                    }
-                    j += JT;
-                }
-                while j < j1 {
-                    let vj = v.col(j);
-                    let mut acc = T::ZERO;
-                    for q in 0..nf {
-                        acc += wi[q] * vj[q];
-                    }
-                    out.set(i, j, acc.to_f64());
-                    j += 1;
-                }
-            }
+    gemm_mt(w, v, 1)
+}
+
+/// [`gemm`] over row panels on `threads` threads.
+pub fn gemm_mt<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>, threads: usize) -> MatF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    par_panels(w, v, false, threads, &mut out, op_mul::<T>);
+    out
+}
+
+/// Diagonal-block GEMM: strict upper triangle of V^T V only.
+pub fn gemm_tri<T: Scalar>(v: &VectorSet<T>) -> MatF64 {
+    gemm_tri_mt(v, 1)
+}
+
+/// [`gemm_tri`] on `threads` threads.
+pub fn gemm_tri_mt<T: Scalar>(v: &VectorSet<T>, threads: usize) -> MatF64 {
+    let mut out = MatF64::zeros(v.nv, v.nv);
+    par_panels(v, v, true, threads, &mut out, op_mul::<T>);
+    out
+}
+
+/// One 3-way plane: X_t = pivot ∘min W materialized into `x` (rows
+/// `0..xm`), then a 2-way pass against V written **directly into the
+/// slab plane** (`plane_out`, ldo = v.nv) — no per-pivot full-plane
+/// element copy. `cols` restricts the written columns (diag-aware
+/// callers pass `jl+1..n`).
+fn mgemm3_plane<T: Scalar>(
+    w: &VectorSet<T>,
+    pivot: &[T],
+    v: &VectorSet<T>,
+    xm: usize,
+    cols: Range<usize>,
+    x: &mut VectorSet<T>,
+    plane_out: &mut [f64],
+) {
+    let nf = w.nf;
+    for i in 0..xm {
+        let wi = w.col(i);
+        let xc = x.col_mut(i);
+        for q in 0..nf {
+            xc[q] = pivot[q].min_s(wi[q]);
         }
     }
-    out
+    opcount::record((xm * nf) as u64);
+    panel(x, v, 0..xm, cols, false, plane_out, v.nv, op_min::<T>);
 }
 
 /// Blocked 3-way slab: slab[t, i, k] = Σ_q min(pivot_t, w_i, v_k).
 /// Implemented as the paper's X_j construction (§3.2): materialize
 /// X_t = pivot_t ∘min W once per pivot, then a 2-way pass against V —
-/// this halves the min count vs. the naive triple loop.
+/// this halves the min count vs. the naive triple loop. The 2-way pass
+/// writes straight into the slab's row-major plane.
 pub fn mgemm3<T: Scalar>(w: &VectorSet<T>, pivots: &VectorSet<T>, v: &VectorSet<T>) -> SlabF64 {
-    assert_eq!(w.nf, v.nf);
-    assert_eq!(w.nf, pivots.nf);
+    mgemm3_mt(w, pivots, v, 1)
+}
+
+/// [`mgemm3`] with pivot planes distributed over `threads` threads
+/// (planes are disjoint slab runs → bit-identical for any count).
+pub fn mgemm3_mt<T: Scalar>(
+    w: &VectorSet<T>,
+    pivots: &VectorSet<T>,
+    v: &VectorSet<T>,
+    threads: usize,
+) -> SlabF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    assert_eq!(w.nf, pivots.nf, "feature depth mismatch");
     let (m, n, nf, jt) = (w.nv, v.nv, w.nf, pivots.nv);
     let mut out = SlabF64::zeros(jt, m, n);
-    let mut x = VectorSet::<T>::zeros(nf, m); // X_t panel, reused per pivot
-    for t in 0..jt {
-        let pt = pivots.col(t).to_vec(); // detach borrow
-        for i in 0..m {
-            let wi = w.col(i);
-            let xc = x.col_mut(i);
-            for q in 0..nf {
-                xc[q] = pt[q].min_s(wi[q]);
-            }
+    let plane = m * n;
+    crate::linalg::par_chunks(&mut out.data, plane, jt, threads, |ts, chunk| {
+        let mut x = VectorSet::<T>::zeros(nf, m); // X_t panel, reused per pivot
+        for (pi, t) in ts.enumerate() {
+            mgemm3_plane(w, pivots.col(t), v, m, 0..n, &mut x, &mut chunk[pi * plane..(pi + 1) * plane]);
         }
-        let plane = mgemm2(&x, v);
-        for i in 0..m {
-            for k in 0..n {
-                out.set(t, i, k, plane.at(i, k));
+    });
+    out
+}
+
+/// Diagonal-block 3-way slab over one vector set: pivots are columns of
+/// `v` itself (local indices `pivot_locals`), and the coordinator only
+/// reads slab[t, i, k] for i < pivot_locals[t] < k (the unique-triple
+/// region, §4.2). This computes exactly that region — rows above the
+/// pivot, columns beyond it — and leaves the redundant sub-slices zero,
+/// cutting the per-plane elementwise ops from nv² to ~nv²/4 on average.
+/// Computed entries are bit-identical to [`mgemm3`]'s.
+pub fn mgemm3_diag<T: Scalar>(
+    v: &VectorSet<T>,
+    pivots: &VectorSet<T>,
+    pivot_locals: &[usize],
+) -> SlabF64 {
+    mgemm3_diag_mt(v, pivots, pivot_locals, 1)
+}
+
+/// [`mgemm3_diag`] with pivot planes distributed over `threads` threads.
+pub fn mgemm3_diag_mt<T: Scalar>(
+    v: &VectorSet<T>,
+    pivots: &VectorSet<T>,
+    pivot_locals: &[usize],
+    threads: usize,
+) -> SlabF64 {
+    assert_eq!(v.nf, pivots.nf, "feature depth mismatch");
+    assert_eq!(pivots.nv, pivot_locals.len(), "one local index per pivot");
+    let (n, nf, jt) = (v.nv, v.nf, pivots.nv);
+    let mut out = SlabF64::zeros(jt, n, n);
+    let plane = n * n;
+    crate::linalg::par_chunks(&mut out.data, plane, jt, threads, |ts, chunk| {
+        let mut x = VectorSet::<T>::zeros(nf, n);
+        for (pi, t) in ts.enumerate() {
+            let jl = pivot_locals[t];
+            debug_assert!(jl < n, "pivot local index out of block");
+            // A pivot at the block edge has an empty (i < jl < k)
+            // region — skip the X build entirely (its plane stays
+            // zero) rather than paying jl·nf mins for no output.
+            if jl + 1 >= n {
+                continue;
             }
+            mgemm3_plane(v, pivots.col(t), v, jl, jl + 1..n, &mut x, &mut chunk[pi * plane..(pi + 1) * plane]);
         }
-    }
+    });
     out
 }
 
@@ -187,4 +340,88 @@ mod tests {
         let b = reference::mgemm3(&w, &p, &v);
         assert_eq!(a.max_abs_diff(&b), 0.0);
     }
+
+    #[test]
+    fn triangular_matches_full_upper_triangle_bitwise() {
+        // Shapes straddling the JT (8) and BI (32) boundaries.
+        for &(nf, nv) in &[(7usize, 3usize), (64, 8), (33, 37), (96, 33), (20, 64)] {
+            let v = gen(nf, nv, 5, 0);
+            let full = mgemm2(&v, &v);
+            let tri = mgemm2_tri(&v);
+            let gfull = gemm(&v, &v);
+            let gtri = gemm_tri(&v);
+            for i in 0..nv {
+                for j in 0..nv {
+                    if j > i {
+                        assert!(
+                            tri.at(i, j).to_bits() == full.at(i, j).to_bits()
+                                && gtri.at(i, j).to_bits() == gfull.at(i, j).to_bits(),
+                            "({nf},{nv}) upper ({i},{j})"
+                        );
+                    } else {
+                        assert_eq!(tri.at(i, j), 0.0, "({nf},{nv}) lower ({i},{j})");
+                        assert_eq!(gtri.at(i, j), 0.0, "({nf},{nv}) lower ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_is_bit_invariant() {
+        let w = gen(50, 45, 9, 0);
+        let v = gen(50, 39, 9, 100);
+        let serial = mgemm2(&w, &v);
+        let gserial = gemm(&w, &v);
+        let tserial = mgemm2_tri(&w);
+        for threads in [2, 3, 4, 8] {
+            assert_eq!(serial, mgemm2_mt(&w, &v, threads), "mgemm2 x{threads}");
+            assert_eq!(gserial, gemm_mt(&w, &v, threads), "gemm x{threads}");
+            assert_eq!(tserial, mgemm2_tri_mt(&w, threads), "tri x{threads}");
+        }
+    }
+
+    #[test]
+    fn mgemm3_threads_and_diag() {
+        let v = gen(21, 13, 6, 0);
+        let locals = [0usize, 4, 7, 12];
+        let pivots = {
+            let mut p = VectorSet::<f64>::zeros(21, locals.len());
+            for (t, &j) in locals.iter().enumerate() {
+                p.col_mut(t).copy_from_slice(v.col(j));
+            }
+            p
+        };
+        let full = mgemm3(&v, &pivots, &v);
+        assert_eq!(full, mgemm3_mt(&v, &pivots, &v, 3), "mgemm3 threads");
+        let diag = mgemm3_diag(&v, &pivots, &locals);
+        assert_eq!(diag, mgemm3_diag_mt(&v, &pivots, &locals, 4), "diag threads");
+        for (t, &jl) in locals.iter().enumerate() {
+            for i in 0..13 {
+                for k in 0..13 {
+                    if i < jl && k > jl {
+                        assert_eq!(diag.at(t, i, k).to_bits(), full.at(t, i, k).to_bits());
+                    } else {
+                        assert_eq!(diag.at(t, i, k), 0.0, "redundant ({t},{i},{k})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_record_elementwise_ops() {
+        // The counter is process-global and other lib tests run kernels
+        // concurrently, so only lower bounds are assertable here; the
+        // exact ≤55% diag-reduction proof lives in
+        // `tests/triangular_threads.rs` (serialized binary).
+        let v = gen(40, 48, 7, 0);
+        let before = opcount::elem_ops();
+        let _ = mgemm2(&v, &v);
+        assert!(opcount::elem_ops() - before >= opcount::ops_full(40, 48, 48));
+        let before = opcount::elem_ops();
+        let _ = mgemm2_tri(&v);
+        assert!(opcount::elem_ops() - before >= opcount::ops_tri(40, 48));
+    }
+
 }

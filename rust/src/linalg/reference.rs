@@ -43,6 +43,42 @@ pub fn gemm<T: Scalar>(w: &VectorSet<T>, v: &VectorSet<T>) -> MatF64 {
     out
 }
 
+/// Diagonal-block variant of [`mgemm2`]: strict upper triangle of
+/// V^T ∘min V only (entries at and below the diagonal stay zero). The
+/// reference transcription of §4's symmetry halving.
+pub fn mgemm2_tri<T: Scalar>(v: &VectorSet<T>) -> MatF64 {
+    let mut out = MatF64::zeros(v.nv, v.nv);
+    for i in 0..v.nv {
+        let wi = v.col(i);
+        for j in (i + 1)..v.nv {
+            let vj = v.col(j);
+            let mut acc = T::ZERO;
+            for q in 0..v.nf {
+                acc += wi[q].min_s(vj[q]);
+            }
+            out.set(i, j, acc.to_f64());
+        }
+    }
+    out
+}
+
+/// Diagonal-block variant of [`gemm`]: strict upper triangle of V^T V.
+pub fn gemm_tri<T: Scalar>(v: &VectorSet<T>) -> MatF64 {
+    let mut out = MatF64::zeros(v.nv, v.nv);
+    for i in 0..v.nv {
+        let wi = v.col(i);
+        for j in (i + 1)..v.nv {
+            let vj = v.col(j);
+            let mut acc = T::ZERO;
+            for q in 0..v.nf {
+                acc += wi[q] * vj[q];
+            }
+            out.set(i, j, acc.to_f64());
+        }
+    }
+    out
+}
+
 /// slab[t, i, k] = Σ_q min(pivots_t[q], w_i[q], v_k[q]).
 pub fn mgemm3<T: Scalar>(w: &VectorSet<T>, pivots: &VectorSet<T>, v: &VectorSet<T>) -> SlabF64 {
     assert_eq!(w.nf, v.nf);
@@ -107,6 +143,26 @@ mod tests {
                         s.at(t, i, k),
                         metrics::n3_prime(p.col(t), w.col(i), v.col(k))
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tri_variants_match_full_upper_triangle() {
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 4, 19, 9, 0);
+        let full_m = mgemm2(&v, &v);
+        let tri_m = mgemm2_tri(&v);
+        let full_g = gemm(&v, &v);
+        let tri_g = gemm_tri(&v);
+        for i in 0..9 {
+            for j in 0..9 {
+                if j > i {
+                    assert_eq!(tri_m.at(i, j).to_bits(), full_m.at(i, j).to_bits());
+                    assert_eq!(tri_g.at(i, j).to_bits(), full_g.at(i, j).to_bits());
+                } else {
+                    assert_eq!(tri_m.at(i, j), 0.0);
+                    assert_eq!(tri_g.at(i, j), 0.0);
                 }
             }
         }

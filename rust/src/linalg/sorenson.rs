@@ -5,7 +5,7 @@
 //! comparison rates of the 1-bit codes in Table 6 (Haque et al.): each
 //! 64-bit word op performs 64 elementwise comparisons.
 
-use crate::linalg::MatF64;
+use crate::linalg::{opcount, MatF64};
 use crate::vecdata::bits::BitVectorSet;
 
 /// Reference bit kernel: N[i, j] = |u_i AND v_j| counted bit-by-bit
@@ -27,22 +27,86 @@ pub fn sorenson_mgemm_ref(w: &BitVectorSet, v: &BitVectorSet) -> MatF64 {
     out
 }
 
-/// Full numerator matrix N[i, j] = |u_i AND v_j| over packed words.
-pub fn sorenson_mgemm(w: &BitVectorSet, v: &BitVectorSet) -> MatF64 {
-    assert_eq!(w.nf, v.nf, "feature depth mismatch");
-    let mut out = MatF64::zeros(w.nv, v.nv);
-    for i in 0..w.nv {
-        let wi = w.words(i);
-        for j in 0..v.nv {
-            let vj = v.words(j);
+/// Reference diagonal-block kernel: strict upper triangle of
+/// [`sorenson_mgemm_ref`], bit-by-bit — the naive transcription of the
+/// §4 symmetry halving on the bit path (CpuReference's diag kernel).
+pub fn sorenson_mgemm_ref_tri(v: &BitVectorSet) -> MatF64 {
+    let mut out = MatF64::zeros(v.nv, v.nv);
+    for i in 0..v.nv {
+        for j in (i + 1)..v.nv {
             let mut acc = 0u64;
-            for (a, b) in wi.iter().zip(vj) {
-                acc += (a & b).count_ones() as u64;
+            for q in 0..v.nf {
+                acc += (v.get_bit(i, q) && v.get_bit(j, q)) as u64;
             }
             out.set(i, j, acc as f64);
         }
     }
     out
+}
+
+/// One row panel of the packed AND+popcount kernel, written into
+/// `out[(i - rows.start) * v.nv + j]`. `tri` restricts each row to
+/// j > i (diagonal blocks — the §4 symmetry halving on the bit path).
+fn popcount_panel(
+    w: &BitVectorSet,
+    v: &BitVectorSet,
+    rows: std::ops::Range<usize>,
+    tri: bool,
+    out: &mut [f64],
+) {
+    let n = v.nv;
+    let mut elems: u64 = 0;
+    for i in rows.start..rows.end {
+        let wi = w.words(i);
+        let row = (i - rows.start) * n;
+        let j_lo = if tri { i + 1 } else { 0 };
+        for j in j_lo..n {
+            let vj = v.words(j);
+            let mut acc = 0u64;
+            for (a, b) in wi.iter().zip(vj) {
+                acc += (a & b).count_ones() as u64;
+            }
+            out[row + j] = acc as f64;
+        }
+        elems += (n - j_lo) as u64;
+    }
+    // Table 6 unit: one elementwise comparison per feature of each
+    // computed pair (64 of them ride in each word op).
+    opcount::record(elems * w.nf as u64);
+}
+
+/// Full numerator matrix N[i, j] = |u_i AND v_j| over packed words.
+pub fn sorenson_mgemm(w: &BitVectorSet, v: &BitVectorSet) -> MatF64 {
+    sorenson_mgemm_mt(w, v, 1)
+}
+
+/// [`sorenson_mgemm`] with output rows partitioned over `threads`
+/// threads (disjoint row panels — bit-identical for any count).
+pub fn sorenson_mgemm_mt(w: &BitVectorSet, v: &BitVectorSet, threads: usize) -> MatF64 {
+    assert_eq!(w.nf, v.nf, "feature depth mismatch");
+    let mut out = MatF64::zeros(w.nv, v.nv);
+    par_row_panels(w, v, false, threads, &mut out);
+    out
+}
+
+/// Diagonal-block kernel: strict upper triangle of V AND V only
+/// (~2× fewer word ops; computed entries identical to the full kernel).
+pub fn sorenson_mgemm_tri(v: &BitVectorSet) -> MatF64 {
+    sorenson_mgemm_tri_mt(v, 1)
+}
+
+/// [`sorenson_mgemm_tri`] on `threads` threads.
+pub fn sorenson_mgemm_tri_mt(v: &BitVectorSet, threads: usize) -> MatF64 {
+    let mut out = MatF64::zeros(v.nv, v.nv);
+    par_row_panels(v, v, true, threads, &mut out);
+    out
+}
+
+fn par_row_panels(w: &BitVectorSet, v: &BitVectorSet, tri: bool, threads: usize, out: &mut MatF64) {
+    let (m, n) = (out.rows, out.cols);
+    crate::linalg::par_chunks(&mut out.data, n, m, threads, |rows, chunk| {
+        popcount_panel(w, v, rows, tri, chunk)
+    });
 }
 
 /// Unique-pair Sorenson metric values for one set (upper triangle).
@@ -93,6 +157,31 @@ mod tests {
         let a = sorenson_mgemm(&bits, &bits);
         let b = crate::linalg::reference::mgemm2(&floats, &floats);
         assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn tri_and_threads_match_full_kernel() {
+        for nf in [63, 64, 129] {
+            let bits = BitVectorSet::generate(23, nf, 11, 0.45);
+            let full = sorenson_mgemm(&bits, &bits);
+            let tri = sorenson_mgemm_tri(&bits);
+            let ref_tri = sorenson_mgemm_ref_tri(&bits);
+            for i in 0..11 {
+                for j in 0..11 {
+                    if j > i {
+                        assert_eq!(tri.at(i, j).to_bits(), full.at(i, j).to_bits(), "nf={nf}");
+                        assert_eq!(ref_tri.at(i, j).to_bits(), full.at(i, j).to_bits(), "nf={nf}");
+                    } else {
+                        assert_eq!(tri.at(i, j), 0.0, "nf={nf}");
+                        assert_eq!(ref_tri.at(i, j), 0.0, "nf={nf}");
+                    }
+                }
+            }
+            for threads in [2, 4] {
+                assert_eq!(full, sorenson_mgemm_mt(&bits, &bits, threads), "nf={nf}");
+                assert_eq!(tri, sorenson_mgemm_tri_mt(&bits, threads), "nf={nf}");
+            }
+        }
     }
 
     #[test]

@@ -68,6 +68,9 @@ run options:
   --nv N --nf N      vectors / features
   --precision f32|f64
   --backend pjrt|cpu|reference
+  --threads N        host compute threads per node (cpu backend's
+                     row-panel-parallel kernels; results bit-identical
+                     across thread counts; default 1)
   --npf N --npv N --npr N   processor grid (virtual nodes)
   --num-stage N --stage S   3-way staging
   --synthetic grid|verifiable|phewas|alleles   input generator (default grid)
@@ -81,6 +84,7 @@ run options:
 plan options:    --num-way 2|3 --npv N [--npr N]
 model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                  [--tgemm SECS] [--tcpu SECS] [--precision f32|f64]
+                 [--threads N] [--diag-load L] [--triangular]
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
                  [--synthetic grid|verifiable|phewas|alleles] [--seed N]
 ";
@@ -105,6 +109,7 @@ fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
     if let Some(b) = args.opt_str("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
+    cfg.threads = args.parse_or("threads", cfg.threads)?;
     let npf = args.parse_or("npf", cfg.grid.npf)?;
     let npv = args.parse_or("npv", cfg.grid.npv)?;
     let npr = args.parse_or("npr", cfg.grid.npr)?;
@@ -143,7 +148,7 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     args.reject_unknown()?;
     println!(
-        "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} repr={} stages={}{}",
+        "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} threads={} kernel={} repr={} stages={}{}",
         cfg.num_way,
         cfg.metric.name(),
         cfg.precision.tag(),
@@ -153,6 +158,8 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
         cfg.grid.npv,
         cfg.grid.npr,
         cfg.backend.name(),
+        cfg.threads,
+        coordinator::backend::diag_kernel_for(cfg.backend),
         cfg.metric.preferred_repr().name(),
         cfg.num_stage,
         cfg.stage.map(|s| format!(" (stage {s})")).unwrap_or_default(),
@@ -304,6 +311,9 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
         t_gemm: args.parse_or("tgemm", 6.5)?,
         t_cpu: args.parse_or("tcpu", 0.1)?,
         load: args.parse_or("load", 13)?,
+        diag_load: args.parse_or("diag-load", 0)?,
+        threads: args.parse_or("threads", 1)?,
+        triangular: args.switch("triangular"),
         nst: args.parse_or("nst", 16)?,
         net: CostModel::gemini(),
         link: CostModel::pcie2(),

@@ -91,11 +91,14 @@ impl NodeWriter {
 /// `repr` is the block representation the run's *metric instance*
 /// actually used (`Metric::preferred_repr`) — passed explicitly rather
 /// than derived from `cfg.metric` so an instance overriding the
-/// registry default can never write a lying sidecar.
+/// registry default can never write a lying sidecar. `diag_kernel` is
+/// likewise the *backend instance*'s report ("triangular" | "full") of
+/// which kernel serviced diagonal blocks.
 pub fn write_run_meta(
     dir: &Path,
     cfg: &RunConfig,
     repr: crate::vecdata::block::Repr,
+    diag_kernel: &str,
     stats: &RunStats,
 ) -> Result<PathBuf> {
     std::fs::create_dir_all(dir)
@@ -111,6 +114,8 @@ pub fn write_run_meta(
     text.push_str(&format!("nf = {}\n", cfg.nf));
     text.push_str(&format!("precision = \"{}\"\n", cfg.precision.tag()));
     text.push_str(&format!("backend = \"{}\"\n", cfg.backend.name()));
+    text.push_str(&format!("threads = {}\n", cfg.threads));
+    text.push_str(&format!("kernel = \"{diag_kernel}\"\n"));
     text.push_str(&format!("nodes = {}\n", cfg.grid.np()));
     text.push_str(&format!("metrics = {}\n", stats.metrics));
     if let Some(t) = cfg.output_threshold {
@@ -192,14 +197,17 @@ mod tests {
             num_way: 2,
             nv: 40,
             nf: 64,
+            threads: 4,
             output_threshold: Some(0.25),
             ..Default::default()
         };
         let stats = RunStats { metrics: 780, ..Default::default() };
-        write_run_meta(&dir, &cfg, cfg.metric.preferred_repr(), &stats).unwrap();
+        write_run_meta(&dir, &cfg, cfg.metric.preferred_repr(), "triangular", &stats).unwrap();
         let doc = read_run_meta(&dir).unwrap();
         assert_eq!(doc.get("run", "metric").unwrap().as_str().unwrap(), "ccc");
         assert_eq!(doc.get("run", "repr").unwrap().as_str().unwrap(), "float");
+        assert_eq!(doc.get("run", "threads").unwrap().as_int().unwrap(), 4);
+        assert_eq!(doc.get("run", "kernel").unwrap().as_str().unwrap(), "triangular");
         assert_eq!(doc.get("run", "nv").unwrap().as_int().unwrap(), 40);
         assert_eq!(doc.get("run", "metrics").unwrap().as_int().unwrap(), 780);
         assert_eq!(doc.get("run", "threshold").unwrap().as_float().unwrap(), 0.25);

@@ -31,6 +31,15 @@ pub struct ModelInput {
     pub t_cpu: f64,
     /// Per-node load ℓ: blocks (2-way) or block slices (3-way).
     pub load: usize,
+    /// How many of the `load` blocks are diagonal (2-way: one per node
+    /// when Δ = 0 lands on it; the triangular kernel halves those).
+    pub diag_load: usize,
+    /// Host compute threads driving the kernels (row-panel parallel —
+    /// near-linear on the mGEMM term; 1 = serial).
+    pub threads: usize,
+    /// Whether diagonal blocks run the symmetry-halved triangular
+    /// kernel (~0.5× the elementwise ops of the full square kernel).
+    pub triangular: bool,
     /// Stage count n_st (3-way).
     pub nst: usize,
     /// Internode fabric.
@@ -68,12 +77,28 @@ fn mblock_bytes(m: &ModelInput) -> u64 {
     (m.nvp * m.nvp * m.elem_bytes) as u64
 }
 
-/// 2-way model (§6.3).
+/// Effective per-node mGEMM block count after symmetry halving: the
+/// triangular kernel does (n_vp − 1)/(2 n_vp) ≈ 1/2 of a full block's
+/// elementwise ops on each diagonal block.
+fn effective_blocks(m: &ModelInput) -> f64 {
+    let diag = m.diag_load.min(m.load) as f64;
+    let tri_factor = if m.triangular { 0.5 } else { 1.0 };
+    (m.load as f64 - diag) + diag * tri_factor
+}
+
+/// Kernel-time divisor from row-panel thread parallelism (the mGEMM
+/// term scales; comm/transfer/CPU terms do not).
+fn thread_speedup(m: &ModelInput) -> f64 {
+    m.threads.max(1) as f64
+}
+
+/// 2-way model (§6.3), extended with the triangular-diag and
+/// thread-parallel kernel terms.
 pub fn predict_2way(m: &ModelInput) -> Prediction {
     let t_comm = m.net.msg_time(vblock_bytes(m));
     let t_tv = m.link.msg_time(vblock_bytes(m));
     let t_tm = m.link.msg_time(mblock_bytes(m));
-    let t_gemm_total = m.load as f64 * m.t_gemm;
+    let t_gemm_total = effective_blocks(m) * m.t_gemm / thread_speedup(m);
     let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu;
     Prediction {
         t_comm,
@@ -86,14 +111,17 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
 }
 
 /// 3-way model (§6.3). Each slice runs a pipeline of
-/// (n_vp/6)/n_st mGEMM steps plus 3 startup 2-way mGEMMs.
+/// (n_vp/6)/n_st mGEMM steps plus 3 startup 2-way mGEMMs. Thread
+/// parallelism scales the mGEMM term (diag sub-slice skipping is
+/// already part of the tetrahedral slice accounting).
 pub fn predict_3way(m: &ModelInput) -> Prediction {
     let t_comm = m.net.msg_time(vblock_bytes(m));
     let t_tv = m.link.msg_time(vblock_bytes(m));
     let t_tm = m.link.msg_time(mblock_bytes(m));
+    let t_gemm_eff = m.t_gemm / thread_speedup(m);
     let steps_per_slice = 3.0 + (m.nvp as f64 / 6.0) / m.nst as f64;
-    let per_slice = steps_per_slice * m.t_gemm + 3.0 * t_tv + 4.0 * t_tm + m.t_cpu;
-    let t_gemm_total = m.load as f64 * steps_per_slice * m.t_gemm;
+    let per_slice = steps_per_slice * t_gemm_eff + 3.0 * t_tv + 4.0 * t_tm + m.t_cpu;
+    let t_gemm_total = m.load as f64 * steps_per_slice * t_gemm_eff;
     let total = t_comm + t_tv + m.load as f64 * per_slice;
     Prediction {
         t_comm,
@@ -149,6 +177,9 @@ mod tests {
             t_gemm: 6.5, // Table 1 scale: DP mGEMM seconds
             t_cpu: 0.1,
             load: 13,
+            diag_load: 0,
+            threads: 1,
+            triangular: false,
             nst: 16,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
@@ -200,6 +231,32 @@ mod tests {
         m.nst = 480; // maximally staged
         let many = predict_3way(&m).gemm_fraction();
         assert!(few > many, "few={few} many={many}");
+    }
+
+    #[test]
+    fn threads_scale_only_the_gemm_term() {
+        let m1 = base();
+        let m4 = ModelInput { threads: 4, ..base() };
+        let p1 = predict_2way(&m1);
+        let p4 = predict_2way(&m4);
+        assert!((p4.t_gemm_total - p1.t_gemm_total / 4.0).abs() < 1e-12);
+        assert_eq!(p4.t_comm, p1.t_comm);
+        assert_eq!(p4.t_cpu, p1.t_cpu);
+        assert!(p4.total < p1.total);
+        let p3_1 = predict_3way(&m1);
+        let p3_4 = predict_3way(&ModelInput { threads: 4, ..base() });
+        assert!(p3_4.t_gemm_total < p3_1.t_gemm_total);
+    }
+
+    #[test]
+    fn triangular_halves_diag_blocks_only() {
+        // One diag block among 13: triangular saves t_gemm/2.
+        let full = predict_2way(&ModelInput { diag_load: 1, ..base() });
+        let tri = predict_2way(&ModelInput { diag_load: 1, triangular: true, ..base() });
+        assert!((full.t_gemm_total - tri.t_gemm_total - 0.5 * base().t_gemm).abs() < 1e-12);
+        // No diag blocks → the flag changes nothing.
+        let a = predict_2way(&ModelInput { triangular: true, ..base() });
+        assert_eq!(a.t_gemm_total, predict_2way(&base()).t_gemm_total);
     }
 
     #[test]

@@ -384,6 +384,13 @@ fn output_dir_gets_metric_tagged_run_meta() {
     let doc = comet::output::read_run_meta(&dir).unwrap();
     assert_eq!(doc.get("run", "metric").unwrap().as_str().unwrap(), "ccc");
     assert_eq!(doc.get("run", "num_way").unwrap().as_int().unwrap(), 2);
+    // The sidecar reports the compute-thread count and which kernel
+    // served diagonal blocks (cpu-optimized → triangular).
+    assert_eq!(
+        doc.get("run", "threads").unwrap().as_int().unwrap() as usize,
+        cfg.threads
+    );
+    assert_eq!(doc.get("run", "kernel").unwrap().as_str().unwrap(), "triangular");
     assert_eq!(
         doc.get("run", "metrics").unwrap().as_int().unwrap() as u64,
         out.stats.metrics

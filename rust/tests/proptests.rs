@@ -317,7 +317,7 @@ fn prop_ccc_engine_matches_scalar_oracle() {
             VectorSet::<f64>::generate(SyntheticKind::Alleles, seed, nf, nv, 0)
         },
         |v| {
-            let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized);
+            let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
             let metric = comet::metrics::engine::Ccc::new(v.nf);
             let store =
                 comet::coordinator::serial::all_pairs_with(&backend, &metric, v)
