@@ -33,8 +33,15 @@
 //! * `comparisons_per_sec` is the paper's Table 1 figure of merit: one
 //!   elementwise comparison per feature of each computed output entry
 //!   (`linalg::opcount::{ops_full, ops_tri}` / median seconds).
-//! * `kernel` is "full" (square block) or "tri" (symmetry-halved
-//!   diagonal block); `repr` matches the metric's block representation
+//! * `kernel` is "full" (square block), "tri" (symmetry-halved
+//!   diagonal block), or a whole-campaign session point:
+//!   "session-oneshot" (fresh `coordinator::run` per request —
+//!   re-ingest every time) vs "session-reused" (one `session::Session`
+//!   serving every request from its ingest-once block cache). For the
+//!   session points `comparisons_per_sec` is campaign comparisons
+//!   (nf · nv(nv−1)/2 per run × runs) over the median batch time, and
+//!   `iters` is the number of back-to-back runs per batch.
+//! * `repr` matches the metric's block representation
 //!   ("float" | "packed").
 //! * `source` is "measured" for harness output; seed points generated
 //!   without a local toolchain are marked "estimate" and are replaced
@@ -42,7 +49,13 @@
 
 use std::path::PathBuf;
 
+use comet::config::{InputSource, RunConfig};
+use comet::coordinator;
+use comet::decomp::Grid;
 use comet::linalg::{opcount, optimized, sorenson};
+use comet::metrics::MetricId;
+use comet::output::sink::DiscardSink;
+use comet::session::Session;
 use comet::util::timer::bench_run;
 use comet::vecdata::bits::BitVectorSet;
 use comet::vecdata::{SyntheticKind, VectorSet};
@@ -111,6 +124,61 @@ fn main() {
             std::hint::black_box(sorenson::sorenson_mgemm_tri_mt(&bits, threads));
         });
         push("sorenson", "packed", "tri", s, c);
+    }
+
+    // --- Session amortization: the same multi-node Sorensen campaign
+    // run back-to-back, one-shot (fresh load + pack per run) vs through
+    // one reused Session (blocks ingested once, then served from the
+    // dataset cache). One warmup batch each, so the reused point times
+    // pure cache-hit runs — the long-lived-server steady state.
+    {
+        let runs = if quick { 4usize } else { 8 };
+        let cfg = RunConfig {
+            metric: MetricId::Sorenson,
+            nv,
+            nf,
+            grid: Grid::new(1, 2, 1),
+            input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 1 },
+            store_metrics: false,
+            ..Default::default()
+        };
+        let campaign_cmps = nf as u64 * (nv as u64 * (nv as u64 - 1) / 2) * runs as u64;
+        let oneshot = bench_run("session-oneshot", 1, iters, || {
+            for _ in 0..runs {
+                std::hint::black_box(coordinator::run(&cfg).unwrap());
+            }
+        })
+        .median();
+        let session = Session::new();
+        let req = session.request_from_config(&cfg).unwrap();
+        let reused = bench_run("session-reused", 1, iters, || {
+            for _ in 0..runs {
+                std::hint::black_box(session.run(&req, &DiscardSink).unwrap());
+            }
+        })
+        .median();
+        entries.push(Entry {
+            metric: "sorenson",
+            repr: "packed",
+            kernel: "session-oneshot",
+            threads: 1,
+            nf,
+            nv,
+            iters: runs,
+            secs: oneshot,
+            cps: campaign_cmps as f64 / oneshot,
+        });
+        entries.push(Entry {
+            metric: "sorenson",
+            repr: "packed",
+            kernel: "session-reused",
+            threads: 1,
+            nf,
+            nv,
+            iters: runs,
+            secs: reused,
+            cps: campaign_cmps as f64 / reused,
+        });
     }
 
     println!(

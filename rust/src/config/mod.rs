@@ -71,8 +71,10 @@ impl BackendKind {
     }
 }
 
-/// Where the input vectors come from.
-#[derive(Debug, Clone, PartialEq)]
+/// Where the input vectors come from. `Eq + Hash` because an input
+/// source is two-thirds of a [`crate::session::DatasetSpec`] — the
+/// session layer keys ingested-block caches by it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum InputSource {
     /// Generate synthetically (kind, seed).
     Synthetic { kind: SyntheticKind, seed: u64 },
@@ -200,75 +202,211 @@ impl RunConfig {
     /// Build from a parsed TOML document.
     pub fn from_toml(doc: &toml::Doc) -> Result<Self> {
         let mut cfg = RunConfig::default();
-        if let Some(v) = doc.get("run", "metric") {
-            cfg.metric = MetricId::parse(v.as_str().context("run.metric")?)?;
+        cfg.apply_run_keys(doc, "run")?;
+        cfg.apply_decomp_keys(doc, "decomp")?;
+        cfg.apply_input(doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply the flat run-level keys of `section` over the current
+    /// values. Shared between the `[run]` table and the per-request
+    /// `[request.<name>]` override tables of a batch file.
+    fn apply_run_keys(&mut self, doc: &toml::Doc, section: &str) -> Result<()> {
+        if let Some(v) = doc.get(section, "metric") {
+            self.metric =
+                MetricId::parse(v.as_str().with_context(|| format!("{section}.metric"))?)?;
         }
-        if let Some(v) = doc.get("run", "num_way") {
-            cfg.num_way = v.as_int().context("run.num_way")? as usize;
+        if let Some(v) = doc.get(section, "num_way") {
+            self.num_way = v.as_int().with_context(|| format!("{section}.num_way"))? as usize;
         }
-        if let Some(v) = doc.get("run", "nv") {
-            cfg.nv = v.as_int().context("run.nv")? as usize;
+        if let Some(v) = doc.get(section, "nv") {
+            self.nv = v.as_int().with_context(|| format!("{section}.nv"))? as usize;
         }
-        if let Some(v) = doc.get("run", "nf") {
-            cfg.nf = v.as_int().context("run.nf")? as usize;
+        if let Some(v) = doc.get(section, "nf") {
+            self.nf = v.as_int().with_context(|| format!("{section}.nf"))? as usize;
         }
-        if let Some(v) = doc.get("run", "precision") {
-            cfg.precision = Precision::parse(v.as_str().context("run.precision")?)?;
+        if let Some(v) = doc.get(section, "precision") {
+            self.precision =
+                Precision::parse(v.as_str().with_context(|| format!("{section}.precision"))?)?;
         }
-        if let Some(v) = doc.get("run", "backend") {
-            cfg.backend = BackendKind::parse(v.as_str().context("run.backend")?)?;
+        if let Some(v) = doc.get(section, "backend") {
+            self.backend =
+                BackendKind::parse(v.as_str().with_context(|| format!("{section}.backend"))?)?;
         }
-        if let Some(v) = doc.get("run", "threads") {
-            cfg.threads = v.as_int().context("run.threads")? as usize;
+        if let Some(v) = doc.get(section, "threads") {
+            self.threads = v.as_int().with_context(|| format!("{section}.threads"))? as usize;
         }
-        if let Some(v) = doc.get("run", "store_metrics") {
-            cfg.store_metrics = v.as_bool().context("run.store_metrics")?;
+        if let Some(v) = doc.get(section, "store_metrics") {
+            self.store_metrics =
+                v.as_bool().with_context(|| format!("{section}.store_metrics"))?;
         }
-        if let Some(v) = doc.get("run", "output_dir") {
-            cfg.output_dir = Some(v.as_str().context("run.output_dir")?.to_string());
+        if let Some(v) = doc.get(section, "output_dir") {
+            self.output_dir = Some(
+                v.as_str()
+                    .with_context(|| format!("{section}.output_dir"))?
+                    .to_string(),
+            );
         }
-        if let Some(v) = doc.get("run", "output_threshold") {
-            cfg.output_threshold = Some(v.as_float().context("run.output_threshold")?);
+        if let Some(v) = doc.get(section, "output_threshold") {
+            self.output_threshold =
+                Some(v.as_float().with_context(|| format!("{section}.output_threshold"))?);
         }
-        let npf = doc.get("decomp", "npf").map(|v| v.as_int()).transpose()?.unwrap_or(1) as usize;
-        let npv = doc.get("decomp", "npv").map(|v| v.as_int()).transpose()?.unwrap_or(1) as usize;
-        let npr = doc.get("decomp", "npr").map(|v| v.as_int()).transpose()?.unwrap_or(1) as usize;
-        cfg.grid = Grid::new(npf, npv, npr);
-        if let Some(v) = doc.get("decomp", "num_stage") {
-            cfg.num_stage = v.as_int().context("decomp.num_stage")? as usize;
+        Ok(())
+    }
+
+    /// Apply the decomposition keys of `section` over the current grid
+    /// and staging values (absent keys keep their current value, so
+    /// request tables override only what they name).
+    fn apply_decomp_keys(&mut self, doc: &toml::Doc, section: &str) -> Result<()> {
+        let npf =
+            doc.get(section, "npf").map(|v| v.as_int()).transpose()?.unwrap_or(self.grid.npf as i64)
+                as usize;
+        let npv =
+            doc.get(section, "npv").map(|v| v.as_int()).transpose()?.unwrap_or(self.grid.npv as i64)
+                as usize;
+        let npr =
+            doc.get(section, "npr").map(|v| v.as_int()).transpose()?.unwrap_or(self.grid.npr as i64)
+                as usize;
+        self.grid = Grid::new(npf, npv, npr);
+        if let Some(v) = doc.get(section, "num_stage") {
+            self.num_stage = v.as_int().with_context(|| format!("{section}.num_stage"))? as usize;
         }
-        if let Some(v) = doc.get("decomp", "stage") {
-            cfg.stage = Some(v.as_int().context("decomp.stage")? as usize);
+        if let Some(v) = doc.get(section, "stage") {
+            self.stage = Some(v.as_int().with_context(|| format!("{section}.stage"))? as usize);
         }
+        Ok(())
+    }
+
+    /// Apply the `[input]` table.
+    fn apply_input(&mut self, doc: &toml::Doc) -> Result<()> {
         match doc.get("input", "file") {
             Some(v) => {
-                cfg.input = InputSource::File {
+                self.input = InputSource::File {
                     path: v.as_str().context("input.file")?.to_string(),
                 };
             }
             None => {
                 let kind = match doc.get("input", "synthetic").map(|v| v.as_str()).transpose()? {
-                    Some("grid") | None => SyntheticKind::RandomGrid,
-                    Some("verifiable") => SyntheticKind::Verifiable,
-                    Some("phewas") => SyntheticKind::PhewasLike,
-                    Some("alleles") => SyntheticKind::Alleles,
-                    Some(other) => bail!("unknown input.synthetic {other:?}"),
+                    Some(s) => SyntheticKind::parse(s)?,
+                    None => SyntheticKind::RandomGrid,
                 };
                 let seed = doc
                     .get("input", "seed")
                     .map(|v| v.as_int())
                     .transpose()?
                     .unwrap_or(1) as u64;
-                cfg.input = InputSource::Synthetic { kind, seed };
+                self.input = InputSource::Synthetic { kind, seed };
             }
         }
-        cfg.validate()?;
-        Ok(cfg)
+        Ok(())
     }
 
     pub fn from_toml_str(text: &str) -> Result<Self> {
         Self::from_toml(&toml::parse(text)?)
     }
+}
+
+/// One named request of a batch-campaign file.
+#[derive(Debug, Clone)]
+pub struct BatchEntry {
+    pub name: String,
+    pub cfg: RunConfig,
+}
+
+/// Parse a multi-request batch file (`comet batch`): the base
+/// `[run]` / `[decomp]` / `[input]` tables are shared by every request,
+/// and each `[request.<name>]` table overrides them (run-level and
+/// decomp-level keys are accepted flat in a request table). Requests
+/// keep the base `[input]` — the point of a batch is many runs over
+/// one ingested dataset — and execute in file order.
+pub fn batch_from_toml_str(text: &str) -> Result<Vec<BatchEntry>> {
+    let doc = toml::parse(text)?;
+    // Reject unknown sections outright: a bare `[request]`, a typo'd
+    // `[reqest.b]`, or top-level keys would otherwise silently drop
+    // requests/overrides from the campaign.
+    for section in doc.sections_in_order() {
+        let known = section == "run"
+            || section == "decomp"
+            || section == "input"
+            || section.starts_with("request.");
+        if !known {
+            bail!(
+                "unknown section [{section}] in batch file \
+                 (want [run], [decomp], [input], or [request.<name>])"
+            );
+        }
+    }
+    // A re-opened section merges keys — a copy-pasted request left
+    // unrenamed would silently collapse two runs into one.
+    if let Some(section) = doc.reopened_sections().first() {
+        bail!("duplicate section [{section}] in batch file");
+    }
+    let mut base = RunConfig::default();
+    base.apply_run_keys(&doc, "run")?;
+    base.apply_decomp_keys(&doc, "decomp")?;
+    base.apply_input(&doc)?;
+    // The base alone is not validated: it may be a partial template
+    // (e.g. no metric) that only becomes a legal run once a request
+    // table fills in the rest.
+    let mut entries = Vec::new();
+    // The full key vocabulary, enforced per table: typos (and
+    // misplaced keys) must error rather than be silently ignored.
+    // `store_metrics` is deliberately absent: batch runs stream through
+    // session sinks, so the legacy flag would be a silent no-op here
+    // (it remains valid for `comet run --config`).
+    const RUN_KEYS: [&str; 9] = [
+        "metric",
+        "num_way",
+        "nv",
+        "nf",
+        "precision",
+        "backend",
+        "threads",
+        "output_dir",
+        "output_threshold",
+    ];
+    const DECOMP_KEYS: [&str; 5] = ["npf", "npv", "npr", "num_stage", "stage"];
+    const INPUT_KEYS: [&str; 3] = ["file", "synthetic", "seed"];
+    for (section, allowed) in
+        [("run", &RUN_KEYS[..]), ("decomp", &DECOMP_KEYS[..]), ("input", &INPUT_KEYS[..])]
+    {
+        for key in doc.section_keys(section) {
+            if !allowed.contains(&key) {
+                bail!("batch file: unknown key {key:?} in [{section}]");
+            }
+        }
+    }
+    for section in doc.sections_in_order() {
+        let Some(name) = section.strip_prefix("request.") else {
+            continue;
+        };
+        if name.is_empty() {
+            bail!("batch request section needs a name: [request.<name>]");
+        }
+        // Request tables accept the run + decomp vocabulary flat.
+        // Input-family keys are deliberately absent — the shared
+        // `[input]` table is the point of a batch.
+        for key in doc.section_keys(section) {
+            if !(RUN_KEYS.contains(&key) || DECOMP_KEYS.contains(&key)) {
+                bail!(
+                    "request {name:?}: unknown key {key:?} (input-family keys belong in the \
+                     shared [input] table; valid request keys: {}|{})",
+                    RUN_KEYS.join("|"),
+                    DECOMP_KEYS.join("|")
+                );
+            }
+        }
+        let mut cfg = base.clone();
+        cfg.apply_run_keys(&doc, section)?;
+        cfg.apply_decomp_keys(&doc, section)?;
+        cfg.validate().with_context(|| format!("request {name:?}"))?;
+        entries.push(BatchEntry { name: name.to_string(), cfg });
+    }
+    if entries.is_empty() {
+        bail!("batch file has no [request.<name>] sections");
+    }
+    Ok(entries)
 }
 
 #[cfg(test)]
@@ -399,6 +537,118 @@ seed = 42
         }
         // Czekanowski keeps its 3-way form.
         RunConfig::from_toml_str("[run]\nmetric = \"czekanowski\"\nnum_way = 3\n").unwrap();
+    }
+
+    #[test]
+    fn batch_requests_override_base_in_file_order() {
+        let text = r#"
+[run]
+nv = 64
+nf = 32
+
+[input]
+synthetic = "alleles"
+seed = 3
+
+[request.ccc]
+metric = "ccc"
+npv = 2
+
+[request.sorenson-wide]
+metric = "sorenson"
+npv = 4
+threads = 2
+"#;
+        let entries = batch_from_toml_str(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "ccc");
+        assert_eq!(entries[0].cfg.metric, MetricId::Ccc);
+        assert_eq!(entries[0].cfg.grid, Grid::new(1, 2, 1));
+        assert_eq!(entries[0].cfg.nv, 64);
+        assert_eq!(entries[1].name, "sorenson-wide");
+        assert_eq!(entries[1].cfg.metric, MetricId::Sorenson);
+        assert_eq!(entries[1].cfg.grid, Grid::new(1, 4, 1));
+        assert_eq!(entries[1].cfg.threads, 2);
+        // Requests share the base input — the shared-dataset contract.
+        assert_eq!(entries[0].cfg.input, entries[1].cfg.input);
+    }
+
+    #[test]
+    fn batch_rejects_empty_and_invalid_requests() {
+        let err = batch_from_toml_str("[run]\nnv = 4\n").unwrap_err();
+        assert!(err.to_string().contains("no [request"), "{err}");
+        // An invalid request names itself in the error chain.
+        let err =
+            batch_from_toml_str("[request.bad]\nmetric = \"ccc\"\nnum_way = 3\n").unwrap_err();
+        assert!(format!("{err:#}").contains("bad"), "{err:#}");
+        let err = batch_from_toml_str("[request.]\nmetric = \"sorenson\"\n").unwrap_err();
+        assert!(err.to_string().contains("name"), "{err}");
+        // Input-family keys (and typos) in a request table must error,
+        // not silently run against the shared dataset anyway.
+        let err = batch_from_toml_str("[request.r]\nmetric = \"sorenson\"\nseed = 9\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("seed") && err.to_string().contains("[input]"), "{err}");
+        let err = batch_from_toml_str("[request.r]\nmetrc = \"sorenson\"\n").unwrap_err();
+        assert!(err.to_string().contains("metrc"), "{err}");
+        // Misnamed sections must error, not silently drop requests.
+        for bad in ["[request]\nmetric = \"ccc\"\n", "[reqest.b]\nnpv = 2\n", "top = 1\n"] {
+            let err = batch_from_toml_str(bad).unwrap_err();
+            assert!(err.to_string().contains("section"), "{bad:?}: {err}");
+        }
+        // Typos in the shared base tables must error too.
+        let err = batch_from_toml_str("[run]\nthrads = 4\n[request.r]\nmetric = \"sorenson\"\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("thrads"), "{err}");
+        // The legacy store_metrics flag is a no-op on the session path
+        // and must be rejected rather than silently ignored.
+        let err = batch_from_toml_str("[request.r]\nmetric = \"sorenson\"\nstore_metrics = true\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("store_metrics"), "{err}");
+        // A copy-pasted request left unrenamed must not silently merge.
+        let err = batch_from_toml_str(
+            "[request.a]\nmetric = \"sorenson\"\n[request.b]\nnpv = 2\n[request.a]\nnpv = 4\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate section"), "{err}");
+    }
+
+    #[test]
+    fn batch_accepts_every_request_key() {
+        // Pins the RUN_KEYS/DECOMP_KEYS whitelist to the appliers: every
+        // advertised request key must parse, apply, and validate.
+        let text = r#"
+[input]
+synthetic = "grid"
+seed = 2
+
+[request.full]
+metric = "czekanowski"
+num_way = 3
+nv = 30
+nf = 24
+precision = "f32"
+backend = "reference"
+threads = 2
+output_dir = "/tmp/comet-batch-keys"
+output_threshold = 0.5
+npf = 1
+npv = 3
+npr = 2
+num_stage = 4
+stage = 3
+"#;
+        let entries = batch_from_toml_str(text).unwrap();
+        let cfg = &entries[0].cfg;
+        assert_eq!(cfg.num_way, 3);
+        assert_eq!((cfg.nv, cfg.nf), (30, 24));
+        assert_eq!(cfg.precision, Precision::F32);
+        assert_eq!(cfg.backend, BackendKind::CpuReference);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.output_dir.as_deref(), Some("/tmp/comet-batch-keys"));
+        assert_eq!(cfg.output_threshold, Some(0.5));
+        assert_eq!(cfg.grid, Grid::new(1, 3, 2));
+        assert_eq!(cfg.num_stage, 4);
+        assert_eq!(cfg.stage, Some(3));
     }
 
     #[test]

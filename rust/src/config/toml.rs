@@ -48,6 +48,14 @@ impl Value {
 #[derive(Debug, Default, Clone)]
 pub struct Doc {
     entries: BTreeMap<(String, String), Value>,
+    /// Section names in first-appearance order (batch request files are
+    /// executed in file order, which a BTreeMap alone would lose).
+    order: Vec<String>,
+    /// Sections whose `[header]` appeared more than once. Re-opening
+    /// merges keys (TOML-like), but strict consumers (batch files)
+    /// reject it — a copy-pasted `[request.a]` left unrenamed would
+    /// otherwise silently collapse two requests into one.
+    reopened: Vec<String>,
 }
 
 impl Doc {
@@ -59,6 +67,27 @@ impl Doc {
         let mut v: Vec<&str> = self.entries.keys().map(|(s, _)| s.as_str()).collect();
         v.dedup();
         v
+    }
+
+    /// Section names in the order they first appear in the document
+    /// (including empty sections — a bare `[header]` with no keys).
+    pub fn sections_in_order(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Sections whose header appeared more than once (merged keys).
+    pub fn reopened_sections(&self) -> &[String] {
+        &self.reopened
+    }
+
+    /// All keys of one section (sorted — BTreeMap order). Lets callers
+    /// reject unknown keys instead of silently ignoring typos.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
     }
 }
 
@@ -76,6 +105,11 @@ pub fn parse(text: &str) -> Result<Doc> {
                 bail!("line {}: malformed section header {raw:?}", lineno + 1);
             };
             section = name.trim().to_string();
+            if !doc.order.contains(&section) {
+                doc.order.push(section.clone());
+            } else if !doc.reopened.contains(&section) {
+                doc.reopened.push(section.clone());
+            }
             continue;
         }
         let Some(eq) = line.find('=') else {
@@ -88,6 +122,9 @@ pub fn parse(text: &str) -> Result<Doc> {
         }
         let value = parse_value(val)
             .map_err(|e| anyhow::anyhow!("line {}: {e} in {raw:?}", lineno + 1))?;
+        if !doc.order.contains(&section) {
+            doc.order.push(section.clone());
+        }
         let prev = doc
             .entries
             .insert((section.clone(), key.to_string()), value);
@@ -180,6 +217,24 @@ mod tests {
     fn duplicate_keys_rejected() {
         let err = parse("a = 1\na = 2\n").unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn sections_in_order_preserves_file_order() {
+        let doc = parse("top = 1\n[zeta]\nk = 1\n[alpha]\nk = 2\n[zeta]\n").unwrap();
+        assert_eq!(doc.sections_in_order(), &["", "zeta", "alpha"]);
+        // Re-opened headers are tracked (strict consumers reject them).
+        assert_eq!(doc.reopened_sections(), &["zeta"]);
+        let doc = parse("[a]\nk = 1\n[b]\nk = 2\n").unwrap();
+        assert!(doc.reopened_sections().is_empty());
+    }
+
+    #[test]
+    fn section_keys_lists_one_section() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        assert_eq!(doc.section_keys("a"), vec!["x", "y"]);
+        assert_eq!(doc.section_keys("b"), vec!["z"]);
+        assert!(doc.section_keys("c").is_empty());
     }
 
     #[test]

@@ -29,8 +29,11 @@ use crate::comm::VirtualCluster;
 use crate::config::{BackendKind, InputSource, Precision, RunConfig};
 use crate::decomp::partition::Partition;
 use crate::metrics::store::{PairStore, TripleStore};
-use crate::runtime::PjrtService;
+use crate::metrics::Metric;
+use crate::output::sink::{CollectSink, FileSink, ResultSink, TeeRef};
+use crate::runtime::{PjrtService, RuntimeClient};
 use crate::util::Scalar;
+use crate::vecdata::block::Block;
 use crate::vecdata::{io as vio, VectorSet};
 
 /// Per-run counters and timings, merged across nodes.
@@ -48,6 +51,9 @@ pub struct RunStats {
     /// (the cluster-level counters are only a cross-check now).
     pub comm_bytes: u64,
     pub comm_messages: u64,
+    /// Result tiles pushed through the run's [`ResultSink`] (0 when the
+    /// sink is null — the `--no-store` fast path skips tile assembly).
+    pub tiles: u64,
     /// Wall-clock phases (seconds; max across nodes = makespan).
     pub t_input: f64,
     pub t_compute: f64,
@@ -62,6 +68,7 @@ impl RunStats {
         self.mgemm2_calls += o.mgemm2_calls;
         self.mgemm3_calls += o.mgemm3_calls;
         self.metrics += o.metrics;
+        self.tiles += o.tiles;
         // Counters sum across nodes; wall-clock phases take the max
         // (makespan). comm_* and t_accel previously fell through this
         // merge entirely; the comm totals of a run now flow exclusively
@@ -91,21 +98,113 @@ pub struct RunOutcome {
 /// What one node thread returns.
 pub(crate) struct NodeResult {
     pub checksum: Checksum,
-    pub pairs: PairStore,
-    pub triples: TripleStore,
     pub stats: RunStats,
+}
+
+/// Supplies ingested node blocks to a run — the seam the session layer
+/// uses to share a dataset's per-`(block, repr)` ingests across many
+/// runs. One-shot runs use [`FreshIngest`] (load + ingest every time).
+/// Non-generic (one method per run precision) so it can sit behind an
+/// `Arc<dyn _>` in every run path; [`ProvideBlocks`] bridges back into
+/// the generic node programs.
+pub trait BlockProvider: Send + Sync {
+    fn block_f32(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f32>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f32>>;
+
+    fn block_f64(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f64>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f64>>;
+}
+
+/// The one-shot provider: load (or generate) the block and ingest it
+/// into the metric's preferred representation, every time it is asked.
+pub struct FreshIngest;
+
+impl BlockProvider for FreshIngest {
+    fn block_f32(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f32>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f32>> {
+        Ok(metric.ingest(load_block::<f32>(cfg, pv, pf)?))
+    }
+
+    fn block_f64(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f64>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f64>> {
+        Ok(metric.ingest(load_block::<f64>(cfg, pv, pf)?))
+    }
+}
+
+/// Precision-dispatch bridge: implemented for exactly the two run
+/// precisions, so the generic node programs can pull typed blocks out
+/// of a non-generic [`BlockProvider`].
+pub trait ProvideBlocks: Scalar {
+    fn provide(
+        provider: &dyn BlockProvider,
+        cfg: &RunConfig,
+        metric: &dyn Metric<Self>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<Self>>;
+}
+
+impl ProvideBlocks for f32 {
+    fn provide(
+        provider: &dyn BlockProvider,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f32>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f32>> {
+        provider.block_f32(cfg, metric, pv, pf)
+    }
+}
+
+impl ProvideBlocks for f64 {
+    fn provide(
+        provider: &dyn BlockProvider,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f64>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f64>> {
+        provider.block_f64(cfg, metric, pv, pf)
+    }
 }
 
 /// Run a configured campaign end-to-end. Dispatches on precision; for
 /// [`BackendKind::Pjrt`] a [`PjrtService`] is started for the run.
+///
+/// One-shot shim over the session-first core: blocks are loaded and
+/// ingested fresh, results land in `RunOutcome::{pairs, triples}` /
+/// per-node files per the config's `store_metrics` / `output_dir`.
+/// Long-lived callers should hold a [`crate::session::Session`] instead
+/// (ingest-once blocks, persistent executable cache, streaming sinks).
 pub fn run(cfg: &RunConfig) -> Result<RunOutcome> {
     run_with_artifacts(cfg, std::path::Path::new("artifacts"))
 }
 
 /// As [`run`], with an explicit artifact directory. Starts (and tears
 /// down) a fresh PJRT service — one-shot campaigns. Long-lived callers
-/// (benches, servers) should start one [`PjrtService`] and use
-/// [`run_with_client`] so compiled executables are reused across runs.
+/// (benches, servers) should start one [`PjrtService`] (or a
+/// [`crate::session::Session`]) so compiled executables are reused
+/// across runs.
 pub fn run_with_artifacts(cfg: &RunConfig, artifact_dir: &std::path::Path) -> Result<RunOutcome> {
     let service = match cfg.backend {
         BackendKind::Pjrt => Some(PjrtService::start(artifact_dir).context("start PJRT service")?),
@@ -117,9 +216,65 @@ pub fn run_with_artifacts(cfg: &RunConfig, artifact_dir: &std::path::Path) -> Re
 /// Run against an existing PJRT service (None for native backends).
 /// The service's executable cache persists across calls — the §Perf
 /// fix for per-run artifact recompilation (~70 ms/run on this host).
-pub fn run_with_client(
+///
+/// Legacy sink assembly: `store_metrics` → a [`CollectSink`] drained
+/// into the outcome, `output_dir` → a [`FileSink`]; both may be active
+/// at once, neither means a null sink (tile assembly skipped).
+pub fn run_with_client(cfg: &RunConfig, client: Option<RuntimeClient>) -> Result<RunOutcome> {
+    run_with_legacy_sinks(cfg, cfg.store_metrics, true, |sink| {
+        run_streamed(cfg, client, Arc::new(FreshIngest), sink)
+    })
+}
+
+/// The legacy collection shape shared by [`run_with_client`] and
+/// `session::Session::run_collect`: a [`CollectSink`] (when `collect`)
+/// plus a [`FileSink`] (when `add_file` and the config names an output
+/// directory — session paths pass false because `Session::run` already
+/// rides the request's file sink), teed; afterwards the collected
+/// stores are unpacked into `RunOutcome::{pairs, triples}` by
+/// `num_way`.
+pub(crate) fn run_with_legacy_sinks(
     cfg: &RunConfig,
-    client: Option<crate::runtime::RuntimeClient>,
+    collect: bool,
+    add_file: bool,
+    run: impl FnOnce(&dyn ResultSink) -> Result<RunOutcome>,
+) -> Result<RunOutcome> {
+    let collect = collect.then(|| CollectSink::for_metric(cfg.metric));
+    let file = if add_file {
+        cfg.output_dir.as_ref().map(|dir| FileSink::new(dir, cfg.output_threshold))
+    } else {
+        None
+    };
+    let mut sinks: Vec<&dyn ResultSink> = Vec::new();
+    if let Some(c) = &collect {
+        sinks.push(c);
+    }
+    if let Some(f) = &file {
+        sinks.push(f);
+    }
+    let tee = TeeRef::new(sinks);
+    let mut outcome = run(&tee)?;
+    if let Some(c) = collect {
+        let (pairs, triples) = c.take();
+        if cfg.num_way == 2 {
+            outcome.pairs = Some(pairs);
+        } else {
+            outcome.triples = Some(triples);
+        }
+    }
+    Ok(outcome)
+}
+
+/// The session-first core: run against an explicit ingested-block
+/// provider and a streaming result sink. Everything else ([`run`],
+/// [`run_with_client`], `session::Session::run`) is assembly around
+/// this. The outcome carries stats and the §5 checksum; metric values
+/// flow exclusively through `sink`.
+pub fn run_streamed(
+    cfg: &RunConfig,
+    client: Option<RuntimeClient>,
+    provider: Arc<dyn BlockProvider>,
+    sink: &dyn ResultSink,
 ) -> Result<RunOutcome> {
     cfg.validate()?;
     if cfg.num_way == 3 && cfg.grid.npf > 1 {
@@ -127,8 +282,8 @@ pub fn run_with_client(
     }
     let accel_before = client.as_ref().map(|c| c.stats().1).unwrap_or(0.0);
     let mut outcome = match cfg.precision {
-        Precision::F32 => run_typed::<f32>(cfg, client.clone()),
-        Precision::F64 => run_typed::<f64>(cfg, client.clone()),
+        Precision::F32 => run_typed::<f32>(cfg, client.clone(), provider, sink),
+        Precision::F64 => run_typed::<f64>(cfg, client.clone(), provider, sink),
     }?;
     if let Some(c) = &client {
         let (_execs, secs) = c.stats();
@@ -137,9 +292,11 @@ pub fn run_with_client(
     Ok(outcome)
 }
 
-fn run_typed<T: Scalar>(
+fn run_typed<T: Scalar + ProvideBlocks>(
     cfg: &RunConfig,
-    client: Option<crate::runtime::RuntimeClient>,
+    client: Option<RuntimeClient>,
+    provider: Arc<dyn BlockProvider>,
+    sink: &dyn ResultSink,
 ) -> Result<RunOutcome> {
     let backend = backend::make_backend::<T>(cfg.backend, cfg.precision, client, cfg.threads)?;
     let metric = crate::metrics::make_metric::<T>(cfg.metric, cfg);
@@ -147,22 +304,38 @@ fn run_typed<T: Scalar>(
     let mut cluster = VirtualCluster::new(np, cfg.precision.bytes());
     let counters = cluster.counters();
     let endpoints = cluster.endpoints();
+    let null = sink.is_null();
 
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for ep in endpoints {
+        let coord = cfg.grid.coords(ep.rank);
+        // Only ranks that assemble metrics get a node sink (2-way
+        // assembly happens on the pf = 0 plane; other pf ranks feed the
+        // npf reduction and emit nothing) — so e.g. a FileSink creates
+        // exactly the per-node files the pre-sink coordinator did.
+        let emits = cfg.num_way != 2 || coord.pf == 0;
+        let node_sink = if emits && !null {
+            Some(sink.node_sink(ep.rank)?)
+        } else {
+            None
+        };
         let cfg = cfg.clone();
         let backend = Arc::clone(&backend);
         let metric = Arc::clone(&metric);
+        let provider = Arc::clone(&provider);
         handles.push(
             std::thread::Builder::new()
                 .name(format!("node-{}", ep.rank))
                 .spawn(move || -> Result<NodeResult> {
-                    let coord = cfg.grid.coords(ep.rank);
                     if cfg.num_way == 2 {
-                        two_way::node_main::<T>(&cfg, coord, ep, backend, metric)
+                        two_way::node_main::<T>(
+                            &cfg, coord, ep, backend, metric, provider, node_sink,
+                        )
                     } else {
-                        three_way::node_main::<T>(&cfg, coord, ep, backend, metric)
+                        three_way::node_main::<T>(
+                            &cfg, coord, ep, backend, metric, provider, node_sink,
+                        )
                     }
                 })
                 .context("spawn node thread")?,
@@ -170,14 +343,10 @@ fn run_typed<T: Scalar>(
     }
 
     let mut outcome = RunOutcome::default();
-    let mut pairs = PairStore::for_metric(cfg.metric);
-    let mut triples = TripleStore::for_metric(cfg.metric);
     for h in handles {
         let res = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
         outcome.checksum.merge(res.checksum);
         outcome.stats.absorb(&res.stats);
-        pairs.extend(res.pairs);
-        triples.extend(res.triples);
     }
     outcome.stats.t_total = t0.elapsed().as_secs_f64();
     // The absorbed per-node sent totals must reproduce the fabric's own
@@ -191,22 +360,10 @@ fn run_typed<T: Scalar>(
         outcome.stats.comm_messages,
         counters.messages.load(std::sync::atomic::Ordering::Relaxed)
     );
-    if cfg.store_metrics {
-        if cfg.num_way == 2 {
-            outcome.pairs = Some(pairs);
-        } else {
-            outcome.triples = Some(triples);
-        }
-    }
-    if let Some(dir) = &cfg.output_dir {
-        crate::output::write_run_meta(
-            std::path::Path::new(dir),
-            cfg,
-            metric.preferred_repr(),
-            backend.diag_kernel(),
-            &outcome.stats,
-        )?;
-    }
+    // The sink owns result delivery end-to-end, including the run.meta
+    // sidecar (FileSink writes it next to its metric files; everything
+    // else no-ops).
+    sink.on_run_complete(cfg, metric.preferred_repr(), backend.diag_kernel(), &outcome.stats)?;
     Ok(outcome)
 }
 

@@ -2,8 +2,11 @@
 //! through a backend, without the cluster machinery. Used by examples,
 //! tests (as the end-to-end oracle path) and kernel-level benches.
 //!
-//! The `*_with` variants take an explicit [`Metric`]; the plain
-//! functions keep the historical Czekanowski behavior.
+//! The `*_into` variants stream [`Tile`]s into a caller-supplied
+//! [`NodeSink`] (the same result path the coordinated node programs
+//! use); the `*_with` variants collect into stores through a
+//! [`CollectSink`]; the plain functions keep the historical
+//! Czekanowski behavior.
 
 use std::sync::Arc;
 
@@ -11,36 +14,55 @@ use anyhow::Result;
 
 use crate::coordinator::backend::Backend;
 use crate::metrics::engine::Czekanowski;
-use crate::metrics::store::{PairStore, TripleStore};
+use crate::metrics::store::{PairEntry, PairStore, TripleEntry, TripleStore};
 use crate::metrics::Metric;
+use crate::output::sink::{CollectSink, NodeSink, ResultSink, Tile};
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
 
-/// All unique 2-way metrics of one vector set under `metric`. The set
-/// is ingested into the metric's preferred representation first (the
-/// same pack-once path the coordinated runs use).
-pub fn all_pairs_with<T: Scalar>(
+/// Stream all unique 2-way metrics of one vector set under `metric`
+/// into `sink` as a single tile. The set is ingested into the metric's
+/// preferred representation first (the same pack-once path the
+/// coordinated runs use). Returns the number of values emitted.
+pub fn all_pairs_into<T: Scalar>(
     backend: &Arc<dyn Backend<T>>,
     metric: &dyn Metric<T>,
     v: &VectorSet<T>,
-) -> Result<PairStore> {
+    sink: &mut dyn NodeSink,
+) -> Result<u64> {
     let block = metric.ingest(v.clone());
     // One set against itself — only i < j is read, so the
     // symmetry-halved diagonal kernel applies (same as the coordinated
     // runs' diag blocks).
     let n = metric.numerators2_diag(backend.as_ref(), &block)?;
     let dens = metric.denominators(&block)?;
-    let mut store = PairStore::for_metric(metric.id());
+    let mut entries = Vec::with_capacity(v.nv * v.nv.saturating_sub(1) / 2);
     for j in 1..v.nv {
         for i in 0..j {
-            store.push(
-                v.first_id + i,
-                v.first_id + j,
-                metric.combine2(n.at(i, j), dens[i], dens[j]),
-            );
+            entries.push(PairEntry {
+                i: (v.first_id + i) as u32,
+                j: (v.first_id + j) as u32,
+                value: metric.combine2(n.at(i, j), dens[i], dens[j]),
+            });
         }
     }
-    Ok(store)
+    let count = entries.len() as u64;
+    sink.tile(Tile::Pairs { metric: metric.id(), entries })?;
+    Ok(count)
+}
+
+/// All unique 2-way metrics of one vector set under `metric`,
+/// collected into a store.
+pub fn all_pairs_with<T: Scalar>(
+    backend: &Arc<dyn Backend<T>>,
+    metric: &dyn Metric<T>,
+    v: &VectorSet<T>,
+) -> Result<PairStore> {
+    let collect = CollectSink::for_metric(metric.id());
+    let mut node = collect.node_sink(0)?;
+    all_pairs_into(backend, metric, v, node.as_mut())?;
+    node.finish()?;
+    Ok(collect.take().0)
 }
 
 /// All unique 2-way Proportional Similarity metrics of one vector set.
@@ -51,24 +73,27 @@ pub fn all_pairs<T: Scalar>(
     all_pairs_with(backend, &Czekanowski, v)
 }
 
-/// All unique 3-way metrics of one vector set under `metric`
-/// (O(n_v³) output — small sets only).
-pub fn all_triples_with<T: Scalar>(
+/// Stream all unique 3-way metrics of one vector set under `metric`
+/// into `sink`, one tile per pivot chunk (O(n_v³) values — small sets
+/// only). Returns the number of values emitted.
+pub fn all_triples_into<T: Scalar>(
     backend: &Arc<dyn Backend<T>>,
     metric: &dyn Metric<T>,
     v: &VectorSet<T>,
-) -> Result<TripleStore> {
+    sink: &mut dyn NodeSink,
+) -> Result<u64> {
     let block = metric.ingest(v.clone());
     let n2 = metric.numerators2_diag(backend.as_ref(), &block)?;
     let dens = metric.denominators(&block)?;
-    let mut store = TripleStore::for_metric(metric.id());
     let jt = backend.pivot_batch_for(v.nf, v.nv);
     let pivot_ids: Vec<usize> = (0..v.nv).collect();
+    let mut count = 0u64;
     for chunk in pivot_ids.chunks(jt) {
         let pivots = block.select_cols(chunk)?;
         // Only i < chunk[t] < k is read below — the diag-aware slab
         // kernel skips the rest.
         let slab = metric.numerators3_diag(backend.as_ref(), &block, &pivots, chunk)?;
+        let mut entries = Vec::new();
         for (t, &j) in chunk.iter().enumerate() {
             for i in 0..j {
                 for k in (j + 1)..v.nv {
@@ -81,12 +106,35 @@ pub fn all_triples_with<T: Scalar>(
                         dens[j],
                         dens[k],
                     );
-                    store.push(v.first_id + i, v.first_id + j, v.first_id + k, c3);
+                    entries.push(TripleEntry {
+                        i: (v.first_id + i) as u32,
+                        j: (v.first_id + j) as u32,
+                        k: (v.first_id + k) as u32,
+                        value: c3,
+                    });
                 }
             }
         }
+        count += entries.len() as u64;
+        if !entries.is_empty() {
+            sink.tile(Tile::Triples { metric: metric.id(), entries })?;
+        }
     }
-    Ok(store)
+    Ok(count)
+}
+
+/// All unique 3-way metrics of one vector set under `metric`,
+/// collected into a store (O(n_v³) output — small sets only).
+pub fn all_triples_with<T: Scalar>(
+    backend: &Arc<dyn Backend<T>>,
+    metric: &dyn Metric<T>,
+    v: &VectorSet<T>,
+) -> Result<TripleStore> {
+    let collect = CollectSink::for_metric(metric.id());
+    let mut node = collect.node_sink(0)?;
+    all_triples_into(backend, metric, v, node.as_mut())?;
+    node.finish()?;
+    Ok(collect.take().1)
 }
 
 /// All unique 3-way Proportional Similarity metrics of one vector set.
@@ -102,6 +150,7 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::CpuOptimized;
     use crate::metrics;
+    use crate::output::sink::StatsOnlySink;
     use crate::vecdata::SyntheticKind;
 
     #[test]
@@ -158,6 +207,23 @@ mod tests {
             let want = bits.sorenson2(e.i as usize, e.j as usize);
             assert_eq!(e.value, want, "pair ({}, {})", e.i, e.j);
         }
+    }
+
+    #[test]
+    fn streaming_variants_count_without_collecting() {
+        // The `*_into` drivers push tiles without building any store —
+        // the serving path in miniature.
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 3, 24, 8, 0);
+        let backend: Arc<dyn Backend<f64>> = Arc::new(CpuOptimized::default());
+        let stats = StatsOnlySink::new();
+        let mut node = stats.node_sink(0).unwrap();
+        let n2 = all_pairs_into(&backend, &Czekanowski, &v, node.as_mut()).unwrap();
+        let n3 = all_triples_into(&backend, &Czekanowski, &v, node.as_mut()).unwrap();
+        node.finish().unwrap();
+        assert_eq!(n2, 28);
+        assert_eq!(n3, 8 * 7 * 6 / 6);
+        assert_eq!(stats.values(), n2 + n3);
+        assert!(stats.tiles() >= 2);
     }
 
     #[test]

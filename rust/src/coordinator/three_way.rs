@@ -7,60 +7,59 @@
 //! sequence of 3-way slabs, optionally cut into n_st stages. The
 //! coordinator assembles c3 from Eq. (1):
 //!   c3 = (3/2)(n2_ij + n2_ik + n2_jk − n3') / (Σv_i + Σv_j + Σv_k).
+//!
+//! Own blocks come from the run's
+//! [`crate::coordinator::BlockProvider`]; assembled values leave as
+//! [`Tile`]s through the node's [`NodeSink`], one tile per pivot chunk
+//! (the natural "finished work" unit of Algorithm 3's inner pipeline).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::checksum::Checksum;
 use crate::comm::{Endpoint, Payload};
 use crate::config::RunConfig;
-use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
+use crate::coordinator::{backend::Backend, BlockProvider, NodeResult, ProvideBlocks, RunStats};
 use crate::decomp::three_way::{stripe_pivots, Combo3};
 use crate::decomp::{partition::Partition, three_way, NodeCoord};
 use crate::linalg::MatF64;
-use crate::metrics::{indexing, store::PairStore, store::TripleStore, Metric};
-use crate::output::NodeWriter;
+use crate::metrics::{store::TripleEntry, Metric};
+use crate::output::sink::{NodeSink, Tile};
 use crate::util::{timer::Stopwatch, Scalar};
 use crate::vecdata::block::Block;
 
 const TAG_BLOCK3: u64 = 5_000;
 const TAG_SUMS3: u64 = 6_000;
 
-pub(crate) fn node_main<T: Scalar>(
+pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     cfg: &RunConfig,
     coord: NodeCoord,
     mut ep: Endpoint,
     backend: Arc<dyn Backend<T>>,
     metric: Arc<dyn Metric<T>>,
+    provider: Arc<dyn BlockProvider>,
+    mut sink: Option<Box<dyn NodeSink>>,
 ) -> Result<NodeResult> {
     let grid = cfg.grid;
     let (pv, pr) = (coord.pv, coord.pr);
     let npv = grid.npv;
     let mut stats = RunStats::default();
     let mut checksum = Checksum::with_salt(metric.checksum_salt());
-    let mut triples = TripleStore::for_metric(metric.id());
     let mut t_in = Stopwatch::new();
     let mut t_comp = Stopwatch::new();
     let mut t_out = Stopwatch::new();
 
     // --- Input phase -----------------------------------------------------
     t_in.start();
-    // Ingest once into the metric's preferred representation (3-way
-    // metrics are float families today, but the node program stays
+    // Provider hands back the metric's preferred representation,
+    // ingest-once when a session cache sits behind it (3-way metrics
+    // are float families today, but the node program stays
     // representation-agnostic like the 2-way one).
-    let own = metric.ingest(load_block::<T>(cfg, pv, 0)?);
+    let own = T::provide(provider.as_ref(), cfg, metric.as_ref(), pv, 0)?;
     let own_sums = metric.denominators(&own)?;
     t_in.stop();
-
-    let mut writer = match &cfg.output_dir {
-        Some(dir) => Some(
-            NodeWriter::create(std::path::Path::new(dir), ep.rank, cfg.output_threshold)
-                .context("open output writer")?,
-        ),
-        None => None,
-    };
 
     // Which peer blocks this node's slices need.
     let slices = three_way::slices_for_node(npv, grid.npr, pv, pr);
@@ -185,6 +184,10 @@ pub(crate) fn node_main<T: Scalar>(
                     metric.numerators3(backend.as_ref(), &a_blk, &pivot_set, &r_blk)?
                 };
                 stats.mgemm3_calls += 1;
+                // One result tile per pivot chunk, entries in emission
+                // order.
+                let want_tile = sink.is_some();
+                let mut entries: Vec<TripleEntry> = Vec::new();
                 for (t, &j_local) in chunk.iter().enumerate() {
                     let gj = vparts.start(b_pivot) + j_local;
                     match slice.combo {
@@ -202,7 +205,10 @@ pub(crate) fn node_main<T: Scalar>(
                                         s_p[j_local],
                                         s_r[k],
                                     );
-                                    emit3(gi, gj, gk, c3, cfg, &mut checksum, &mut triples, &mut writer, &mut t_out, &mut stats)?;
+                                    emit3(
+                                        gi, gj, gk, c3, &mut checksum, &mut stats, want_tile,
+                                        &mut entries,
+                                    );
                                 }
                             }
                         }
@@ -221,7 +227,10 @@ pub(crate) fn node_main<T: Scalar>(
                                         s_a[i2],
                                         s_p[j_local],
                                     );
-                                    emit3(g1, g2, gj, c3, cfg, &mut checksum, &mut triples, &mut writer, &mut t_out, &mut stats)?;
+                                    emit3(
+                                        g1, g2, gj, c3, &mut checksum, &mut stats, want_tile,
+                                        &mut entries,
+                                    );
                                 }
                             }
                         }
@@ -240,10 +249,21 @@ pub(crate) fn node_main<T: Scalar>(
                                         s_a[j_local],
                                         s_a[k],
                                     );
-                                    emit3(gi, gj, gk, c3, cfg, &mut checksum, &mut triples, &mut writer, &mut t_out, &mut stats)?;
+                                    emit3(
+                                        gi, gj, gk, c3, &mut checksum, &mut stats, want_tile,
+                                        &mut entries,
+                                    );
                                 }
                             }
                         }
+                    }
+                }
+                if let Some(s) = sink.as_mut() {
+                    if !entries.is_empty() {
+                        t_out.start();
+                        s.tile(Tile::Triples { metric: metric.id(), entries })?;
+                        t_out.stop();
+                        stats.tiles += 1;
                     }
                 }
             }
@@ -251,8 +271,10 @@ pub(crate) fn node_main<T: Scalar>(
     }
     t_comp.stop();
 
-    if let Some(w) = writer.take() {
-        t_out.time(|| w.finish()).ok();
+    if let Some(mut s) = sink.take() {
+        t_out.start();
+        s.finish()?;
+        t_out.stop();
     }
     stats.t_input = t_in.secs();
     stats.t_compute = t_comp.secs() - t_out.secs();
@@ -260,40 +282,34 @@ pub(crate) fn node_main<T: Scalar>(
     // Per-node comm accounting: RunStats::absorb sums these across
     // nodes to reproduce the cluster totals.
     (stats.comm_messages, stats.comm_bytes) = ep.sent();
-    Ok(NodeResult {
-        checksum,
-        pairs: PairStore::new(),
-        triples,
-        stats,
-    })
+    Ok(NodeResult { checksum, stats })
 }
 
+/// Canonicalize and record one assembled 3-way value: checksum + stats
+/// always; a tile entry only when a sink is listening.
 #[allow(clippy::too_many_arguments)]
 fn emit3(
     a: usize,
     b: usize,
     c: usize,
     value: f64,
-    cfg: &RunConfig,
     checksum: &mut Checksum,
-    triples: &mut TripleStore,
-    writer: &mut Option<NodeWriter>,
-    t_out: &mut Stopwatch,
     stats: &mut RunStats,
-) -> Result<()> {
+    want_tile: bool,
+    entries: &mut Vec<TripleEntry>,
+) {
     let mut t = [a, b, c];
     t.sort_unstable();
     let (i, j, k) = (t[0], t[1], t[2]);
     debug_assert!(i < j && j < k, "degenerate triple ({a},{b},{c})");
     checksum.add_triple(i, j, k, value);
     stats.metrics += 1;
-    if cfg.store_metrics {
-        triples.push(i, j, k, value);
+    if want_tile {
+        entries.push(TripleEntry {
+            i: i as u32,
+            j: j as u32,
+            k: k as u32,
+            value,
+        });
     }
-    if let Some(w) = writer {
-        t_out.start();
-        w.write(indexing::triple_offset(i, j, k) as u64, value)?;
-        t_out.stop();
-    }
-    Ok(())
 }

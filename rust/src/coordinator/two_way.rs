@@ -10,23 +10,29 @@
 //! balance (Figure 2(c)); it is metric-independent, which is what lets
 //! all three metric families share this one node program.
 //!
-//! Blocks live in the metric's preferred representation
-//! ([`crate::metrics::Metric::ingest`], once in the input phase) and
-//! travel on the wire in that same representation — bit-domain metrics
-//! exchange packed u64 words (~64× less volume than f64 elements) and
-//! never re-pack inside the step loop.
+//! Blocks come from the run's [`BlockProvider`] in the metric's
+//! preferred representation (ingested **once per (dataset, repr)** for
+//! session runs; fresh for one-shot runs) and travel on the wire in
+//! that same representation — bit-domain metrics exchange packed u64
+//! words (~64× less volume than f64 elements) and never re-pack inside
+//! the step loop.
+//!
+//! Assembled metric values leave the node as [`Tile`]s through its
+//! [`NodeSink`] — one tile per computed block, so downstream consumers
+//! (stores, files, forwarding servers) never need more than a block's
+//! worth of values in flight.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::checksum::Checksum;
 use crate::comm::{Endpoint, Payload};
 use crate::config::RunConfig;
-use crate::coordinator::{backend::Backend, load_block, NodeResult, RunStats};
+use crate::coordinator::{backend::Backend, BlockProvider, NodeResult, ProvideBlocks, RunStats};
 use crate::decomp::{partition::Partition, two_way, NodeCoord};
-use crate::metrics::{indexing, store::PairStore, store::TripleStore, Metric};
-use crate::output::NodeWriter;
+use crate::metrics::{store::PairEntry, Metric};
+use crate::output::sink::{NodeSink, Tile};
 use crate::util::{timer::Stopwatch, Scalar};
 use crate::vecdata::block::Block;
 
@@ -35,28 +41,30 @@ const TAG_BLOCK: u64 = 1_000;
 const TAG_SUMS: u64 = 2_000;
 const TAG_REDUCE: u64 = 10_000;
 
-pub(crate) fn node_main<T: Scalar>(
+pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     cfg: &RunConfig,
     coord: NodeCoord,
     mut ep: Endpoint,
     backend: Arc<dyn Backend<T>>,
     metric: Arc<dyn Metric<T>>,
+    provider: Arc<dyn BlockProvider>,
+    mut sink: Option<Box<dyn NodeSink>>,
 ) -> Result<NodeResult> {
     let grid = cfg.grid;
     let (pv, pr, pf) = (coord.pv, coord.pr, coord.pf);
     let mut stats = RunStats::default();
     let mut checksum = Checksum::with_salt(metric.checksum_salt());
-    let mut pairs = PairStore::for_metric(metric.id());
     let mut t_in = Stopwatch::new();
     let mut t_comp = Stopwatch::new();
     let mut t_out = Stopwatch::new();
 
     // --- Input phase -----------------------------------------------------
     t_in.start();
-    // Ingest converts the loaded floats into the metric's working
-    // representation exactly once (pack-once for bit-domain metrics);
-    // the step loop below only ever touches the cached form.
-    let block = metric.ingest(load_block::<T>(cfg, pv, pf)?);
+    // The provider hands back the block in the metric's working
+    // representation: ingested once per (dataset, repr) when a session
+    // cache sits behind it, loaded + ingested fresh otherwise. Either
+    // way, the step loop below only ever touches the cached form.
+    let block = T::provide(provider.as_ref(), cfg, metric.as_ref(), pv, pf)?;
     // Full-feature denominator ingredients (allreduced across the npf
     // axis — metric denominators are additive over feature slices).
     let local_sums = metric.denominators(&block)?;
@@ -67,14 +75,6 @@ pub(crate) fn node_main<T: Scalar>(
         local_sums
     };
     t_in.stop();
-
-    let mut writer = match (&cfg.output_dir, pf) {
-        (Some(dir), 0) => Some(
-            NodeWriter::create(std::path::Path::new(dir), ep.rank, cfg.output_threshold)
-                .context("open output writer")?,
-        ),
-        _ => None,
-    };
 
     // Own block as wire payload, converted once: float metrics ship f64
     // elements, bit-domain metrics ship their cached packed words.
@@ -169,22 +169,21 @@ pub(crate) fn node_main<T: Scalar>(
         }
 
         // --- Denominators + quotients on the coordinator side ---------
+        // One result tile per computed block: entries in emission order
+        // (the dense §6.8 file format is order-defined).
         let my_first = block.first_id();
+        let want_tile = sink.is_some();
+        let mut entries: Vec<PairEntry> = Vec::new();
         if info.diag {
             for j in 1..n_block.cols {
                 for i in 0..j {
                     let value = metric.combine2(n_block.at(i, j), own_sums[i], own_sums[j]);
-                    emit(
-                        my_first + i,
-                        my_first + j,
-                        value,
-                        cfg,
-                        &mut checksum,
-                        &mut pairs,
-                        &mut writer,
-                        &mut t_out,
-                        &mut stats,
-                    )?;
+                    let (gi, gj) = (my_first + i, my_first + j);
+                    checksum.add_pair(gi, gj, value);
+                    stats.metrics += 1;
+                    if want_tile {
+                        entries.push(PairEntry { i: gi as u32, j: gj as u32, value });
+                    }
                 }
             }
         } else {
@@ -192,15 +191,29 @@ pub(crate) fn node_main<T: Scalar>(
                 for j in 0..n_block.cols {
                     let value = metric.combine2(n_block.at(i, j), own_sums[i], peer_sums_ref[j]);
                     let (a, b) = canonical(my_first + i, peer_first + j);
-                    emit(a, b, value, cfg, &mut checksum, &mut pairs, &mut writer, &mut t_out, &mut stats)?;
+                    checksum.add_pair(a, b, value);
+                    stats.metrics += 1;
+                    if want_tile {
+                        entries.push(PairEntry { i: a as u32, j: b as u32, value });
+                    }
                 }
+            }
+        }
+        if let Some(s) = sink.as_mut() {
+            if !entries.is_empty() {
+                t_out.start();
+                s.tile(Tile::Pairs { metric: metric.id(), entries })?;
+                t_out.stop();
+                stats.tiles += 1;
             }
         }
     }
     t_comp.stop();
 
-    if let Some(w) = writer.take() {
-        t_out.time(|| w.finish()).ok();
+    if let Some(mut s) = sink.take() {
+        t_out.start();
+        s.finish()?;
+        t_out.stop();
     }
 
     stats.t_input = t_in.secs();
@@ -209,37 +222,7 @@ pub(crate) fn node_main<T: Scalar>(
     // Per-node comm accounting: RunStats::absorb sums these across
     // nodes to reproduce the cluster totals.
     (stats.comm_messages, stats.comm_bytes) = ep.sent();
-    Ok(NodeResult {
-        checksum,
-        pairs,
-        triples: TripleStore::new(),
-        stats,
-    })
-}
-
-#[allow(clippy::too_many_arguments)]
-fn emit(
-    gi: usize,
-    gj: usize,
-    value: f64,
-    cfg: &RunConfig,
-    checksum: &mut Checksum,
-    pairs: &mut PairStore,
-    writer: &mut Option<NodeWriter>,
-    t_out: &mut Stopwatch,
-    stats: &mut RunStats,
-) -> Result<()> {
-    checksum.add_pair(gi, gj, value);
-    stats.metrics += 1;
-    if cfg.store_metrics {
-        pairs.push(gi, gj, value);
-    }
-    if let Some(w) = writer {
-        t_out.start();
-        w.write(indexing::pair_offset(gi, gj) as u64, value)?;
-        t_out.stop();
-    }
-    Ok(())
+    Ok(NodeResult { checksum, stats })
 }
 
 #[inline]

@@ -11,6 +11,44 @@
 //! decompositions, redundancy elimination, staging, and pipelined
 //! communication.
 //!
+//! ## The session-first API
+//!
+//! The public entry point is [`session::Session`] — a long-lived
+//! object owning everything worth amortizing across requests, shaped
+//! for the ROADMAP north star of serving many runs over one genomic
+//! dataset:
+//!
+//! * the **PJRT service** and its compiled-executable cache (started
+//!   lazily, reused by every accelerator run);
+//! * **[`session::Dataset`] handles**: per-node blocks are loaded and
+//!   ingested into a metric's preferred representation **once per
+//!   (dataset, repr, grid slice)** and then served from cache — a
+//!   Sorensen campaign packs its bit-planes exactly once, however many
+//!   runs follow;
+//! * typed **[`session::RunRequest`]s** (builder-validated) instead of
+//!   ad-hoc `RunConfig` field mutation — [`config::RunConfig`] remains
+//!   the serialized TOML/CLI form and lowers into a request via
+//!   [`session::Session::request_from_config`].
+//!
+//! Results **stream**: node programs emit finished metric tiles
+//! through an [`output::sink::ResultSink`] ([`output::sink::Tile`]s
+//! bounded by block size, never campaign size). Built-in sinks
+//! reproduce the historical modes — collect into stores, write §6.8
+//! per-node byte files, discard (`--no-store`) — and
+//! [`output::sink::ForwardSink`] is the serving seam: push tiles
+//! onward without ever materializing a full result set.
+//!
+//! The `comet batch` subcommand drives a multi-request TOML campaign
+//! ([`config::batch_from_toml_str`]) against one session,
+//! demonstrating ingest-once amortization end-to-end.
+//!
+//! **Migration note:** `coordinator::run` / `run_with_artifacts` /
+//! `run_with_client` remain as one-shot shims (fresh ingest, legacy
+//! `store_metrics`/`output_dir` semantics, unchanged checksums — a
+//! session run of the same config is bit-identical). Long-lived
+//! callers should construct a `Session` once and reuse requests; the
+//! coordinator core they share is `coordinator::run_streamed`.
+//!
 //! ## The metric engine
 //!
 //! Every run is parameterized by a [`metrics::Metric`] — the bundle of
@@ -56,9 +94,14 @@
 //! `run.threads`, reported in `run.meta`) drives row-panel-parallel
 //! variants of every kernel family — output tiles are disjoint per
 //! thread, so grid-valued sums stay **bit-identical across thread
-//! counts, backends, and decompositions**. `cargo bench --bench
-//! bench_kernels` appends comparisons/sec trajectory points to
-//! `BENCH_kernels.json` at the repo root.
+//! counts, backends, and decompositions**. Triangular row panels are
+//! **load-balanced**: each thread owns a low+high band pair
+//! ([`linalg::tri_partition`]), since row i of a strict upper triangle
+//! computes n−1−i entries and contiguous chunks would leave the first
+//! thread ~2× the average load. `cargo bench --bench bench_kernels`
+//! appends comparisons/sec trajectory points to `BENCH_kernels.json`
+//! at the repo root (including a session-amortization point: one-shot
+//! runs vs a reused `Session`).
 //!
 //! ## Layer map (see DESIGN.md)
 //!
@@ -87,6 +130,7 @@ pub mod metrics;
 pub mod output;
 pub mod perfmodel;
 pub mod runtime;
+pub mod session;
 pub mod testkit;
 pub mod util;
 pub mod vecdata;

@@ -75,6 +75,83 @@ where
     });
 }
 
+/// The row bands backing [`tri_partition`] / [`par_chunks_tri`]:
+/// `0..total` cut into (up to) `2 × workers` near-equal contiguous
+/// bands, in row order.
+fn tri_bands(total: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    split_rows(total, 2 * workers.max(1))
+}
+
+/// Load-balanced row partition for strict-upper-triangle work: worker
+/// t gets band t **and** band 2T−1−t of [`tri_bands`]. Row i of a
+/// strict upper triangle computes `total − 1 − i` entries, so the
+/// plain contiguous partition leaves the first (lowest-row) worker
+/// with ~(2T−1)× the last worker's ops; pairing the t-th cheapest band
+/// with the t-th most expensive flattens every worker to ~1/T of the
+/// triangle (exact to within one band's rows). Returned per worker in
+/// row order; workers with an empty second half (odd band counts at
+/// tiny `total`) get one range.
+pub fn tri_partition(total: usize, workers: usize) -> Vec<Vec<std::ops::Range<usize>>> {
+    let bands = tri_bands(total, workers);
+    let b = bands.len();
+    let mut out: Vec<Vec<std::ops::Range<usize>>> = vec![Vec::new(); b.div_ceil(2)];
+    for (idx, r) in bands.into_iter().enumerate() {
+        out[idx.min(b - 1 - idx)].push(r);
+    }
+    out
+}
+
+/// [`par_chunks`] for triangular (diagonal-block) kernels: same
+/// disjoint-`&mut`-slice discipline and per-element bit-identity, but
+/// each worker owns exactly the ranges [`tri_partition`] assigns it
+/// (the low+high band pairing) instead of one contiguous chunk, so the
+/// strict-upper-triangle op count is balanced across workers (pinned
+/// analytically by `opcount::ops_tri_rows` in
+/// tests/triangular_threads.rs — against the same `tri_partition` this
+/// consumes, so the pinned partition and the executed one cannot
+/// drift).
+pub(crate) fn par_chunks_tri<F>(data: &mut [f64], unit: usize, total: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(data.len(), unit * total, "chunk geometry mismatch");
+    if threads <= 1 || total < 2 {
+        f(0..total, data);
+        return;
+    }
+    let assignment = tri_partition(total, threads);
+    // Cut the output into per-band chunks in row order (the bands are
+    // the assignment's ranges), then hand each worker its own ranges.
+    let mut bands: Vec<std::ops::Range<usize>> =
+        assignment.iter().flatten().cloned().collect();
+    bands.sort_by_key(|r| r.start);
+    let mut chunks = Vec::with_capacity(bands.len());
+    let mut rest = data;
+    for r in bands {
+        let (chunk, tail) = rest.split_at_mut((r.end - r.start) * unit);
+        rest = tail;
+        chunks.push(Some((r, chunk)));
+    }
+    std::thread::scope(|s| {
+        for ranges in &assignment {
+            let mut own = Vec::with_capacity(ranges.len());
+            for r in ranges {
+                let idx = chunks
+                    .iter()
+                    .position(|c| c.as_ref().is_some_and(|(cr, _)| cr == r))
+                    .expect("assignment range has a band chunk");
+                own.push(chunks[idx].take().expect("band taken once"));
+            }
+            let f = &f;
+            s.spawn(move || {
+                for (r, chunk) in own {
+                    f(r, chunk);
+                }
+            });
+        }
+    });
+}
+
 /// Dense row-major result matrix from an mGEMM block: out[i, j] =
 /// n2(w_i, v_j), dims m × n.
 #[derive(Debug, Clone, PartialEq)]
@@ -217,6 +294,75 @@ mod tests {
         // Every element written exactly once with its global index + 1.
         for (i, x) in data.iter().enumerate() {
             assert_eq!(*x, i as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn tri_partition_covers_rows_exactly_once_and_balances_ops() {
+        for (total, workers) in [(64usize, 4usize), (63, 4), (7, 4), (100, 3), (2, 8), (33, 1)] {
+            let parts = tri_partition(total, workers);
+            assert!(parts.len() <= workers.max(1));
+            // Coverage: every row in exactly one worker's ranges.
+            let mut seen = vec![0u32; total];
+            for ranges in &parts {
+                for r in ranges {
+                    for i in r.clone() {
+                        seen[i] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "({total},{workers}): {seen:?}");
+            // Balance: per-worker strict-upper-triangle entry counts
+            // within one band's worth of the ideal share.
+            if parts.len() == workers && total >= 2 * workers {
+                let ops: Vec<u64> = parts
+                    .iter()
+                    .map(|ranges| {
+                        ranges
+                            .iter()
+                            .flat_map(|r| r.clone())
+                            .map(|i| (total - 1 - i) as u64)
+                            .sum()
+                    })
+                    .collect();
+                let ideal = (total as u64 * (total as u64 - 1) / 2) as f64 / workers as f64;
+                let band = total.div_ceil(2 * workers) as u64 * total as u64;
+                for (w, &o) in ops.iter().enumerate() {
+                    assert!(
+                        (o as f64 - ideal).abs() <= band as f64,
+                        "({total},{workers}) worker {w}: {o} vs ideal {ideal} (±{band})"
+                    );
+                }
+                // And strictly better than the contiguous split's
+                // heaviest worker for real shapes (1 worker: identical).
+                if workers > 1 {
+                    let contiguous_first: u64 = split_rows(total, workers)[0]
+                        .clone()
+                        .map(|i| (total - 1 - i) as u64)
+                        .sum();
+                    assert!(
+                        ops.iter().copied().max().unwrap() < contiguous_first,
+                        "({total},{workers}): paired max {:?} !< contiguous first {contiguous_first}",
+                        ops.iter().copied().max().unwrap()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_tri_visits_disjoint_ranges_once() {
+        for (total, threads) in [(11usize, 4usize), (64, 3), (5, 8), (2, 2)] {
+            let unit = 2usize;
+            let mut data = vec![0.0f64; unit * total];
+            par_chunks_tri(&mut data, unit, total, threads, |rows, chunk| {
+                for (off, x) in chunk.iter_mut().enumerate() {
+                    *x += (rows.start * unit + off) as f64 + 1.0;
+                }
+            });
+            for (i, x) in data.iter().enumerate() {
+                assert_eq!(*x, i as f64 + 1.0, "({total},{threads})");
+            }
         }
     }
 }

@@ -39,6 +39,14 @@ pub fn ops_tri(nf: usize, nv: usize) -> u64 {
     nf as u64 * (nv as u64 * nv.saturating_sub(1) as u64 / 2)
 }
 
+/// Elementwise ops of rows `rows` of a strict-upper-triangular nv×nv
+/// block at depth nf (row i computes nv − 1 − i entries) — the
+/// per-worker delta that pins the balanced triangular partition
+/// ([`crate::linalg::tri_partition`]).
+pub fn ops_tri_rows(nf: usize, rows: std::ops::Range<usize>, nv: usize) -> u64 {
+    rows.map(|i| (nv - 1 - i) as u64).sum::<u64>() * nf as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +66,16 @@ mod tests {
         }
         assert_eq!(ops_tri(10, 4), 10 * 6);
         assert_eq!(ops_full(10, 4, 4), 160);
+    }
+
+    #[test]
+    fn tri_rows_partition_the_triangle() {
+        let (nf, nv) = (7usize, 20usize);
+        assert_eq!(ops_tri_rows(nf, 0..nv, nv), ops_tri(nf, nv));
+        assert_eq!(
+            ops_tri_rows(nf, 0..8, nv) + ops_tri_rows(nf, 8..nv, nv),
+            ops_tri(nf, nv)
+        );
+        assert_eq!(ops_tri_rows(nf, nv - 1..nv, nv), 0);
     }
 }

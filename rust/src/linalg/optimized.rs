@@ -116,9 +116,13 @@ fn panel<T: Scalar, F: Fn(T, T) -> T + Copy>(
     opcount::record(elems * nf as u64);
 }
 
-/// Run `panel` over contiguous row panels on `threads` OS threads
-/// (via the shared [`crate::linalg::par_chunks`] partition — disjoint
-/// output tiles, bit-identical for any thread count).
+/// Run `panel` over row panels on `threads` OS threads — disjoint
+/// output tiles, bit-identical for any thread count. Full blocks use
+/// the contiguous [`crate::linalg::par_chunks`] partition (uniform row
+/// cost); triangular blocks use the load-balanced
+/// [`crate::linalg::par_chunks_tri`] low+high band pairing (row i of a
+/// strict upper triangle computes n−1−i entries, so contiguous chunks
+/// would leave the first thread ~2× the average load).
 fn par_panels<T: Scalar, F: Fn(T, T) -> T + Copy + Sync>(
     w: &VectorSet<T>,
     v: &VectorSet<T>,
@@ -128,9 +132,14 @@ fn par_panels<T: Scalar, F: Fn(T, T) -> T + Copy + Sync>(
     f: F,
 ) {
     let (m, n) = (out.rows, out.cols);
-    crate::linalg::par_chunks(&mut out.data, n, m, threads, |rows, chunk| {
+    let run = |rows: std::ops::Range<usize>, chunk: &mut [f64]| {
         panel(w, v, rows, 0..n, tri, chunk, n, f)
-    });
+    };
+    if tri {
+        crate::linalg::par_chunks_tri(&mut out.data, n, m, threads, run);
+    } else {
+        crate::linalg::par_chunks(&mut out.data, n, m, threads, run);
+    }
 }
 
 /// Blocked N = W^T ∘min V.

@@ -104,9 +104,15 @@ pub fn sorenson_mgemm_tri_mt(v: &BitVectorSet, threads: usize) -> MatF64 {
 
 fn par_row_panels(w: &BitVectorSet, v: &BitVectorSet, tri: bool, threads: usize, out: &mut MatF64) {
     let (m, n) = (out.rows, out.cols);
-    crate::linalg::par_chunks(&mut out.data, n, m, threads, |rows, chunk| {
-        popcount_panel(w, v, rows, tri, chunk)
-    });
+    let run =
+        |rows: std::ops::Range<usize>, chunk: &mut [f64]| popcount_panel(w, v, rows, tri, chunk);
+    if tri {
+        // Balanced low+high band pairing — triangular rows thin out
+        // toward the bottom (see `linalg::tri_partition`).
+        crate::linalg::par_chunks_tri(&mut out.data, n, m, threads, run);
+    } else {
+        crate::linalg::par_chunks(&mut out.data, n, m, threads, run);
+    }
 }
 
 /// Unique-pair Sorenson metric values for one set (upper triangle).

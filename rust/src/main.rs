@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run        execute a 2-way/3-way metrics campaign (config file or flags)
+//!   batch      run a multi-request campaign file against ONE session
+//!              (ingest-once dataset blocks, persistent executable cache)
 //!   plan       print the parallel decomposition schedule for a grid
 //!   artifacts  validate the AOT artifact manifest
 //!   model      evaluate the §6.3 performance model
@@ -11,18 +13,21 @@
 //! Examples:
 //!   comet run --num-way 2 --nv 1024 --nf 384 --npv 4 --backend pjrt
 //!   comet run --config campaign.toml
+//!   comet batch --config examples/batch.toml
 //!   comet plan --num-way 3 --npv 6 --npr 4
 //!   comet model --num-way 2 --nvp 10240 --nfp 5000 --load 13
 
 use anyhow::{bail, Context, Result};
 use comet::cli;
 use comet::comm::cost::CostModel;
-use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::config::{self, BackendKind, InputSource, Precision, RunConfig};
 use comet::coordinator;
 use comet::decomp::{three_way, two_way, Grid};
 use comet::metrics::counts;
+use comet::output::sink::{DiscardSink, StatsOnlySink};
 use comet::perfmodel;
 use comet::runtime::Manifest;
+use comet::session::Session;
 use comet::util::fmt;
 use comet::vecdata::{io as vio, SyntheticKind, VectorSet};
 
@@ -39,6 +44,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "batch" => cmd_batch(&args),
         "plan" => cmd_plan(&args),
         "artifacts" => cmd_artifacts(&args),
         "model" => cmd_model(&args),
@@ -55,7 +61,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
 const HELP: &str = "\
 comet — Parallel Accelerated Vector Similarity Calculations (CoMet-RS)
 
-USAGE: comet <run|plan|artifacts|model|gen-data|info|help> [options]
+USAGE: comet <run|batch|plan|artifacts|model|gen-data|info|help> [options]
 
 run options:
   --config FILE      TOML run config (flags below override it)
@@ -79,6 +85,15 @@ run options:
   --output-dir DIR   write per-node metric files + run.meta sidecar
   --output-threshold X  drop metrics below X ((offset, byte) records)
   --no-store         do not keep metrics in memory (big runs)
+  --artifacts DIR    artifact directory (default: artifacts)
+
+batch options:
+  --config FILE      batch TOML: base [run]/[decomp]/[input] tables plus one
+                     [request.<name>] table per run (run+decomp keys accepted
+                     flat as overrides). All requests execute against ONE
+                     session, so blocks of the shared dataset are ingested
+                     once per representation and PJRT executables compile
+                     once — see examples/batch.toml
   --artifacts DIR    artifact directory (default: artifacts)
 
 plan options:    --num-way 2|3 --npv N [--npr N]
@@ -121,13 +136,7 @@ fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
     if let Some(f) = args.opt_str("input-file") {
         cfg.input = InputSource::File { path: f.to_string() };
     } else if args.opt_str("synthetic").is_some() || args.opt_str("seed").is_some() {
-        let kind = match args.str_or("synthetic", "grid").as_str() {
-            "grid" => SyntheticKind::RandomGrid,
-            "verifiable" => SyntheticKind::Verifiable,
-            "phewas" => SyntheticKind::PhewasLike,
-            "alleles" => SyntheticKind::Alleles,
-            other => bail!("unknown --synthetic {other:?}"),
-        };
+        let kind = SyntheticKind::parse(&args.str_or("synthetic", "grid"))?;
         cfg.input = InputSource::Synthetic { kind, seed: args.parse_or("seed", 1u64)? };
     }
     if let Some(dir) = args.opt_str("output-dir") {
@@ -164,7 +173,14 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
         cfg.num_stage,
         cfg.stage.map(|s| format!(" (stage {s})")).unwrap_or_default(),
     );
-    let outcome = coordinator::run_with_artifacts(&cfg, std::path::Path::new(&artifacts))?;
+    // One-shot CLI runs go through a throwaway session: same code path
+    // a server holds long-lived, and values stream through a sink
+    // instead of accumulating in memory (the session rides the
+    // request's file sink when --output-dir is set; otherwise nothing
+    // listens — the CLI only reports stats + checksum).
+    let session = Session::with_artifacts(&artifacts);
+    let req = session.request_from_config(&cfg)?;
+    let outcome = session.run(&req, &DiscardSink)?;
     let s = &outcome.stats;
     println!("  metrics computed : {}", s.metrics);
     println!("  checksum         : {}", outcome.checksum.digest());
@@ -202,6 +218,82 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
         };
     let rate = cmps as f64 * frac / s.t_total;
     println!("  comparison rate  : {} ({}% of campaign)", fmt::cmp_rate(rate), (frac * 100.0).round());
+    Ok(())
+}
+
+fn cmd_batch(args: &cli::Args) -> Result<()> {
+    let path = args.require_str("config")?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+    let entries = config::batch_from_toml_str(&text)?;
+    let session = Session::with_artifacts(&artifacts);
+    println!(
+        "comet batch: {} request(s) from {} against one session",
+        entries.len(),
+        path
+    );
+
+    let t0 = std::time::Instant::now();
+    // One-shot equivalents would load a block per *rank* per run (ranks
+    // replicated along npr re-read the same slice); the session ingests
+    // once per (dataset, repr, grid slice).
+    let mut fresh_loads: u64 = 0;
+    let mut datasets: Vec<comet::session::Dataset> = Vec::new();
+    let mut table = fmt::Table::new(&[
+        "request",
+        "metric",
+        "way",
+        "grid",
+        "metrics",
+        "tiles",
+        "checksum",
+        "new ingests",
+        "time",
+    ]);
+    for e in &entries {
+        let req = session.request_from_config(&e.cfg)?;
+        let ds = req.dataset().clone();
+        let before = ds.ingest_count();
+        // Values stream: counted tiles always (the stats sink keeps the
+        // run non-null so tiles are assembled); the session rides the
+        // request's §6.8 file sink when it names an output directory.
+        // Nothing is accumulated.
+        let stats_sink = StatsOnlySink::new();
+        let out = session.run(&req, &stats_sink)?;
+        fresh_loads += e.cfg.grid.np() as u64;
+        table.row(&[
+            e.name.clone(),
+            e.cfg.metric.name().to_string(),
+            e.cfg.num_way.to_string(),
+            format!("({},{},{})", e.cfg.grid.npf, e.cfg.grid.npv, e.cfg.grid.npr),
+            out.stats.metrics.to_string(),
+            out.stats.tiles.to_string(),
+            out.checksum.digest(),
+            (ds.ingest_count() - before).to_string(),
+            fmt::secs(out.stats.t_total),
+        ]);
+        if !datasets.iter().any(|d| d.spec() == ds.spec()) {
+            datasets.push(ds);
+        }
+    }
+    table.print();
+
+    let total_ingests: u64 = datasets.iter().map(|d| d.ingest_count()).sum();
+    println!(
+        "  session amortization: {} block ingest(s) across {} dataset(s) \
+         (one-shot runs would have loaded {} blocks) in {}",
+        total_ingests,
+        datasets.len(),
+        fresh_loads,
+        fmt::secs(t0.elapsed().as_secs_f64()),
+    );
+    if let Some((compiles, execs, secs)) = session.accel_stats() {
+        println!(
+            "  accelerator      : {compiles} artifact compile(s) for {execs} execution(s), {}",
+            fmt::secs(secs)
+        );
+    }
     Ok(())
 }
 
@@ -341,13 +433,7 @@ fn cmd_gen_data(args: &cli::Args) -> Result<()> {
     let out = args.require_str("out")?;
     let precision = Precision::parse(&args.str_or("precision", "f32"))?;
     let seed: u64 = args.parse_or("seed", 1)?;
-    let kind = match args.str_or("synthetic", "phewas").as_str() {
-        "grid" => SyntheticKind::RandomGrid,
-        "verifiable" => SyntheticKind::Verifiable,
-        "phewas" => SyntheticKind::PhewasLike,
-        "alleles" => SyntheticKind::Alleles,
-        other => bail!("unknown --synthetic {other:?}"),
-    };
+    let kind = SyntheticKind::parse(&args.str_or("synthetic", "phewas"))?;
     args.reject_unknown()?;
     let path = std::path::Path::new(&out);
     match precision {

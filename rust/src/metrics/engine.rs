@@ -174,6 +174,18 @@ pub trait Metric<T: Scalar>: Send + Sync {
         self.id().preferred_repr()
     }
 
+    /// Cache discriminator for ingested blocks: two metric *instances*
+    /// may share ingested blocks iff they agree on
+    /// ([`Metric::preferred_repr`], `ingest_key`). Float families all
+    /// return 0 (their ingest is representation-identity, so e.g.
+    /// Czekanowski and CCC runs over one dataset share blocks);
+    /// parameterized ingests (Sorensen's binarization threshold) must
+    /// fold their parameters in, or a session could serve blocks packed
+    /// under someone else's threshold.
+    fn ingest_key(&self) -> u64 {
+        0
+    }
+
     /// Convert a freshly loaded float block into this metric's working
     /// representation. Called **once per node block** in the input
     /// phase — never inside the parallel step loop (the pack-once
@@ -433,6 +445,12 @@ impl<T: Scalar> Metric<T> for Sorenson {
         MetricId::Sorenson
     }
 
+    fn ingest_key(&self) -> u64 {
+        // Two Sorensen instances share packed blocks only at the same
+        // binarization threshold.
+        self.threshold.to_bits()
+    }
+
     fn ingest(&self, v: VectorSet<T>) -> Block<T> {
         // The only packing site on the run path: one conversion per
         // node block, in the input phase.
@@ -664,6 +682,24 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn ingest_keys_discriminate_parameterized_ingests_only() {
+        // Float families share blocks (identity ingest, key 0) …
+        let cz: &dyn Metric<f64> = &Czekanowski;
+        let ccc_metric = Ccc::new(10);
+        let ccc: &dyn Metric<f64> = &ccc_metric;
+        assert_eq!(cz.ingest_key(), 0);
+        assert_eq!(ccc.ingest_key(), 0);
+        // … while Sorensen instances share only at equal thresholds.
+        let a = Sorenson { threshold: 0.5 };
+        let b = Sorenson { threshold: 0.25 };
+        assert_eq!(
+            Metric::<f64>::ingest_key(&a),
+            Metric::<f64>::ingest_key(&Sorenson::default())
+        );
+        assert_ne!(Metric::<f64>::ingest_key(&a), Metric::<f64>::ingest_key(&b));
     }
 
     #[test]

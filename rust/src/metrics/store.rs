@@ -53,6 +53,15 @@ impl PairStore {
         });
     }
 
+    /// Absorb already-canonical entries (the result-tile path: sinks
+    /// collect whole [`crate::output::sink::Tile`]s of these).
+    pub fn extend_entries(&mut self, entries: impl IntoIterator<Item = PairEntry>) {
+        for e in entries {
+            debug_assert!(e.i < e.j, "pair must be canonical (i < j): ({}, {})", e.i, e.j);
+            self.entries.push(e);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -123,6 +132,20 @@ impl TripleStore {
             k: k as u32,
             value,
         });
+    }
+
+    /// Absorb already-canonical entries (the result-tile path).
+    pub fn extend_entries(&mut self, entries: impl IntoIterator<Item = TripleEntry>) {
+        for e in entries {
+            debug_assert!(
+                e.i < e.j && e.j < e.k,
+                "triple must be canonical: ({},{},{})",
+                e.i,
+                e.j,
+                e.k
+            );
+            self.entries.push(e);
+        }
     }
 
     pub fn len(&self) -> usize {

@@ -6,6 +6,12 @@
 //! The per-node byte files stay headerless, so a run also writes one
 //! `run.meta` sidecar tagging the directory with the metric family
 //! that produced it (plus the shape needed to interpret the offsets).
+//!
+//! File output is one implementation of the streaming [`sink`] API
+//! ([`sink::FileSink`] wraps [`NodeWriter`]); the coordinator's node
+//! programs only ever talk to a [`sink::ResultSink`].
+
+pub mod sink;
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};

@@ -1,0 +1,575 @@
+//! Streaming result sinks: the coordinator's node programs emit
+//! finished metric **tiles** ([`Tile`]) through a [`ResultSink`]
+//! instead of hard-coding store-vs-file-vs-drop.
+//!
+//! A tile is the batch of metric values assembled from one numerator
+//! block (2-way) or one pivot chunk of a slice (3-way) — bounded by the
+//! block size, never by the campaign size, so a server can forward
+//! tiles to clients without ever holding a full result set in memory.
+//! The built-in sinks reproduce the three historical output modes:
+//!
+//! * [`CollectSink`] — accumulate into [`PairStore`]/[`TripleStore`]
+//!   (the old `store_metrics: true` behavior; examples/tests).
+//! * [`FileSink`] — stream to per-node §6.8 byte files through
+//!   [`NodeWriter`], with optional thresholding (the old `output_dir`
+//!   behavior; byte-identical files).
+//! * [`DiscardSink`] / [`StatsOnlySink`] — drop values (the old
+//!   `--no-store` behavior), optionally counting tiles/values.
+//!
+//! [`ForwardSink`] adapts a closure (the serving path: push tiles to a
+//! socket, a channel, a live reducer), and [`TeeRef`] fans one run out
+//! to several sinks (collect *and* write files, as the legacy
+//! `coordinator::run` contract requires).
+//!
+//! Concurrency model: one [`NodeSink`] per emitting virtual node
+//! (created by [`ResultSink::node_sink`] before the node threads
+//! spawn), so per-node state (file writers, local buffers) needs no
+//! locking; shared aggregation happens in `NodeSink::finish` or behind
+//! the sink's own synchronization.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::RunStats;
+use crate::metrics::indexing;
+use crate::metrics::store::{PairEntry, PairStore, TripleEntry, TripleStore};
+use crate::metrics::MetricId;
+use crate::output::NodeWriter;
+use crate::vecdata::block::Repr;
+
+/// One finished batch of metric values, tagged with the metric family
+/// that produced it. Entries are canonical (i < j (< k)) and appear in
+/// the node program's emission order (which the §6.8 file format
+/// depends on in dense mode).
+#[derive(Debug, Clone)]
+pub enum Tile {
+    Pairs {
+        metric: MetricId,
+        entries: Vec<PairEntry>,
+    },
+    Triples {
+        metric: MetricId,
+        entries: Vec<TripleEntry>,
+    },
+}
+
+impl Tile {
+    pub fn len(&self) -> usize {
+        match self {
+            Tile::Pairs { entries, .. } => entries.len(),
+            Tile::Triples { entries, .. } => entries.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn metric(&self) -> MetricId {
+        match self {
+            Tile::Pairs { metric, .. } | Tile::Triples { metric, .. } => *metric,
+        }
+    }
+}
+
+/// Per-node tile consumer. Moved into the node's thread; `finish` is
+/// called exactly once after the node's last tile (flush point).
+pub trait NodeSink: Send {
+    fn tile(&mut self, tile: Tile) -> Result<()>;
+
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// A run-level sink: hands out one [`NodeSink`] per emitting virtual
+/// node. Implementations own whatever shared state their node sinks
+/// aggregate into.
+pub trait ResultSink: Send + Sync {
+    fn node_sink(&self, rank: usize) -> Result<Box<dyn NodeSink>>;
+
+    /// True when tiles would be dropped unseen — the coordinator skips
+    /// tile assembly entirely then (the `--no-store` fast path).
+    fn is_null(&self) -> bool {
+        false
+    }
+
+    /// Called once by the coordinator after every node finished, with
+    /// the run's lowered config and final stats. [`FileSink`] uses it
+    /// to write the `run.meta` sidecar next to its metric files (the
+    /// §6.8 byte files are headerless, so the sidecar travels with
+    /// whoever writes them — not with a config field that may name a
+    /// different directory). Default: no-op.
+    fn on_run_complete(
+        &self,
+        _cfg: &RunConfig,
+        _repr: Repr,
+        _diag_kernel: &'static str,
+        _stats: &RunStats,
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collect — today's in-memory stores.
+
+/// Accumulates tiles into metric-tagged stores. Node sinks buffer
+/// locally and park their stores (tagged with their rank) at `finish`;
+/// [`CollectSink::take`] merges them in **rank order**, reproducing
+/// the deterministic join-order merge of the pre-sink coordinator —
+/// entry order (and therefore `top_k` tie-breaking) is identical
+/// run-to-run however the node threads raced.
+/// Per-node parked stores, keyed by rank (shared with the node sinks —
+/// they outlive the borrow of the parent, living in node threads).
+type CollectedParts = Arc<Mutex<Vec<(usize, PairStore, TripleStore)>>>;
+
+#[derive(Debug)]
+pub struct CollectSink {
+    metric: MetricId,
+    parts: CollectedParts,
+}
+
+impl Default for CollectSink {
+    fn default() -> Self {
+        Self::for_metric(MetricId::default())
+    }
+}
+
+impl CollectSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty collector whose stores carry `metric` tags even if the
+    /// run emits nothing.
+    pub fn for_metric(metric: MetricId) -> Self {
+        CollectSink { metric, parts: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// Drain everything collected so far, merged in rank order.
+    pub fn take(&self) -> (PairStore, TripleStore) {
+        let mut parts = std::mem::take(&mut *self.parts.lock().unwrap());
+        parts.sort_by_key(|(rank, _, _)| *rank);
+        let mut pairs = PairStore::for_metric(self.metric);
+        let mut triples = TripleStore::for_metric(self.metric);
+        for (_, p, t) in parts {
+            if !p.is_empty() {
+                pairs.metric = p.metric;
+            }
+            pairs.extend(p);
+            if !t.is_empty() {
+                triples.metric = t.metric;
+            }
+            triples.extend(t);
+        }
+        (pairs, triples)
+    }
+}
+
+impl ResultSink for CollectSink {
+    fn node_sink(&self, rank: usize) -> Result<Box<dyn NodeSink>> {
+        Ok(Box::new(CollectNode {
+            rank,
+            pairs: PairStore::new(),
+            triples: TripleStore::new(),
+            parts: Arc::clone(&self.parts),
+        }))
+    }
+}
+
+struct CollectNode {
+    rank: usize,
+    pairs: PairStore,
+    triples: TripleStore,
+    parts: CollectedParts,
+}
+
+impl NodeSink for CollectNode {
+    fn tile(&mut self, tile: Tile) -> Result<()> {
+        match tile {
+            Tile::Pairs { metric, entries } => {
+                self.pairs.metric = metric;
+                self.pairs.extend_entries(entries);
+            }
+            Tile::Triples { metric, entries } => {
+                self.triples.metric = metric;
+                self.triples.extend_entries(entries);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        if !self.pairs.is_empty() || !self.triples.is_empty() {
+            self.parts.lock().unwrap().push((
+                self.rank,
+                std::mem::take(&mut self.pairs),
+                std::mem::take(&mut self.triples),
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File — today's §6.8 per-node byte files.
+
+/// Streams tiles to per-node metric files (`metrics_<rank>.bin`)
+/// through [`NodeWriter`] — dense value bytes, or (offset, byte)
+/// records when `threshold` is set. Produces byte-identical files to
+/// the pre-sink coordinator.
+#[derive(Debug, Clone)]
+pub struct FileSink {
+    dir: PathBuf,
+    threshold: Option<f64>,
+}
+
+impl FileSink {
+    pub fn new(dir: impl Into<PathBuf>, threshold: Option<f64>) -> Self {
+        FileSink { dir: dir.into(), threshold }
+    }
+}
+
+impl ResultSink for FileSink {
+    fn node_sink(&self, rank: usize) -> Result<Box<dyn NodeSink>> {
+        Ok(Box::new(FileNode {
+            writer: Some(NodeWriter::create(&self.dir, rank, self.threshold)?),
+        }))
+    }
+
+    fn on_run_complete(
+        &self,
+        cfg: &RunConfig,
+        repr: Repr,
+        diag_kernel: &'static str,
+        stats: &RunStats,
+    ) -> Result<()> {
+        crate::output::write_run_meta(&self.dir, cfg, repr, diag_kernel, stats)?;
+        Ok(())
+    }
+}
+
+struct FileNode {
+    writer: Option<NodeWriter>,
+}
+
+impl NodeSink for FileNode {
+    fn tile(&mut self, tile: Tile) -> Result<()> {
+        let Some(w) = self.writer.as_mut() else {
+            return Ok(());
+        };
+        match &tile {
+            Tile::Pairs { entries, .. } => {
+                for e in entries {
+                    w.write(indexing::pair_offset(e.i as usize, e.j as usize) as u64, e.value)?;
+                }
+            }
+            Tile::Triples { entries, .. } => {
+                for e in entries {
+                    w.write(
+                        indexing::triple_offset(e.i as usize, e.j as usize, e.k as usize) as u64,
+                        e.value,
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats-only / discard — today's `--no-store`.
+
+/// Counts tiles and values without retaining them. `max_tile_len`
+/// doubles as the test probe for the no-materialization contract: it
+/// stays bounded by the block size while a campaign's total grows.
+#[derive(Debug, Default)]
+pub struct StatsOnlySink {
+    counts: Arc<SinkCounts>,
+}
+
+#[derive(Debug, Default)]
+struct SinkCounts {
+    tiles: AtomicU64,
+    values: AtomicU64,
+    max_tile: AtomicU64,
+}
+
+impl StatsOnlySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn tiles(&self) -> u64 {
+        self.counts.tiles.load(Ordering::Relaxed)
+    }
+
+    pub fn values(&self) -> u64 {
+        self.counts.values.load(Ordering::Relaxed)
+    }
+
+    pub fn max_tile_len(&self) -> u64 {
+        self.counts.max_tile.load(Ordering::Relaxed)
+    }
+}
+
+impl ResultSink for StatsOnlySink {
+    fn node_sink(&self, _rank: usize) -> Result<Box<dyn NodeSink>> {
+        Ok(Box::new(StatsNode { counts: Arc::clone(&self.counts) }))
+    }
+}
+
+struct StatsNode {
+    counts: Arc<SinkCounts>,
+}
+
+impl NodeSink for StatsNode {
+    fn tile(&mut self, tile: Tile) -> Result<()> {
+        let n = tile.len() as u64;
+        self.counts.tiles.fetch_add(1, Ordering::Relaxed);
+        self.counts.values.fetch_add(n, Ordering::Relaxed);
+        self.counts.max_tile.fetch_max(n, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Drops every tile; reports [`ResultSink::is_null`] so the node
+/// programs skip tile assembly altogether.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DiscardSink;
+
+impl ResultSink for DiscardSink {
+    fn node_sink(&self, _rank: usize) -> Result<Box<dyn NodeSink>> {
+        Ok(Box::new(DiscardNode))
+    }
+
+    fn is_null(&self) -> bool {
+        true
+    }
+}
+
+struct DiscardNode;
+
+impl NodeSink for DiscardNode {
+    fn tile(&mut self, _tile: Tile) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward — the serving seam.
+
+type ForwardFn = dyn Fn(usize, Tile) -> Result<()> + Send + Sync;
+
+/// Forwards each (rank, tile) to a closure as it is produced — the
+/// hook a server uses to push results onward (socket, channel, live
+/// reducer) with memory bounded by one tile. The closure is shared by
+/// every node sink and may be called from node threads concurrently;
+/// wrap interior state accordingly.
+pub struct ForwardSink {
+    f: Arc<ForwardFn>,
+}
+
+impl ForwardSink {
+    pub fn new(f: impl Fn(usize, Tile) -> Result<()> + Send + Sync + 'static) -> Self {
+        ForwardSink { f: Arc::new(f) }
+    }
+}
+
+impl ResultSink for ForwardSink {
+    fn node_sink(&self, rank: usize) -> Result<Box<dyn NodeSink>> {
+        Ok(Box::new(ForwardNode { rank, f: Arc::clone(&self.f) }))
+    }
+}
+
+struct ForwardNode {
+    rank: usize,
+    f: Arc<ForwardFn>,
+}
+
+impl NodeSink for ForwardNode {
+    fn tile(&mut self, tile: Tile) -> Result<()> {
+        (self.f)(self.rank, tile)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tee — compose sinks.
+
+/// Fans every tile out to several sinks (collect *and* file, say).
+/// Borrowing, so a run can compose a caller's sink with run-scoped
+/// locals (the way `session::Session::run` rides a request's file sink
+/// alongside whatever the caller listens with) without `Arc` plumbing.
+/// An empty (or all-null) tee is null; null members are skipped at
+/// node-sink creation so tiles are never cloned just to be dropped.
+pub struct TeeRef<'a> {
+    sinks: Vec<&'a dyn ResultSink>,
+}
+
+impl<'a> TeeRef<'a> {
+    pub fn new(sinks: Vec<&'a dyn ResultSink>) -> Self {
+        TeeRef { sinks }
+    }
+}
+
+impl ResultSink for TeeRef<'_> {
+    fn node_sink(&self, rank: usize) -> Result<Box<dyn NodeSink>> {
+        let sinks = self
+            .sinks
+            .iter()
+            .filter(|s| !s.is_null())
+            .map(|s| s.node_sink(rank))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Box::new(TeeNode { sinks }))
+    }
+
+    fn is_null(&self) -> bool {
+        self.sinks.iter().all(|s| s.is_null())
+    }
+
+    fn on_run_complete(
+        &self,
+        cfg: &RunConfig,
+        repr: Repr,
+        diag_kernel: &'static str,
+        stats: &RunStats,
+    ) -> Result<()> {
+        for s in &self.sinks {
+            s.on_run_complete(cfg, repr, diag_kernel, stats)?;
+        }
+        Ok(())
+    }
+}
+
+struct TeeNode {
+    sinks: Vec<Box<dyn NodeSink>>,
+}
+
+impl NodeSink for TeeNode {
+    fn tile(&mut self, tile: Tile) -> Result<()> {
+        if let Some((last, rest)) = self.sinks.split_last_mut() {
+            for s in rest.iter_mut() {
+                s.tile(tile.clone())?;
+            }
+            last.tile(tile)?;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        for s in &mut self.sinks {
+            s.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::output::read_dense;
+
+    fn pair_tile(metric: MetricId, pairs: &[(u32, u32, f64)]) -> Tile {
+        Tile::Pairs {
+            metric,
+            entries: pairs.iter().map(|&(i, j, value)| PairEntry { i, j, value }).collect(),
+        }
+    }
+
+    #[test]
+    fn collect_sink_merges_nodes_with_tags() {
+        let sink = CollectSink::for_metric(MetricId::Ccc);
+        let mut a = sink.node_sink(0).unwrap();
+        let mut b = sink.node_sink(1).unwrap();
+        a.tile(pair_tile(MetricId::Ccc, &[(0, 1, 0.5)])).unwrap();
+        b.tile(pair_tile(MetricId::Ccc, &[(1, 2, 0.25), (0, 3, 0.75)])).unwrap();
+        a.finish().unwrap();
+        b.finish().unwrap();
+        let (pairs, triples) = sink.take();
+        assert_eq!(pairs.len(), 3);
+        assert_eq!(pairs.metric, MetricId::Ccc);
+        assert!(triples.is_empty());
+        // take() drains.
+        assert!(sink.take().0.is_empty());
+    }
+
+    #[test]
+    fn file_sink_matches_direct_node_writer() {
+        let dir = std::env::temp_dir().join(format!("comet-sink-{}", std::process::id()));
+        let sink = FileSink::new(dir.join("a"), None);
+        let mut node = sink.node_sink(2).unwrap();
+        node.tile(pair_tile(MetricId::Czekanowski, &[(0, 1, 0.5), (0, 2, 1.0)])).unwrap();
+        node.finish().unwrap();
+        let via_sink = read_dense(&dir.join("a").join("metrics_2.bin")).unwrap();
+
+        let mut w = NodeWriter::create(&dir.join("b"), 2, None).unwrap();
+        w.write(indexing::pair_offset(0, 1) as u64, 0.5).unwrap();
+        w.write(indexing::pair_offset(0, 2) as u64, 1.0).unwrap();
+        let (path, n) = w.finish().unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(via_sink, read_dense(&path).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_sink_writes_run_meta_on_complete() {
+        let dir = std::env::temp_dir().join(format!("comet-sink-meta-{}", std::process::id()));
+        let sink = FileSink::new(&dir, None);
+        let cfg = RunConfig::default();
+        let stats = RunStats { metrics: 7, ..Default::default() };
+        sink.on_run_complete(&cfg, Repr::Float, "triangular", &stats).unwrap();
+        let doc = crate::output::read_run_meta(&dir).unwrap();
+        assert_eq!(doc.get("run", "metric").unwrap().as_str().unwrap(), "czekanowski");
+        assert_eq!(doc.get("run", "kernel").unwrap().as_str().unwrap(), "triangular");
+        assert_eq!(doc.get("run", "metrics").unwrap().as_int().unwrap(), 7);
+        // The other sinks no-op.
+        DiscardSink.on_run_complete(&cfg, Repr::Float, "full", &stats).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tee_fans_out_and_empty_tee_is_null() {
+        let collect = CollectSink::new();
+        let stats = StatsOnlySink::new();
+        let tee = TeeRef::new(vec![&collect as &dyn ResultSink, &stats as &dyn ResultSink]);
+        assert!(!tee.is_null());
+        let mut node = tee.node_sink(0).unwrap();
+        node.tile(pair_tile(MetricId::Sorenson, &[(0, 1, 0.5), (2, 3, 0.1)])).unwrap();
+        node.finish().unwrap();
+        assert_eq!(collect.take().0.len(), 2);
+        assert_eq!(stats.tiles(), 1);
+        assert_eq!(stats.values(), 2);
+        assert_eq!(stats.max_tile_len(), 2);
+        assert!(TeeRef::new(vec![]).is_null());
+        assert!(TeeRef::new(vec![&DiscardSink as &dyn ResultSink]).is_null());
+        assert!(DiscardSink.is_null());
+    }
+
+    #[test]
+    fn forward_sink_streams_to_closure() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        let sink = ForwardSink::new(move |rank, tile| {
+            seen2.lock().unwrap().push((rank, tile.len()));
+            Ok(())
+        });
+        let mut a = sink.node_sink(0).unwrap();
+        let mut b = sink.node_sink(3).unwrap();
+        a.tile(pair_tile(MetricId::Czekanowski, &[(0, 1, 1.0)])).unwrap();
+        b.tile(pair_tile(MetricId::Czekanowski, &[(0, 2, 1.0), (1, 2, 0.0)])).unwrap();
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(got, vec![(0, 1), (3, 2)]);
+    }
+}

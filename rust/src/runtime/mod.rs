@@ -209,6 +209,10 @@ pub struct RuntimeClient {
 pub struct RuntimeStats {
     pub executions: std::sync::atomic::AtomicU64,
     pub exec_nanos: std::sync::atomic::AtomicU64,
+    /// Actual artifact compilations (executable-cache misses). Flat
+    /// across repeated session runs — the cache-reuse signal the batch
+    /// driver reports.
+    pub compiles: std::sync::atomic::AtomicU64,
 }
 
 impl RuntimeClient {
@@ -222,6 +226,14 @@ impl RuntimeClient {
             self.stats.executions.load(Relaxed),
             self.stats.exec_nanos.load(Relaxed) as f64 * 1e-9,
         )
+    }
+
+    /// Artifact compilations so far (executable-cache misses; repeat
+    /// executions of a cached artifact do not count).
+    pub fn compiles(&self) -> u64 {
+        self.stats
+            .compiles
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Execute an artifact by name. Blocks until the service replies.
@@ -333,6 +345,7 @@ fn service_main(rx: Receiver<Msg>, manifest: Arc<Manifest>, stats: Arc<RuntimeSt
         let exe = client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        stats.compiles.fetch_add(1, Relaxed);
         cache.insert(name.to_string(), exe);
         Ok(())
     };

@@ -1,0 +1,567 @@
+//! The session-first public API: a long-lived [`Session`] that owns the
+//! expensive run setup — the PJRT service (and its compiled-executable
+//! cache), and [`Dataset`] handles whose per-node blocks are ingested
+//! **once per (dataset, representation)** and shared across every run
+//! that touches them — so a server answering many requests over the
+//! same genomic dataset pays input + ingest + compile once, not per
+//! request.
+//!
+//! This is the shape of the paper's production campaigns (stage data to
+//! the nodes once, keep kernels resident, push many metric sweeps
+//! through) and of the large-scale GWAS solvers it cites: amortize
+//! prepared operands across related computations, stream results out
+//! instead of materializing them.
+//!
+//! ```text
+//! Session ──owns──> PjrtService (lazy; executable cache persists)
+//!    │   └─caches─> Dataset (per spec) ──caches──> Block per
+//!    │                                             (repr, ingest key,
+//!    │                                              grid slice)
+//!    ├─ run(&RunRequest, &dyn ResultSink) → RunOutcome (stats+checksum;
+//!    │      values stream through the sink as tiles)
+//!    └─ run_collect(&RunRequest)          → RunOutcome with stores
+//! ```
+//!
+//! [`RunRequest`] is the typed request builder; [`RunConfig`] remains
+//! the serialized (TOML/CLI) form and lowers into a request via
+//! [`Session::request_from_config`] — which is also how the
+//! `comet batch` campaign driver maps a request file onto one session.
+//!
+//! Migration from the one-shot API: `coordinator::run(&cfg)` and
+//! friends still work (they build a throwaway fresh-ingest provider
+//! and legacy sinks internally); a long-lived caller replaces
+//!
+//! ```ignore
+//! let out = coordinator::run(&cfg)?;              // re-ingests, re-compiles
+//! ```
+//!
+//! with
+//!
+//! ```ignore
+//! let session = Session::new();
+//! let req = session.request_from_config(&cfg)?;   // dataset handle cached
+//! let out = session.run_collect(&req)?;           // ingest-once, cache-warm
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{BackendKind, InputSource, Precision, RunConfig};
+use crate::coordinator::{self, BlockProvider, RunOutcome};
+use crate::decomp::Grid;
+use crate::metrics::{Metric, MetricId};
+use crate::output::sink::{FileSink, ResultSink, TeeRef};
+use crate::runtime::{PjrtService, RuntimeClient};
+use crate::util::Scalar;
+use crate::vecdata::block::{Block, Repr};
+use crate::vecdata::SyntheticKind;
+
+/// Identity of a dataset: where the vectors come from and the campaign
+/// shape. Two requests naming equal specs share one [`Dataset`] (and
+/// therefore its ingested blocks) within a session.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DatasetSpec {
+    pub input: InputSource,
+    /// Total vectors n_v.
+    pub nv: usize,
+    /// Features per vector n_f.
+    pub nf: usize,
+}
+
+impl DatasetSpec {
+    pub fn synthetic(kind: SyntheticKind, seed: u64, nf: usize, nv: usize) -> Self {
+        DatasetSpec { input: InputSource::Synthetic { kind, seed }, nv, nf }
+    }
+
+    pub fn file(path: impl Into<String>, nf: usize, nv: usize) -> Self {
+        DatasetSpec { input: InputSource::File { path: path.into() }, nv, nf }
+    }
+}
+
+/// Blocks are cached per metric representation *and* ingest
+/// parameters ([`Metric::ingest_key`] — e.g. Sorensen's binarization
+/// threshold) *and* grid slice: `load_block` slices by (npv, npf, pv,
+/// pf), so different grids produce different block extents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct BlockKey {
+    repr: Repr,
+    ingest_key: u64,
+    npv: usize,
+    npf: usize,
+    pv: usize,
+    pf: usize,
+}
+
+/// One cached block's slot. The per-key mutex makes concurrent fills
+/// deterministic: ranks replicated along the npr axis ask for the
+/// *same* (pv, pf) block, and only the first to arrive loads + ingests
+/// it — the rest block briefly and reuse it (so even a single session
+/// run ingests fewer blocks than a one-shot run, which loads once per
+/// rank).
+type BlockSlot<T> = Arc<Mutex<Option<Block<T>>>>;
+
+#[derive(Debug, Default)]
+struct BlockCache<T: Scalar> {
+    blocks: Mutex<HashMap<BlockKey, BlockSlot<T>>>,
+}
+
+struct DatasetInner {
+    spec: DatasetSpec,
+    f32_blocks: BlockCache<f32>,
+    f64_blocks: BlockCache<f64>,
+    /// Load-and-ingest operations actually performed (cache misses).
+    /// The ingest-once contract: after the first run of a given
+    /// (repr, ingest key, grid), this stays flat however many more
+    /// runs the session serves over the dataset.
+    ingests: AtomicU64,
+}
+
+/// A cheap, clonable handle to a session-cached dataset. Implements
+/// [`BlockProvider`]: the coordinator's node programs pull their
+/// ingested blocks straight out of the cache (or fill it on first
+/// touch — node threads fill distinct keys, so the input phase stays
+/// parallel).
+#[derive(Clone)]
+pub struct Dataset {
+    inner: Arc<DatasetInner>,
+}
+
+impl Dataset {
+    fn new(spec: DatasetSpec) -> Self {
+        Dataset {
+            inner: Arc::new(DatasetInner {
+                spec,
+                f32_blocks: BlockCache::default(),
+                f64_blocks: BlockCache::default(),
+                ingests: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.inner.spec
+    }
+
+    /// Load-and-ingest operations performed so far (cache misses).
+    pub fn ingest_count(&self) -> u64 {
+        self.inner.ingests.load(Ordering::Relaxed)
+    }
+
+    /// Ingested blocks currently cached (both precisions).
+    pub fn cached_blocks(&self) -> usize {
+        fn filled<T: Scalar>(m: &Mutex<HashMap<BlockKey, BlockSlot<T>>>) -> usize {
+            m.lock().unwrap().values().filter(|s| s.lock().unwrap().is_some()).count()
+        }
+        filled(&self.inner.f32_blocks.blocks) + filled(&self.inner.f64_blocks.blocks)
+    }
+
+    fn cached_block<T: Scalar>(
+        &self,
+        cache: &BlockCache<T>,
+        cfg: &RunConfig,
+        metric: &dyn Metric<T>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<T>> {
+        let spec = &self.inner.spec;
+        ensure!(
+            cfg.input == spec.input && cfg.nv == spec.nv && cfg.nf == spec.nf,
+            "run config does not match its dataset handle (input/nv/nf differ)"
+        );
+        let key = BlockKey {
+            repr: metric.preferred_repr(),
+            ingest_key: metric.ingest_key(),
+            npv: cfg.grid.npv,
+            npf: cfg.grid.npf,
+            pv,
+            pf,
+        };
+        // Two-level locking: the map lock is held only to find/create
+        // the key's slot, so node threads filling *different* blocks
+        // load in parallel; the slot lock serializes same-key fills
+        // (npr-replicated ranks, concurrent runs), guaranteeing exactly
+        // one load + ingest per key — the counter-pinned contract.
+        let slot = {
+            let mut map = cache.blocks.lock().unwrap();
+            Arc::clone(map.entry(key).or_default())
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(b) = guard.as_ref() {
+            return Ok(b.clone());
+        }
+        let block = metric.ingest(coordinator::load_block::<T>(cfg, pv, pf)?);
+        self.inner.ingests.fetch_add(1, Ordering::Relaxed);
+        *guard = Some(block.clone());
+        Ok(block)
+    }
+}
+
+impl BlockProvider for Dataset {
+    fn block_f32(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f32>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f32>> {
+        self.cached_block(&self.inner.f32_blocks, cfg, metric, pv, pf)
+    }
+
+    fn block_f64(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f64>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f64>> {
+        self.cached_block(&self.inner.f64_blocks, cfg, metric, pv, pf)
+    }
+}
+
+/// A validated, typed run request bound to a session [`Dataset`].
+/// Built with [`RunRequest::builder`] or lowered from a [`RunConfig`]
+/// via [`Session::request_from_config`]. Internally a request *is* a
+/// validated `RunConfig` — the config type stays the single canonical
+/// lowered form (TOML, CLI, `run.meta` all speak it).
+#[derive(Clone)]
+pub struct RunRequest {
+    dataset: Dataset,
+    cfg: RunConfig,
+}
+
+impl RunRequest {
+    /// Start a request over `dataset` computing `metric`. Defaults:
+    /// 2-way, f64, optimized CPU backend, 1 thread, 1×1×1 grid,
+    /// unstaged, no file output.
+    pub fn builder(dataset: Dataset, metric: MetricId) -> RunRequestBuilder {
+        let spec = dataset.spec().clone();
+        let cfg = RunConfig {
+            metric,
+            nv: spec.nv,
+            nf: spec.nf,
+            input: spec.input,
+            // Result delivery is the sink's business, not the
+            // request's; the legacy flag stays false here.
+            store_metrics: false,
+            ..RunConfig::default()
+        };
+        RunRequestBuilder { dataset, cfg }
+    }
+
+    /// The lowered, validated config this request runs as.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+}
+
+/// Builder for [`RunRequest`] — the typed replacement for ad-hoc
+/// `RunConfig` field mutation. `build` validates the assembled run
+/// (metric/way support, domain-compatible generators, grid bounds).
+pub struct RunRequestBuilder {
+    dataset: Dataset,
+    cfg: RunConfig,
+}
+
+impl RunRequestBuilder {
+    pub fn num_way(mut self, num_way: usize) -> Self {
+        self.cfg.num_way = num_way;
+        self
+    }
+
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.cfg.precision = precision;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    pub fn grid(mut self, grid: Grid) -> Self {
+        self.cfg.grid = grid;
+        self
+    }
+
+    pub fn num_stage(mut self, num_stage: usize) -> Self {
+        self.cfg.num_stage = num_stage;
+        self
+    }
+
+    pub fn stage(mut self, stage: usize) -> Self {
+        self.cfg.stage = Some(stage);
+        self
+    }
+
+    pub fn output_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.output_dir = Some(dir.into());
+        self
+    }
+
+    pub fn output_threshold(mut self, threshold: f64) -> Self {
+        self.cfg.output_threshold = Some(threshold);
+        self
+    }
+
+    pub fn build(self) -> Result<RunRequest> {
+        self.cfg.validate()?;
+        Ok(RunRequest { dataset: self.dataset, cfg: self.cfg })
+    }
+}
+
+/// The long-lived service object. See the module docs for the shape;
+/// thread-safe (`&self` methods throughout), so one session can serve
+/// concurrent callers.
+pub struct Session {
+    artifact_dir: PathBuf,
+    pjrt: Mutex<Option<PjrtService>>,
+    datasets: Mutex<HashMap<DatasetSpec, Dataset>>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    /// A session over the default `artifacts` directory (only touched
+    /// if a request names the PJRT backend).
+    pub fn new() -> Self {
+        Self::with_artifacts("artifacts")
+    }
+
+    pub fn with_artifacts(artifact_dir: impl Into<PathBuf>) -> Self {
+        Session {
+            artifact_dir: artifact_dir.into(),
+            pjrt: Mutex::new(None),
+            datasets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Get-or-create the dataset handle for `spec`. Equal specs return
+    /// the same handle (and therefore share ingested blocks).
+    pub fn dataset(&self, spec: DatasetSpec) -> Dataset {
+        let mut map = self.datasets.lock().unwrap();
+        map.entry(spec.clone()).or_insert_with(|| Dataset::new(spec)).clone()
+    }
+
+    /// Lower a serialized [`RunConfig`] (TOML file, CLI flags, one
+    /// entry of a `comet batch` file) into a request against this
+    /// session's dataset cache.
+    pub fn request_from_config(&self, cfg: &RunConfig) -> Result<RunRequest> {
+        cfg.validate()?;
+        let spec = DatasetSpec { input: cfg.input.clone(), nv: cfg.nv, nf: cfg.nf };
+        Ok(RunRequest { dataset: self.dataset(spec), cfg: cfg.clone() })
+    }
+
+    /// Run a request, streaming result tiles through `sink`. The
+    /// outcome carries stats and the §5 checksum — bit-identical to a
+    /// one-shot `coordinator::run` of the same config, with the
+    /// dataset's ingest and the PJRT executable cache amortized across
+    /// every run this session has served.
+    ///
+    /// A request built with an output directory
+    /// ([`RunRequestBuilder::output_dir`]) gets its §6.8 file sink (and
+    /// `run.meta`) teed in alongside `sink` — `output_dir` means the
+    /// same thing on every path.
+    pub fn run(&self, req: &RunRequest, sink: &dyn ResultSink) -> Result<RunOutcome> {
+        let client = self.client_for(req.cfg.backend)?;
+        let provider = Arc::new(req.dataset.clone()) as Arc<dyn BlockProvider>;
+        match &req.cfg.output_dir {
+            Some(dir) => {
+                let file = FileSink::new(dir, req.cfg.output_threshold);
+                let tee = TeeRef::new(vec![sink, &file as &dyn ResultSink]);
+                coordinator::run_streamed(&req.cfg, client, provider, &tee)
+            }
+            None => coordinator::run_streamed(&req.cfg, client, provider, sink),
+        }
+    }
+
+    /// As [`Session::run`], collecting values into
+    /// `RunOutcome::{pairs, triples}` — the convenience shape for
+    /// examples, tests, and small campaigns.
+    pub fn run_collect(&self, req: &RunRequest) -> Result<RunOutcome> {
+        // add_file = false: Session::run already rides the request's
+        // file sink when output_dir is set.
+        coordinator::run_with_legacy_sinks(&req.cfg, true, false, |sink| self.run(req, sink))
+    }
+
+    /// (compiles, executions, accelerator seconds) of the session's
+    /// PJRT service, if one has started. Compiles staying flat across
+    /// runs is the executable-cache-reuse signal.
+    pub fn accel_stats(&self) -> Option<(u64, u64, f64)> {
+        let guard = self.pjrt.lock().unwrap();
+        guard.as_ref().map(|s| {
+            let c = s.client();
+            let (execs, secs) = c.stats();
+            (c.compiles(), execs, secs)
+        })
+    }
+
+    fn client_for(&self, backend: BackendKind) -> Result<Option<RuntimeClient>> {
+        if backend != BackendKind::Pjrt {
+            return Ok(None);
+        }
+        let mut guard = self.pjrt.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(
+                PjrtService::start(&self.artifact_dir).context("start PJRT service")?,
+            );
+        }
+        Ok(Some(guard.as_ref().unwrap().client()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::engine::{Ccc, Czekanowski, Sorenson};
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec::synthetic(SyntheticKind::Alleles, 5, 40, 12)
+    }
+
+    #[test]
+    fn equal_specs_share_one_dataset_handle() {
+        let session = Session::new();
+        let a = session.dataset(spec());
+        let b = session.dataset(spec());
+        assert!(Arc::ptr_eq(&a.inner, &b.inner));
+        let c = session.dataset(DatasetSpec::synthetic(SyntheticKind::Alleles, 6, 40, 12));
+        assert!(!Arc::ptr_eq(&a.inner, &c.inner));
+    }
+
+    #[test]
+    fn blocks_ingest_once_per_repr_and_key() {
+        let session = Session::new();
+        let ds = session.dataset(spec());
+        let cfg = RunRequest::builder(ds.clone(), MetricId::Czekanowski)
+            .grid(Grid::new(1, 2, 1))
+            .build()
+            .unwrap()
+            .config()
+            .clone();
+        let cz = Czekanowski;
+        // Same (repr, key, slice) twice: one ingest.
+        let a = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        let b = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), 1);
+        assert_eq!(a.nv(), b.nv());
+        // CCC shares the float representation — still one ingest.
+        let ccc = Ccc::new(cfg.nf);
+        let _ = ds.block_f64(&cfg, &ccc, 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), 1);
+        // Sorensen packs — a second representation, a second ingest.
+        let sor = Sorenson::default();
+        let packed = ds.block_f64(&cfg, &sor, 0, 0).unwrap();
+        assert_eq!(packed.repr(), Repr::Packed);
+        assert_eq!(ds.ingest_count(), 2);
+        // A different Sorensen threshold must NOT share packed blocks.
+        let sor_lo = Sorenson { threshold: 0.1 };
+        let _ = ds.block_f64(&cfg, &sor_lo, 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), 3);
+        // Other node/grid slices are distinct blocks.
+        let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
+        assert_eq!(ds.ingest_count(), 4);
+        assert_eq!(ds.cached_blocks(), 4);
+        // Precisions cache separately (typed kernels consume them).
+        let _ = ds.block_f32(&cfg, &Czekanowski, 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), 5);
+    }
+
+    #[test]
+    fn cached_blocks_match_fresh_loads() {
+        let session = Session::new();
+        let ds = session.dataset(spec());
+        let cfg = RunRequest::builder(ds.clone(), MetricId::Czekanowski)
+            .grid(Grid::new(1, 3, 1))
+            .build()
+            .unwrap()
+            .config()
+            .clone();
+        for pv in 0..3 {
+            let cached = ds.block_f64(&cfg, &Czekanowski, pv, 0).unwrap();
+            let fresh = Czekanowski
+                .ingest(coordinator::load_block::<f64>(&cfg, pv, 0).unwrap());
+            let (c, f) = (cached.as_float().unwrap(), fresh.as_float().unwrap());
+            assert_eq!(c.first_id, f.first_id);
+            for v in 0..c.nv {
+                assert_eq!(c.col(v), f.col(v), "pv={pv} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_config_is_rejected() {
+        let session = Session::new();
+        let ds = session.dataset(spec());
+        let mut cfg = RunRequest::builder(ds.clone(), MetricId::Czekanowski)
+            .build()
+            .unwrap()
+            .config()
+            .clone();
+        cfg.nv = 99;
+        let err = ds.block_f64(&cfg, &Czekanowski, 0, 0).unwrap_err();
+        assert!(err.to_string().contains("dataset handle"), "{err}");
+    }
+
+    #[test]
+    fn builder_validates_requests() {
+        let session = Session::new();
+        let ds = session.dataset(spec());
+        // CCC has no 3-way form.
+        let err = RunRequest::builder(ds.clone(), MetricId::Ccc)
+            .num_way(3)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("3-way"), "{err}");
+        // CCC over a non-allele generator is rejected.
+        let grid_ds =
+            session.dataset(DatasetSpec::synthetic(SyntheticKind::RandomGrid, 1, 16, 8));
+        let err = RunRequest::builder(grid_ds, MetricId::Ccc).build().unwrap_err();
+        assert!(err.to_string().contains("allele"), "{err}");
+        // A grid larger than the vector count is rejected.
+        let err = RunRequest::builder(ds.clone(), MetricId::Czekanowski)
+            .grid(Grid::new(1, 64, 1))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("npv"), "{err}");
+        // And a sane request builds, bound to its dataset.
+        let req = RunRequest::builder(ds, MetricId::Sorenson)
+            .grid(Grid::new(1, 2, 1))
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(req.config().metric, MetricId::Sorenson);
+        assert_eq!(req.config().nv, 12);
+        assert!(!req.config().store_metrics);
+    }
+
+    #[test]
+    fn request_from_config_reuses_session_datasets() {
+        let session = Session::new();
+        let cfg = RunConfig {
+            nv: 12,
+            nf: 40,
+            input: InputSource::Synthetic { kind: SyntheticKind::Alleles, seed: 5 },
+            ..Default::default()
+        };
+        let req = session.request_from_config(&cfg).unwrap();
+        let ds = session.dataset(spec());
+        assert!(Arc::ptr_eq(&req.dataset().inner, &ds.inner));
+    }
+}

@@ -21,11 +21,13 @@ pub mod bits;
 pub mod block;
 pub mod io;
 
+use anyhow::bail;
+
 use crate::util::prng::Stream;
 use crate::util::Scalar;
 
 /// Synthetic dataset families (paper §5 + §6.8).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SyntheticKind {
     /// Dense values on the k/64 grid, k ∈ [1, 64] (strictly positive so
     /// denominators never vanish).
@@ -43,6 +45,44 @@ pub enum SyntheticKind {
     /// exact in both precisions. A fallback entry guarantees each
     /// vector is nonzero.
     Alleles,
+}
+
+impl SyntheticKind {
+    /// Every registered generator, in CLI-help order.
+    pub const ALL: [SyntheticKind; 4] = [
+        SyntheticKind::RandomGrid,
+        SyntheticKind::Verifiable,
+        SyntheticKind::PhewasLike,
+        SyntheticKind::Alleles,
+    ];
+
+    /// The name [`SyntheticKind::parse`] accepts (and `run.meta`-style
+    /// output uses).
+    pub fn name(self) -> &'static str {
+        match self {
+            SyntheticKind::RandomGrid => "grid",
+            SyntheticKind::Verifiable => "verifiable",
+            SyntheticKind::PhewasLike => "phewas",
+            SyntheticKind::Alleles => "alleles",
+        }
+    }
+
+    /// Parse a generator name — the single source of truth for the
+    /// `--synthetic` / `input.synthetic` vocabulary (previously copied
+    /// in `cmd_run`, `cmd_gen_data`, and the TOML lowering, which is
+    /// exactly how vocabularies drift apart).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        for kind in Self::ALL {
+            if s == kind.name() {
+                return Ok(kind);
+            }
+        }
+        let valid: Vec<&str> = Self::ALL.iter().map(|k| k.name()).collect();
+        bail!(
+            "unknown synthetic kind {s:?} (want one of: {})",
+            valid.join("|")
+        )
+    }
 }
 
 /// A set of n_v vectors of n_f features, stored column-major
@@ -192,6 +232,18 @@ impl<T: Scalar> VectorSet<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_kind_parse_roundtrip() {
+        for kind in SyntheticKind::ALL {
+            assert_eq!(SyntheticKind::parse(kind.name()).unwrap(), kind);
+        }
+        let err = SyntheticKind::parse("gridd").unwrap_err().to_string();
+        // The error must teach the full vocabulary.
+        for kind in SyntheticKind::ALL {
+            assert!(err.contains(kind.name()), "{err}");
+        }
+    }
 
     #[test]
     fn generation_is_decomposition_independent() {

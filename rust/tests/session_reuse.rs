@@ -1,0 +1,250 @@
+//! Session-reuse contracts (ISSUE 5 acceptance):
+//!
+//! 1. A `Session` running the same request N times produces checksums
+//!    (and per-pair values) **bit-identical** to the pre-redesign
+//!    one-shot `coordinator::run`, for all three metrics in 2-way runs
+//!    and for Czekanowski in 3-way runs, on both native backends.
+//! 2. Dataset blocks are ingested **once per (repr, grid slice)**
+//!    across N runs — pinned by both `bits::pack_calls()` (the
+//!    process-global packing counter) and the dataset's own ingest
+//!    counter.
+//! 3. The sink-forwarding path streams bounded tiles and materializes
+//!    no store.
+//! 4. Session file output is byte-identical to one-shot file output.
+//!
+//! `bits::pack_calls()` is process-global, so every test in this
+//! binary serializes on [`lock`] (the `tests/comm_accounting.rs`
+//! pattern).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use comet::config::{BackendKind, InputSource, RunConfig};
+use comet::coordinator;
+use comet::decomp::Grid;
+use comet::metrics::MetricId;
+use comet::output::sink::{ForwardSink, StatsOnlySink};
+use comet::session::Session;
+use comet::vecdata::{bits, SyntheticKind};
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg_for(
+    metric: MetricId,
+    num_way: usize,
+    nv: usize,
+    nf: usize,
+    grid: Grid,
+    backend: BackendKind,
+) -> RunConfig {
+    let kind = match metric {
+        MetricId::Ccc => SyntheticKind::Alleles,
+        _ => SyntheticKind::RandomGrid,
+    };
+    RunConfig {
+        metric,
+        num_way,
+        nv,
+        nf,
+        backend,
+        grid,
+        input: InputSource::Synthetic { kind, seed: 29 },
+        store_metrics: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn session_runs_bit_identical_to_one_shot_across_metrics_and_backends() {
+    let _g = lock();
+    for backend in [BackendKind::CpuOptimized, BackendKind::CpuReference] {
+        for metric in MetricId::ALL {
+            let cfg = cfg_for(metric, 2, 30, 48, Grid::new(1, 3, 1), backend);
+            let one_shot = coordinator::run(&cfg).unwrap();
+            let session = Session::new();
+            let req = session.request_from_config(&cfg).unwrap();
+            let first = session.run_collect(&req).unwrap();
+            let second = session.run_collect(&req).unwrap();
+            let what = format!("{} on {:?}", metric.name(), backend);
+            assert_eq!(first.checksum, one_shot.checksum, "{what} (first)");
+            assert_eq!(second.checksum, one_shot.checksum, "{what} (reused)");
+            assert_eq!(second.stats.metrics, one_shot.stats.metrics, "{what}");
+            // Values, not just digests: dense offset-keyed equality.
+            let a = one_shot.pairs.as_ref().unwrap().to_dense(cfg.nv);
+            let b = second.pairs.as_ref().unwrap().to_dense(cfg.nv);
+            for (off, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    x.unwrap().to_bits(),
+                    y.unwrap().to_bits(),
+                    "{what} offset {off}"
+                );
+            }
+        }
+
+        // 3-way (Czekanowski is the only registered 3-way family).
+        let cfg = cfg_for(MetricId::Czekanowski, 3, 16, 24, Grid::new(1, 2, 1), backend);
+        let one_shot = coordinator::run(&cfg).unwrap();
+        let session = Session::new();
+        let req = session.request_from_config(&cfg).unwrap();
+        let first = session.run_collect(&req).unwrap();
+        let second = session.run_collect(&req).unwrap();
+        assert_eq!(first.checksum, one_shot.checksum, "3-way on {backend:?}");
+        assert_eq!(second.checksum, one_shot.checksum, "3-way reused on {backend:?}");
+        let a = one_shot.triples.as_ref().unwrap().to_dense(cfg.nv);
+        let b = second.triples.as_ref().unwrap().to_dense(cfg.nv);
+        for (off, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.unwrap().to_bits(),
+                y.unwrap().to_bits(),
+                "3-way {backend:?} offset {off}"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocks_ingest_once_per_repr_across_n_runs() {
+    let _g = lock();
+    let cfg =
+        cfg_for(MetricId::Sorenson, 2, 32, 70, Grid::new(1, 4, 1), BackendKind::CpuOptimized);
+
+    // One-shot baseline: every run re-packs every node block.
+    let before = bits::pack_calls();
+    let baseline = coordinator::run(&cfg).unwrap();
+    assert_eq!(
+        bits::pack_calls() - before,
+        4,
+        "a one-shot run packs once per node block (npv=4)"
+    );
+
+    // Session: N runs, one pack per block total.
+    let session = Session::new();
+    let req = session.request_from_config(&cfg).unwrap();
+    let ds = req.dataset().clone();
+    let before = bits::pack_calls();
+    for round in 0..3 {
+        let out = session.run_collect(&req).unwrap();
+        assert_eq!(out.checksum, baseline.checksum, "round {round}");
+    }
+    assert_eq!(
+        bits::pack_calls() - before,
+        4,
+        "3 session runs pack each block exactly once"
+    );
+    assert_eq!(ds.ingest_count(), 4);
+
+    // A float metric over the same dataset handle: a second
+    // representation ingests its own blocks, with zero packing.
+    let cz_cfg = RunConfig { metric: MetricId::Czekanowski, ..cfg.clone() };
+    let cz_req = session.request_from_config(&cz_cfg).unwrap();
+    let before = bits::pack_calls();
+    session.run_collect(&cz_req).unwrap();
+    session.run_collect(&cz_req).unwrap();
+    assert_eq!(bits::pack_calls() - before, 0, "float runs never pack");
+    assert_eq!(ds.ingest_count(), 8, "4 packed + 4 float blocks, each once");
+}
+
+#[test]
+fn replicated_ranks_share_ingests_deterministically() {
+    let _g = lock();
+    // npr = 2: ranks replicated along the replication axis ask for the
+    // SAME (pv, pf) block. The per-key slot serializes the racing
+    // fills, so even the first session run ingests npv blocks where a
+    // one-shot run loads one per rank — and the counters stay exact.
+    let cfg =
+        cfg_for(MetricId::Sorenson, 2, 24, 64, Grid::new(1, 2, 2), BackendKind::CpuOptimized);
+    let one_shot = coordinator::run(&cfg).unwrap();
+
+    let session = Session::new();
+    let req = session.request_from_config(&cfg).unwrap();
+    let before = bits::pack_calls();
+    let a = session.run_collect(&req).unwrap();
+    let b = session.run_collect(&req).unwrap();
+    assert_eq!(a.checksum, one_shot.checksum);
+    assert_eq!(b.checksum, one_shot.checksum);
+    assert_eq!(
+        bits::pack_calls() - before,
+        2,
+        "2 distinct (pv, pf) blocks packed once each across 2 runs × 4 ranks"
+    );
+    assert_eq!(req.dataset().ingest_count(), 2);
+}
+
+#[test]
+fn sink_forwarding_streams_tiles_without_store() {
+    let _g = lock();
+    let session = Session::new();
+    let cfg =
+        cfg_for(MetricId::Czekanowski, 2, 40, 32, Grid::new(1, 4, 1), BackendKind::CpuOptimized);
+    let req = session.request_from_config(&cfg).unwrap();
+
+    let values = Arc::new(AtomicU64::new(0));
+    let max_tile = Arc::new(AtomicU64::new(0));
+    let (v2, m2) = (Arc::clone(&values), Arc::clone(&max_tile));
+    let forward = ForwardSink::new(move |_rank, tile| {
+        v2.fetch_add(tile.len() as u64, Ordering::Relaxed);
+        m2.fetch_max(tile.len() as u64, Ordering::Relaxed);
+        Ok(())
+    });
+    let out = session.run(&req, &forward).unwrap();
+
+    let total = (cfg.nv * (cfg.nv - 1) / 2) as u64;
+    assert!(
+        out.pairs.is_none() && out.triples.is_none(),
+        "forwarding path must not materialize a store"
+    );
+    assert_eq!(values.load(Ordering::Relaxed), total, "every value streamed");
+    assert_eq!(out.stats.metrics, total);
+    assert_eq!(out.stats.tiles, 10, "npv=4 → 10 computed blocks → 10 tiles");
+    assert!(
+        max_tile.load(Ordering::Relaxed) < total,
+        "every tile strictly smaller than the campaign ({} vs {total})",
+        max_tile.load(Ordering::Relaxed)
+    );
+
+    // Same contract on the 3-way path.
+    let cfg3 =
+        cfg_for(MetricId::Czekanowski, 3, 18, 24, Grid::new(1, 3, 1), BackendKind::CpuOptimized);
+    let req3 = session.request_from_config(&cfg3).unwrap();
+    let stats = StatsOnlySink::new();
+    let out3 = session.run(&req3, &stats).unwrap();
+    assert!(out3.triples.is_none());
+    assert_eq!(stats.values(), out3.stats.metrics);
+    assert!(out3.stats.tiles > 1);
+    assert!(stats.max_tile_len() < stats.values());
+}
+
+#[test]
+fn session_file_output_matches_one_shot_bytes() {
+    let _g = lock();
+    let base = std::env::temp_dir().join(format!("comet-session-files-{}", std::process::id()));
+    let mut cfg =
+        cfg_for(MetricId::Sorenson, 2, 24, 64, Grid::new(1, 2, 1), BackendKind::CpuOptimized);
+    cfg.store_metrics = false;
+    cfg.output_dir = Some(base.join("oneshot").to_string_lossy().into_owned());
+    coordinator::run(&cfg).unwrap();
+
+    let session = Session::new();
+    let mut cfg2 = cfg.clone();
+    cfg2.output_dir = Some(base.join("session").to_string_lossy().into_owned());
+    let req = session.request_from_config(&cfg2).unwrap();
+    // Two runs: the second rewrites the same bytes from cached blocks.
+    session.run_collect(&req).unwrap();
+    session.run_collect(&req).unwrap();
+
+    for rank in 0..cfg.grid.np() {
+        let a = comet::output::read_dense(&base.join("oneshot").join(format!("metrics_{rank}.bin")))
+            .unwrap();
+        let b = comet::output::read_dense(&base.join("session").join(format!("metrics_{rank}.bin")))
+            .unwrap();
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "rank {rank}");
+    }
+    assert!(base.join("session").join("run.meta").exists());
+    std::fs::remove_dir_all(&base).ok();
+}

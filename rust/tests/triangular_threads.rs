@@ -250,6 +250,41 @@ fn diag_blocks_cost_at_most_55_percent_of_full_square() {
 }
 
 #[test]
+fn balanced_tri_partition_pins_per_thread_ops() {
+    let _g = lock();
+    let (nf, nv, threads) = (44usize, 64usize, 4usize);
+    // Analytic per-worker deltas (opcount::ops_tri_rows) over the
+    // partition the triangular kernels actually run
+    // (linalg::tri_partition low+high band pairing).
+    let parts = comet::linalg::tri_partition(nv, threads);
+    assert_eq!(parts.len(), threads);
+    let per_worker: Vec<u64> = parts
+        .iter()
+        .map(|ranges| ranges.iter().map(|r| opcount::ops_tri_rows(nf, r.clone(), nv)).sum())
+        .collect();
+    // The workers partition the triangle exactly …
+    assert_eq!(per_worker.iter().sum::<u64>(), opcount::ops_tri(nf, nv));
+    // … and each carries its fair share (the contiguous split's first
+    // chunk would carry ~1.75× ideal at 4 threads).
+    let ideal = opcount::ops_tri(nf, nv) as f64 / threads as f64;
+    for (w, &ops) in per_worker.iter().enumerate() {
+        assert!(
+            (ops as f64) >= 0.85 * ideal && (ops as f64) <= 1.15 * ideal,
+            "worker {w}: {ops} vs ideal {ideal}"
+        );
+    }
+    // Empirical cross-check: the threaded kernel records exactly the
+    // analytic triangle total (so the per-range deltas above are the
+    // deltas its workers record), and values stay bit-identical.
+    let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 21, nf, nv, 0);
+    let serial = optimized::mgemm2_tri(&v);
+    let before = opcount::elem_ops();
+    let mt = optimized::mgemm2_tri_mt(&v, threads);
+    assert_eq!(opcount::elem_ops() - before, opcount::ops_tri(nf, nv));
+    assert_eq!(serial, mt);
+}
+
+#[test]
 fn three_way_checksums_invariant_across_threads() {
     let _g = lock();
     let mut digests = Vec::new();
