@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Schema/append-only check for BENCH_kernels.json.
+
+The bench harness (rust/benches/bench_kernels.rs) appends runs to the
+perf-trajectory file with a suffix splice, which only works while the
+file keeps the exact layout the writer emits. This check pins that
+contract in CI — run it before AND after the quick bench so both the
+committed file and a freshly appended one validate:
+
+  * top level: schema tag, unit string, append-only "runs" list
+  * every run: created_unix / quick / source ("measured" | "estimate",
+    estimates carry a "note"), non-empty entries
+  * every entry: required keys with the right types, positive rates
+  * created_unix is non-decreasing across runs (append-only ordering)
+  * the raw text ends with the splice tail the harness matches on
+
+Exit code 0 = valid; 1 = any violation (all are listed).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "comet-bench-kernels/v1"
+TAIL = "\n  ]\n}\n"
+RUN_KEYS = {"created_unix": int, "quick": bool, "source": str, "entries": list}
+ENTRY_KEYS = {
+    "metric": str,
+    "repr": str,
+    "kernel": str,
+    "threads": int,
+    "nf": int,
+    "nv": int,
+    "iters": int,
+    "secs_median": (int, float),
+    "comparisons_per_sec": (int, float),
+}
+METRICS = {"czekanowski", "ccc", "sorenson"}
+REPRS = {"float", "packed"}
+KERNELS = {"full", "tri", "session-oneshot", "session-reused"}
+
+
+def check(path: Path) -> list:
+    errs = []
+    text = path.read_text()
+    if not text.endswith(TAIL):
+        errs.append(f"file must end with the splice tail {TAIL!r} (append contract)")
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        return errs + [f"not valid JSON: {e}"]
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema is {doc.get('schema')!r}, want {SCHEMA!r}")
+    if not isinstance(doc.get("unit"), str):
+        errs.append("missing/invalid 'unit'")
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or not runs:
+        return errs + ["'runs' must be a non-empty list"]
+    prev_created = 0
+    for i, run in enumerate(runs):
+        where = f"runs[{i}]"
+        for key, typ in RUN_KEYS.items():
+            if not isinstance(run.get(key), typ):
+                errs.append(f"{where}.{key}: missing or not {typ}")
+        src = run.get("source")
+        if src not in ("measured", "estimate"):
+            errs.append(f"{where}.source: {src!r} not in measured|estimate")
+        if src == "estimate" and not isinstance(run.get("note"), str):
+            errs.append(f"{where}: estimate runs must carry a 'note' explaining provenance")
+        created = run.get("created_unix", 0)
+        if isinstance(created, int):
+            if created < prev_created:
+                errs.append(f"{where}.created_unix went backwards (append-only ordering)")
+            prev_created = created
+        entries = run.get("entries") or []
+        if not entries:
+            errs.append(f"{where}.entries is empty")
+        for j, e in enumerate(entries):
+            ew = f"{where}.entries[{j}]"
+            for key, typ in ENTRY_KEYS.items():
+                if not isinstance(e.get(key), typ) or isinstance(e.get(key), bool):
+                    errs.append(f"{ew}.{key}: missing or not {typ}")
+                    break
+            else:
+                if e["metric"] not in METRICS:
+                    errs.append(f"{ew}.metric {e['metric']!r} unknown")
+                if e["repr"] not in REPRS:
+                    errs.append(f"{ew}.repr {e['repr']!r} unknown")
+                if e["kernel"] not in KERNELS:
+                    errs.append(f"{ew}.kernel {e['kernel']!r} unknown")
+                if e["secs_median"] <= 0 or e["comparisons_per_sec"] <= 0:
+                    errs.append(f"{ew}: non-positive timing/rate")
+    return errs
+
+
+def main() -> int:
+    path = Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json")
+    if not path.exists():
+        print(f"check_bench: {path} not found", file=sys.stderr)
+        return 1
+    errs = check(path)
+    if errs:
+        for e in errs:
+            print(f"check_bench: {path}: {e}", file=sys.stderr)
+        return 1
+    doc = json.loads(path.read_text())
+    n_runs = len(doc["runs"])
+    n_entries = sum(len(r["entries"]) for r in doc["runs"])
+    print(f"check_bench: {path} OK — {n_runs} run(s), {n_entries} entries")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

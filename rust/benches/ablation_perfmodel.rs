@@ -58,6 +58,11 @@ fn main() {
             load,
             diag_load: 1, // every node owns its Δ=0 diagonal block
             threads: 1,
+            // t_gemm is calibrated from the already-vectorized kernel,
+            // so no extra lane speedup applies.
+            lane_width: 1,
+            t_spawn: 0.0,
+            pool_warm: true,
             triangular: true,
             nst: 1,
             net: host_net(),
@@ -88,6 +93,9 @@ fn main() {
         load: 13,
         diag_load: 0,
         threads: 1,
+        lane_width: 1,
+        t_spawn: 0.0,
+        pool_warm: true,
         triangular: false,
         nst: 16,
         net: CostModel::gemini(),

@@ -96,6 +96,11 @@ fn main() {
     let tri_ops = opcount::ops_tri(nf, nv);
     let mut entries: Vec<Entry> = Vec::new();
 
+    // Warm the persistent pool up front so every timed point reflects
+    // the steady state — dispatch to parked workers, zero spawns in the
+    // timed region (spawn cost is once-per-process, not per call).
+    comet::linalg::pool::warm(*THREADS.iter().max().unwrap());
+
     for threads in THREADS {
         let mut push = |metric, repr, kernel, secs: f64, cps: f64| {
             entries.push(Entry { metric, repr, kernel, threads, nf, nv, iters, secs, cps });

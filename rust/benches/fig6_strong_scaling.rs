@@ -74,6 +74,9 @@ fn main() {
             load: lmax,
             diag_load: 0,
             threads: 1,
+            lane_width: 1,
+            t_spawn: 0.0,
+            pool_warm: true,
             triangular: false,
             nst: 1,
             net: CostModel::gemini(),
@@ -99,6 +102,9 @@ fn main() {
             load: smax,
             diag_load: 0,
             threads: 1,
+            lane_width: 1,
+            t_spawn: 0.0,
+            pool_warm: true,
             triangular: false,
             nst: 1,
             net: CostModel::gemini(),

@@ -61,10 +61,23 @@ pub struct RunStats {
     pub t_total: f64,
     /// Accelerator-side execution seconds (PJRT only).
     pub t_accel: f64,
+    /// Worker-pool dispatch accounting for this run: parallel scopes
+    /// entered (one per multi-threaded kernel call), tasks executed,
+    /// and OS threads newly spawned while the run was in flight.
+    /// Captured as deltas of the process-global `linalg::pool` counters
+    /// around the run (concurrent runs in one process each see the
+    /// combined activity). `pool_threads_spawned` staying 0 is the
+    /// warm-pool signal: zero per-kernel-call thread spawns.
+    pub pool_scopes: u64,
+    pub pool_tasks: u64,
+    pub pool_threads_spawned: u64,
 }
 
 impl RunStats {
-    fn absorb(&mut self, o: &RunStats) {
+    /// Merge another run's (or node's) counters into this one: counts
+    /// sum, wall-clock phases take the max (makespan). Public so batch
+    /// drivers can aggregate per-request outcomes.
+    pub fn absorb(&mut self, o: &RunStats) {
         self.mgemm2_calls += o.mgemm2_calls;
         self.mgemm3_calls += o.mgemm3_calls;
         self.metrics += o.metrics;
@@ -76,6 +89,12 @@ impl RunStats {
         // the cluster-level counters kept as a debug cross-check.
         self.comm_bytes += o.comm_bytes;
         self.comm_messages += o.comm_messages;
+        // Pool counters are captured once at run level (node results
+        // carry zeros), but sum like the other counters so batch-style
+        // aggregation over outcomes works.
+        self.pool_scopes += o.pool_scopes;
+        self.pool_tasks += o.pool_tasks;
+        self.pool_threads_spawned += o.pool_threads_spawned;
         self.t_input = self.t_input.max(o.t_input);
         self.t_compute = self.t_compute.max(o.t_compute);
         self.t_output = self.t_output.max(o.t_output);
@@ -307,6 +326,7 @@ fn run_typed<T: Scalar + ProvideBlocks>(
     let null = sink.is_null();
 
     let t0 = std::time::Instant::now();
+    let pool_before = crate::linalg::pool::stats();
     let mut handles = Vec::new();
     for ep in endpoints {
         let coord = cfg.grid.coords(ep.rank);
@@ -349,6 +369,14 @@ fn run_typed<T: Scalar + ProvideBlocks>(
         outcome.stats.absorb(&res.stats);
     }
     outcome.stats.t_total = t0.elapsed().as_secs_f64();
+    // Worker-pool dispatch deltas for this run (see RunStats docs for
+    // the concurrent-runs caveat). threads_spawned > 0 only while the
+    // global pool is still growing to its high-water parallelism —
+    // a warm process does zero spawns per kernel call.
+    let pool_after = crate::linalg::pool::stats();
+    outcome.stats.pool_scopes = pool_after.scopes - pool_before.scopes;
+    outcome.stats.pool_tasks = pool_after.tasks - pool_before.tasks;
+    outcome.stats.pool_threads_spawned = pool_after.threads_spawned - pool_before.threads_spawned;
     // The absorbed per-node sent totals must reproduce the fabric's own
     // accounting exactly — if they diverge, a node program forgot to
     // record its endpoint counts (see tests/comm_accounting.rs).

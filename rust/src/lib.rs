@@ -103,6 +103,30 @@
 //! at the repo root (including a session-amortization point: one-shot
 //! runs vs a reused `Session`).
 //!
+//! ## SIMD inner kernels + persistent worker pool
+//!
+//! The inner loops are SIMD-shaped ([`linalg::simd`], safe Rust the
+//! autovectorizer turns into vector instructions): packed popcount
+//! sweeps run [`linalg::simd::LANES`] independent accumulator chains
+//! per iteration (bit-exact — integer sums are order-free), and the
+//! float panel kernels repack each register tile **q-major**
+//! ([`linalg::simd::pack_tile_qmajor`]) so the tile loop reads
+//! contiguous unit-stride rows instead of gathering across column
+//! slices. Accumulation order per output element is unchanged (and no
+//! FMA is used), so results stay bit-identical to the reference
+//! backend. Multi-threaded drivers dispatch to a **persistent worker
+//! pool** ([`linalg::pool`]): threads spawn once per process and park,
+//! a kernel call enqueues its row-panel closures and blocks until they
+//! drain — zero per-kernel-call thread spawns in steady state.
+//! [`session::Session::run`] warms the pool before compute;
+//! [`coordinator::RunStats`] surfaces per-run dispatch deltas
+//! (`pool_scopes`/`pool_tasks`/`pool_threads_spawned`), and the `comet
+//! batch` ledger reports the spawns-amortized total.
+//! `tests/simd_pool.rs` pins the bit-identity and zero-spawn
+//! contracts; [`perfmodel`] prices both effects (`lane_width` scales
+//! the mGEMM term with `threads`, `t_spawn`/`pool_warm` price cold
+//! per-call dispatch).
+//!
 //! ## Layer map (see DESIGN.md)
 //!
 //! * **Layer 1/2 (build time)** — Pallas kernels + JAX graphs in

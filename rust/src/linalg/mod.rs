@@ -13,6 +13,11 @@
 //! * [`opcount`] — process-wide elementwise-operation accounting
 //!   (proves the triangular diag-block halving in tests/benches).
 //!
+//! * [`simd`] — lane-shaped inner kernels (wide u64 popcount sweeps,
+//!   q-major tile packing) shared by the optimized/sorenson paths.
+//! * [`pool`] — the persistent worker pool the `*_mt` drivers dispatch
+//!   through (zero per-kernel-call thread spawns once warm).
+//!
 //! Every family ships a symmetry-halved `*_tri` variant (strict upper
 //! triangle of a self-block, §4's redundancy elimination) and an `*_mt`
 //! thread-parallel variant (row panels / slab planes partitioned over
@@ -23,7 +28,9 @@
 
 pub mod opcount;
 pub mod optimized;
+pub mod pool;
 pub mod reference;
+pub mod simd;
 pub mod sorenson;
 
 use crate::util::Scalar;
@@ -49,11 +56,14 @@ pub(crate) fn split_rows(total: usize, parts: usize) -> Vec<std::ops::Range<usiz
 }
 
 /// Run `f` over contiguous chunks of `total` output rows (or slab
-/// planes) of `unit` elements each, on up to `threads` scoped OS
-/// threads. Each invocation owns a disjoint `&mut` slice of `data`, so
-/// the parallelism needs no synchronization and cannot reorder any
-/// element's accumulation — the substrate of the `*_mt` kernels'
-/// bit-identity-across-thread-counts contract.
+/// planes) of `unit` elements each, on up to `threads` workers of the
+/// persistent [`pool`] (scoped OS threads before the pool existed —
+/// every multi-threaded kernel call paid spawn + join). Each invocation
+/// owns a disjoint `&mut` slice of `data`, so the parallelism needs no
+/// synchronization and cannot reorder any element's accumulation — the
+/// substrate of the `*_mt` kernels' bit-identity-across-thread-counts
+/// contract, unchanged by the pool (the partition and the per-chunk
+/// work are identical; only who executes them moved).
 pub(crate) fn par_chunks<F>(data: &mut [f64], unit: usize, total: usize, threads: usize, f: F)
 where
     F: Fn(std::ops::Range<usize>, &mut [f64]) + Sync,
@@ -64,15 +74,15 @@ where
         return;
     }
     let ranges = split_rows(total, threads);
-    std::thread::scope(|s| {
-        let mut rest = data;
-        for r in ranges {
-            let (chunk, tail) = rest.split_at_mut((r.end - r.start) * unit);
-            rest = tail;
-            let f = &f;
-            s.spawn(move || f(r, chunk));
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let f = &f;
+    for r in ranges {
+        let (chunk, tail) = rest.split_at_mut((r.end - r.start) * unit);
+        rest = tail;
+        tasks.push(Box::new(move || f(r, chunk)));
+    }
+    pool::global().scope(tasks);
 }
 
 /// The row bands backing [`tri_partition`] / [`par_chunks_tri`]:
@@ -132,24 +142,24 @@ where
         rest = tail;
         chunks.push(Some((r, chunk)));
     }
-    std::thread::scope(|s| {
-        for ranges in &assignment {
-            let mut own = Vec::with_capacity(ranges.len());
-            for r in ranges {
-                let idx = chunks
-                    .iter()
-                    .position(|c| c.as_ref().is_some_and(|(cr, _)| cr == r))
-                    .expect("assignment range has a band chunk");
-                own.push(chunks[idx].take().expect("band taken once"));
-            }
-            let f = &f;
-            s.spawn(move || {
-                for (r, chunk) in own {
-                    f(r, chunk);
-                }
-            });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(assignment.len());
+    for ranges in &assignment {
+        let mut own = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            let idx = chunks
+                .iter()
+                .position(|c| c.as_ref().is_some_and(|(cr, _)| cr == r))
+                .expect("assignment range has a band chunk");
+            own.push(chunks[idx].take().expect("band taken once"));
         }
-    });
+        let f = &f;
+        tasks.push(Box::new(move || {
+            for (r, chunk) in own {
+                f(r, chunk);
+            }
+        }));
+    }
+    pool::global().scope(tasks);
 }
 
 /// Dense row-major result matrix from an mGEMM block: out[i, j] =

@@ -7,9 +7,11 @@
 //! * **j-register-tiling**: each inner pass accumulates `JT` output
 //!   columns at once into scalar accumulators, so each load of `w_i[q]`
 //!   is reused JT times (the register-blocking that makes GEMM live).
-//! * **q-contiguity**: vectors are column-contiguous, so the inner loop
-//!   is a pure sequential sweep that the compiler autovectorizes
-//!   (min + add per lane — exactly the paper's two ops per comparison).
+//! * **q-major tile packing** ([`crate::linalg::simd`]): each cache
+//!   block's columns are repacked once so the register-tile loop reads
+//!   its JT operands as one contiguous unit-stride row per feature —
+//!   vector loads + vector min/add (the paper's two ops per
+//!   comparison) instead of a gather across JT column slices.
 //! * **i×j cache blocking**: outer blocks sized so the working panels
 //!   stay in L1/L2 (the host stand-in for VMEM/shared-memory tiling).
 //! * **Triangular (`*_tri`) variants** (§4's "eliminating redundant
@@ -26,7 +28,7 @@
 
 use std::ops::Range;
 
-use crate::linalg::{opcount, MatF64, SlabF64};
+use crate::linalg::{opcount, simd, MatF64, SlabF64};
 use crate::util::Scalar;
 use crate::vecdata::VectorSet;
 
@@ -51,9 +53,17 @@ fn op_mul<T: Scalar>(a: T, b: T) -> T {
 /// `out[(i - rows.start) * ldo + j]` (absolute column indexing, so a
 /// row panel of a larger matrix or a slab plane can be written in
 /// place). `tri` restricts each row i to columns j > i (diagonal
-/// blocks). The per-element accumulation is a sequential q sweep
-/// regardless of blocking, so every variant built on this kernel is
-/// bit-identical per element.
+/// blocks).
+///
+/// SIMD shape: each i×j cache block first repacks its column block
+/// into a **q-major tile** ([`simd::pack_tile_qmajor`], amortized over
+/// the block's BI rows), so the register-tile loop reads its JT
+/// operands as one contiguous unit-stride row per feature — a vector
+/// load + vector min/add (or mul/add) instead of the gather across JT
+/// separate column slices the pre-SIMD kernel did. The per-element
+/// accumulation is the same sequential q sweep regardless of blocking
+/// or packing (and no `mul_add` fusion anywhere), so every variant
+/// built on this kernel stays bit-identical per element.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn panel<T: Scalar, F: Fn(T, T) -> T + Copy>(
@@ -69,6 +79,7 @@ fn panel<T: Scalar, F: Fn(T, T) -> T + Copy>(
     debug_assert_eq!(w.nf, v.nf, "feature depth mismatch");
     let nf = w.nf;
     let mut elems: u64 = 0;
+    let mut tile: Vec<T> = Vec::new(); // q-major packed column block, reused
     for i0 in (rows.start..rows.end).step_by(BI) {
         let i1 = (i0 + BI).min(rows.end);
         let mut j0 = cols.start;
@@ -77,18 +88,22 @@ fn panel<T: Scalar, F: Fn(T, T) -> T + Copy>(
             // A block entirely at or below the diagonal contributes
             // nothing in triangular mode.
             if !(tri && j1 <= i0 + 1) {
+                let bw = j1 - j0;
+                simd::pack_tile_qmajor(v, j0, bw, &mut tile);
                 for i in i0..i1 {
                     let wi = w.col(i);
                     let row = (i - rows.start) * ldo;
                     let mut j = if tri { j0.max(i + 1) } else { j0 };
-                    // Register-tiled main loop: JT columns at once.
+                    // Register-tiled main loop: JT columns at once,
+                    // streamed from the q-major tile with unit stride.
                     while j + JT <= j1 {
                         let mut acc = [T::ZERO; JT];
-                        let vcols: [&[T]; JT] = std::array::from_fn(|t| v.col(j + t));
-                        for q in 0..nf {
-                            let wq = wi[q];
+                        let off = j - j0;
+                        for (&wq, trow) in wi.iter().zip(tile.chunks_exact(bw)) {
+                            let vrow: &[T; JT] =
+                                trow[off..off + JT].try_into().expect("tile row width");
                             for t in 0..JT {
-                                acc[t] += f(wq, vcols[t][q]);
+                                acc[t] += f(wq, vrow[t]);
                             }
                         }
                         for t in 0..JT {
@@ -97,7 +112,8 @@ fn panel<T: Scalar, F: Fn(T, T) -> T + Copy>(
                         elems += JT as u64;
                         j += JT;
                     }
-                    // Remainder columns.
+                    // Remainder columns (straight from the source set —
+                    // same q-sequential accumulation).
                     while j < j1 {
                         let vj = v.col(j);
                         let mut acc = T::ZERO;

@@ -1,0 +1,352 @@
+//! Persistent worker pool for the `*_mt` kernel drivers.
+//!
+//! Before this module every multi-threaded kernel call paid OS thread
+//! spawn + join through `std::thread::scope` — fine for one big batch
+//! kernel, hostile to the session/serving layer where many small
+//! kernel calls arrive back-to-back (a 2-way ring step per node per
+//! stage). Here the threads are spawned **once per process** and
+//! parked on a condvar; a kernel call enqueues its row-panel closures
+//! and blocks until they drain. Steady state does zero spawns: the
+//! "zero per-kernel-call thread spawns" contract is pinned by
+//! [`stats`] deltas in `tests/simd_pool.rs` and surfaced per run in
+//! `coordinator::RunStats`.
+//!
+//! Design notes:
+//!
+//! * **std only** — a `Mutex<VecDeque>` + `Condvar` shared queue (not
+//!   `Mutex<Receiver>`: holding a lock across `recv` would serialize
+//!   wakeups), workers grown on demand to the largest parallelism any
+//!   scope has asked for, never torn down (process-lifetime pool).
+//! * **Borrowed closures** — kernel tasks borrow the caller's operands
+//!   and disjoint `&mut` output panels. [`WorkerPool::scope`] erases
+//!   their lifetime to hand them to the long-lived workers, and is
+//!   sound because it *always* blocks until every submitted task has
+//!   finished (a panicking task still decrements the pending count via
+//!   its completion guard) — no task can outlive the borrows it
+//!   captures.
+//! * **Panic propagation** — worker panics are caught per task
+//!   (`catch_unwind`) so a poisoned closure cannot kill a pool thread;
+//!   the scope re-panics in the caller after draining, preserving the
+//!   `std::thread::scope` failure surface the tests rely on.
+//! * **No work-stealing, no caller execution** — tasks are coarse row
+//!   panels already balanced by `linalg::{split_rows, tri_partition}`;
+//!   the caller parks until completion, exactly like the scoped-spawn
+//!   code it replaces.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Cumulative pool counters (process-wide, monotone). Deltas across a
+/// region of interest give per-run / per-call dispatch accounting.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel scopes entered ([`WorkerPool::scope`] calls that
+    /// actually dispatched to workers).
+    pub scopes: u64,
+    /// Tasks executed by pool workers.
+    pub tasks: u64,
+    /// OS threads spawned (grows to the high-water parallelism, then
+    /// stays flat — the amortization signal).
+    pub threads_spawned: u64,
+    /// Workers currently alive.
+    pub workers: usize,
+}
+
+struct Shared {
+    queue: VecDeque<Task>,
+    workers: usize,
+}
+
+struct Counters {
+    scopes: u64,
+    tasks: u64,
+    threads_spawned: u64,
+}
+
+/// A persistent pool of parked worker threads. One global instance
+/// ([`global`]) serves every kernel call in the process; constructing
+/// private pools is possible for tests.
+pub struct WorkerPool {
+    shared: Mutex<Shared>,
+    work_cv: Condvar,
+    counters: Mutex<Counters>,
+}
+
+struct ScopeState {
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        WorkerPool {
+            shared: Mutex::new(Shared { queue: VecDeque::new(), workers: 0 }),
+            work_cv: Condvar::new(),
+            counters: Mutex::new(Counters { scopes: 0, tasks: 0, threads_spawned: 0 }),
+        }
+    }
+
+    /// Grow the pool to at least `n` workers (no-op when already
+    /// there). Called by [`WorkerPool::scope`] per dispatch and by
+    /// warm-up paths (`session::Session` / CLI) that want the spawn
+    /// cost paid before the first kernel call.
+    pub fn ensure_workers(self: &Arc<Self>, n: usize) {
+        let mut shared = self.shared.lock().unwrap();
+        while shared.workers < n {
+            let idx = shared.workers;
+            let pool = Arc::clone(self);
+            std::thread::Builder::new()
+                .name(format!("comet-pool-{idx}"))
+                .spawn(move || pool.worker_loop())
+                .expect("spawn pool worker");
+            shared.workers += 1;
+            self.counters.lock().unwrap().threads_spawned += 1;
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let task = {
+                let mut shared = self.shared.lock().unwrap();
+                loop {
+                    if let Some(t) = shared.queue.pop_front() {
+                        break t;
+                    }
+                    shared = self.work_cv.wait(shared).unwrap();
+                }
+            };
+            task();
+        }
+    }
+
+    /// Run borrowed tasks to completion on the pool. Blocks until
+    /// every task has finished; panics (after draining) if any task
+    /// panicked. A single task is run inline on the caller — no
+    /// dispatch, mirroring the `threads <= 1` fast path of the
+    /// chunk drivers.
+    pub fn scope<'env>(self: &Arc<Self>, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        match tasks.len() {
+            0 => return,
+            1 => {
+                for t in tasks {
+                    t();
+                }
+                return;
+            }
+            _ => {}
+        }
+        self.ensure_workers(tasks.len());
+        {
+            // Counted at dispatch: `scope` blocks until every task has
+            // run, so by any observation point after a scope returns,
+            // "dispatched" equals "executed".
+            let mut c = self.counters.lock().unwrap();
+            c.scopes += 1;
+            c.tasks += tasks.len() as u64;
+        }
+        let state = Arc::new(ScopeState {
+            pending: Mutex::new(tasks.len()),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut shared = self.shared.lock().unwrap();
+            for task in tasks {
+                // SAFETY: the task borrows data living at least `'env`.
+                // This scope blocks below until the pending count hits
+                // zero, and a task's completion guard decrements that
+                // count even on panic — so every task has fully run
+                // (or unwound) before `scope` returns and the borrows
+                // can expire. The erased closure never outlives `'env`.
+                let task: Task = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'env>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(task)
+                };
+                let st = Arc::clone(&state);
+                shared.queue.push_back(Box::new(move || {
+                    let guard = Completion { state: &st };
+                    if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                        guard.state.panicked.store(true, Ordering::SeqCst);
+                    }
+                    // `guard` drops here, decrementing pending exactly
+                    // once per task, panic or not.
+                }));
+            }
+            self.work_cv.notify_all();
+        }
+        let mut pending = state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = state.done_cv.wait(pending).unwrap();
+        }
+        drop(pending);
+        if state.panicked.load(Ordering::SeqCst) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Cumulative counters (monotone; see [`PoolStats`]). The two
+    /// locks are taken one after the other, never nested —
+    /// `ensure_workers` holds `shared` while touching `counters`, so
+    /// nesting them here in the opposite order could deadlock.
+    pub fn stats(&self) -> PoolStats {
+        let (scopes, tasks, threads_spawned) = {
+            let c = self.counters.lock().unwrap();
+            (c.scopes, c.tasks, c.threads_spawned)
+        };
+        let workers = self.shared.lock().unwrap().workers;
+        PoolStats { scopes, tasks, threads_spawned, workers }
+    }
+}
+
+/// Completion guard: decrements the owning scope's pending count on
+/// drop — the one per task, unwinding or not.
+struct Completion<'a> {
+    state: &'a Arc<ScopeState>,
+}
+
+impl Drop for Completion<'_> {
+    fn drop(&mut self) {
+        let mut pending = self.state.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.state.done_cv.notify_all();
+        }
+    }
+}
+
+/// The process-global kernel pool: every `*_mt` driver dispatches
+/// through it, so worker threads are shared by all sessions, runs, and
+/// node threads in the process.
+pub fn global() -> &'static Arc<WorkerPool> {
+    static POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(WorkerPool::new()))
+}
+
+/// Counters of the global pool ([`PoolStats`] — cumulative).
+pub fn stats() -> PoolStats {
+    global().stats()
+}
+
+/// Pre-spawn global-pool workers for a planned parallelism — lets
+/// long-lived owners (sessions, the CLI) pay the one-time spawn cost
+/// at construction instead of inside the first kernel call.
+pub fn warm(threads: usize) {
+    if threads > 1 {
+        global().ensure_workers(threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_runs_every_task_and_waits() {
+        let pool = Arc::new(WorkerPool::new());
+        let hits = AtomicU64::new(0);
+        let mut out = vec![0u64; 8];
+        {
+            let chunks: Vec<&mut [u64]> = out.chunks_mut(2).collect();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let hits = &hits;
+                    Box::new(move || {
+                        for (k, x) in c.iter_mut().enumerate() {
+                            *x = (i * 2 + k) as u64 + 1;
+                        }
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(tasks);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        assert_eq!(out, (1..=8).collect::<Vec<u64>>());
+        let s = pool.stats();
+        assert_eq!(s.scopes, 1);
+        assert_eq!(s.tasks, 4);
+        assert!(s.workers >= 4);
+    }
+
+    #[test]
+    fn workers_are_reused_across_scopes() {
+        let pool = Arc::new(WorkerPool::new());
+        for _ in 0..5 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                (0..3).map(|_| Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>).collect();
+            pool.scope(tasks);
+        }
+        let s = pool.stats();
+        assert_eq!(s.scopes, 5);
+        assert_eq!(s.tasks, 15);
+        // Spawned once to the high-water mark, then flat.
+        assert_eq!(s.threads_spawned, 3);
+        assert_eq!(s.workers, 3);
+    }
+
+    #[test]
+    fn single_task_runs_inline_without_dispatch() {
+        let pool = Arc::new(WorkerPool::new());
+        let mut x = 0u64;
+        pool.scope(vec![Box::new(|| x += 1) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(x, 1);
+        let s = pool.stats();
+        assert_eq!((s.scopes, s.tasks, s.threads_spawned), (0, 0, 0));
+    }
+
+    #[test]
+    fn task_panic_propagates_after_drain() {
+        let pool = Arc::new(WorkerPool::new());
+        let ok = AtomicU64::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| panic!("boom")),
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }),
+            ];
+            pool.scope(tasks);
+        }));
+        assert!(result.is_err(), "scope must re-panic");
+        assert_eq!(ok.load(Ordering::SeqCst), 1, "sibling task still ran");
+        // The pool survives: a later scope completes normally.
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_warmable() {
+        let before = stats();
+        warm(2);
+        let after = stats();
+        assert!(after.workers >= 2);
+        assert!(after.threads_spawned >= before.threads_spawned);
+        // warm(1) and warm(0) never spawn.
+        warm(1);
+        warm(0);
+        assert_eq!(stats().workers, after.workers);
+    }
+}

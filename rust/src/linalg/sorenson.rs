@@ -5,7 +5,7 @@
 //! comparison rates of the 1-bit codes in Table 6 (Haque et al.): each
 //! 64-bit word op performs 64 elementwise comparisons.
 
-use crate::linalg::{opcount, MatF64};
+use crate::linalg::{opcount, simd, MatF64};
 use crate::vecdata::bits::BitVectorSet;
 
 /// Reference bit kernel: N[i, j] = |u_i AND v_j| counted bit-by-bit
@@ -47,6 +47,10 @@ pub fn sorenson_mgemm_ref_tri(v: &BitVectorSet) -> MatF64 {
 /// One row panel of the packed AND+popcount kernel, written into
 /// `out[(i - rows.start) * v.nv + j]`. `tri` restricts each row to
 /// j > i (diagonal blocks — the §4 symmetry halving on the bit path).
+/// The word sweep is [`simd::and_popcount`]: `simd::LANES` independent
+/// popcount chains per iteration instead of the single scalar
+/// accumulator this loop used to carry — bit-exact (integer sums), but
+/// the hardware can retire several popcounts per cycle.
 fn popcount_panel(
     w: &BitVectorSet,
     v: &BitVectorSet,
@@ -61,12 +65,7 @@ fn popcount_panel(
         let row = (i - rows.start) * n;
         let j_lo = if tri { i + 1 } else { 0 };
         for j in j_lo..n {
-            let vj = v.words(j);
-            let mut acc = 0u64;
-            for (a, b) in wi.iter().zip(vj) {
-                acc += (a & b).count_ones() as u64;
-            }
-            out[row + j] = acc as f64;
+            out[row + j] = simd::and_popcount(wi, v.words(j)) as f64;
         }
         elems += (n - j_lo) as u64;
     }

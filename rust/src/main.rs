@@ -100,6 +100,12 @@ plan options:    --num-way 2|3 --npv N [--npr N]
 model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                  [--tgemm SECS] [--tcpu SECS] [--precision f32|f64]
                  [--threads N] [--diag-load L] [--triangular]
+                 [--lane-width W]   SIMD lanes the kernel retires per step
+                                    (scales the mGEMM term with threads; use 1
+                                    when --tgemm was measured on a vector kernel)
+                 [--tspawn SECS]    per-thread spawn cost of a cold kernel call
+                 [--cold-pool]      price per-call thread spawns instead of the
+                                    warm persistent worker pool (default warm)
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
                  [--synthetic grid|verifiable|phewas|alleles] [--seed N]
 ";
@@ -203,6 +209,12 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     if s.t_accel > 0.0 {
         println!("  accelerator time : {}", fmt::secs(s.t_accel));
     }
+    if s.pool_scopes > 0 {
+        println!(
+            "  worker pool      : {} task(s) over {} parallel kernel call(s), {} thread spawn(s)",
+            s.pool_tasks, s.pool_scopes, s.pool_threads_spawned
+        );
+    }
     let cmps = if cfg.num_way == 2 {
         counts::cmp_2way(cfg.nf, cfg.nv)
     } else {
@@ -239,6 +251,7 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
     // replicated along npr re-read the same slice); the session ingests
     // once per (dataset, repr, grid slice).
     let mut fresh_loads: u64 = 0;
+    let mut pool_totals = comet::coordinator::RunStats::default();
     let mut datasets: Vec<comet::session::Dataset> = Vec::new();
     let mut table = fmt::Table::new(&[
         "request",
@@ -262,6 +275,7 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
         let stats_sink = StatsOnlySink::new();
         let out = session.run(&req, &stats_sink)?;
         fresh_loads += e.cfg.grid.np() as u64;
+        pool_totals.absorb(&out.stats);
         table.row(&[
             e.name.clone(),
             e.cfg.metric.name().to_string(),
@@ -288,6 +302,18 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
         fresh_loads,
         fmt::secs(t0.elapsed().as_secs_f64()),
     );
+    if pool_totals.pool_scopes > 0 {
+        // Per-call scoped spawns would have created one OS thread per
+        // task; the persistent pool spawns once and parks.
+        println!(
+            "  worker-pool amortization: {} thread spawn(s) for {} parallel kernel call(s) / \
+             {} task(s) (per-call scoped spawns would have made {})",
+            pool_totals.pool_threads_spawned,
+            pool_totals.pool_scopes,
+            pool_totals.pool_tasks,
+            pool_totals.pool_tasks,
+        );
+    }
     if let Some((compiles, execs, secs)) = session.accel_stats() {
         println!(
             "  accelerator      : {compiles} artifact compile(s) for {execs} execution(s), {}",
@@ -405,6 +431,9 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
         load: args.parse_or("load", 13)?,
         diag_load: args.parse_or("diag-load", 0)?,
         threads: args.parse_or("threads", 1)?,
+        lane_width: args.parse_or("lane-width", 1)?,
+        t_spawn: args.parse_or("tspawn", 0.0)?,
+        pool_warm: !args.switch("cold-pool"),
         triangular: args.switch("triangular"),
         nst: args.parse_or("nst", 16)?,
         net: CostModel::gemini(),
@@ -422,6 +451,9 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
     println!("  t_transfer_M= {}", fmt::secs(p.t_transfer_m));
     println!("  t_mGEMM     = {}", fmt::secs(p.t_gemm_total));
     println!("  t_CPU       = {}", fmt::secs(p.t_cpu));
+    if p.t_dispatch > 0.0 {
+        println!("  t_dispatch  = {} (cold per-call thread spawns)", fmt::secs(p.t_dispatch));
+    }
     println!("  total       = {}", fmt::secs(p.total));
     println!("  mGEMM fraction = {:.1}% (the paper's overlap regime indicator)", 100.0 * p.gemm_fraction());
     Ok(())

@@ -471,6 +471,9 @@ impl<T: Scalar> Metric<T> for Sorenson {
     }
 
     fn denominators(&self, v: &Block<T>) -> Result<Vec<f64>> {
+        // Served from the block's popcount cache (primed at ingest by
+        // `from_threshold`): repeated denominator passes over a cached
+        // block cost a memcpy, not a word re-sweep per call.
         Ok(packed_operand(v, "sorenson")?.popcounts())
     }
 

@@ -37,6 +37,21 @@ pub struct ModelInput {
     /// Host compute threads driving the kernels (row-panel parallel —
     /// near-linear on the mGEMM term; 1 = serial).
     pub threads: usize,
+    /// Elementwise lanes the kernel inner loop retires per step
+    /// (1 = scalar; the SIMD-shaped native kernels sweep vector lanes —
+    /// e.g. 4 f64 per 256-bit op, `linalg::simd::LANES` u64 popcount
+    /// chains on the packed path). Scales the mGEMM term like threads:
+    /// both multiply the kernel's comparison rate.
+    pub lane_width: usize,
+    /// Per-thread dispatch cost of one multi-threaded kernel call when
+    /// the worker pool is cold (OS thread spawn + join — what
+    /// `std::thread::scope` paid on every call). Zero when
+    /// single-threaded.
+    pub t_spawn: f64,
+    /// Whether kernel calls dispatch to an already-warm persistent
+    /// pool (parked threads; per-call dispatch cost ~0) instead of
+    /// spawning per call.
+    pub pool_warm: bool,
     /// Whether diagonal blocks run the symmetry-halved triangular
     /// kernel (~0.5× the elementwise ops of the full square kernel).
     pub triangular: bool,
@@ -56,6 +71,9 @@ pub struct Prediction {
     pub t_transfer_m: f64,
     pub t_gemm_total: f64,
     pub t_cpu: f64,
+    /// Thread-dispatch overhead across the load's kernel calls —
+    /// (threads−1)·t_spawn per call cold, 0 against a warm pool.
+    pub t_dispatch: f64,
     pub total: f64,
 }
 
@@ -86,26 +104,45 @@ fn effective_blocks(m: &ModelInput) -> f64 {
     (m.load as f64 - diag) + diag * tri_factor
 }
 
-/// Kernel-time divisor from row-panel thread parallelism (the mGEMM
-/// term scales; comm/transfer/CPU terms do not).
-fn thread_speedup(m: &ModelInput) -> f64 {
-    m.threads.max(1) as f64
+/// Kernel-time divisor from row-panel thread parallelism × SIMD lane
+/// width (the mGEMM term scales; comm/transfer/CPU terms do not).
+/// `t_gemm` is the *scalar single-thread* kernel time; a measured
+/// time from an already-vectorized kernel should be fed with
+/// `lane_width = 1`.
+fn kernel_speedup(m: &ModelInput) -> f64 {
+    (m.threads.max(1) * m.lane_width.max(1)) as f64
 }
 
-/// 2-way model (§6.3), extended with the triangular-diag and
-/// thread-parallel kernel terms.
+/// Per-kernel-call thread dispatch cost: (threads − 1) spawn+joins per
+/// call when the pool is cold, ~0 once calls dispatch to the warm
+/// persistent pool (the pool-amortization term — it is what turns a
+/// per-call overhead into a once-per-process one).
+fn dispatch_per_call(m: &ModelInput) -> f64 {
+    if m.pool_warm || m.threads <= 1 {
+        0.0
+    } else {
+        m.t_spawn * (m.threads - 1) as f64
+    }
+}
+
+/// 2-way model (§6.3), extended with the triangular-diag,
+/// thread-parallel, SIMD-lane, and pool-dispatch kernel terms.
 pub fn predict_2way(m: &ModelInput) -> Prediction {
     let t_comm = m.net.msg_time(vblock_bytes(m));
     let t_tv = m.link.msg_time(vblock_bytes(m));
     let t_tm = m.link.msg_time(mblock_bytes(m));
-    let t_gemm_total = effective_blocks(m) * m.t_gemm / thread_speedup(m);
-    let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu;
+    let t_gemm_total = effective_blocks(m) * m.t_gemm / kernel_speedup(m);
+    // One kernel call per block in the load: each pays the dispatch
+    // overhead until the pool is warm.
+    let t_dispatch = m.load as f64 * dispatch_per_call(m);
+    let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu + t_dispatch;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
         t_transfer_m: t_tm,
         t_gemm_total,
         t_cpu: m.t_cpu,
+        t_dispatch,
         total,
     }
 }
@@ -118,10 +155,15 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
     let t_comm = m.net.msg_time(vblock_bytes(m));
     let t_tv = m.link.msg_time(vblock_bytes(m));
     let t_tm = m.link.msg_time(mblock_bytes(m));
-    let t_gemm_eff = m.t_gemm / thread_speedup(m);
+    let t_gemm_eff = m.t_gemm / kernel_speedup(m);
     let steps_per_slice = 3.0 + (m.nvp as f64 / 6.0) / m.nst as f64;
-    let per_slice = steps_per_slice * t_gemm_eff + 3.0 * t_tv + 4.0 * t_tm + m.t_cpu;
+    // Every mGEMM step of every slice is a kernel call — each pays the
+    // dispatch overhead until the pool is warm.
+    let dispatch_per_slice = steps_per_slice * dispatch_per_call(m);
+    let per_slice =
+        steps_per_slice * t_gemm_eff + 3.0 * t_tv + 4.0 * t_tm + m.t_cpu + dispatch_per_slice;
     let t_gemm_total = m.load as f64 * steps_per_slice * t_gemm_eff;
+    let t_dispatch = m.load as f64 * dispatch_per_slice;
     let total = t_comm + t_tv + m.load as f64 * per_slice;
     Prediction {
         t_comm,
@@ -129,6 +171,7 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
         t_transfer_m: t_tm,
         t_gemm_total,
         t_cpu: m.t_cpu,
+        t_dispatch,
         total,
     }
 }
@@ -179,6 +222,9 @@ mod tests {
             load: 13,
             diag_load: 0,
             threads: 1,
+            lane_width: 1,
+            t_spawn: 0.0,
+            pool_warm: true,
             triangular: false,
             nst: 16,
             net: CostModel::gemini(),
@@ -261,10 +307,45 @@ mod tests {
 
     #[test]
     fn totals_are_sums_of_parts_2way() {
-        let m = base();
+        let m = ModelInput { threads: 4, t_spawn: 1e-4, pool_warm: false, ..base() };
         let p = predict_2way(&m);
-        let sum = p.t_comm + p.t_transfer_v + p.t_gemm_total + p.t_transfer_m + p.t_cpu;
+        let sum =
+            p.t_comm + p.t_transfer_v + p.t_gemm_total + p.t_transfer_m + p.t_cpu + p.t_dispatch;
         assert!((p.total - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_width_scales_only_the_gemm_term() {
+        let p1 = predict_2way(&base());
+        let p4 = predict_2way(&ModelInput { lane_width: 4, ..base() });
+        assert!((p4.t_gemm_total - p1.t_gemm_total / 4.0).abs() < 1e-12);
+        assert_eq!(p4.t_comm, p1.t_comm);
+        assert_eq!(p4.t_cpu, p1.t_cpu);
+        // Lanes and threads compose multiplicatively.
+        let p8 = predict_2way(&ModelInput { lane_width: 4, threads: 2, ..base() });
+        assert!((p8.t_gemm_total - p1.t_gemm_total / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cold_pool_pays_dispatch_warm_pool_does_not() {
+        let cold = ModelInput { threads: 4, t_spawn: 1e-4, pool_warm: false, ..base() };
+        let warm = ModelInput { pool_warm: true, ..cold };
+        let pc = predict_2way(&cold);
+        let pw = predict_2way(&warm);
+        // load calls × (threads−1) spawns each.
+        let expect = cold.load as f64 * 1e-4 * 3.0;
+        assert!((pc.t_dispatch - expect).abs() < 1e-12);
+        assert_eq!(pw.t_dispatch, 0.0);
+        assert!((pc.total - pw.total - expect).abs() < 1e-12);
+        // Single-threaded never dispatches, warm or cold.
+        let serial = ModelInput { threads: 1, ..cold };
+        assert_eq!(predict_2way(&serial).t_dispatch, 0.0);
+        // 3-way: dispatch accrues per mGEMM step per slice.
+        let p3c = predict_3way(&cold);
+        let p3w = predict_3way(&warm);
+        assert!(p3c.t_dispatch > 0.0);
+        assert_eq!(p3w.t_dispatch, 0.0);
+        assert!(p3c.total > p3w.total);
     }
 
     #[test]

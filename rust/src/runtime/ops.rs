@@ -371,13 +371,19 @@ impl BlockOps {
             })?
             .clone();
         let nw_pad = entry.nf / 32; // artifact word depth
+        // Popcount audit: unlike the native path (which popcounts on
+        // the host and now sweeps `linalg::simd::and_popcount` lanes),
+        // this op never popcounts host-side — the AND+popcount runs
+        // inside the artifact over u32 words. The only per-word host
+        // loop is this layout shuffle: u64 words split into u32 halves
+        // (`linalg::simd::word_halves`) and scattered column-major for
+        // the artifact's [nw_pad, nv] operand shape.
         let pack = |set: &crate::vecdata::bits::BitVectorSet| -> InputBuf {
             // u64 words -> row-major padded [nw_pad, entry.nv] of u32.
             let mut data = vec![0u32; nw_pad * entry.nv];
             for col in 0..set.nv {
                 for (wi, &word) in set.words(col).iter().enumerate() {
-                    let lo = (word & 0xFFFF_FFFF) as u32;
-                    let hi = (word >> 32) as u32;
+                    let (lo, hi) = crate::linalg::simd::word_halves(word);
                     if 2 * wi < nw_pad {
                         data[(2 * wi) * entry.nv + col] = lo;
                     }

@@ -380,6 +380,11 @@ impl Session {
     /// same thing on every path.
     pub fn run(&self, req: &RunRequest, sink: &dyn ResultSink) -> Result<RunOutcome> {
         let client = self.client_for(req.cfg.backend)?;
+        // Pre-grow the persistent kernel pool to the request's
+        // parallelism: the one-time worker spawns land here, outside
+        // the compute phase, and every kernel call in the run (and all
+        // later runs) dispatches to already-parked threads.
+        crate::linalg::pool::warm(req.cfg.threads);
         let provider = Arc::new(req.dataset.clone()) as Arc<dyn BlockProvider>;
         match &req.cfg.output_dir {
             Some(dir) => {

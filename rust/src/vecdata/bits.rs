@@ -8,7 +8,9 @@
 //! 1-bit popcount codes).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
+use crate::linalg::simd;
 use crate::util::prng::Stream;
 
 /// Global count of packing conversions ([`BitVectorSet::from_threshold`]
@@ -32,6 +34,15 @@ pub struct BitVectorSet {
     /// numbering — the packed analogue of `VectorSet::first_id`).
     pub first_id: usize,
     data: Vec<u64>,
+    /// Per-vector popcounts, computed once and cached alongside the
+    /// packed planes ([`BitVectorSet::popcounts`] used to allocate and
+    /// re-sweep on every call — a per-step cost on the Sorensen
+    /// denominator path). Filled lazily, primed at ingest
+    /// ([`BitVectorSet::from_threshold`]), invalidated by
+    /// [`BitVectorSet::set_bit`]. Resident-side only: the wire form
+    /// ([`crate::vecdata::block::PackedBlock`]) still carries packed
+    /// words alone, so comm byte accounting is unchanged.
+    pops: OnceLock<Vec<f64>>,
 }
 
 impl BitVectorSet {
@@ -43,6 +54,7 @@ impl BitVectorSet {
             words_per_vec,
             first_id: 0,
             data: vec![0; words_per_vec * nv],
+            pops: OnceLock::new(),
         }
     }
 
@@ -57,7 +69,7 @@ impl BitVectorSet {
             "packed payload shape mismatch: {} words for nf={nf} nv={nv}",
             words.len()
         );
-        BitVectorSet { nf, nv, words_per_vec, first_id, data: words }
+        BitVectorSet { nf, nv, words_per_vec, first_id, data: words, pops: OnceLock::new() }
     }
 
     /// Random binary vectors with the given bit density.
@@ -89,6 +101,9 @@ impl BitVectorSet {
                 }
             }
         }
+        // Prime the popcount cache at ingest: the Sorensen denominator
+        // pass per block becomes a cached read instead of a re-sweep.
+        let _ = out.popcounts_cached();
         out
     }
 
@@ -96,6 +111,8 @@ impl BitVectorSet {
     pub fn set_bit(&mut self, v: usize, q: usize) {
         debug_assert!(v < self.nv && q < self.nf);
         self.data[v * self.words_per_vec + q / 64] |= 1u64 << (q % 64);
+        // Mutation invalidates the cached popcounts.
+        self.pops.take();
     }
 
     #[inline]
@@ -114,25 +131,33 @@ impl BitVectorSet {
         &self.data
     }
 
-    /// Population count of vector v (its Sorenson denominator half).
+    /// Population count of vector v (its Sorenson denominator half) —
+    /// a wide-lane word sweep ([`simd::popcount`]).
     pub fn popcount(&self, v: usize) -> u64 {
-        self.words(v).iter().map(|w| w.count_ones() as u64).sum()
+        simd::popcount(self.words(v))
     }
 
     /// Popcounts of every vector as f64 — the Sorensen metric's
     /// denominator ingredients (the bit analogue of
-    /// [`crate::vecdata::VectorSet::col_sums`]).
+    /// [`crate::vecdata::VectorSet::col_sums`]). Served from the
+    /// per-set cache; see [`BitVectorSet::popcounts_cached`] for the
+    /// allocation-free view.
     pub fn popcounts(&self) -> Vec<f64> {
-        (0..self.nv).map(|v| self.popcount(v) as f64).collect()
+        self.popcounts_cached().to_vec()
     }
 
-    /// Sorenson numerator: |u AND v| — the bitwise min-product.
+    /// Cached per-vector popcounts, computed on first use (primed at
+    /// ingest by [`BitVectorSet::from_threshold`]) and invalidated by
+    /// [`BitVectorSet::set_bit`].
+    pub fn popcounts_cached(&self) -> &[f64] {
+        self.pops
+            .get_or_init(|| (0..self.nv).map(|v| self.popcount(v) as f64).collect())
+    }
+
+    /// Sorenson numerator: |u AND v| — the bitwise min-product, wide
+    /// popcount lanes ([`simd::and_popcount`]).
     pub fn and_popcount(&self, u: usize, v: usize) -> u64 {
-        self.words(u)
-            .iter()
-            .zip(self.words(v))
-            .map(|(a, b)| (a & b).count_ones() as u64)
-            .sum()
+        simd::and_popcount(self.words(u), self.words(v))
     }
 
     /// Sorenson metric c2 = 2|u∧v| / (|u| + |v|).
@@ -241,6 +266,20 @@ mod tests {
         let before = pack_calls();
         let _ = BitVectorSet::from_threshold(&fs, 0.5);
         assert!(pack_calls() > before);
+    }
+
+    #[test]
+    fn popcount_cache_tracks_mutation() {
+        let mut s = BitVectorSet::zeros(100, 2);
+        assert_eq!(s.popcounts(), vec![0.0, 0.0]);
+        s.set_bit(0, 5);
+        s.set_bit(1, 64);
+        assert_eq!(s.popcounts_cached(), &[1.0, 1.0]);
+        // A mutation after the cache fills must invalidate it.
+        s.set_bit(0, 99);
+        assert_eq!(s.popcounts(), vec![2.0, 1.0]);
+        // Clones carry (or refill) a consistent cache.
+        assert_eq!(s.clone().popcounts_cached(), &[2.0, 1.0]);
     }
 
     #[test]

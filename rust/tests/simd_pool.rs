@@ -1,0 +1,247 @@
+//! The ISSUE 6 kernel-escalation contracts: SIMD-shaped inner loops and
+//! the persistent worker pool.
+//!
+//! 1. The wide-lane popcount sweeps ([`comet::linalg::simd`]) are
+//!    **bit-identical** to naive scalar sweeps on packed sets whose
+//!    feature counts straddle 64/128-bit word boundaries — including
+//!    partial trailing words (property test).
+//! 2. Checksums are invariant across thread counts, metrics, and
+//!    backends now that the multi-threaded drivers dispatch to the
+//!    pool instead of per-call `std::thread::scope` spawns — the
+//!    pool-vs-scoped replacement must be observationally identical.
+//! 3. Steady state does **zero per-kernel-call thread spawns**: once
+//!    warm, many kernel calls grow `scopes`/`tasks` but never
+//!    `threads_spawned` (the amortization contract).
+//! 4. `coordinator::RunStats` surfaces the per-run pool deltas, so a
+//!    session's second run reports zero spawns.
+//!
+//! Pool counters are process-global, so every test here serializes on
+//! [`lock`] — cargo's in-process test threads would otherwise pollute
+//! the deltas.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run;
+use comet::decomp::Grid;
+use comet::linalg::{optimized, pool, simd, sorenson};
+use comet::metrics::MetricId;
+use comet::output::sink::DiscardSink;
+use comet::session::Session;
+use comet::testkit::forall;
+use comet::vecdata::bits::BitVectorSet;
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg_for(metric: MetricId, nf: usize, nv: usize, seed: u64) -> RunConfig {
+    let kind = match metric {
+        MetricId::Ccc => SyntheticKind::Alleles,
+        _ => SyntheticKind::RandomGrid,
+    };
+    RunConfig {
+        metric,
+        num_way: 2,
+        nv,
+        nf,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, 1, 1),
+        input: InputSource::Synthetic { kind, seed },
+        store_metrics: false,
+        ..Default::default()
+    }
+}
+
+/// Naive one-accumulator oracle for the wide-lane sweeps.
+fn scalar_popcount(words: &[u64]) -> u64 {
+    words.iter().map(|w| w.count_ones() as u64).sum()
+}
+
+#[test]
+fn prop_simd_popcounts_bit_identical_across_word_boundaries() {
+    let _g = lock();
+    // nf in 1..=300 crosses the 64/128/192/256-bit word boundaries, so
+    // packed vectors exercise every partial-trailing-word shape the
+    // LANES-chunked sweep can see (word counts 1..=5: below, at, and
+    // above the LANES stride).
+    forall(
+        "simd-popcount-vs-scalar",
+        40,
+        |g| {
+            let nf = g.usize_in(1, 300);
+            let nv = g.usize_in(1, 12);
+            let density = *g.pick(&[0.0, 0.15, 0.5, 1.0]);
+            let seed = g.stream.next_u64();
+            (nf, nv, density, seed)
+        },
+        |&(nf, nv, density, seed)| {
+            let bits = BitVectorSet::generate(seed, nf, nv, density);
+            for u in 0..nv {
+                let w = bits.words(u);
+                let direct = (0..nf).filter(|&q| bits.get_bit(u, q)).count() as u64;
+                if simd::popcount(w) != scalar_popcount(w) {
+                    return Err(format!("popcount lanes diverge at nf={nf} u={u}"));
+                }
+                if bits.popcount(u) != direct {
+                    return Err(format!(
+                        "popcount {} != per-bit {direct} at nf={nf} u={u}",
+                        bits.popcount(u)
+                    ));
+                }
+                for v in 0..nv {
+                    let and_direct = (0..nf)
+                        .filter(|&q| bits.get_bit(u, q) && bits.get_bit(v, q))
+                        .count() as u64;
+                    if simd::and_popcount(w, bits.words(v)) != and_direct {
+                        return Err(format!("and_popcount diverges at nf={nf} ({u},{v})"));
+                    }
+                }
+            }
+            // The ingest-time cache serves the same values.
+            let expect: Vec<f64> = (0..nv).map(|v| scalar_popcount(bits.words(v)) as f64).collect();
+            if bits.popcounts_cached() != expect.as_slice() {
+                return Err("cached popcounts diverge from scalar sweep".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pool_dispatch_matches_serial_bitwise() {
+    let _g = lock();
+    // The pooled multi-thread drivers must reproduce the serial kernels
+    // bit-for-bit — same contract the scoped-spawn drivers had, now
+    // pinned against the pool executor (shapes straddle JT/BI tiles and
+    // packed word boundaries).
+    forall(
+        "pool-vs-serial-bitwise",
+        20,
+        |g| {
+            let nf = g.usize_in(1, 140);
+            let nv = g.usize_in(2, 70);
+            let threads = *g.pick(&[2usize, 4, 8]);
+            let seed = g.stream.next_u64();
+            (nf, nv, threads, seed)
+        },
+        |&(nf, nv, threads, seed)| {
+            let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, 0);
+            let bits = BitVectorSet::from_threshold(&v, 0.5);
+            for (what, serial, pooled) in [
+                ("mgemm2", optimized::mgemm2(&v, &v), optimized::mgemm2_mt(&v, &v, threads)),
+                ("mgemm2-tri", optimized::mgemm2_tri(&v), optimized::mgemm2_tri_mt(&v, threads)),
+                ("gemm", optimized::gemm(&v, &v), optimized::gemm_mt(&v, &v, threads)),
+                ("gemm-tri", optimized::gemm_tri(&v), optimized::gemm_tri_mt(&v, threads)),
+                (
+                    "sorenson",
+                    sorenson::sorenson_mgemm(&bits, &bits),
+                    sorenson::sorenson_mgemm_mt(&bits, &bits, threads),
+                ),
+                (
+                    "sorenson-tri",
+                    sorenson::sorenson_mgemm_tri(&bits),
+                    sorenson::sorenson_mgemm_tri_mt(&bits, threads),
+                ),
+            ] {
+                for i in 0..nv {
+                    for j in 0..nv {
+                        let (a, b) = (serial.at(i, j), pooled.at(i, j));
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("{what} threads={threads} ({i},{j}): {a} != {b}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checksums_invariant_across_threads_metrics_backends_on_pool() {
+    let _g = lock();
+    let (nf, nv) = (60, 26);
+    for metric in MetricId::ALL {
+        let mut digests = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let mut cfg = cfg_for(metric, nf, nv, 17);
+            cfg.threads = threads;
+            digests.push(run(&cfg).unwrap().checksum.digest());
+        }
+        let mut cfg = cfg_for(metric, nf, nv, 17);
+        cfg.backend = BackendKind::CpuReference;
+        digests.push(run(&cfg).unwrap().checksum.digest());
+        assert!(
+            digests.iter().all(|d| *d == digests[0]),
+            "{}: digests diverge across pool thread counts/backends: {digests:?}",
+            metric.name()
+        );
+    }
+}
+
+#[test]
+fn warm_pool_steady_state_spawns_zero_threads() {
+    let _g = lock();
+    let (nf, nv) = (80, 64);
+    let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 5, nf, nv, 0);
+    let bits = BitVectorSet::from_threshold(&v, 0.5);
+    // Warm to the largest parallelism this binary uses, then snapshot.
+    pool::warm(8);
+    let before = pool::stats();
+    assert!(before.workers >= 8);
+    // Many kernel calls across every family and thread count — the
+    // serving-layer steady state the pool exists for.
+    for _ in 0..4 {
+        for threads in [2usize, 4, 8] {
+            std::hint::black_box(optimized::mgemm2_mt(&v, &v, threads));
+            std::hint::black_box(optimized::mgemm2_tri_mt(&v, threads));
+            std::hint::black_box(optimized::gemm_tri_mt(&v, threads));
+            std::hint::black_box(sorenson::sorenson_mgemm_mt(&bits, &bits, threads));
+            std::hint::black_box(sorenson::sorenson_mgemm_tri_mt(&bits, threads));
+        }
+    }
+    let after = pool::stats();
+    assert_eq!(
+        after.threads_spawned, before.threads_spawned,
+        "steady state must not spawn threads per kernel call"
+    );
+    assert!(after.scopes >= before.scopes + 60, "every MT call dispatches a scope");
+    assert!(after.tasks > before.tasks, "scopes carry tasks");
+    assert_eq!(after.workers, before.workers);
+}
+
+#[test]
+fn run_stats_surface_pool_deltas_and_second_run_spawns_nothing() {
+    let _g = lock();
+    let mut cfg = cfg_for(MetricId::Czekanowski, 64, 48, 23);
+    cfg.threads = 4;
+    let session = Session::new();
+    let req = session.request_from_config(&cfg).unwrap();
+    // First run: Session::run warms the pool before compute, so even
+    // run #1 does its kernel calls spawn-free; counters must register
+    // the dispatch activity either way.
+    let first = session.run(&req, &DiscardSink).unwrap();
+    assert!(first.stats.pool_scopes > 0, "threads=4 run must dispatch to the pool");
+    assert!(first.stats.pool_tasks >= first.stats.pool_scopes);
+    // Second run against the warm pool: zero spawns, same dispatch.
+    let second = session.run(&req, &DiscardSink).unwrap();
+    assert_eq!(
+        second.stats.pool_threads_spawned, 0,
+        "second run of a session must reuse parked workers"
+    );
+    assert!(second.stats.pool_scopes > 0);
+    // Single-threaded runs never touch the pool.
+    let mut serial_cfg = cfg_for(MetricId::Czekanowski, 64, 48, 23);
+    serial_cfg.threads = 1;
+    let sreq = session.request_from_config(&serial_cfg).unwrap();
+    let serial = session.run(&sreq, &DiscardSink).unwrap();
+    assert_eq!(serial.stats.pool_scopes, 0);
+    assert_eq!(serial.stats.pool_tasks, 0);
+    assert_eq!(serial.stats.pool_threads_spawned, 0);
+}
