@@ -305,6 +305,65 @@ impl RunConfig {
     pub fn from_toml_str(text: &str) -> Result<Self> {
         Self::from_toml(&toml::parse(text)?)
     }
+
+    /// Parse a single-line request spec — the `comet serve` protocol:
+    /// whitespace-separated `key=value` pairs over the same vocabulary
+    /// as the TOML form (`metric=sorenson nv=96 nf=64 npv=2 seed=7`).
+    /// Unknown keys are rejected like unknown TOML keys; the result is
+    /// validated. `store_metrics` is always false — a served request
+    /// streams tiles, nothing accumulates server-side.
+    pub fn from_kv_line(line: &str) -> Result<Self> {
+        fn num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T>
+        where
+            T::Err: std::error::Error + Send + Sync + 'static,
+        {
+            val.parse::<T>().with_context(|| format!("request key {key}={val:?}"))
+        }
+        let mut cfg = RunConfig { store_metrics: false, ..RunConfig::default() };
+        let (mut npf, mut npv, mut npr) = (1usize, 1usize, 1usize);
+        let mut synthetic = SyntheticKind::RandomGrid;
+        let mut seed = 1u64;
+        let mut file: Option<String> = None;
+        for tok in line.split_whitespace() {
+            let Some((key, val)) = tok.split_once('=') else {
+                bail!("request token {tok:?} is not key=value");
+            };
+            match key {
+                "metric" => cfg.metric = MetricId::parse(val)?,
+                "num_way" => cfg.num_way = num(key, val)?,
+                "nv" => cfg.nv = num(key, val)?,
+                "nf" => cfg.nf = num(key, val)?,
+                "precision" => cfg.precision = Precision::parse(val)?,
+                "backend" => cfg.backend = BackendKind::parse(val)?,
+                "threads" => cfg.threads = num(key, val)?,
+                "npf" => npf = num(key, val)?,
+                "npv" => npv = num(key, val)?,
+                "npr" => npr = num(key, val)?,
+                "num_stage" => cfg.num_stage = num(key, val)?,
+                "stage" => cfg.stage = Some(num(key, val)?),
+                "synthetic" => synthetic = SyntheticKind::parse(val)?,
+                "seed" => seed = num(key, val)?,
+                "file" => file = Some(val.to_string()),
+                "output_threshold" => cfg.output_threshold = Some(num(key, val)?),
+                other => bail!(
+                    "unknown request key {other:?} (valid: metric|num_way|nv|nf|precision|\
+                     backend|threads|npf|npv|npr|num_stage|stage|synthetic|seed|file|\
+                     output_threshold)"
+                ),
+            }
+        }
+        // Grid::new asserts >= 1; turn a zero into an error instead.
+        if npf == 0 || npv == 0 || npr == 0 {
+            bail!("grid axes must be >= 1 (npf={npf} npv={npv} npr={npr})");
+        }
+        cfg.grid = Grid::new(npf, npv, npr);
+        cfg.input = match file {
+            Some(path) => InputSource::File { path },
+            None => InputSource::Synthetic { kind: synthetic, seed },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
 }
 
 /// One named request of a batch-campaign file.
@@ -412,6 +471,45 @@ pub fn batch_from_toml_str(text: &str) -> Result<Vec<BatchEntry>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_line_parses_the_toml_vocabulary() {
+        let cfg = RunConfig::from_kv_line(
+            "metric=sorenson num_way=2 nv=96 nf=64 precision=f32 backend=cpu threads=4 \
+             npv=3 npr=2 synthetic=phewas seed=7 output_threshold=0.5",
+        )
+        .unwrap();
+        assert_eq!(cfg.metric, MetricId::Sorenson);
+        assert_eq!((cfg.nv, cfg.nf), (96, 64));
+        assert_eq!(cfg.precision, Precision::F32);
+        assert_eq!(cfg.backend, BackendKind::CpuOptimized);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!((cfg.grid.npf, cfg.grid.npv, cfg.grid.npr), (1, 3, 2));
+        assert_eq!(
+            cfg.input,
+            InputSource::Synthetic { kind: SyntheticKind::PhewasLike, seed: 7 }
+        );
+        assert_eq!(cfg.output_threshold, Some(0.5));
+        assert!(!cfg.store_metrics, "served requests must not accumulate");
+        // file= overrides the synthetic input family.
+        let cfg = RunConfig::from_kv_line("nv=8 nf=16 file=/data/x.bin").unwrap();
+        assert_eq!(cfg.input, InputSource::File { path: "/data/x.bin".into() });
+    }
+
+    #[test]
+    fn kv_line_rejects_junk() {
+        for (line, needle) in [
+            ("metric=czekanowski bogus_key=1", "unknown request key"),
+            ("metric czekanowski", "not key=value"),
+            ("nv=twelve", "nv"),
+            ("npv=0", ">= 1"),
+            ("metric=ccc", "allele"),      // validation still applies
+            ("num_way=3 metric=ccc synthetic=alleles", "3-way"),
+        ] {
+            let err = RunConfig::from_kv_line(line).unwrap_err();
+            assert!(format!("{err:#}").contains(needle), "{line} -> {err:#}");
+        }
+    }
 
     #[test]
     fn defaults_validate() {

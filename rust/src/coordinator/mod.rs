@@ -71,6 +71,14 @@ pub struct RunStats {
     pub pool_scopes: u64,
     pub pool_tasks: u64,
     pub pool_threads_spawned: u64,
+    /// Session block-cache pressure during this run: hits, misses
+    /// (load + ingest), and budget evictions — ledger deltas captured
+    /// by `Session::run` (the one-shot path caches nothing, so they
+    /// stay 0 there). `cache_bytes` is the resident total at run end.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_bytes: u64,
 }
 
 impl RunStats {
@@ -95,6 +103,12 @@ impl RunStats {
         self.pool_scopes += o.pool_scopes;
         self.pool_tasks += o.pool_tasks;
         self.pool_threads_spawned += o.pool_threads_spawned;
+        // Cache pressure: event counts sum; resident bytes is a level,
+        // not a flow — a batch ledger reports the peak it saw.
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.cache_evictions += o.cache_evictions;
+        self.cache_bytes = self.cache_bytes.max(o.cache_bytes);
         self.t_input = self.t_input.max(o.t_input);
         self.t_compute = self.t_compute.max(o.t_compute);
         self.t_output = self.t_output.max(o.t_output);

@@ -42,6 +42,26 @@
 //! ([`config::batch_from_toml_str`]) against one session,
 //! demonstrating ingest-once amortization end-to-end.
 //!
+//! ## The serving layer
+//!
+//! [`serve`] turns one session into a server: `comet serve` runs a
+//! [`serve::Server`] — per-dataset **shard queues** drained by worker
+//! threads (same dataset → same shard → one ingest, different datasets
+//! → true parallelism), **bounded admission** (typed
+//! [`serve::ServeError::Busy`]/[`serve::ServeError::TooLarge`]
+//! rejections instead of unbounded queueing or OOM), and **bounded
+//! caches** ([`session::SessionLimits`]: a block-cache byte budget and
+//! an executable-cache slot cap, both LRU, with hit/miss/eviction
+//! counters in [`coordinator::RunStats`]). Results cross the wire as
+//! versioned, length-prefixed [`output::wire::Frame`]s
+//! ([`output::sink::Tile`] gains `encode`/`decode`;
+//! [`output::wire::SocketSink`] streams them from node threads), and
+//! requests arrive as one-line key=value specs
+//! ([`config::RunConfig::from_kv_line`]) over a Unix socket or stdin.
+//! Every served response is bit-identical to a one-shot
+//! [`coordinator::run`] of the same spec
+//! (`tests/serve_concurrency.rs`).
+//!
 //! **Migration note:** `coordinator::run` / `run_with_artifacts` /
 //! `run_with_client` remain as one-shot shims (fresh ingest, legacy
 //! `store_metrics`/`output_dir` semantics, unchanged checksums — a
@@ -154,6 +174,7 @@ pub mod metrics;
 pub mod output;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod testkit;
 pub mod util;

@@ -4,6 +4,8 @@
 //!   run        execute a 2-way/3-way metrics campaign (config file or flags)
 //!   batch      run a multi-request campaign file against ONE session
 //!              (ingest-once dataset blocks, persistent executable cache)
+//!   serve      concurrent request scheduler over one session — line-delimited
+//!              request specs in (socket or stdin), wire-format tile frames out
 //!   plan       print the parallel decomposition schedule for a grid
 //!   artifacts  validate the AOT artifact manifest
 //!   model      evaluate the §6.3 performance model
@@ -27,9 +29,11 @@ use comet::metrics::counts;
 use comet::output::sink::{DiscardSink, StatsOnlySink};
 use comet::perfmodel;
 use comet::runtime::Manifest;
-use comet::session::Session;
+use comet::serve;
+use comet::session::{Session, SessionLimits};
 use comet::util::fmt;
 use comet::vecdata::{io as vio, SyntheticKind, VectorSet};
+use std::sync::Arc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +49,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd {
         "run" => cmd_run(&args),
         "batch" => cmd_batch(&args),
+        "serve" => cmd_serve(&args),
         "plan" => cmd_plan(&args),
         "artifacts" => cmd_artifacts(&args),
         "model" => cmd_model(&args),
@@ -61,7 +66,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
 const HELP: &str = "\
 comet — Parallel Accelerated Vector Similarity Calculations (CoMet-RS)
 
-USAGE: comet <run|batch|plan|artifacts|model|gen-data|info|help> [options]
+USAGE: comet <run|batch|serve|plan|artifacts|model|gen-data|info|help> [options]
 
 run options:
   --config FILE      TOML run config (flags below override it)
@@ -96,6 +101,27 @@ batch options:
                      once — see examples/batch.toml
   --artifacts DIR    artifact directory (default: artifacts)
 
+serve options (server):
+  --socket PATH      listen on a Unix socket (one handler thread/connection);
+                     clients send one `key=value ...` request spec per line
+                     (keys: metric num_way nv nf precision backend threads
+                     npf npv npr num_stage stage synthetic seed file
+                     output_threshold) and receive length-prefixed wire
+                     frames: result tiles, then Done (metrics + checksum)
+                     or Error — bit-identical to `comet run` of the same spec
+  --stdin            serve one connection over stdin/stdout instead
+  --workers N        shard worker threads (default 2); requests for the same
+                     dataset share a shard (one ingest), others run in parallel
+  --queue N          bounded per-shard queue depth (default 8); a full shard
+                     rejects with a typed busy error instead of queueing forever
+  --max-request-bytes N   admission cap on a request's estimated block bytes
+  --block-cache-bytes N   session block-cache budget (LRU eviction past it)
+  --exec-cache-slots N    PJRT executable-cache slot cap (LRU)
+  --max-conns N      exit after N connections (smoke/CI runs)
+  --artifacts DIR    artifact directory (default: artifacts)
+serve options (client):
+  --connect PATH --request \"key=value ...\"   send one request to a running
+                     server, print `tiles= values= metrics= checksum=`
 plan options:    --num-way 2|3 --npv N [--npr N]
 model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                  [--tgemm SECS] [--tcpu SECS] [--precision f32|f64]
@@ -106,6 +132,11 @@ model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                  [--tspawn SECS]    per-thread spawn cost of a cold kernel call
                  [--cold-pool]      price per-call thread spawns instead of the
                                     warm persistent worker pool (default warm)
+                 [--queued N --serve-workers W]  also price serving turnaround:
+                                    queue wait for N queued requests over W
+                                    shard workers, plus an eviction-refill term
+                 [--tingest SECS]   block re-ingest cost after a cache eviction
+                 [--miss-rate X]    expected block-cache miss fraction (0..1)
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
                  [--synthetic grid|verifiable|phewas|alleles] [--seed N]
 ";
@@ -215,6 +246,15 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
             s.pool_tasks, s.pool_scopes, s.pool_threads_spawned
         );
     }
+    if s.cache_hits + s.cache_misses > 0 {
+        println!(
+            "  block cache      : {} hit(s) / {} miss(es) / {} eviction(s), {} resident",
+            s.cache_hits,
+            s.cache_misses,
+            s.cache_evictions,
+            fmt::bytes(s.cache_bytes)
+        );
+    }
     let cmps = if cfg.num_way == 2 {
         counts::cmp_2way(cfg.nf, cfg.nv)
     } else {
@@ -320,6 +360,97 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
             fmt::secs(secs)
         );
     }
+    if pool_totals.cache_hits + pool_totals.cache_misses > 0 {
+        // Cache-pressure ledger across the campaign: every miss is an
+        // ingest a later request avoided repeating (hits), and every
+        // eviction is budget pressure the serving layer absorbed.
+        println!(
+            "  cache ledger     : {} hit(s) / {} miss(es) / {} eviction(s), peak {} resident",
+            pool_totals.cache_hits,
+            pool_totals.cache_misses,
+            pool_totals.cache_evictions,
+            fmt::bytes(pool_totals.cache_bytes)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let workers: usize = args.parse_or("workers", 2)?;
+    let queue: usize = args.parse_or("queue", 8)?;
+    let max_request_bytes = args.opt_parse::<u64>("max-request-bytes")?;
+    let block_cache_bytes = args.opt_parse::<u64>("block-cache-bytes")?;
+    let exec_cache_slots = args.opt_parse::<usize>("exec-cache-slots")?;
+    let max_conns = args.opt_parse::<usize>("max-conns")?;
+    let socket = args.opt_str("socket").map(str::to_string);
+    let connect = args.opt_str("connect").map(str::to_string);
+    let request = args.opt_str("request").map(str::to_string);
+    let use_stdin = args.switch("stdin");
+    args.reject_unknown()?;
+
+    // Client mode: one request against a running server's socket.
+    if let Some(path) = connect {
+        let line = request.context("--connect requires --request \"key=value ...\"")?;
+        let mut stream = std::os::unix::net::UnixStream::connect(&path)
+            .with_context(|| format!("connect {path}"))?;
+        let reply = serve::request_over_stream(&mut stream, &line)?;
+        println!(
+            "tiles={} values={} metrics={} checksum={}",
+            reply.tiles.len(),
+            reply.values,
+            reply.metrics,
+            reply.checksum
+        );
+        return Ok(());
+    }
+
+    let limits = SessionLimits { block_cache_bytes, exec_cache_slots };
+    let session = Arc::new(Session::with_limits(&artifacts, limits));
+    let server = Arc::new(serve::Server::start(
+        Arc::clone(&session),
+        serve::ServeConfig { workers, queue_capacity: queue, max_request_bytes },
+    )?);
+
+    if let Some(path) = socket {
+        // Re-bind cleanly after an unclean exit.
+        let _ = std::fs::remove_file(&path);
+        let listener = std::os::unix::net::UnixListener::bind(&path)
+            .with_context(|| format!("bind {path}"))?;
+        eprintln!(
+            "comet serve: listening on {path} ({workers} worker(s), queue {queue}{})",
+            max_conns
+                .map(|m| format!(", exits after {m} connection(s)"))
+                .unwrap_or_default()
+        );
+        serve::serve_unix(Arc::clone(&server), listener, max_conns)?;
+    } else if use_stdin {
+        eprintln!("comet serve: reading request lines from stdin ({workers} worker(s))");
+        serve::serve_connection(&server, std::io::stdin(), std::io::stdout())?;
+    } else {
+        bail!(
+            "serve needs a transport: --socket PATH, --stdin, or \
+             --connect PATH --request \"...\""
+        );
+    }
+
+    let stats = server.stats();
+    eprintln!(
+        "comet serve: {} submitted / {} completed, rejected {} busy + {} too-large, queue wait {}",
+        stats.submitted,
+        stats.completed,
+        stats.rejected_busy,
+        stats.rejected_too_large,
+        fmt::secs(stats.queue_wait_secs)
+    );
+    let cache = session.cache_stats();
+    eprintln!(
+        "comet serve: block cache {} hit(s) / {} miss(es) / {} eviction(s), {} resident",
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+        fmt::bytes(cache.bytes)
+    );
     Ok(())
 }
 
@@ -439,6 +570,10 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
         net: CostModel::gemini(),
         link: CostModel::pcie2(),
     };
+    let queued: usize = args.parse_or("queued", 0)?;
+    let serve_workers: usize = args.parse_or("serve-workers", 0)?;
+    let t_ingest: f64 = args.parse_or("tingest", 0.0)?;
+    let miss_rate: f64 = args.parse_or("miss-rate", 0.0)?;
     args.reject_unknown()?;
     let p = match num_way {
         2 => perfmodel::predict_2way(&input),
@@ -456,6 +591,20 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
     }
     println!("  total       = {}", fmt::secs(p.total));
     println!("  mGEMM fraction = {:.1}% (the paper's overlap regime indicator)", 100.0 * p.gemm_fraction());
+    if serve_workers > 0 {
+        let sp = perfmodel::predict_serve(&perfmodel::ServeInput {
+            queued,
+            workers: serve_workers,
+            t_request: p.total,
+            t_ingest,
+            miss_rate,
+        });
+        println!("serving turnaround ({queued} queued, {serve_workers} worker(s)):");
+        println!("  t_queue_wait= {}", fmt::secs(sp.t_queue_wait));
+        println!("  t_refill    = {} (cache-eviction re-ingest)", fmt::secs(sp.t_refill));
+        println!("  t_service   = {}", fmt::secs(sp.t_service));
+        println!("  turnaround  = {}", fmt::secs(sp.total));
+    }
     Ok(())
 }
 

@@ -9,9 +9,13 @@
 //!
 //! File output is one implementation of the streaming [`sink`] API
 //! ([`sink::FileSink`] wraps [`NodeWriter`]); the coordinator's node
-//! programs only ever talk to a [`sink::ResultSink`].
+//! programs only ever talk to a [`sink::ResultSink`]. The [`wire`]
+//! module gives tiles a cross-process form: versioned binary frames
+//! ([`wire::Frame`]) streamed by [`wire::SocketSink`] for `comet
+//! serve`.
 
 pub mod sink;
+pub mod wire;
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};

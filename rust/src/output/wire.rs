@@ -1,0 +1,668 @@
+//! Versioned binary wire format for streaming results cross-process.
+//!
+//! `comet serve` ships finished [`Tile`]s to clients as length-prefixed
+//! **frames** over any byte stream (Unix socket, pipe, stdin/stdout).
+//! The format is deliberately dumb — little-endian, fixed-width, no
+//! compression — so a client in any language can decode it with a
+//! dozen lines, and decoding is total: malformed input of every kind
+//! (truncation, bad version, unknown kind, trailing garbage, absurd
+//! length prefixes) returns an error, never panics and never
+//! over-allocates.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! frame   := len:u32le payload            (len = payload byte count)
+//! payload := version:u8 kind:u8 body
+//! version := 0x01                         (WIRE_VERSION)
+//! kind    := 0x01 pairs | 0x02 triples | 0x03 done | 0x04 error
+//! pairs   := metric:u8 count:u32le { i:u32le j:u32le bits:u64le }*
+//! triples := metric:u8 count:u32le { i:u32le j:u32le k:u32le bits:u64le }*
+//! done    := metrics:u64le len:u32le checksum-digest:utf8
+//! error   := len:u32le message:utf8
+//! ```
+//!
+//! Values travel as raw `f64::to_bits` words, so a decoded tile is
+//! **bit-identical** to the tile the node program emitted — the serving
+//! acceptance contract (`tests/serve_concurrency.rs`) diffs served
+//! results against one-shot runs at the bit level.
+//!
+//! [`SocketSink`] is the [`ResultSink`] end of the pipe: every node
+//! sink of a run frames its tiles into one shared writer (interleaved
+//! at frame granularity — frames from different nodes never tear).
+
+use std::io::{Read, Write};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::metrics::store::{PairEntry, TripleEntry};
+use crate::metrics::MetricId;
+use crate::output::sink::{NodeSink, ResultSink, Tile};
+
+/// Current (and only) wire format version byte.
+pub const WIRE_VERSION: u8 = 0x01;
+
+/// Hard cap on a frame's declared payload length. A corrupt or hostile
+/// length prefix must not make the decoder allocate gigabytes; tiles
+/// are bounded by block size and sit far below this.
+pub const MAX_FRAME_BYTES: u32 = 1 << 26; // 64 MiB
+
+const KIND_PAIRS: u8 = 0x01;
+const KIND_TRIPLES: u8 = 0x02;
+const KIND_DONE: u8 = 0x03;
+const KIND_ERROR: u8 = 0x04;
+
+const PAIR_ENTRY_BYTES: u64 = 16; // i u32 + j u32 + value u64
+const TRIPLE_ENTRY_BYTES: u64 = 20; // i u32 + j u32 + k u32 + value u64
+
+/// Stable single-byte metric tags (additions append, never renumber —
+/// the version byte only bumps for structural changes).
+fn metric_code(metric: MetricId) -> u8 {
+    match metric {
+        MetricId::Czekanowski => 0,
+        MetricId::Ccc => 1,
+        MetricId::Sorenson => 2,
+    }
+}
+
+fn metric_from_code(code: u8) -> Result<MetricId> {
+    Ok(match code {
+        0 => MetricId::Czekanowski,
+        1 => MetricId::Ccc,
+        2 => MetricId::Sorenson,
+        other => bail!("wire: unknown metric code 0x{other:02x}"),
+    })
+}
+
+/// Everything that travels on a serve connection, server → client.
+///
+/// A request's reply is zero or more `Tile` frames followed by exactly
+/// one `Done` (success: metric count + checksum digest for client-side
+/// diffing) or one `Error` (the request never ran or died mid-run).
+#[derive(Debug, Clone)]
+pub enum Frame {
+    Tile(Tile),
+    Done { metrics: u64, checksum: String },
+    Error { message: String },
+}
+
+impl Frame {
+    /// Encode into a complete frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Frame::Tile(tile) => tile.encode(),
+            Frame::Done { metrics, checksum } => {
+                let digest = checksum.as_bytes();
+                let mut payload = Vec::with_capacity(2 + 8 + 4 + digest.len());
+                payload.push(WIRE_VERSION);
+                payload.push(KIND_DONE);
+                payload.extend_from_slice(&metrics.to_le_bytes());
+                payload.extend_from_slice(&(digest.len() as u32).to_le_bytes());
+                payload.extend_from_slice(digest);
+                prefix(payload)
+            }
+            Frame::Error { message } => {
+                let msg = message.as_bytes();
+                let mut payload = Vec::with_capacity(2 + 4 + msg.len());
+                payload.push(WIRE_VERSION);
+                payload.push(KIND_ERROR);
+                payload.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                payload.extend_from_slice(msg);
+                prefix(payload)
+            }
+        }
+    }
+
+    /// Decode one complete frame from a byte slice. The slice must hold
+    /// exactly one frame — a short slice is a truncation error, extra
+    /// bytes after the frame are trailing garbage. Never panics.
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        ensure!(
+            bytes.len() >= 4,
+            "wire: truncated frame ({} byte(s), need a 4-byte length prefix)",
+            bytes.len()
+        );
+        let declared = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        ensure!(
+            declared <= MAX_FRAME_BYTES,
+            "wire: frame length {declared} exceeds the {MAX_FRAME_BYTES}-byte cap"
+        );
+        let body = &bytes[4..];
+        let declared = declared as usize;
+        ensure!(
+            body.len() >= declared,
+            "wire: truncated frame (payload declares {declared} byte(s), {} present)",
+            body.len()
+        );
+        ensure!(
+            body.len() == declared,
+            "wire: {} byte(s) of trailing garbage after the frame",
+            body.len() - declared
+        );
+        decode_payload(body)
+    }
+
+    /// Write the frame to a stream (no flush — callers flush at
+    /// request boundaries).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.encode()).context("wire: write frame")?;
+        Ok(())
+    }
+
+    /// Read one frame from a stream. `Ok(None)` on a clean EOF at a
+    /// frame boundary; EOF mid-frame is an error.
+    pub fn read_from(r: &mut impl Read) -> Result<Option<Frame>> {
+        let mut len_buf = [0u8; 4];
+        let mut got = 0;
+        while got < 4 {
+            let n = r.read(&mut len_buf[got..]).context("wire: read length prefix")?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!("wire: stream closed mid-frame ({got} of 4 length byte(s) read)");
+            }
+            got += n;
+        }
+        let len = u32::from_le_bytes(len_buf);
+        ensure!(
+            len <= MAX_FRAME_BYTES,
+            "wire: frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+        );
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).context("wire: read frame payload")?;
+        decode_payload(&payload).map(Some)
+    }
+}
+
+impl Tile {
+    /// Encode into a complete wire frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(3 + 4 + self.len() * TRIPLE_ENTRY_BYTES as usize);
+        payload.push(WIRE_VERSION);
+        match self {
+            Tile::Pairs { metric, entries } => {
+                payload.push(KIND_PAIRS);
+                payload.push(metric_code(*metric));
+                payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                for e in entries {
+                    payload.extend_from_slice(&e.i.to_le_bytes());
+                    payload.extend_from_slice(&e.j.to_le_bytes());
+                    payload.extend_from_slice(&e.value.to_bits().to_le_bytes());
+                }
+            }
+            Tile::Triples { metric, entries } => {
+                payload.push(KIND_TRIPLES);
+                payload.push(metric_code(*metric));
+                payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                for e in entries {
+                    payload.extend_from_slice(&e.i.to_le_bytes());
+                    payload.extend_from_slice(&e.j.to_le_bytes());
+                    payload.extend_from_slice(&e.k.to_le_bytes());
+                    payload.extend_from_slice(&e.value.to_bits().to_le_bytes());
+                }
+            }
+        }
+        prefix(payload)
+    }
+
+    /// Decode a frame that must hold a tile (strict: [`Frame::decode`]
+    /// rules, plus `Done`/`Error` frames are rejected).
+    pub fn decode(bytes: &[u8]) -> Result<Tile> {
+        match Frame::decode(bytes)? {
+            Frame::Tile(tile) => Ok(tile),
+            Frame::Done { .. } => bail!("wire: expected a tile frame, got Done"),
+            Frame::Error { .. } => bail!("wire: expected a tile frame, got Error"),
+        }
+    }
+}
+
+fn prefix(payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() as u64 <= MAX_FRAME_BYTES as u64);
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend(payload);
+    frame
+}
+
+/// Decode a frame payload (everything after the length prefix).
+fn decode_payload(payload: &[u8]) -> Result<Frame> {
+    let mut rd = Reader::new(payload);
+    let version = rd.u8("version")?;
+    ensure!(
+        version == WIRE_VERSION,
+        "wire: unsupported version byte 0x{version:02x} (this build speaks 0x{WIRE_VERSION:02x})"
+    );
+    let kind = rd.u8("kind")?;
+    let frame = match kind {
+        KIND_PAIRS => {
+            let metric = metric_from_code(rd.u8("metric")?)?;
+            let count = rd.u32("entry count")? as u64;
+            rd.expect_exact(count, PAIR_ENTRY_BYTES, "pair")?;
+            let mut entries = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                let i = rd.u32("pair i")?;
+                let j = rd.u32("pair j")?;
+                let value = f64::from_bits(rd.u64("pair value")?);
+                entries.push(PairEntry { i, j, value });
+            }
+            Frame::Tile(Tile::Pairs { metric, entries })
+        }
+        KIND_TRIPLES => {
+            let metric = metric_from_code(rd.u8("metric")?)?;
+            let count = rd.u32("entry count")? as u64;
+            rd.expect_exact(count, TRIPLE_ENTRY_BYTES, "triple")?;
+            let mut entries = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                let i = rd.u32("triple i")?;
+                let j = rd.u32("triple j")?;
+                let k = rd.u32("triple k")?;
+                let value = f64::from_bits(rd.u64("triple value")?);
+                entries.push(TripleEntry { i, j, k, value });
+            }
+            Frame::Tile(Tile::Triples { metric, entries })
+        }
+        KIND_DONE => {
+            let metrics = rd.u64("metric count")?;
+            let len = rd.u32("digest length")? as u64;
+            rd.expect_exact(len, 1, "digest")?;
+            let checksum = String::from_utf8(rd.bytes(len as usize, "digest")?.to_vec())
+                .context("wire: checksum digest is not UTF-8")?;
+            Frame::Done { metrics, checksum }
+        }
+        KIND_ERROR => {
+            let len = rd.u32("message length")? as u64;
+            rd.expect_exact(len, 1, "message")?;
+            let message = String::from_utf8(rd.bytes(len as usize, "message")?.to_vec())
+                .context("wire: error message is not UTF-8")?;
+            Frame::Error { message }
+        }
+        other => bail!("wire: unknown frame kind 0x{other:02x}"),
+    };
+    rd.expect_empty()?;
+    Ok(frame)
+}
+
+/// Bounds-checked little-endian cursor — every read names the field it
+/// was after, so truncation errors say what was missing.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> u64 {
+        (self.buf.len() - self.pos) as u64
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n as u64,
+            "wire: truncated payload reading {what} (need {n} byte(s), {} left)",
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.bytes(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// The declared element count must account for *exactly* the bytes
+    /// left — checked up front (u64 math, no overflow) so a hostile
+    /// count neither over-allocates nor leaves silent garbage.
+    fn expect_exact(&self, count: u64, elem_bytes: u64, what: &str) -> Result<()> {
+        let need = count.checked_mul(elem_bytes).context("wire: element count overflows")?;
+        ensure!(
+            need == self.remaining(),
+            "wire: {what} section declares {need} byte(s) but {} remain in the frame",
+            self.remaining()
+        );
+        Ok(())
+    }
+
+    fn expect_empty(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "wire: {} byte(s) of trailing garbage inside the frame payload",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SocketSink — the serving end of ResultSink.
+
+/// Streams every tile of a run as wire frames into one shared writer.
+///
+/// All node sinks of the run share the writer behind a mutex; each tile
+/// is encoded outside the lock and written with a single `write_all`,
+/// so frames interleave between nodes but never tear. `W: 'static`
+/// because node sinks move into the coordinator's node threads.
+pub struct SocketSink<W: Write + Send + 'static> {
+    writer: Arc<Mutex<W>>,
+}
+
+impl<W: Write + Send + 'static> SocketSink<W> {
+    pub fn new(writer: W) -> Self {
+        SocketSink { writer: Arc::new(Mutex::new(writer)) }
+    }
+
+    /// Wrap an already-shared writer — `comet serve` threads the same
+    /// handle through the sink *and* the Done/Error frame writer, so a
+    /// request's frames serialize onto the connection in order.
+    pub fn shared(writer: Arc<Mutex<W>>) -> Self {
+        SocketSink { writer }
+    }
+
+    pub fn writer(&self) -> Arc<Mutex<W>> {
+        Arc::clone(&self.writer)
+    }
+}
+
+impl<W: Write + Send + 'static> ResultSink for SocketSink<W> {
+    fn node_sink(&self, _rank: usize) -> Result<Box<dyn NodeSink>> {
+        Ok(Box::new(SocketNode { writer: Arc::clone(&self.writer) }))
+    }
+}
+
+struct SocketNode<W: Write + Send + 'static> {
+    writer: Arc<Mutex<W>>,
+}
+
+impl<W: Write + Send + 'static> NodeSink for SocketNode<W> {
+    fn tile(&mut self, tile: Tile) -> Result<()> {
+        if tile.is_empty() {
+            return Ok(()); // empty tiles carry no information a client needs
+        }
+        let frame = tile.encode();
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&frame).context("wire: stream tile frame")?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.writer.lock().unwrap().flush().context("wire: flush tile stream")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    fn arb_pairs(g: &mut Gen) -> Tile {
+        let metric = *g.pick(&[MetricId::Czekanowski, MetricId::Ccc, MetricId::Sorenson]);
+        let n = g.usize_in(0, 40);
+        let entries = (0..n)
+            .map(|_| PairEntry {
+                i: arb_index(g),
+                j: arb_index(g),
+                value: arb_value(g),
+            })
+            .collect();
+        Tile::Pairs { metric, entries }
+    }
+
+    fn arb_triples(g: &mut Gen) -> Tile {
+        let metric = *g.pick(&[MetricId::Czekanowski, MetricId::Ccc, MetricId::Sorenson]);
+        let n = g.usize_in(0, 40);
+        let entries = (0..n)
+            .map(|_| TripleEntry {
+                i: arb_index(g),
+                j: arb_index(g),
+                k: arb_index(g),
+                value: arb_value(g),
+            })
+            .collect();
+        Tile::Triples { metric, entries }
+    }
+
+    /// Indices biased toward the edges: 0 and u32::MAX must survive.
+    fn arb_index(g: &mut Gen) -> u32 {
+        match g.usize_in(0, 4) {
+            0 => 0,
+            1 => u32::MAX,
+            _ => g.usize_in(0, u32::MAX as usize) as u32,
+        }
+    }
+
+    /// Values across the full f64 bit space (infinities, NaN payloads,
+    /// subnormals) — round-trip compares bits, not ==.
+    fn arb_value(g: &mut Gen) -> f64 {
+        let hi = g.usize_in(0, u32::MAX as usize) as u64;
+        let lo = g.usize_in(0, u32::MAX as usize) as u64;
+        f64::from_bits((hi << 32) | lo)
+    }
+
+    fn tiles_bit_equal(a: &Tile, b: &Tile) -> bool {
+        match (a, b) {
+            (Tile::Pairs { metric: ma, entries: ea }, Tile::Pairs { metric: mb, entries: eb }) => {
+                ma == mb
+                    && ea.len() == eb.len()
+                    && ea.iter().zip(eb).all(|(x, y)| {
+                        x.i == y.i && x.j == y.j && x.value.to_bits() == y.value.to_bits()
+                    })
+            }
+            (
+                Tile::Triples { metric: ma, entries: ea },
+                Tile::Triples { metric: mb, entries: eb },
+            ) => {
+                ma == mb
+                    && ea.len() == eb.len()
+                    && ea.iter().zip(eb).all(|(x, y)| {
+                        x.i == y.i
+                            && x.j == y.j
+                            && x.k == y.k
+                            && x.value.to_bits() == y.value.to_bits()
+                    })
+            }
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn prop_tile_round_trip() {
+        crate::testkit::forall(
+            "wire-tile-round-trip",
+            300,
+            |g| if g.bool() { arb_pairs(g) } else { arb_triples(g) },
+            |tile| {
+                let frame = tile.encode();
+                let back = Tile::decode(&frame).map_err(|e| format!("decode: {e:#}"))?;
+                if !tiles_bit_equal(tile, &back) {
+                    return Err("round-trip changed the tile".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncation_always_errors_never_panics() {
+        crate::testkit::forall(
+            "wire-truncation",
+            200,
+            |g| {
+                let tile = if g.bool() { arb_pairs(g) } else { arb_triples(g) };
+                let frame = tile.encode();
+                let cut = g.usize_in(0, frame.len().saturating_sub(1));
+                (frame, cut)
+            },
+            |(frame, cut)| match Frame::decode(&frame[..*cut]) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("truncation to {cut} of {} decoded", frame.len())),
+            },
+        );
+    }
+
+    #[test]
+    fn empty_and_max_index_tiles_round_trip() {
+        for tile in [
+            Tile::Pairs { metric: MetricId::Sorenson, entries: vec![] },
+            Tile::Triples { metric: MetricId::Czekanowski, entries: vec![] },
+            Tile::Pairs {
+                metric: MetricId::Ccc,
+                entries: vec![PairEntry { i: u32::MAX, j: u32::MAX, value: f64::NAN }],
+            },
+            Tile::Triples {
+                metric: MetricId::Czekanowski,
+                entries: vec![TripleEntry {
+                    i: 0,
+                    j: u32::MAX,
+                    k: u32::MAX - 1,
+                    value: -0.0,
+                }],
+            },
+        ] {
+            let back = Tile::decode(&tile.encode()).unwrap();
+            assert!(tiles_bit_equal(&tile, &back), "{tile:?}");
+        }
+    }
+
+    #[test]
+    fn bad_version_kind_metric_rejected() {
+        let good = Tile::Pairs {
+            metric: MetricId::Czekanowski,
+            entries: vec![PairEntry { i: 1, j: 2, value: 0.5 }],
+        }
+        .encode();
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 0x7f; // payload byte 0
+        assert!(Frame::decode(&bad_version).unwrap_err().to_string().contains("version"));
+
+        let mut bad_kind = good.clone();
+        bad_kind[5] = 0x66; // payload byte 1
+        assert!(Frame::decode(&bad_kind).unwrap_err().to_string().contains("kind"));
+
+        let mut bad_metric = good.clone();
+        bad_metric[6] = 0xee; // payload byte 2
+        assert!(Frame::decode(&bad_metric).unwrap_err().to_string().contains("metric"));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected_both_layers() {
+        let mut frame = Tile::Pairs { metric: MetricId::Ccc, entries: vec![] }.encode();
+        // After the frame: slice-level garbage.
+        frame.push(0xaa);
+        let err = Frame::decode(&frame).unwrap_err().to_string();
+        assert!(err.contains("trailing garbage"), "{err}");
+
+        // Inside the payload: length prefix covers bytes the body
+        // doesn't account for.
+        let mut inner = Tile::Pairs { metric: MetricId::Ccc, entries: vec![] }.encode();
+        inner.push(0xbb);
+        let len = (inner.len() - 4) as u32;
+        inner[..4].copy_from_slice(&len.to_le_bytes());
+        let err = Frame::decode(&inner).unwrap_err().to_string();
+        assert!(err.contains("remain in the frame") || err.contains("trailing garbage"), "{err}");
+    }
+
+    #[test]
+    fn hostile_lengths_do_not_allocate() {
+        // Length prefix far past the cap.
+        let mut frame = vec![0u8; 8];
+        frame[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::decode(&frame).unwrap_err().to_string().contains("cap"));
+
+        // Entry count that would overflow count * entry_size.
+        let mut payload = vec![WIRE_VERSION, KIND_PAIRS, 0];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let framed = prefix(payload);
+        assert!(Frame::decode(&framed).is_err());
+    }
+
+    #[test]
+    fn done_and_error_frames_round_trip() {
+        let done = Frame::Done { metrics: 1234, checksum: "0abc42".into() };
+        match Frame::decode(&done.encode()).unwrap() {
+            Frame::Done { metrics, checksum } => {
+                assert_eq!(metrics, 1234);
+                assert_eq!(checksum, "0abc42");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+
+        let err = Frame::Error { message: "queue full".into() };
+        match Frame::decode(&err.encode()).unwrap() {
+            Frame::Error { message } => assert_eq!(message, "queue full"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_from_streams_frames_and_detects_clean_eof() {
+        let tiles = vec![
+            Tile::Pairs {
+                metric: MetricId::Sorenson,
+                entries: vec![PairEntry { i: 0, j: 9, value: 0.25 }],
+            },
+            Tile::Triples {
+                metric: MetricId::Czekanowski,
+                entries: vec![TripleEntry { i: 1, j: 2, k: 3, value: 0.75 }],
+            },
+        ];
+        let mut stream = Vec::new();
+        for t in &tiles {
+            stream.extend(t.encode());
+        }
+        Frame::Done { metrics: 2, checksum: "xyz".into() }.write_to(&mut stream).unwrap();
+
+        let mut cursor = std::io::Cursor::new(stream.clone());
+        for t in &tiles {
+            match Frame::read_from(&mut cursor).unwrap().unwrap() {
+                Frame::Tile(back) => assert!(tiles_bit_equal(t, &back)),
+                other => panic!("expected tile, got {other:?}"),
+            }
+        }
+        assert!(matches!(Frame::read_from(&mut cursor).unwrap(), Some(Frame::Done { .. })));
+        assert!(Frame::read_from(&mut cursor).unwrap().is_none(), "clean EOF");
+
+        // EOF mid-frame is an error, not None (the first frame is
+        // longer than 10 bytes, so the payload read hits EOF).
+        let mut cut = std::io::Cursor::new(stream[..10].to_vec());
+        assert!(Frame::read_from(&mut cut).is_err());
+    }
+
+    #[test]
+    fn socket_sink_stream_decodes_back() {
+        let sink = SocketSink::new(Vec::<u8>::new());
+        let writer = sink.writer();
+        let mut node = sink.node_sink(0).unwrap();
+        let tile = Tile::Pairs {
+            metric: MetricId::Ccc,
+            entries: vec![PairEntry { i: 3, j: 4, value: 1.0 }],
+        };
+        node.tile(tile.clone()).unwrap();
+        node.tile(Tile::Pairs { metric: MetricId::Ccc, entries: vec![] }).unwrap(); // dropped
+        node.finish().unwrap();
+
+        let bytes = writer.lock().unwrap().clone();
+        let mut cursor = std::io::Cursor::new(bytes);
+        match Frame::read_from(&mut cursor).unwrap().unwrap() {
+            Frame::Tile(back) => assert!(tiles_bit_equal(&tile, &back)),
+            other => panic!("expected tile, got {other:?}"),
+        }
+        assert!(Frame::read_from(&mut cursor).unwrap().is_none());
+    }
+}

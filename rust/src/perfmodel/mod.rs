@@ -176,6 +176,53 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
     }
 }
 
+/// Serving-turnaround inputs: what one queued request experiences in
+/// front of a `comet serve` scheduler. `t_request` is the service time
+/// of one run (typically a [`predict_2way`]/[`predict_3way`] total),
+/// `t_ingest` the cost of re-ingesting a dataset's blocks after a
+/// cache eviction, and `miss_rate` the expected block-cache miss
+/// fraction (0 = every block resident, 1 = fully cold).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeInput {
+    /// Requests already queued ahead of this one (across shards).
+    pub queued: usize,
+    /// Shard worker threads draining the queues.
+    pub workers: usize,
+    /// Service time of one request (seconds).
+    pub t_request: f64,
+    /// Full block re-ingest time for the request's dataset (seconds).
+    pub t_ingest: f64,
+    /// Expected block-cache miss fraction in [0, 1].
+    pub miss_rate: f64,
+}
+
+/// Predicted serving turnaround breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct ServePrediction {
+    /// Time spent queued behind earlier requests.
+    pub t_queue_wait: f64,
+    /// Eviction-refill term: expected re-ingest work on cache misses.
+    pub t_refill: f64,
+    /// Service time including the refill (what the worker spends).
+    pub t_service: f64,
+    /// Queue wait + service: submit-to-Done turnaround.
+    pub total: f64,
+}
+
+/// Serving turnaround model: `queued` requests drain `workers`-wide,
+/// so a new submission waits ⌈queued/workers⌉ service slots, then pays
+/// its own service time plus the expected eviction-refill cost
+/// (`miss_rate × t_ingest` — zero against a warm, unevicted cache;
+/// the full ingest when budget pressure evicted its blocks).
+pub fn predict_serve(m: &ServeInput) -> ServePrediction {
+    let workers = m.workers.max(1);
+    let slots_ahead = m.queued.div_ceil(workers) as f64;
+    let t_refill = m.miss_rate.clamp(0.0, 1.0) * m.t_ingest;
+    let t_service = m.t_request + t_refill;
+    let t_queue_wait = slots_ahead * t_service;
+    ServePrediction { t_queue_wait, t_refill, t_service, total: t_queue_wait + t_service }
+}
+
 /// Tuning advice mirroring §6.3: returns (npv, npr, nst) for a target
 /// node count and memory budget, maximizing per-node block size then
 /// load.
@@ -346,6 +393,48 @@ mod tests {
         assert!(p3c.t_dispatch > 0.0);
         assert_eq!(p3w.t_dispatch, 0.0);
         assert!(p3c.total > p3w.total);
+    }
+
+    #[test]
+    fn serve_empty_queue_waits_nothing() {
+        let p = predict_serve(&ServeInput {
+            queued: 0,
+            workers: 2,
+            t_request: 1.5,
+            t_ingest: 0.4,
+            miss_rate: 0.0,
+        });
+        assert_eq!(p.t_queue_wait, 0.0);
+        assert_eq!(p.t_refill, 0.0);
+        assert_eq!(p.total, 1.5);
+    }
+
+    #[test]
+    fn serve_wait_scales_with_queue_and_shrinks_with_workers() {
+        let base =
+            ServeInput { queued: 8, workers: 1, t_request: 1.0, t_ingest: 0.0, miss_rate: 0.0 };
+        let serial = predict_serve(&base);
+        assert_eq!(serial.t_queue_wait, 8.0);
+        let wide = predict_serve(&ServeInput { workers: 4, ..base });
+        assert_eq!(wide.t_queue_wait, 2.0);
+        assert!(wide.total < serial.total);
+        // Partial slots round up: 5 queued over 4 workers waits 2 slots.
+        let ragged = predict_serve(&ServeInput { queued: 5, workers: 4, ..base });
+        assert_eq!(ragged.t_queue_wait, 2.0);
+    }
+
+    #[test]
+    fn serve_refill_prices_cache_misses_and_clamps() {
+        let base =
+            ServeInput { queued: 0, workers: 2, t_request: 1.0, t_ingest: 0.5, miss_rate: 0.5 };
+        let p = predict_serve(&base);
+        assert!((p.t_refill - 0.25).abs() < 1e-12);
+        assert!((p.t_service - 1.25).abs() < 1e-12);
+        // Out-of-range rates clamp instead of extrapolating.
+        let hot = predict_serve(&ServeInput { miss_rate: 7.0, ..base });
+        assert!((hot.t_refill - 0.5).abs() < 1e-12);
+        let cold = predict_serve(&ServeInput { miss_rate: -1.0, ..base });
+        assert_eq!(cold.t_refill, 0.0);
     }
 
     #[test]

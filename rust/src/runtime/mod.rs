@@ -213,6 +213,12 @@ pub struct RuntimeStats {
     /// across repeated session runs — the cache-reuse signal the batch
     /// driver reports.
     pub compiles: std::sync::atomic::AtomicU64,
+    /// Executable-cache hits (artifact already compiled and resident).
+    pub exec_hits: std::sync::atomic::AtomicU64,
+    /// Executables dropped to stay under the service's slot budget
+    /// ([`PjrtService::start_with_limits`]); a re-used evicted artifact
+    /// recompiles (another `compiles` tick).
+    pub exec_evictions: std::sync::atomic::AtomicU64,
 }
 
 impl RuntimeClient {
@@ -234,6 +240,16 @@ impl RuntimeClient {
         self.stats
             .compiles
             .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Executable-cache pressure: (compiles, hits, evictions).
+    pub fn exec_cache_stats(&self) -> (u64, u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (
+            self.stats.compiles.load(Relaxed),
+            self.stats.exec_hits.load(Relaxed),
+            self.stats.exec_evictions.load(Relaxed),
+        )
     }
 
     /// Execute an artifact by name. Blocks until the service replies.
@@ -268,8 +284,20 @@ pub struct PjrtService {
 }
 
 impl PjrtService {
-    /// Start the service over an artifact directory.
+    /// Start the service over an artifact directory (unbounded
+    /// executable cache — the pre-serving behavior).
     pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
+        Self::start_with_limits(artifact_dir, None)
+    }
+
+    /// Start the service with an executable-cache slot budget: past
+    /// `exec_slots` compiled artifacts, the least-recently-executed
+    /// one is dropped (a budget of 0 behaves as 1 — the executing
+    /// artifact always stays resident).
+    pub fn start_with_limits(
+        artifact_dir: &Path,
+        exec_slots: Option<usize>,
+    ) -> Result<PjrtService> {
         let manifest = Arc::new(Manifest::load(artifact_dir)?);
         let stats = Arc::new(RuntimeStats::default());
         let (tx, rx) = channel();
@@ -277,7 +305,7 @@ impl PjrtService {
         let s = Arc::clone(&stats);
         let join = std::thread::Builder::new()
             .name("pjrt-service".into())
-            .spawn(move || service_main(rx, m, s))
+            .spawn(move || service_main(rx, m, s, exec_slots))
             .context("spawn pjrt service")?;
         Ok(PjrtService {
             tx,
@@ -305,7 +333,45 @@ impl Drop for PjrtService {
     }
 }
 
-fn service_main(rx: Receiver<Msg>, manifest: Arc<Manifest>, stats: Arc<RuntimeStats>) {
+/// Recency bookkeeping for the executable cache: artifact names
+/// ordered cold → hot. Pure over names (no PJRT types), so the policy
+/// is unit-testable without a client.
+#[derive(Default)]
+struct LruOrder {
+    order: std::collections::VecDeque<String>,
+}
+
+impl LruOrder {
+    /// Mark `name` most-recently-used (inserting it if new).
+    fn note_use(&mut self, name: &str) {
+        if let Some(pos) = self.order.iter().position(|n| n == name) {
+            if let Some(n) = self.order.remove(pos) {
+                self.order.push_back(n);
+            }
+        } else {
+            self.order.push_back(name.to_string());
+        }
+    }
+
+    /// Pop the names to evict so at most `max(cap, 1)` entries remain
+    /// — never the hottest (just-used) one, so a budget of 0 still
+    /// keeps the executing artifact resident.
+    fn evict_to(&mut self, cap: usize) -> Vec<String> {
+        let keep = cap.max(1);
+        let mut out = Vec::new();
+        while self.order.len() > keep {
+            out.push(self.order.pop_front().expect("len > keep >= 1"));
+        }
+        out
+    }
+}
+
+fn service_main(
+    rx: Receiver<Msg>,
+    manifest: Arc<Manifest>,
+    stats: Arc<RuntimeStats>,
+    exec_slots: Option<usize>,
+) {
     use std::sync::atomic::Ordering::Relaxed;
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
@@ -327,10 +393,14 @@ fn service_main(rx: Receiver<Msg>, manifest: Arc<Manifest>, stats: Arc<RuntimeSt
         }
     };
     let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut lru = LruOrder::default();
     let compile = |cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+                   lru: &mut LruOrder,
                    name: &str|
      -> Result<()> {
         if cache.contains_key(name) {
+            stats.exec_hits.fetch_add(1, Relaxed);
+            lru.note_use(name);
             return Ok(());
         }
         let entry = manifest
@@ -347,6 +417,13 @@ fn service_main(rx: Receiver<Msg>, manifest: Arc<Manifest>, stats: Arc<RuntimeSt
             .map_err(|e| anyhow!("compile {name}: {e}"))?;
         stats.compiles.fetch_add(1, Relaxed);
         cache.insert(name.to_string(), exe);
+        lru.note_use(name);
+        if let Some(cap) = exec_slots {
+            for victim in lru.evict_to(cap) {
+                cache.remove(&victim);
+                stats.exec_evictions.fetch_add(1, Relaxed);
+            }
+        }
         Ok(())
     };
 
@@ -354,11 +431,11 @@ fn service_main(rx: Receiver<Msg>, manifest: Arc<Manifest>, stats: Arc<RuntimeSt
         match msg {
             Msg::Quit => break,
             Msg::Warm(name, reply) => {
-                let _ = reply.send(compile(&mut cache, &name));
+                let _ = reply.send(compile(&mut cache, &mut lru, &name));
             }
             Msg::Exec(req) => {
                 let result = (|| -> Result<Vec<OutputBuf>> {
-                    compile(&mut cache, &req.artifact)?;
+                    compile(&mut cache, &mut lru, &req.artifact)?;
                     let exe = cache.get(&req.artifact).unwrap();
                     let literals: Vec<xla::Literal> = req
                         .inputs
@@ -448,6 +525,22 @@ mod tests {
         // Block too large for any tier.
         assert!(m.select("mgemm2", Precision::F32, 9999, 128).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_order_evicts_coldest_never_hottest() {
+        let mut lru = LruOrder::default();
+        for name in ["a", "b", "c"] {
+            lru.note_use(name);
+        }
+        assert!(lru.evict_to(3).is_empty());
+        // Re-using "a" rescues it; capacity 2 drops the coldest ("b").
+        lru.note_use("a");
+        assert_eq!(lru.evict_to(2), vec!["b".to_string()]);
+        // Capacity 0 behaves as 1: everything but the hottest goes.
+        lru.note_use("d");
+        assert_eq!(lru.evict_to(0), vec!["c".to_string(), "a".to_string()]);
+        assert!(lru.evict_to(0).is_empty());
     }
 
     #[test]

@@ -1,0 +1,542 @@
+//! `comet serve` — the concurrent request scheduler over [`Session`].
+//!
+//! The paper's engine computes one campaign as fast as the hardware
+//! allows; this module turns it into a **server**: many clients, one
+//! long-lived session, bounded resources. Three mechanisms do the
+//! work:
+//!
+//! * **Per-dataset sharding.** Requests are hashed by their dataset
+//!   identity (input source + nv + nf) onto one of `workers` shard
+//!   queues, each drained by a dedicated worker thread. Requests
+//!   against the same dataset therefore serialize onto the same
+//!   worker — they share one ingest and one `VirtualCluster` build at
+//!   a time instead of racing duplicate ones — while requests against
+//!   different datasets run genuinely in parallel.
+//! * **Admission control.** Each shard queue is a bounded FIFO; a
+//!   submission past its capacity is rejected *immediately* with the
+//!   typed [`ServeError::Busy`] (no deadlock, no unbounded queueing),
+//!   and a request whose estimated block bytes exceed
+//!   [`ServeConfig::max_request_bytes`] is rejected with
+//!   [`ServeError::TooLarge`] before it can OOM the session. Clients
+//!   retry; the server never falls over.
+//! * **Bounded caches.** The session's block-cache byte budget and
+//!   executable-cache slot budget ([`SessionLimits`]) evict LRU
+//!   entries under pressure; the resulting hit/miss/eviction counters
+//!   ride each [`RunOutcome`]'s stats back to the client path.
+//!
+//! The wire protocol is line-in, frames-out: a client writes one
+//! request spec per line ([`RunConfig::from_kv_line`] — the same
+//! vocabulary as the TOML form), and the server streams the run's
+//! tiles back as [`output::wire`](crate::output::wire) frames,
+//! terminated by a `Done` frame (metric count + checksum digest, so
+//! the client can diff against a one-shot run) or an `Error` frame.
+//! [`serve_connection`] drives one such connection over any
+//! `Read`/`Write` pair; [`serve_unix`] accepts them from a Unix
+//! socket; [`request_over_stream`] is the matching client.
+//!
+//! Queueing behavior is priced by `perfmodel::predict_serve`
+//! (queue-wait + eviction-refill terms); `tests/serve_concurrency.rs`
+//! pins the contracts: bit-identity with one-shot runs under ≥ 8
+//! concurrent mixed-metric clients, sharded ingest reuse, budget
+//! adherence, and typed rejection + recovery.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::RunOutcome;
+use crate::output::sink::{ResultSink, Tile};
+use crate::output::wire::{Frame, SocketSink};
+use crate::session::Session;
+use crate::vecdata::block::Repr;
+
+/// Scheduler shape: how many shard workers drain requests and how much
+/// queueing/size slack admission control allows.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Shard worker threads (>= 1). A dataset's requests always land
+    /// on the same shard, so `workers` is also the number of datasets
+    /// the server computes concurrently.
+    pub workers: usize,
+    /// Bounded per-shard FIFO depth (>= 1); submissions past it get
+    /// [`ServeError::Busy`].
+    pub queue_capacity: usize,
+    /// Reject requests whose estimated resident block bytes
+    /// ([`estimated_request_bytes`]) exceed this (None = unlimited).
+    pub max_request_bytes: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, queue_capacity: 8, max_request_bytes: None }
+    }
+}
+
+/// Typed admission-control rejections. These are *flow control*, not
+/// failures: a client that sees `Busy` backs off and retries; the
+/// server keeps running.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's shard queue is full.
+    Busy { shard: usize, capacity: usize },
+    /// The request's estimated block bytes exceed the admission limit.
+    TooLarge { estimated_bytes: u64, limit: u64 },
+    /// The request spec failed validation.
+    Invalid(String),
+    /// The server is shutting down.
+    Shutdown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Busy { shard, capacity } => write!(
+                f,
+                "busy: shard {shard} queue is at capacity ({capacity}); retry later"
+            ),
+            ServeError::TooLarge { estimated_bytes, limit } => write!(
+                f,
+                "too large: request needs ~{estimated_bytes} block bytes \
+                 (admission limit {limit})"
+            ),
+            ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::Shutdown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Estimated resident bytes of the blocks a request will ingest —
+/// the admission-control cost model. Matches
+/// `Block::resident_bytes` summed over the whole dataset: packed
+/// bit-domain metrics cost one u64 word per 64 features, float
+/// metrics cost nv × nf elements at run precision.
+pub fn estimated_request_bytes(cfg: &RunConfig) -> u64 {
+    let (nv, nf) = (cfg.nv as u64, cfg.nf as u64);
+    match cfg.metric.preferred_repr() {
+        Repr::Packed => nv * nf.div_ceil(64) * 8,
+        Repr::Float => nv * nf * cfg.precision.bytes() as u64,
+    }
+}
+
+struct Job {
+    cfg: RunConfig,
+    sink: Arc<dyn ResultSink>,
+    reply: Sender<Result<RunOutcome>>,
+    enqueued: Instant,
+}
+
+struct ShardState {
+    jobs: VecDeque<Job>,
+    open: bool,
+}
+
+struct ShardQueue {
+    capacity: usize,
+    state: Mutex<ShardState>,
+    ready: Condvar,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_too_large: AtomicU64,
+    queue_wait_nanos: AtomicU64,
+}
+
+/// Point-in-time scheduler counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_busy: u64,
+    pub rejected_too_large: u64,
+    /// Total seconds requests spent queued before a worker picked
+    /// them up (the perfmodel queue-wait term, measured).
+    pub queue_wait_secs: f64,
+}
+
+/// Handle to one submitted request; [`Ticket::wait`] blocks until its
+/// shard worker finishes the run.
+pub struct Ticket {
+    rx: Receiver<Result<RunOutcome>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<RunOutcome> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("serve worker dropped the request (server shut down?)"))?
+    }
+}
+
+/// The scheduler: shard queues + worker threads over one shared
+/// [`Session`]. Dropping the server closes the queues, drains queued
+/// work, and joins the workers.
+pub struct Server {
+    session: Arc<Session>,
+    cfg: ServeConfig,
+    shards: Vec<Arc<ShardQueue>>,
+    workers: Vec<JoinHandle<()>>,
+    counters: Arc<Counters>,
+}
+
+impl Server {
+    /// Spawn the shard workers. Misconfigurations (zero workers, zero
+    /// queue capacity) error here, at startup — a zero-worker server
+    /// would accept requests that nothing can ever drain.
+    pub fn start(session: Arc<Session>, cfg: ServeConfig) -> Result<Server> {
+        if cfg.workers == 0 {
+            bail!("serve misconfiguration: workers must be >= 1 (nothing would drain the queues)");
+        }
+        if cfg.queue_capacity == 0 {
+            bail!("serve misconfiguration: queue_capacity must be >= 1 (every submit would be Busy)");
+        }
+        let counters = Arc::new(Counters::default());
+        let mut shards = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for shard in 0..cfg.workers {
+            let queue = Arc::new(ShardQueue {
+                capacity: cfg.queue_capacity,
+                state: Mutex::new(ShardState { jobs: VecDeque::new(), open: true }),
+                ready: Condvar::new(),
+            });
+            shards.push(Arc::clone(&queue));
+            let session = Arc::clone(&session);
+            let counters = Arc::clone(&counters);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-shard-{shard}"))
+                    .spawn(move || worker_main(session, queue, counters))
+                    .context("spawn serve worker")?,
+            );
+        }
+        Ok(Server { session, cfg, shards, workers, counters })
+    }
+
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    /// Which shard (and therefore which worker) `cfg`'s dataset maps
+    /// to. Deterministic per (input, nv, nf) — the sharding contract.
+    pub fn shard_of(&self, cfg: &RunConfig) -> usize {
+        let mut h = DefaultHasher::new();
+        cfg.input.hash(&mut h);
+        cfg.nv.hash(&mut h);
+        cfg.nf.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    /// Jobs currently queued (not yet picked up) on a shard.
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.shards[shard].state.lock().unwrap().jobs.len()
+    }
+
+    /// Admit a request: validate, size-check, enqueue on its dataset's
+    /// shard. Returns immediately — either a [`Ticket`] or a typed
+    /// rejection. Tiles stream through `sink` from the worker thread.
+    pub fn submit(
+        &self,
+        cfg: &RunConfig,
+        sink: Arc<dyn ResultSink>,
+    ) -> std::result::Result<Ticket, ServeError> {
+        cfg.validate().map_err(|e| ServeError::Invalid(format!("{e:#}")))?;
+        let estimated = estimated_request_bytes(cfg);
+        if let Some(limit) = self.cfg.max_request_bytes {
+            if estimated > limit {
+                self.counters.rejected_too_large.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::TooLarge { estimated_bytes: estimated, limit });
+            }
+        }
+        let shard = self.shard_of(cfg);
+        let queue = &self.shards[shard];
+        let mut state = queue.state.lock().unwrap();
+        if !state.open {
+            return Err(ServeError::Shutdown);
+        }
+        if state.jobs.len() >= queue.capacity {
+            self.counters.rejected_busy.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Busy { shard, capacity: queue.capacity });
+        }
+        let (reply, rx) = channel();
+        state.jobs.push_back(Job {
+            cfg: cfg.clone(),
+            sink,
+            reply,
+            enqueued: Instant::now(),
+        });
+        drop(state);
+        queue.ready.notify_one();
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket { rx })
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            completed: self.counters.completed.load(Ordering::Relaxed),
+            rejected_busy: self.counters.rejected_busy.load(Ordering::Relaxed),
+            rejected_too_large: self.counters.rejected_too_large.load(Ordering::Relaxed),
+            queue_wait_secs: self.counters.queue_wait_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        for shard in &self.shards {
+            shard.state.lock().unwrap().open = false;
+            shard.ready.notify_all();
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn worker_main(session: Arc<Session>, queue: Arc<ShardQueue>, counters: Arc<Counters>) {
+    loop {
+        let job = {
+            let mut state = queue.state.lock().unwrap();
+            loop {
+                if let Some(job) = state.jobs.pop_front() {
+                    break job;
+                }
+                // Shutdown drains: queued jobs above still run; only an
+                // empty closed queue exits.
+                if !state.open {
+                    return;
+                }
+                state = queue.ready.wait(state).unwrap();
+            }
+        };
+        counters
+            .queue_wait_nanos
+            .fetch_add(job.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let result = session
+            .request_from_config(&job.cfg)
+            .and_then(|req| session.run(&req, job.sink.as_ref()));
+        counters.completed.fetch_add(1, Ordering::Relaxed);
+        // A dropped ticket (client gone) is fine — the run already
+        // streamed its tiles through the sink.
+        let _ = job.reply.send(result);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Line-protocol drivers (socket server, connection handler, client).
+
+/// Serve one connection: line-delimited request specs in
+/// ([`RunConfig::from_kv_line`]), wire frames out. Each request's
+/// tiles are followed by a `Done` frame; a failed request (parse,
+/// admission, run error) produces an `Error` frame and the connection
+/// stays usable for the next line. Blank lines and `#` comments are
+/// ignored. Requests on one connection run sequentially; concurrency
+/// comes from many connections feeding the shard queues.
+pub fn serve_connection<R, W>(server: &Server, reader: R, writer: W) -> Result<()>
+where
+    R: Read,
+    W: Write + Send + 'static,
+{
+    let reader = BufReader::new(reader);
+    let shared = Arc::new(Mutex::new(writer));
+    for line in reader.lines() {
+        let line = line.context("read request line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let frame = match handle_request(server, line, &shared) {
+            Ok(done) => done,
+            Err(e) => Frame::Error { message: format!("{e:#}") },
+        };
+        let mut w = shared.lock().unwrap();
+        frame.write_to(&mut *w)?;
+        w.flush().context("flush reply")?;
+    }
+    Ok(())
+}
+
+fn handle_request<W: Write + Send + 'static>(
+    server: &Server,
+    line: &str,
+    shared: &Arc<Mutex<W>>,
+) -> Result<Frame> {
+    let cfg = RunConfig::from_kv_line(line)?;
+    let sink: Arc<dyn ResultSink> = Arc::new(SocketSink::shared(Arc::clone(shared)));
+    let ticket = server.submit(&cfg, sink).map_err(anyhow::Error::new)?;
+    let outcome = ticket.wait()?;
+    Ok(Frame::Done {
+        metrics: outcome.stats.metrics,
+        checksum: outcome.checksum.digest(),
+    })
+}
+
+/// Accept loop over a Unix socket: one handler thread per connection.
+/// `max_conns` bounds accepted connections (smoke jobs run-and-exit);
+/// the loop joins every handler before returning, so accepted requests
+/// always finish.
+pub fn serve_unix(
+    server: Arc<Server>,
+    listener: std::os::unix::net::UnixListener,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let mut handlers = Vec::new();
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream.context("accept connection")?;
+        let reader = stream.try_clone().context("clone connection stream")?;
+        let server = Arc::clone(&server);
+        handlers.push(
+            std::thread::Builder::new()
+                .name("serve-conn".into())
+                .spawn(move || {
+                    if let Err(e) = serve_connection(&server, reader, stream) {
+                        eprintln!("comet serve: connection error: {e:#}");
+                    }
+                })
+                .context("spawn connection handler")?,
+        );
+        served += 1;
+        if max_conns.is_some_and(|max| served >= max) {
+            break;
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// One request's decoded reply, client side.
+#[derive(Debug)]
+pub struct ClientReply {
+    pub tiles: Vec<Tile>,
+    /// Metric values across the tiles (client-side count).
+    pub values: u64,
+    /// Server-reported metric count (from the `Done` frame).
+    pub metrics: u64,
+    /// Server-reported checksum digest — diff it against a one-shot
+    /// `comet run` of the same spec.
+    pub checksum: String,
+}
+
+/// Minimal line-protocol client: write one request line, read frames
+/// until the terminating `Done` (returned as a [`ClientReply`]) or
+/// `Error` (returned as an error).
+pub fn request_over_stream<S: Read + Write>(stream: &mut S, line: &str) -> Result<ClientReply> {
+    writeln!(stream, "{line}").context("send request line")?;
+    stream.flush().context("flush request line")?;
+    let mut tiles = Vec::new();
+    loop {
+        match Frame::read_from(stream)? {
+            None => bail!("connection closed before a Done/Error frame"),
+            Some(Frame::Tile(tile)) => tiles.push(tile),
+            Some(Frame::Done { metrics, checksum }) => {
+                let values = tiles.iter().map(|t| t.len() as u64).sum();
+                return Ok(ClientReply { tiles, values, metrics, checksum });
+            }
+            Some(Frame::Error { message }) => bail!("server error: {message}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricId;
+    use crate::output::sink::DiscardSink;
+    use crate::session::SessionLimits;
+
+    fn small_cfg(seed: u64) -> RunConfig {
+        RunConfig::from_kv_line(&format!("metric=czekanowski nv=12 nf=16 seed={seed}")).unwrap()
+    }
+
+    fn test_session() -> Arc<Session> {
+        Arc::new(Session::with_limits("artifacts", SessionLimits::default()))
+    }
+
+    #[test]
+    fn zero_worker_and_zero_queue_misconfigurations_error_at_startup() {
+        let err = Server::start(
+            test_session(),
+            ServeConfig { workers: 0, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
+        let err = Server::start(
+            test_session(),
+            ServeConfig { queue_capacity: 0, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("queue_capacity"), "{err}");
+    }
+
+    #[test]
+    fn sharding_is_deterministic_per_dataset() {
+        let server = Server::start(
+            test_session(),
+            ServeConfig { workers: 4, ..Default::default() },
+        )
+        .unwrap();
+        let a = small_cfg(1);
+        // Same dataset, different metric/grid: same shard.
+        let mut a2 = small_cfg(1);
+        a2.metric = MetricId::Sorenson;
+        a2.grid = crate::decomp::Grid::new(1, 2, 1);
+        assert_eq!(server.shard_of(&a), server.shard_of(&a2));
+        // Shards stay in range over many datasets.
+        for seed in 0..64 {
+            assert!(server.shard_of(&small_cfg(seed)) < 4);
+        }
+    }
+
+    #[test]
+    fn size_admission_rejects_with_typed_too_large() {
+        let server = Server::start(
+            test_session(),
+            ServeConfig { max_request_bytes: Some(16_384), ..Default::default() },
+        )
+        .unwrap();
+        let big = RunConfig::from_kv_line("metric=czekanowski nv=256 nf=384").unwrap();
+        let err = server.submit(&big, Arc::new(DiscardSink)).unwrap_err();
+        match err {
+            ServeError::TooLarge { estimated_bytes, limit } => {
+                assert_eq!(limit, 16_384);
+                assert_eq!(estimated_bytes, 256 * 384 * 8);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // Packed metrics estimate 64× smaller: the same shape fits.
+        let mut packed = big;
+        packed.metric = MetricId::Sorenson;
+        assert_eq!(estimated_request_bytes(&packed), 256 * 6 * 8);
+        let ticket = server.submit(&packed, Arc::new(DiscardSink)).unwrap();
+        ticket.wait().unwrap();
+        assert_eq!(server.stats().rejected_too_large, 1);
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_typed_not_run() {
+        let server = Server::start(test_session(), ServeConfig::default()).unwrap();
+        let mut cfg = small_cfg(1);
+        cfg.num_way = 5;
+        match server.submit(&cfg, Arc::new(DiscardSink)) {
+            Err(ServeError::Invalid(msg)) => assert!(msg.contains("num_way"), "{msg}"),
+            other => panic!("expected Invalid, got {:?}", other.map(|_| ())),
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Cost-based LRU accounting for the session's block caches.
+//!
+//! A serving deployment cannot let ingested blocks accumulate without
+//! bound — [`CostLedger`] is the budget enforcer. Every cached block
+//! registers itself with its **resident byte cost** and an eviction
+//! closure; when an insert pushes the resident total past the budget,
+//! least-recently-used entries are evicted (their closures clear the
+//! owning cache slots) until the total fits again. Evicted blocks are
+//! not gone from the world — the next request that needs one simply
+//! re-ingests it (a counted miss), trading ingest time for bounded
+//! memory, which `perfmodel::predict_serve` prices as the
+//! eviction-refill term.
+//!
+//! Counters (hits / misses / evictions / resident bytes) are the
+//! cache-pressure signal: [`Session::run`](super::Session::run)
+//! captures deltas around each run into
+//! [`RunStats`](crate::coordinator::RunStats), so `comet run`, the
+//! `comet batch` ledger, and `comet serve` all report the same numbers
+//! `tests/serve_concurrency.rs` pins.
+//!
+//! Lock discipline: the ledger's internal lock is leaf-level — eviction
+//! closures (which take block-slot locks) run strictly *after* it is
+//! released, and cache code never calls into the ledger while holding a
+//! slot lock. This keeps "thread A fills slot X while thread B's insert
+//! evicts slot Y" deadlock-free in every interleaving.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Point-in-time view of a ledger's counters. Hits/misses/evictions
+/// are monotonic; `bytes` is the current resident total.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes: u64,
+}
+
+/// Clears the cache slot that registered the entry. Must be callable
+/// from any thread (runs on whichever thread's insert overflowed the
+/// budget).
+type Evictor = Box<dyn FnMut() + Send>;
+
+struct Entry {
+    id: u64,
+    bytes: u64,
+    evict: Evictor,
+}
+
+#[derive(Default)]
+struct LedgerState {
+    /// LRU order: front = coldest (next victim), back = hottest.
+    entries: VecDeque<Entry>,
+    bytes: u64,
+}
+
+/// See the module docs. One ledger spans *all* datasets of a session —
+/// the budget is a per-process serving limit, not a per-dataset one.
+pub struct CostLedger {
+    budget: Option<u64>,
+    next_id: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    state: Mutex<LedgerState>,
+}
+
+impl CostLedger {
+    /// `budget = None` disables eviction (the pre-serving behavior):
+    /// the ledger still counts, so cache pressure stays observable.
+    pub fn new(budget: Option<u64>) -> Self {
+        CostLedger {
+            budget,
+            next_id: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            state: Mutex::new(LedgerState::default()),
+        }
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Allocate a ledger id for a slot about to be filled.
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record a cache hit and mark the entry most-recently-used. An
+    /// unknown id (entry already evicted, or the fill's insert hasn't
+    /// landed yet) still counts as a hit — the caller did find a
+    /// resident block.
+    pub fn touch(&self, id: u64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        if let Some(pos) = st.entries.iter().position(|e| e.id == id) {
+            if let Some(entry) = st.entries.remove(pos) {
+                st.entries.push_back(entry);
+            }
+        }
+    }
+
+    /// Record a miss-and-fill: the entry becomes most-recently-used,
+    /// then LRU victims are evicted until the resident total is back
+    /// under budget. The just-inserted entry is never its own victim —
+    /// a single block larger than the whole budget stays resident
+    /// while in use (and is evicted by the next insert).
+    pub fn insert(&self, id: u64, bytes: u64, evict: Evictor) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut victims = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.entries.push_back(Entry { id, bytes, evict });
+            st.bytes += bytes;
+            if let Some(budget) = self.budget {
+                while st.bytes > budget && st.entries.len() > 1 {
+                    let victim = st.entries.pop_front().expect("len > 1");
+                    st.bytes -= victim.bytes;
+                    victims.push(victim);
+                }
+            }
+        }
+        // Run evictors after releasing the ledger lock (see the module
+        // docs' lock discipline).
+        for mut v in victims {
+            (v.evict)();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let bytes = self.state.lock().unwrap().bytes;
+        CacheSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes,
+        }
+    }
+
+    /// Current resident ids in LRU order (coldest first) — test
+    /// introspection for pinning victim order.
+    pub fn resident_ids(&self) -> Vec<u64> {
+        self.state.lock().unwrap().entries.iter().map(|e| e.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// A ledger plus a log of evicted ids, so tests can pin victim
+    /// order exactly.
+    fn ledger_with_log(budget: u64) -> (CostLedger, Arc<Mutex<Vec<u64>>>) {
+        (CostLedger::new(Some(budget)), Arc::new(Mutex::new(Vec::new())))
+    }
+
+    fn insert_logged(ledger: &CostLedger, log: &Arc<Mutex<Vec<u64>>>, id: u64, bytes: u64) {
+        let log = Arc::clone(log);
+        ledger.insert(id, bytes, Box::new(move || log.lock().unwrap().push(id)));
+    }
+
+    #[test]
+    fn lru_victim_order_is_insertion_order_without_touches() {
+        let (ledger, log) = ledger_with_log(300);
+        for id in 0..3 {
+            insert_logged(&ledger, &log, id, 100);
+        }
+        assert_eq!(ledger.snapshot().bytes, 300);
+        assert!(log.lock().unwrap().is_empty());
+        // One more 100-byte entry: exactly the coldest (id 0) goes.
+        insert_logged(&ledger, &log, 3, 100);
+        assert_eq!(*log.lock().unwrap(), vec![0]);
+        assert_eq!(ledger.resident_ids(), vec![1, 2, 3]);
+        let snap = ledger.snapshot();
+        assert_eq!(snap.bytes, 300);
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.misses, 4);
+    }
+
+    #[test]
+    fn touch_rescues_an_entry_from_eviction() {
+        let (ledger, log) = ledger_with_log(300);
+        for id in 0..3 {
+            insert_logged(&ledger, &log, id, 100);
+        }
+        ledger.touch(0); // id 0 becomes hottest; id 1 is now coldest
+        insert_logged(&ledger, &log, 3, 100);
+        assert_eq!(*log.lock().unwrap(), vec![1]);
+        assert_eq!(ledger.resident_ids(), vec![2, 0, 3]);
+        assert_eq!(ledger.snapshot().hits, 1);
+    }
+
+    #[test]
+    fn oversized_entry_stays_resident_until_the_next_insert() {
+        let (ledger, log) = ledger_with_log(100);
+        insert_logged(&ledger, &log, 0, 500); // over budget but alone: kept
+        assert_eq!(ledger.snapshot().bytes, 500);
+        assert!(log.lock().unwrap().is_empty());
+        insert_logged(&ledger, &log, 1, 50);
+        assert_eq!(*log.lock().unwrap(), vec![0]);
+        assert_eq!(ledger.snapshot().bytes, 50);
+    }
+
+    #[test]
+    fn one_insert_can_evict_many() {
+        let (ledger, log) = ledger_with_log(400);
+        for id in 0..4 {
+            insert_logged(&ledger, &log, id, 100);
+        }
+        insert_logged(&ledger, &log, 4, 350);
+        // 350 + any one survivor would still exceed 400, so every
+        // older entry goes, coldest first.
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(ledger.resident_ids(), vec![4]);
+        assert_eq!(ledger.snapshot().bytes, 350);
+        assert_eq!(ledger.snapshot().evictions, 4);
+    }
+
+    #[test]
+    fn unbounded_ledger_counts_but_never_evicts() {
+        let (ledger, log) = (CostLedger::new(None), Arc::new(Mutex::new(Vec::new())));
+        for id in 0..50 {
+            insert_logged(&ledger, &log, id, 1 << 20);
+        }
+        ledger.touch(0);
+        let snap = ledger.snapshot();
+        assert_eq!(snap.misses, 50);
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.evictions, 0);
+        assert_eq!(snap.bytes, 50 << 20);
+        assert!(log.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn touch_of_evicted_id_is_a_tolerated_hit() {
+        let (ledger, log) = ledger_with_log(100);
+        insert_logged(&ledger, &log, 0, 100);
+        insert_logged(&ledger, &log, 1, 100); // evicts 0
+        ledger.touch(0); // already gone: counted, no panic, no resurrect
+        assert_eq!(ledger.resident_ids(), vec![1]);
+        assert_eq!(ledger.snapshot().hits, 1);
+    }
+}

@@ -43,12 +43,16 @@
 //! let out = session.run_collect(&req)?;           // ingest-once, cache-warm
 //! ```
 
+pub mod cache;
+
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
+
+use self::cache::{CacheSnapshot, CostLedger};
 
 use crate::config::{BackendKind, InputSource, Precision, RunConfig};
 use crate::coordinator::{self, BlockProvider, RunOutcome};
@@ -96,13 +100,21 @@ struct BlockKey {
     pf: usize,
 }
 
+/// A resident cached block plus its [`CostLedger`] entry id (the
+/// handle the ledger's LRU bookkeeping and eviction closures key on).
+struct Cached<T: Scalar> {
+    block: Block<T>,
+    ledger_id: u64,
+}
+
 /// One cached block's slot. The per-key mutex makes concurrent fills
 /// deterministic: ranks replicated along the npr axis ask for the
 /// *same* (pv, pf) block, and only the first to arrive loads + ingests
 /// it — the rest block briefly and reuse it (so even a single session
 /// run ingests fewer blocks than a one-shot run, which loads once per
-/// rank).
-type BlockSlot<T> = Arc<Mutex<Option<Block<T>>>>;
+/// rank). Eviction clears the slot back to `None`; the next touch
+/// re-ingests (a counted miss).
+type BlockSlot<T> = Arc<Mutex<Option<Cached<T>>>>;
 
 #[derive(Debug, Default)]
 struct BlockCache<T: Scalar> {
@@ -116,8 +128,12 @@ struct DatasetInner {
     /// Load-and-ingest operations actually performed (cache misses).
     /// The ingest-once contract: after the first run of a given
     /// (repr, ingest key, grid), this stays flat however many more
-    /// runs the session serves over the dataset.
+    /// runs the session serves over the dataset — unless the session's
+    /// byte budget evicted a block in between.
     ingests: AtomicU64,
+    /// The owning session's byte-budget ledger (shared across all of
+    /// the session's datasets).
+    ledger: Arc<CostLedger>,
 }
 
 /// A cheap, clonable handle to a session-cached dataset. Implements
@@ -131,13 +147,14 @@ pub struct Dataset {
 }
 
 impl Dataset {
-    fn new(spec: DatasetSpec) -> Self {
+    fn new(spec: DatasetSpec, ledger: Arc<CostLedger>) -> Self {
         Dataset {
             inner: Arc::new(DatasetInner {
                 spec,
                 f32_blocks: BlockCache::default(),
                 f64_blocks: BlockCache::default(),
                 ingests: AtomicU64::new(0),
+                ledger,
             }),
         }
     }
@@ -157,6 +174,21 @@ impl Dataset {
             m.lock().unwrap().values().filter(|s| s.lock().unwrap().is_some()).count()
         }
         filled(&self.inner.f32_blocks.blocks) + filled(&self.inner.f64_blocks.blocks)
+    }
+
+    /// Resident bytes of this dataset's cached blocks (both
+    /// precisions) — slot counts alone hid actual memory pressure,
+    /// since a packed Sorensen block is ~64× smaller than the float
+    /// block of the same slice.
+    pub fn cached_bytes(&self) -> u64 {
+        fn bytes<T: Scalar>(m: &Mutex<HashMap<BlockKey, BlockSlot<T>>>) -> u64 {
+            m.lock()
+                .unwrap()
+                .values()
+                .filter_map(|s| s.lock().unwrap().as_ref().map(|c| c.block.resident_bytes()))
+                .sum()
+        }
+        bytes(&self.inner.f32_blocks.blocks) + bytes(&self.inner.f64_blocks.blocks)
     }
 
     fn cached_block<T: Scalar>(
@@ -185,17 +217,32 @@ impl Dataset {
         // load in parallel; the slot lock serializes same-key fills
         // (npr-replicated ranks, concurrent runs), guaranteeing exactly
         // one load + ingest per key — the counter-pinned contract.
+        // Ledger calls happen strictly outside the slot lock (its
+        // eviction closures take *other* slots' locks; see
+        // `cache::CostLedger`'s lock discipline).
         let slot = {
             let mut map = cache.blocks.lock().unwrap();
             Arc::clone(map.entry(key).or_default())
         };
+        let ledger = &self.inner.ledger;
         let mut guard = slot.lock().unwrap();
-        if let Some(b) = guard.as_ref() {
-            return Ok(b.clone());
+        if let Some(c) = guard.as_ref() {
+            let (block, id) = (c.block.clone(), c.ledger_id);
+            drop(guard);
+            ledger.touch(id);
+            return Ok(block);
         }
         let block = metric.ingest(coordinator::load_block::<T>(cfg, pv, pf)?);
         self.inner.ingests.fetch_add(1, Ordering::Relaxed);
-        *guard = Some(block.clone());
+        let ledger_id = ledger.next_id();
+        *guard = Some(Cached { block: block.clone(), ledger_id });
+        drop(guard);
+        let evict_slot = Arc::clone(&slot);
+        ledger.insert(
+            ledger_id,
+            block.resident_bytes(),
+            Box::new(move || *evict_slot.lock().unwrap() = None),
+        );
         Ok(block)
     }
 }
@@ -322,11 +369,29 @@ impl RunRequestBuilder {
     }
 }
 
+/// Resource budgets a serving deployment sets on a session's caches.
+/// The default (`None` everywhere) is the pre-serving behavior: cache
+/// forever, never evict.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionLimits {
+    /// Byte budget for ingested blocks across *every* dataset of the
+    /// session. Past it, least-recently-used blocks are evicted and
+    /// re-ingested on next touch (bounded memory instead of OOM).
+    pub block_cache_bytes: Option<u64>,
+    /// Slot budget for the PJRT service's compiled-executable cache
+    /// (LRU within the service; see `runtime`).
+    pub exec_cache_slots: Option<usize>,
+}
+
 /// The long-lived service object. See the module docs for the shape;
 /// thread-safe (`&self` methods throughout), so one session can serve
 /// concurrent callers.
 pub struct Session {
     artifact_dir: PathBuf,
+    limits: SessionLimits,
+    /// Block-cache byte accounting + eviction, shared by every dataset
+    /// handle this session creates.
+    ledger: Arc<CostLedger>,
     pjrt: Mutex<Option<PjrtService>>,
     datasets: Mutex<HashMap<DatasetSpec, Dataset>>,
 }
@@ -345,18 +410,37 @@ impl Session {
     }
 
     pub fn with_artifacts(artifact_dir: impl Into<PathBuf>) -> Self {
+        Self::with_limits(artifact_dir, SessionLimits::default())
+    }
+
+    /// A session with cache budgets — the `comet serve` constructor.
+    pub fn with_limits(artifact_dir: impl Into<PathBuf>, limits: SessionLimits) -> Self {
         Session {
             artifact_dir: artifact_dir.into(),
+            limits,
+            ledger: Arc::new(CostLedger::new(limits.block_cache_bytes)),
             pjrt: Mutex::new(None),
             datasets: Mutex::new(HashMap::new()),
         }
+    }
+
+    pub fn limits(&self) -> SessionLimits {
+        self.limits
+    }
+
+    /// Block-cache pressure counters (hits / misses / evictions /
+    /// resident bytes) across all of this session's datasets.
+    pub fn cache_stats(&self) -> CacheSnapshot {
+        self.ledger.snapshot()
     }
 
     /// Get-or-create the dataset handle for `spec`. Equal specs return
     /// the same handle (and therefore share ingested blocks).
     pub fn dataset(&self, spec: DatasetSpec) -> Dataset {
         let mut map = self.datasets.lock().unwrap();
-        map.entry(spec.clone()).or_insert_with(|| Dataset::new(spec)).clone()
+        map.entry(spec.clone())
+            .or_insert_with(|| Dataset::new(spec, Arc::clone(&self.ledger)))
+            .clone()
     }
 
     /// Lower a serialized [`RunConfig`] (TOML file, CLI flags, one
@@ -386,14 +470,25 @@ impl Session {
         // later runs) dispatches to already-parked threads.
         crate::linalg::pool::warm(req.cfg.threads);
         let provider = Arc::new(req.dataset.clone()) as Arc<dyn BlockProvider>;
-        match &req.cfg.output_dir {
+        let cache_before = self.ledger.snapshot();
+        let mut outcome = match &req.cfg.output_dir {
             Some(dir) => {
                 let file = FileSink::new(dir, req.cfg.output_threshold);
                 let tee = TeeRef::new(vec![sink, &file as &dyn ResultSink]);
                 coordinator::run_streamed(&req.cfg, client, provider, &tee)
             }
             None => coordinator::run_streamed(&req.cfg, client, provider, sink),
-        }
+        }?;
+        // Cache-pressure deltas for this run (ledger counters are
+        // session-global; concurrent runs each absorb whatever pressure
+        // landed during their window, which sums correctly across a
+        // `comet batch`/`comet serve` ledger).
+        let cache_after = self.ledger.snapshot();
+        outcome.stats.cache_hits = cache_after.hits - cache_before.hits;
+        outcome.stats.cache_misses = cache_after.misses - cache_before.misses;
+        outcome.stats.cache_evictions = cache_after.evictions - cache_before.evictions;
+        outcome.stats.cache_bytes = cache_after.bytes;
+        Ok(outcome)
     }
 
     /// As [`Session::run`], collecting values into
@@ -424,7 +519,8 @@ impl Session {
         let mut guard = self.pjrt.lock().unwrap();
         if guard.is_none() {
             *guard = Some(
-                PjrtService::start(&self.artifact_dir).context("start PJRT service")?,
+                PjrtService::start_with_limits(&self.artifact_dir, self.limits.exec_cache_slots)
+                    .context("start PJRT service")?,
             );
         }
         Ok(Some(guard.as_ref().unwrap().client()))
@@ -486,6 +582,52 @@ mod tests {
         // Precisions cache separately (typed kernels consume them).
         let _ = ds.block_f32(&cfg, &Czekanowski, 0, 0).unwrap();
         assert_eq!(ds.ingest_count(), 5);
+    }
+
+    #[test]
+    fn block_budget_evicts_lru_and_reingests_bit_identically() {
+        // npv=4 over nv=16, nf=40, f64: each block is 4 × 40 × 8 =
+        // 1280 B; the budget holds exactly two.
+        let session = Session::with_limits(
+            "artifacts",
+            SessionLimits { block_cache_bytes: Some(2 * 1280), ..Default::default() },
+        );
+        let ds = session.dataset(DatasetSpec::synthetic(SyntheticKind::Alleles, 5, 40, 16));
+        let cfg = RunRequest::builder(ds.clone(), MetricId::Czekanowski)
+            .grid(Grid::new(1, 4, 1))
+            .build()
+            .unwrap()
+            .config()
+            .clone();
+        let cz = Czekanowski;
+        let first = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
+        assert_eq!(session.cache_stats().bytes, 2560);
+        assert_eq!(ds.cached_bytes(), 2560);
+        // A third block forces the LRU victim (pv 0) out — resident
+        // bytes stay at the budget, not above it.
+        let _ = ds.block_f64(&cfg, &cz, 2, 0).unwrap();
+        assert_eq!(ds.cached_blocks(), 2);
+        let snap = session.cache_stats();
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.bytes, 2560);
+        assert_eq!(ds.cached_bytes(), 2560);
+        // pv 1 is still resident (pure hit), pv 0 must re-ingest.
+        let before = ds.ingest_count();
+        let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
+        assert_eq!(ds.ingest_count(), before, "resident block re-ingested");
+        let again = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), before + 1, "evicted block served stale");
+        // The re-ingested block is bit-identical to the original.
+        let (a, b) = (first.as_float().unwrap(), again.as_float().unwrap());
+        assert_eq!(a.raw().len(), b.raw().len());
+        for (x, y) in a.raw().iter().zip(b.raw()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let snap = session.cache_stats();
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.misses, 4);
+        assert_eq!(snap.evictions, 2);
     }
 
     #[test]

@@ -116,6 +116,18 @@ impl<T: Scalar> Block<T> {
         }
     }
 
+    /// Resident (in-memory) payload size in bytes — what the session
+    /// block-cache budget charges. Float blocks cost their element
+    /// storage at `T`'s width; packed blocks cost their u64 words at
+    /// 8 B/word (the same ~64× bit-domain advantage the wire format
+    /// sees).
+    pub fn resident_bytes(&self) -> u64 {
+        match self {
+            Block::Float(v) => (v.raw().len() * std::mem::size_of::<T>()) as u64,
+            Block::Packed(b) => (b.raw_words().len() * 8) as u64,
+        }
+    }
+
     pub fn as_float(&self) -> Option<&VectorSet<T>> {
         match self {
             Block::Float(v) => Some(v),

@@ -1,0 +1,367 @@
+//! Serving-layer contracts (`comet serve` acceptance):
+//!
+//! 1. **Concurrent bit-identity** — ≥ 8 client threads driving mixed
+//!    metrics/grids (2-way, 3-way, f32, packed) through one
+//!    [`serve::Server`] each get values bit-identical to a serial
+//!    one-shot `coordinator::run` of the same spec, while the session
+//!    block cache stays under its byte budget and the ingest counters
+//!    pin sharded reuse (one ingest per block, however many requests).
+//! 2. **Run-level eviction** — filling the block cache past its budget
+//!    evicts LRU victims; a request whose blocks were evicted
+//!    re-ingests exactly them and still reproduces its cold-run bits.
+//! 3. **Admission control** — a saturated shard queue rejects with
+//!    typed `Busy` (not deadlock), an oversized request with
+//!    `TooLarge`; after draining, the server accepts again.
+//! 4. **Wire round-trip** — a request over a Unix socket pair decodes
+//!    to the same values/checksum as a one-shot run, and a bad request
+//!    line yields an `Error` frame without poisoning the connection.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use comet::config::{BackendKind, InputSource, RunConfig};
+use comet::coordinator::{self, RunOutcome};
+use comet::decomp::Grid;
+use comet::metrics::indexing;
+use comet::metrics::MetricId;
+use comet::output::sink::{CollectSink, DiscardSink, NodeSink, ResultSink, Tile};
+use comet::serve::{self, ServeConfig, ServeError, Server};
+use comet::session::{Session, SessionLimits};
+use comet::vecdata::SyntheticKind;
+
+fn cfg_for(metric: MetricId, num_way: usize, nv: usize, nf: usize, grid: Grid) -> RunConfig {
+    let kind = match metric {
+        MetricId::Ccc => SyntheticKind::Alleles,
+        _ => SyntheticKind::RandomGrid,
+    };
+    RunConfig {
+        metric,
+        num_way,
+        nv,
+        nf,
+        backend: BackendKind::CpuOptimized,
+        grid,
+        input: InputSource::Synthetic { kind, seed: 29 },
+        store_metrics: true,
+        ..Default::default()
+    }
+}
+
+/// Assert every value of `(pairs, triples)` is bit-identical to the
+/// baseline outcome's stores.
+fn assert_bit_identical(
+    what: &str,
+    cfg: &RunConfig,
+    baseline: &RunOutcome,
+    pairs: &comet::metrics::store::PairStore,
+    triples: &comet::metrics::store::TripleStore,
+) {
+    if cfg.num_way == 2 {
+        let a = baseline.pairs.as_ref().unwrap().to_dense(cfg.nv);
+        let b = pairs.to_dense(cfg.nv);
+        assert_eq!(a.len(), b.len(), "{what}");
+        for (off, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.unwrap().to_bits(), y.unwrap().to_bits(), "{what} offset {off}");
+        }
+    } else {
+        let a = baseline.triples.as_ref().unwrap().to_dense(cfg.nv);
+        let b = triples.to_dense(cfg.nv);
+        assert_eq!(a.len(), b.len(), "{what}");
+        for (off, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.unwrap().to_bits(), y.unwrap().to_bits(), "{what} offset {off}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_mixed_requests_are_bit_identical_and_share_ingests() {
+    // Five distinct datasets × mixed metric families, each requested
+    // twice → 10 concurrent submissions (acceptance floor: ≥ 8).
+    let cfgs = vec![
+        cfg_for(MetricId::Czekanowski, 2, 30, 48, Grid::new(1, 3, 1)),
+        cfg_for(MetricId::Sorenson, 2, 32, 70, Grid::new(1, 4, 1)),
+        cfg_for(MetricId::Ccc, 2, 24, 40, Grid::new(1, 2, 1)),
+        cfg_for(MetricId::Czekanowski, 3, 16, 24, Grid::new(1, 2, 1)),
+        {
+            let mut f32_cfg = cfg_for(MetricId::Czekanowski, 2, 28, 36, Grid::new(1, 2, 1));
+            f32_cfg.precision = comet::config::Precision::F32;
+            f32_cfg
+        },
+    ];
+    // Serial one-shot baselines — the pre-serving ground truth.
+    let baselines: Vec<RunOutcome> =
+        cfgs.iter().map(|c| coordinator::run(c).unwrap()).collect();
+
+    // Resident bytes if everything stays cached: blocks of all five
+    // datasets fit the budget, so the test pins "no evictions" AND
+    // "bytes under budget" at once.
+    let budget: u64 = 32 * 1024;
+    let session = Arc::new(Session::with_limits(
+        "artifacts",
+        SessionLimits { block_cache_bytes: Some(budget), ..Default::default() },
+    ));
+    let server = Server::start(
+        Arc::clone(&session),
+        ServeConfig { workers: 3, queue_capacity: 16, max_request_bytes: None },
+    )
+    .unwrap();
+
+    std::thread::scope(|s| {
+        for round in 0..2 {
+            for (i, cfg) in cfgs.iter().enumerate() {
+                let server = &server;
+                let baseline = &baselines[i];
+                s.spawn(move || {
+                    let sink = Arc::new(CollectSink::for_metric(cfg.metric));
+                    let ticket = server.submit(cfg, Arc::clone(&sink) as Arc<dyn ResultSink>);
+                    let out = ticket.unwrap().wait().unwrap();
+                    let what = format!("cfg {i} round {round}");
+                    assert_eq!(out.checksum, baseline.checksum, "{what}");
+                    assert_eq!(out.stats.metrics, baseline.stats.metrics, "{what}");
+                    let (pairs, triples) = sink.take();
+                    assert_bit_identical(&what, cfg, baseline, &pairs, &triples);
+                });
+            }
+        }
+    });
+
+    // Sharded reuse: the same dataset always lands on the same shard,
+    // so its second request found every block cached — one ingest per
+    // (dataset, block), total = Σ npv, however many requests ran.
+    let mut total_ingests = 0u64;
+    for cfg in &cfgs {
+        let ds = session.request_from_config(cfg).unwrap().dataset().clone();
+        assert_eq!(
+            ds.ingest_count(),
+            cfg.grid.npv as u64,
+            "{} ingested more than once per block",
+            cfg.metric.name()
+        );
+        total_ingests += ds.ingest_count();
+    }
+    assert_eq!(total_ingests, 3 + 4 + 2 + 2 + 2);
+
+    let cache = session.cache_stats();
+    assert_eq!(cache.misses, total_ingests, "every miss is exactly one ingest");
+    assert!(cache.hits >= total_ingests, "second round must be served from cache");
+    assert_eq!(cache.evictions, 0, "everything fits the budget");
+    assert!(cache.bytes <= budget, "resident {} over budget {budget}", cache.bytes);
+    assert!(cache.bytes > 0);
+
+    let stats = server.stats();
+    assert_eq!(stats.submitted, 10);
+    drop(server); // joins the shard workers
+    // completed is counted by the workers; all tickets resolved above.
+    assert_eq!(stats.rejected_busy + stats.rejected_too_large, 0);
+}
+
+#[test]
+fn eviction_refills_blocks_and_reproduces_cold_run_bits() {
+    // One dataset, two grids over it. Budget holds either grid's
+    // blocks but not both: running B evicts A's LRU blocks, and
+    // re-running A must re-ingest exactly them, bit-identically.
+    let cfg_a = cfg_for(MetricId::Czekanowski, 2, 24, 32, Grid::new(1, 2, 1)); // 2 × 3072 B
+    let cfg_b = cfg_for(MetricId::Czekanowski, 2, 24, 32, Grid::new(1, 3, 1)); // 3 × 2048 B
+    let budget: u64 = 6144;
+    let one_shot_a = coordinator::run(&cfg_a).unwrap();
+
+    let session = Session::with_limits(
+        "artifacts",
+        SessionLimits { block_cache_bytes: Some(budget), ..Default::default() },
+    );
+    let req_a = session.request_from_config(&cfg_a).unwrap();
+    let req_b = session.request_from_config(&cfg_b).unwrap();
+    let ds = req_a.dataset().clone();
+
+    let cold_a = session.run_collect(&req_a).unwrap();
+    assert_eq!(cold_a.stats.cache_misses, 2);
+    assert_eq!(cold_a.stats.cache_evictions, 0);
+    assert_eq!(cold_a.stats.cache_bytes, 6144, "both A blocks resident");
+    assert_eq!(ds.ingest_count(), 2);
+
+    // B's three blocks don't fit next to A's two: the two A blocks
+    // (the coldest entries) are the LRU victims, in order.
+    let run_b = session.run_collect(&req_b).unwrap();
+    assert_eq!(run_b.stats.cache_misses, 3);
+    assert_eq!(run_b.stats.cache_evictions, 2, "exactly the two A blocks evicted");
+    assert_eq!(run_b.stats.cache_bytes, 6144, "three B blocks resident");
+    assert_eq!(ds.ingest_count(), 5);
+
+    // Re-running A: its blocks were evicted, so the ingest counter
+    // moves by exactly the evicted block count — and the refilled
+    // blocks reproduce the cold run bit-for-bit.
+    let warm_a = session.run_collect(&req_a).unwrap();
+    assert_eq!(warm_a.stats.cache_misses, 2, "evicted blocks re-ingest");
+    assert_eq!(warm_a.stats.cache_evictions, 3, "B's blocks evicted in turn");
+    assert_eq!(warm_a.stats.cache_bytes, 6144);
+    assert_eq!(ds.ingest_count(), 7);
+
+    assert_eq!(warm_a.checksum, one_shot_a.checksum);
+    assert_eq!(warm_a.checksum, cold_a.checksum);
+    let a = one_shot_a.pairs.as_ref().unwrap().to_dense(cfg_a.nv);
+    let b = warm_a.pairs.as_ref().unwrap().to_dense(cfg_a.nv);
+    for (off, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.unwrap().to_bits(), y.unwrap().to_bits(), "offset {off}");
+    }
+
+    let cache = session.cache_stats();
+    assert_eq!(cache.hits, 0, "every touch in this schedule is a miss");
+    assert_eq!((cache.misses, cache.evictions), (7, 5));
+    assert!(cache.bytes <= budget);
+}
+
+/// A sink whose node sinks block until the gate opens — pins a worker
+/// inside a run so the test can saturate its shard queue.
+struct GateSink {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+struct DropTiles;
+
+impl NodeSink for DropTiles {
+    fn tile(&mut self, _tile: Tile) -> comet::Result<()> {
+        Ok(())
+    }
+}
+
+impl ResultSink for GateSink {
+    fn node_sink(&self, _rank: usize) -> comet::Result<Box<dyn NodeSink>> {
+        let (flag, cv) = &*self.gate;
+        let mut open = flag.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(Box::new(DropTiles))
+    }
+}
+
+#[test]
+fn saturated_queue_rejects_typed_then_recovers() {
+    let session = Arc::new(Session::new());
+    let server = Server::start(
+        Arc::clone(&session),
+        ServeConfig { workers: 1, queue_capacity: 2, max_request_bytes: Some(100_000) },
+    )
+    .unwrap();
+    let cfg = cfg_for(MetricId::Czekanowski, 2, 12, 16, Grid::new(1, 1, 1));
+    let shard = server.shard_of(&cfg);
+
+    // Job 1 runs immediately but blocks inside its sink, pinning the
+    // single worker mid-run.
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let t1 = server
+        .submit(&cfg, Arc::new(GateSink { gate: Arc::clone(&gate) }))
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while server.queue_depth(shard) > 0 {
+        assert!(Instant::now() < deadline, "worker never picked up the gated job");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Jobs 2 and 3 fill the bounded queue; job 4 must be rejected
+    // *immediately* with the typed Busy — not block, not deadlock.
+    let t2 = server.submit(&cfg, Arc::new(DiscardSink)).unwrap();
+    let t3 = server.submit(&cfg, Arc::new(DiscardSink)).unwrap();
+    match server.submit(&cfg, Arc::new(DiscardSink)) {
+        Err(ServeError::Busy { shard: s, capacity }) => {
+            assert_eq!((s, capacity), (shard, 2));
+        }
+        other => panic!("expected Busy, got {:?}", other.map(|_| ())),
+    }
+
+    // Size admission is independent of queue state: an estimated-bytes
+    // blowout is rejected typed even while the shard is saturated.
+    let huge = cfg_for(MetricId::Czekanowski, 2, 4096, 1024, Grid::new(1, 1, 1));
+    match server.submit(&huge, Arc::new(DiscardSink)) {
+        Err(ServeError::TooLarge { estimated_bytes, limit }) => {
+            assert_eq!(limit, 100_000);
+            assert_eq!(estimated_bytes, 4096 * 1024 * 8);
+        }
+        other => panic!("expected TooLarge, got {:?}", other.map(|_| ())),
+    }
+
+    // Open the gate: the queue drains and every accepted job completes.
+    {
+        let (flag, cv) = &*gate;
+        *flag.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+    t3.wait().unwrap();
+
+    // Recovery: the drained shard accepts again.
+    let t5 = server.submit(&cfg, Arc::new(DiscardSink)).unwrap();
+    t5.wait().unwrap();
+
+    let stats = server.stats();
+    assert_eq!(stats.submitted, 4);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.rejected_busy, 1);
+    assert_eq!(stats.rejected_too_large, 1);
+    assert_eq!(server.queue_depth(shard), 0);
+}
+
+#[test]
+fn socket_round_trip_matches_one_shot_and_survives_bad_requests() {
+    let line = "metric=sorenson nv=32 nf=70 npv=2 seed=11";
+    let mut baseline_cfg = RunConfig::from_kv_line(line).unwrap();
+    baseline_cfg.store_metrics = true;
+    let baseline = coordinator::run(&baseline_cfg).unwrap();
+
+    let session = Arc::new(Session::new());
+    let server = Server::start(Arc::clone(&session), ServeConfig::default()).unwrap();
+
+    let (mut client, server_end) = std::os::unix::net::UnixStream::pair().unwrap();
+    let requests_done = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        let server = &server;
+        let conn = s.spawn(move || {
+            let reader = server_end.try_clone().unwrap();
+            serve::serve_connection(server, reader, server_end)
+        });
+
+        for attempt in 0..2 {
+            let reply = serve::request_over_stream(&mut client, line).unwrap();
+            assert_eq!(reply.checksum, baseline.checksum.digest(), "attempt {attempt}");
+            assert_eq!(reply.metrics, baseline.stats.metrics, "attempt {attempt}");
+            assert_eq!(reply.values, baseline.stats.metrics, "attempt {attempt}");
+            // Bit-identity of every streamed value, not just the digest.
+            let dense = baseline.pairs.as_ref().unwrap().to_dense(baseline_cfg.nv);
+            let mut got = vec![None; dense.len()];
+            for tile in &reply.tiles {
+                match tile {
+                    Tile::Pairs { entries, .. } => {
+                        for e in entries {
+                            got[indexing::pair_offset(e.i as usize, e.j as usize)] =
+                                Some(e.value);
+                        }
+                    }
+                    Tile::Triples { .. } => panic!("2-way run emitted a triples tile"),
+                }
+            }
+            for (off, (x, y)) in dense.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    x.unwrap().to_bits(),
+                    y.unwrap().to_bits(),
+                    "attempt {attempt} offset {off}"
+                );
+            }
+
+            // A bad request line is an Error frame, and the connection
+            // stays usable for the next (good) request of this loop.
+            let err = serve::request_over_stream(&mut client, "metric=bogus nv=8").unwrap_err();
+            assert!(format!("{err:#}").contains("server error"), "{err:#}");
+            requests_done.fetch_add(1, Ordering::Relaxed);
+        }
+
+        drop(client); // EOF ends the connection loop cleanly
+        conn.join().unwrap().unwrap();
+    });
+    assert_eq!(requests_done.load(Ordering::Relaxed), 2);
+
+    let stats = server.stats();
+    assert_eq!(stats.submitted, 2, "bad lines never reach the scheduler");
+    assert_eq!(stats.completed, 2);
+}
