@@ -37,7 +37,7 @@ ENTRY_KEYS = {
 }
 METRICS = {"czekanowski", "ccc", "sorenson"}
 REPRS = {"float", "packed"}
-KERNELS = {"full", "tri", "session-oneshot", "session-reused"}
+KERNELS = {"full", "tri", "session-oneshot", "session-reused", "session-ooc"}
 
 
 def check(path: Path) -> list:

@@ -37,8 +37,11 @@
 //!   diagonal block), or a whole-campaign session point:
 //!   "session-oneshot" (fresh `coordinator::run` per request —
 //!   re-ingest every time) vs "session-reused" (one `session::Session`
-//!   serving every request from its ingest-once block cache). For the
-//!   session points `comparisons_per_sec` is campaign comparisons
+//!   serving every request from its ingest-once block cache) vs
+//!   "session-ooc" (the reused campaign under a block budget that
+//!   forces a spill-store round trip every run — the out-of-core
+//!   steady state). For the session points `comparisons_per_sec` is
+//!   campaign comparisons
 //!   (nf · nv(nv−1)/2 per run × runs) over the median batch time, and
 //!   `iters` is the number of back-to-back runs per batch.
 //! * `repr` matches the metric's block representation
@@ -55,7 +58,7 @@ use comet::decomp::Grid;
 use comet::linalg::{opcount, optimized, sorenson};
 use comet::metrics::MetricId;
 use comet::output::sink::DiscardSink;
-use comet::session::Session;
+use comet::session::{Session, SessionLimits};
 use comet::util::timer::bench_run;
 use comet::vecdata::bits::BitVectorSet;
 use comet::vecdata::{SyntheticKind, VectorSet};
@@ -183,6 +186,38 @@ fn main() {
             iters: runs,
             secs: reused,
             cps: campaign_cmps as f64 / reused,
+        });
+
+        // Out-of-core point: the same campaign through a session whose
+        // block budget holds ~1.5 of the dataset's two blocks, so every
+        // run cycles one block through the spill store (encode + spill
+        // on eviction, checksum-verified reload on the next touch). The
+        // gap to "session-reused" is the streaming-ingest overhead in
+        // the spill-bound steady state.
+        let resident = session.cache_stats().bytes;
+        let ooc_session = Session::with_limits(
+            "artifacts",
+            SessionLimits { block_cache_bytes: Some(resident * 3 / 4), ..Default::default() },
+        );
+        let ooc_req = ooc_session.request_from_config(&cfg).unwrap();
+        let ooc = bench_run("session-ooc", 1, iters, || {
+            for _ in 0..runs {
+                std::hint::black_box(ooc_session.run(&ooc_req, &DiscardSink).unwrap());
+            }
+        })
+        .median();
+        let stats = ooc_session.cache_stats();
+        assert!(stats.spills >= 1 && stats.reloads >= 1, "session-ooc point must spill+reload");
+        entries.push(Entry {
+            metric: "sorenson",
+            repr: "packed",
+            kernel: "session-ooc",
+            threads: 1,
+            nf,
+            nv,
+            iters: runs,
+            secs: ooc,
+            cps: campaign_cmps as f64 / ooc,
         });
     }
 

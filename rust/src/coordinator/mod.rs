@@ -16,6 +16,7 @@
 //! and the quotient combination in one place.
 
 pub mod backend;
+pub mod prefetch;
 pub mod serial;
 pub mod three_way;
 pub mod two_way;
@@ -79,6 +80,20 @@ pub struct RunStats {
     pub cache_misses: u64,
     pub cache_evictions: u64,
     pub cache_bytes: u64,
+    /// Out-of-core pipeline activity during this run (ledger deltas
+    /// captured by `Session::run`; zero without a spill store). Spills
+    /// are evictions that landed in the on-disk block store
+    /// (`spill_bytes` counts bytes actually written — a re-evicted
+    /// block whose payload is already on disk spills without a write);
+    /// reloads are misses served byte-identically from it.
+    pub spills: u64,
+    pub spill_bytes: u64,
+    pub reloads: u64,
+    pub reload_bytes: u64,
+    /// Seconds compute spent blocked on a scheduled-but-late block
+    /// read (`coordinator::prefetch::ReadAhead` stall clock) — the
+    /// exposed, un-overlapped part of reload time.
+    pub t_stall: f64,
 }
 
 impl RunStats {
@@ -109,6 +124,14 @@ impl RunStats {
         self.cache_misses += o.cache_misses;
         self.cache_evictions += o.cache_evictions;
         self.cache_bytes = self.cache_bytes.max(o.cache_bytes);
+        // Spill traffic sums like the other event counters; stall time
+        // also sums (it is already a per-run aggregate over nodes, and
+        // a batch's total exposed read time is what the ledger wants).
+        self.spills += o.spills;
+        self.spill_bytes += o.spill_bytes;
+        self.reloads += o.reloads;
+        self.reload_bytes += o.reload_bytes;
+        self.t_stall += o.t_stall;
         self.t_input = self.t_input.max(o.t_input);
         self.t_compute = self.t_compute.max(o.t_compute);
         self.t_output = self.t_output.max(o.t_output);
@@ -156,6 +179,13 @@ pub trait BlockProvider: Send + Sync {
         pv: usize,
         pf: usize,
     ) -> Result<Block<f64>>;
+
+    /// Advisory hint that the given `(pv, pf)` blocks will be fetched,
+    /// in this order. Providers with a read-ahead pipeline
+    /// ([`prefetch::ReadAhead`]) start warming them; everything else
+    /// ignores the hint — the default is a no-op, and correctness never
+    /// depends on it.
+    fn prefetch(&self, _cfg: &RunConfig, _keys: &[(usize, usize)]) {}
 }
 
 /// The one-shot provider: load (or generate) the block and ingest it
@@ -338,6 +368,11 @@ fn run_typed<T: Scalar + ProvideBlocks>(
     let counters = cluster.counters();
     let endpoints = cluster.endpoints();
     let null = sink.is_null();
+
+    // Hint the whole run's block schedule up front (rank order = the
+    // order node threads enter their input phase); a read-ahead
+    // provider starts warming blocks before the first node asks.
+    provider.prefetch(cfg, &prefetch::prefetch_order(cfg));
 
     let t0 = std::time::Instant::now();
     let pool_before = crate::linalg::pool::stats();

@@ -1,0 +1,374 @@
+//! Read-ahead block pipeline: the prefetch half of out-of-core
+//! streaming ingest.
+//!
+//! [`ReadAhead`] wraps any [`BlockProvider`] (in practice a session
+//! [`Dataset`](crate::session::Dataset), whose misses may be spill
+//! reloads) and warms blocks **in step-schedule order** on a
+//! `linalg::pool` worker before the node programs ask for them — the
+//! double-buffered disk/compute overlap of Beyer & Bientinesi
+//! (arXiv 1302.4332). The compute loop then blocks only on a genuinely
+//! late read, and that wait is what [`ReadAhead::stall_secs`] measures
+//! (surfaced as `RunStats::t_stall`).
+//!
+//! The prefetch contract:
+//!
+//! * **Hints, not fetches.** [`BlockProvider::prefetch`] is advisory:
+//!   `run_typed` hints the whole run's block order up front
+//!   ([`prefetch_order`] — each rank's `(pv, pf)` slice in rank order,
+//!   which is exactly the order node threads enter their input phase),
+//!   and each node program re-hints its own slice (a no-op after the
+//!   run-level hint; keys are deduplicated). Providers without a
+//!   pipeline ignore hints entirely — one-shot runs are unchanged.
+//! * **Bounded in-flight budget.** At most `budget` warmed blocks are
+//!   held ahead of the consumers (default [`DEFAULT_BUDGET`] — classic
+//!   double buffering). The background task parks on a condvar when
+//!   the buffer is full and resumes as consumers drain it; the
+//!   high-water mark is observable ([`ReadAhead::max_ahead`]) and
+//!   pinned ≤ budget by the scheduler tests.
+//! * **Compute always wins.** A consumer that reaches a key before the
+//!   prefetcher takes it from the inner provider directly and marks the
+//!   key consumed; the task skips consumed keys instead of fetching
+//!   dead blocks. Fetch errors abort the pipeline silently — the
+//!   consumer's own fetch surfaces the identical (typed) error.
+//! * **Bounded lifetime.** [`ReadAhead::finish`] stops the task and
+//!   drops warmed blocks; `Session::run` calls it run-end, error or
+//!   not, so a prefetch never outlives its run.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{Precision, RunConfig};
+use crate::coordinator::{BlockProvider, ProvideBlocks};
+use crate::metrics::Metric;
+use crate::util::Scalar;
+use crate::vecdata::block::Block;
+
+/// Default in-flight block budget: one block being consumed, one in
+/// flight — double buffering.
+pub const DEFAULT_BUDGET: usize = 2;
+
+/// A warmed block of either run precision (the pipeline is built
+/// per-run, but the provider seam is precision-erased).
+enum Warmed {
+    F32(Block<f32>),
+    F64(Block<f64>),
+}
+
+/// Precision bridge for the warmed-block buffer.
+trait WarmedBlocks: Scalar + ProvideBlocks {
+    fn wrap(block: Block<Self>) -> Warmed;
+    fn unwrap(warmed: Warmed) -> Option<Block<Self>>;
+}
+
+impl WarmedBlocks for f32 {
+    fn wrap(block: Block<f32>) -> Warmed {
+        Warmed::F32(block)
+    }
+    fn unwrap(warmed: Warmed) -> Option<Block<f32>> {
+        match warmed {
+            Warmed::F32(b) => Some(b),
+            Warmed::F64(_) => None,
+        }
+    }
+}
+
+impl WarmedBlocks for f64 {
+    fn wrap(block: Block<f64>) -> Warmed {
+        Warmed::F64(block)
+    }
+    fn unwrap(warmed: Warmed) -> Option<Block<f64>> {
+        match warmed {
+            Warmed::F64(b) => Some(b),
+            Warmed::F32(_) => None,
+        }
+    }
+}
+
+#[derive(Default)]
+struct State {
+    /// Hinted keys not yet fetched, in hint (= schedule) order.
+    planned: VecDeque<(usize, usize)>,
+    /// Every key ever hinted — repeated hints (node programs re-hint
+    /// their own slice) deduplicate here.
+    seen: HashSet<(usize, usize)>,
+    /// Warmed blocks awaiting their consumer (≤ budget entries).
+    ready: HashMap<(usize, usize), Warmed>,
+    /// Keys a consumer already took — the task skips these.
+    consumed: HashSet<(usize, usize)>,
+    /// Whether a background task currently owns `planned`.
+    task_running: bool,
+    /// Set by [`ReadAhead::finish`] (or a fetch error): drain and stop.
+    aborted: bool,
+}
+
+struct Core {
+    inner: Arc<dyn BlockProvider>,
+    budget: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+    stall_ns: AtomicU64,
+    stalls: AtomicU64,
+    prefetched: AtomicU64,
+    max_ahead: AtomicU64,
+    /// Keys in the order the background task actually fetched them —
+    /// the scheduler tests pin this against [`prefetch_order`].
+    fetch_log: Mutex<Vec<(usize, usize)>>,
+}
+
+impl Core {
+    /// Background task: drain `planned` in order under the in-flight
+    /// budget. Runs on a `linalg::pool` worker via `submit` (which
+    /// reserves head room so this task's condvar parks can never
+    /// starve kernel scopes).
+    fn drain_planned(self: &Arc<Self>, cfg: RunConfig) {
+        match cfg.precision {
+            Precision::F32 => self.drain_typed::<f32>(&cfg),
+            Precision::F64 => self.drain_typed::<f64>(&cfg),
+        }
+    }
+
+    fn drain_typed<T: WarmedBlocks>(self: &Arc<Self>, cfg: &RunConfig) {
+        let metric = crate::metrics::make_metric::<T>(cfg.metric, cfg);
+        loop {
+            let key = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.aborted {
+                        st.task_running = false;
+                        self.cv.notify_all();
+                        return;
+                    }
+                    while let Some(&k) = st.planned.front() {
+                        if st.consumed.contains(&k) || st.ready.contains_key(&k) {
+                            st.planned.pop_front();
+                        } else {
+                            break;
+                        }
+                    }
+                    if st.planned.is_empty() {
+                        st.task_running = false;
+                        self.cv.notify_all();
+                        return;
+                    }
+                    if st.ready.len() < self.budget {
+                        break st.planned.pop_front().expect("non-empty");
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            // Fetch outside every lock (this is the disk/ingest work
+            // the pipeline exists to overlap with compute).
+            match T::provide(self.inner.as_ref(), cfg, metric.as_ref(), key.0, key.1) {
+                Ok(block) => {
+                    self.fetch_log.lock().unwrap().push(key);
+                    self.prefetched.fetch_add(1, Ordering::Relaxed);
+                    let mut st = self.state.lock().unwrap();
+                    if !st.consumed.contains(&key) {
+                        st.ready.insert(key, T::wrap(block));
+                        self.max_ahead.fetch_max(st.ready.len() as u64, Ordering::Relaxed);
+                    }
+                    self.cv.notify_all();
+                }
+                Err(_) => {
+                    // The consumer's own fetch of this key surfaces the
+                    // identical typed error; prefetching further keys
+                    // would only repeat it.
+                    let mut st = self.state.lock().unwrap();
+                    st.aborted = true;
+                    st.task_running = false;
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// See the module docs. Create one per run, [`finish`](Self::finish) it
+/// at run end.
+pub struct ReadAhead {
+    core: Arc<Core>,
+}
+
+impl ReadAhead {
+    /// Wrap `inner` with the default double-buffer budget.
+    pub fn new(inner: Arc<dyn BlockProvider>) -> Self {
+        Self::with_budget(inner, DEFAULT_BUDGET)
+    }
+
+    /// Wrap `inner` with an explicit in-flight block budget (≥ 1).
+    pub fn with_budget(inner: Arc<dyn BlockProvider>, budget: usize) -> Self {
+        ReadAhead {
+            core: Arc::new(Core {
+                inner,
+                budget: budget.max(1),
+                state: Mutex::new(State::default()),
+                cv: Condvar::new(),
+                stall_ns: AtomicU64::new(0),
+                stalls: AtomicU64::new(0),
+                prefetched: AtomicU64::new(0),
+                max_ahead: AtomicU64::new(0),
+                fetch_log: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Stop the pipeline: abort the background task, wait for it to
+    /// park, drop warmed blocks. Idempotent.
+    pub fn finish(&self) {
+        let mut st = self.core.state.lock().unwrap();
+        st.aborted = true;
+        self.core.cv.notify_all();
+        while st.task_running {
+            st = self.core.cv.wait(st).unwrap();
+        }
+        st.ready.clear();
+    }
+
+    /// Block until every hinted key has been fetched or consumed and
+    /// the task has parked (test introspection; deadlocks if the
+    /// budget is smaller than the number of outstanding keys and
+    /// nothing consumes).
+    pub fn drain(&self) {
+        let mut st = self.core.state.lock().unwrap();
+        while st.task_running {
+            st = self.core.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Seconds consumers spent blocked on a hinted-but-late block (the
+    /// genuinely exposed read time).
+    pub fn stall_secs(&self) -> f64 {
+        self.core.stall_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Number of consumer fetches that found their hinted block late.
+    pub fn stalls(&self) -> u64 {
+        self.core.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Blocks fetched by the background task.
+    pub fn prefetched(&self) -> u64 {
+        self.core.prefetched.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of warmed blocks held ahead of consumers —
+    /// never exceeds the budget.
+    pub fn max_ahead(&self) -> u64 {
+        self.core.max_ahead.load(Ordering::Relaxed)
+    }
+
+    /// The keys the background task fetched, in fetch order.
+    pub fn fetch_log(&self) -> Vec<(usize, usize)> {
+        self.core.fetch_log.lock().unwrap().clone()
+    }
+
+    fn take_or_fetch<T: WarmedBlocks>(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<T>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<T>> {
+        let key = (pv, pf);
+        let hinted_late = {
+            let mut st = self.core.state.lock().unwrap();
+            if let Some(w) = st.ready.remove(&key) {
+                st.consumed.insert(key);
+                self.core.cv.notify_all();
+                if let Some(block) = T::unwrap(w) {
+                    return Ok(block);
+                }
+                // A cross-precision stash is impossible within one run
+                // (the pipeline is per-run); fall through defensively.
+                false
+            } else {
+                // Mark consumed so the task skips the key; remember
+                // whether the schedule had promised it (a late read).
+                let late = st.seen.contains(&key) && !st.consumed.contains(&key);
+                st.consumed.insert(key);
+                self.core.cv.notify_all();
+                late
+            }
+        };
+        let t0 = Instant::now();
+        let block = T::provide(self.core.inner.as_ref(), cfg, metric, pv, pf)?;
+        if hinted_late {
+            self.core
+                .stall_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.core.stalls.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(block)
+    }
+}
+
+impl Drop for ReadAhead {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+impl BlockProvider for ReadAhead {
+    fn block_f32(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f32>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f32>> {
+        self.take_or_fetch(cfg, metric, pv, pf)
+    }
+
+    fn block_f64(
+        &self,
+        cfg: &RunConfig,
+        metric: &dyn Metric<f64>,
+        pv: usize,
+        pf: usize,
+    ) -> Result<Block<f64>> {
+        self.take_or_fetch(cfg, metric, pv, pf)
+    }
+
+    fn prefetch(&self, cfg: &RunConfig, keys: &[(usize, usize)]) {
+        let mut st = self.core.state.lock().unwrap();
+        if st.aborted {
+            return;
+        }
+        let mut added = false;
+        for &k in keys {
+            if !st.consumed.contains(&k) && st.seen.insert(k) {
+                st.planned.push_back(k);
+                added = true;
+            }
+        }
+        if added && !st.task_running {
+            st.task_running = true;
+            let core = Arc::clone(&self.core);
+            let cfg = cfg.clone();
+            crate::linalg::pool::global().submit(Box::new(move || core.drain_planned(cfg)));
+        }
+    }
+}
+
+/// The provider-visible projection of the step schedule: each rank's
+/// own `(pv, pf)` slice, in rank order (deduplicated — npr-replicated
+/// ranks share a slice). Node programs fetch from the provider exactly
+/// once, at input phase, and node threads start in rank order — so this
+/// *is* the order blocks are first needed; peer blocks then circulate
+/// on the wire, not through the provider.
+pub fn prefetch_order(cfg: &RunConfig) -> Vec<(usize, usize)> {
+    let mut seen = HashSet::new();
+    let mut order = Vec::new();
+    for rank in 0..cfg.grid.np() {
+        let c = cfg.grid.coords(rank);
+        if seen.insert((c.pv, c.pf)) {
+            order.push((c.pv, c.pf));
+        }
+    }
+    order
+}

@@ -57,6 +57,9 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     // ingest-once when a session cache sits behind it (3-way metrics
     // are float families today, but the node program stays
     // representation-agnostic like the 2-way one).
+    // Re-hint the node's own key (idempotent after the run-level
+    // schedule hint; keeps serial/direct callers pipeline-friendly).
+    provider.prefetch(cfg, &[(pv, 0)]);
     let own = T::provide(provider.as_ref(), cfg, metric.as_ref(), pv, 0)?;
     let own_sums = metric.denominators(&own)?;
     t_in.stop();

@@ -64,6 +64,9 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     // representation: ingested once per (dataset, repr) when a session
     // cache sits behind it, loaded + ingested fresh otherwise. Either
     // way, the step loop below only ever touches the cached form.
+    // Re-hint the node's own key (idempotent after the run-level
+    // schedule hint; keeps serial/direct callers pipeline-friendly).
+    provider.prefetch(cfg, &[(pv, pf)]);
     let block = T::provide(provider.as_ref(), cfg, metric.as_ref(), pv, pf)?;
     // Full-feature denominator ingredients (allreduced across the npf
     // axis — metric denominators are additive over feature slices).

@@ -62,6 +62,36 @@
 //! [`coordinator::run`] of the same spec
 //! (`tests/serve_concurrency.rs`).
 //!
+//! ## Out-of-core streaming ingest
+//!
+//! Datasets larger than the block budget stream. When
+//! [`session::SessionLimits::block_cache_bytes`] evicts an ingested
+//! block, the session **spills** it to a per-dataset
+//! [`vecdata::oocstore::BlockStore`] (a repr-preserving codec — elem
+//! width, payload length, and an FNV-64 checksum validated on every
+//! decode; [`vecdata::oocstore::DirStore`] writes
+//! temp-file-then-rename) instead of dropping it, and the next touch
+//! **reloads** the exact bytes — never a re-ingest — so out-of-core
+//! runs are bit-identical to in-RAM runs. A prefetching
+//! [`coordinator::prefetch::ReadAhead`] provider, hinted with the
+//! 2-way/3-way step schedules, reloads upcoming blocks on
+//! [`linalg::pool`] workers under a bounded in-flight budget so the
+//! kernels never starve (the double-buffered pipeline of Beyer &
+//! Bientinesi, arXiv 1302.4332). Transient store faults are retried
+//! with exponential backoff ([`vecdata::oocstore::with_retry`]);
+//! permanent faults surface as typed
+//! [`vecdata::oocstore::StoreError`]s (and as an `Error` wire frame
+//! through `comet serve`); a corrupted spill file is caught by the
+//! codec checksum, never silently decoded. Spill/reload/stall counters
+//! flow through [`coordinator::RunStats`] into the `comet
+//! run`/`batch`/`serve` ledgers, [`perfmodel`] prices the spill-store
+//! round trip, and `--block-cache-bytes` turns the whole path on from
+//! the CLI. `tests/ooc_ingest.rs` pins the codec round-trip per repr,
+//! forced-spill bit-identity across metrics × backends ×
+//! decompositions × threads, fault recovery
+//! ([`testkit::faults::FailingStore`] scripts the failures), and the
+//! prefetch order/budget contracts.
+//!
 //! **Migration note:** `coordinator::run` / `run_with_artifacts` /
 //! `run_with_client` remain as one-shot shims (fresh ingest, legacy
 //! `store_metrics`/`output_dir` semantics, unchanged checksums — a
@@ -120,8 +150,8 @@
 //! computes n−1−i entries and contiguous chunks would leave the first
 //! thread ~2× the average load. `cargo bench --bench bench_kernels`
 //! appends comparisons/sec trajectory points to `BENCH_kernels.json`
-//! at the repo root (including a session-amortization point: one-shot
-//! runs vs a reused `Session`).
+//! at the repo root (including session-amortization points: one-shot
+//! runs vs a reused `Session` vs a spill-bound out-of-core session).
 //!
 //! ## SIMD inner kernels + persistent worker pool
 //!

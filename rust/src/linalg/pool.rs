@@ -35,7 +35,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
@@ -52,6 +52,9 @@ pub struct PoolStats {
     /// OS threads spawned (grows to the high-water parallelism, then
     /// stays flat — the amortization signal).
     pub threads_spawned: u64,
+    /// Fire-and-forget tasks enqueued via [`WorkerPool::submit`]
+    /// (read-ahead threads).
+    pub submits: u64,
     /// Workers currently alive.
     pub workers: usize,
 }
@@ -59,12 +62,16 @@ pub struct PoolStats {
 struct Shared {
     queue: VecDeque<Task>,
     workers: usize,
+    /// Widest scope ever dispatched — the worker head-room
+    /// [`WorkerPool::submit`] must preserve on top of async occupancy.
+    scope_high_water: usize,
 }
 
 struct Counters {
     scopes: u64,
     tasks: u64,
     threads_spawned: u64,
+    submits: u64,
 }
 
 /// A persistent pool of parked worker threads. One global instance
@@ -74,6 +81,10 @@ pub struct WorkerPool {
     shared: Mutex<Shared>,
     work_cv: Condvar,
     counters: Mutex<Counters>,
+    /// Fire-and-forget tasks currently alive ([`WorkerPool::submit`]) —
+    /// long-lived occupants the worker count must stay ahead of so
+    /// blocking kernel scopes can never be starved by them.
+    async_active: AtomicUsize,
 }
 
 struct ScopeState {
@@ -91,9 +102,19 @@ impl Default for WorkerPool {
 impl WorkerPool {
     pub fn new() -> Self {
         WorkerPool {
-            shared: Mutex::new(Shared { queue: VecDeque::new(), workers: 0 }),
+            shared: Mutex::new(Shared {
+                queue: VecDeque::new(),
+                workers: 0,
+                scope_high_water: 0,
+            }),
             work_cv: Condvar::new(),
-            counters: Mutex::new(Counters { scopes: 0, tasks: 0, threads_spawned: 0 }),
+            counters: Mutex::new(Counters {
+                scopes: 0,
+                tasks: 0,
+                threads_spawned: 0,
+                submits: 0,
+            }),
+            async_active: AtomicUsize::new(0),
         }
     }
 
@@ -130,6 +151,29 @@ impl WorkerPool {
         }
     }
 
+    /// Enqueue one `'static` fire-and-forget task (the out-of-core
+    /// read-ahead thread rides this). Unlike [`WorkerPool::scope`] the
+    /// caller does not wait — and unlike scope tasks, a submitted task
+    /// may *block* (bounded-buffer condvars), so the pool is grown to
+    /// `async_active + scope_high_water`: even with every async task
+    /// parked on a worker, the widest kernel scope still has enough
+    /// free workers to drain — the no-deadlock counting argument pinned
+    /// by the scheduler tests.
+    pub fn submit(self: &Arc<Self>, task: Task) {
+        let live = self.async_active.fetch_add(1, Ordering::SeqCst) + 1;
+        let head_room = self.shared.lock().unwrap().scope_high_water;
+        self.ensure_workers(live + head_room.max(1));
+        self.counters.lock().unwrap().submits += 1;
+        let pool = Arc::clone(self);
+        let mut shared = self.shared.lock().unwrap();
+        shared.queue.push_back(Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(task));
+            pool.async_active.fetch_sub(1, Ordering::SeqCst);
+        }));
+        drop(shared);
+        self.work_cv.notify_all();
+    }
+
     /// Run borrowed tasks to completion on the pool. Blocks until
     /// every task has finished; panics (after draining) if any task
     /// panicked. A single task is run inline on the caller — no
@@ -146,7 +190,12 @@ impl WorkerPool {
             }
             _ => {}
         }
-        self.ensure_workers(tasks.len());
+        {
+            let mut shared = self.shared.lock().unwrap();
+            shared.scope_high_water = shared.scope_high_water.max(tasks.len());
+        }
+        // Reserve head room for parked async tasks (see `submit`).
+        self.ensure_workers(self.async_active.load(Ordering::SeqCst) + tasks.len());
         {
             // Counted at dispatch: `scope` blocks until every task has
             // run, so by any observation point after a scope returns,
@@ -202,12 +251,12 @@ impl WorkerPool {
     /// `ensure_workers` holds `shared` while touching `counters`, so
     /// nesting them here in the opposite order could deadlock.
     pub fn stats(&self) -> PoolStats {
-        let (scopes, tasks, threads_spawned) = {
+        let (scopes, tasks, threads_spawned, submits) = {
             let c = self.counters.lock().unwrap();
-            (c.scopes, c.tasks, c.threads_spawned)
+            (c.scopes, c.tasks, c.threads_spawned, c.submits)
         };
         let workers = self.shared.lock().unwrap().workers;
-        PoolStats { scopes, tasks, threads_spawned, workers }
+        PoolStats { scopes, tasks, threads_spawned, submits, workers }
     }
 }
 
@@ -335,6 +384,62 @@ mod tests {
             .collect();
         pool.scope(tasks);
         assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn submitted_tasks_never_starve_scopes() {
+        // A fire-and-forget task parked on a condvar occupies a worker
+        // indefinitely; the head-room accounting must still leave every
+        // kernel scope enough free workers to drain.
+        let pool = Arc::new(WorkerPool::new());
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        pool.submit(Box::new(move || {
+            let (lock, cv) = &*g2;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }));
+        let hits = AtomicU64::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|_| {
+                let hits = &hits;
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.stats().submits, 1);
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    #[test]
+    fn submit_panic_does_not_kill_the_worker() {
+        let pool = Arc::new(WorkerPool::new());
+        pool.submit(Box::new(|| panic!("async boom")));
+        // The pool still runs scopes afterwards on the same workers.
+        let ok = AtomicU64::new(0);
+        for _ in 0..50 {
+            if pool.async_active.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                let ok = &ok;
+                Box::new(move || {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
     }
 
     #[test]

@@ -91,6 +91,11 @@ run options:
   --output-threshold X  drop metrics below X ((offset, byte) records)
   --no-store         do not keep metrics in memory (big runs)
   --artifacts DIR    artifact directory (default: artifacts)
+  --block-cache-bytes N   out-of-core budget: blocks LRU-evicted past it
+                     spill to a per-dataset disk store and reload
+                     bit-identically (read ahead of the step schedule)
+  --no-spill         evicted blocks are dropped and re-ingested instead
+                     of spilled (pre-out-of-core behavior)
 
 batch options:
   --config FILE      batch TOML: base [run]/[decomp]/[input] tables plus one
@@ -100,6 +105,7 @@ batch options:
                      once per representation and PJRT executables compile
                      once — see examples/batch.toml
   --artifacts DIR    artifact directory (default: artifacts)
+  --block-cache-bytes N / --no-spill   as for run (one budget, whole batch)
 
 serve options (server):
   --socket PATH      listen on a Unix socket (one handler thread/connection);
@@ -115,7 +121,9 @@ serve options (server):
   --queue N          bounded per-shard queue depth (default 8); a full shard
                      rejects with a typed busy error instead of queueing forever
   --max-request-bytes N   admission cap on a request's estimated block bytes
-  --block-cache-bytes N   session block-cache budget (LRU eviction past it)
+  --block-cache-bytes N   session block-cache budget (LRU eviction past it;
+                     evicted blocks spill to disk and reload bit-identically)
+  --no-spill         drop evicted blocks instead of spilling them
   --exec-cache-slots N    PJRT executable-cache slot cap (LRU)
   --max-conns N      exit after N connections (smoke/CI runs)
   --artifacts DIR    artifact directory (default: artifacts)
@@ -137,6 +145,12 @@ model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                                     shard workers, plus an eviction-refill term
                  [--tingest SECS]   block re-ingest cost after a cache eviction
                  [--miss-rate X]    expected block-cache miss fraction (0..1)
+                 [--reload-frac X]  fraction of block fetches served as spill
+                                    reloads (out-of-core budget pressure, 0..1)
+                 [--disk-bw B]      spill-store read bandwidth, bytes/s
+                                    (default 2e9)
+                 [--no-prefetch]    price reloads serially instead of
+                                    overlapped by the read-ahead pipeline
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
                  [--synthetic grid|verifiable|phewas|alleles] [--seed N]
 ";
@@ -189,9 +203,21 @@ fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// The out-of-core knobs shared by run/batch/serve: a block-cache
+/// budget (None = unbounded, never evicts) and whether evictions spill
+/// to disk or degrade to drop + re-ingest.
+fn limits_from_args(args: &cli::Args) -> Result<SessionLimits> {
+    Ok(SessionLimits {
+        block_cache_bytes: args.opt_parse::<u64>("block-cache-bytes")?,
+        spill: !args.switch("no-spill"),
+        ..SessionLimits::default()
+    })
+}
+
 fn cmd_run(args: &cli::Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    let limits = limits_from_args(args)?;
     args.reject_unknown()?;
     println!(
         "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} threads={} kernel={} repr={} stages={}{}",
@@ -215,7 +241,7 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     // instead of accumulating in memory (the session rides the
     // request's file sink when --output-dir is set; otherwise nothing
     // listens — the CLI only reports stats + checksum).
-    let session = Session::with_artifacts(&artifacts);
+    let session = Session::with_limits(&artifacts, limits);
     let req = session.request_from_config(&cfg)?;
     let outcome = session.run(&req, &DiscardSink)?;
     let s = &outcome.stats;
@@ -255,6 +281,16 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
             fmt::bytes(s.cache_bytes)
         );
     }
+    if s.spills + s.reloads > 0 {
+        println!(
+            "  out-of-core      : {} spill(s) ({} written) / {} reload(s) ({} read), stall {}",
+            s.spills,
+            fmt::bytes(s.spill_bytes),
+            s.reloads,
+            fmt::bytes(s.reload_bytes),
+            fmt::secs(s.t_stall)
+        );
+    }
     let cmps = if cfg.num_way == 2 {
         counts::cmp_2way(cfg.nf, cfg.nv)
     } else {
@@ -276,10 +312,11 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
 fn cmd_batch(args: &cli::Args) -> Result<()> {
     let path = args.require_str("config")?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    let limits = limits_from_args(args)?;
     args.reject_unknown()?;
     let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
     let entries = config::batch_from_toml_str(&text)?;
-    let session = Session::with_artifacts(&artifacts);
+    let session = Session::with_limits(&artifacts, limits);
     println!(
         "comet batch: {} request(s) from {} against one session",
         entries.len(),
@@ -372,6 +409,19 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
             fmt::bytes(pool_totals.cache_bytes)
         );
     }
+    if pool_totals.spills + pool_totals.reloads > 0 {
+        // Out-of-core ledger: evictions the spill store absorbed, and
+        // the read-back traffic later requests paid instead of a full
+        // re-ingest (bit-identical either way).
+        println!(
+            "  out-of-core      : {} spill(s) ({} written) / {} reload(s) ({} read), stall {}",
+            pool_totals.spills,
+            fmt::bytes(pool_totals.spill_bytes),
+            pool_totals.reloads,
+            fmt::bytes(pool_totals.reload_bytes),
+            fmt::secs(pool_totals.t_stall)
+        );
+    }
     Ok(())
 }
 
@@ -380,8 +430,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let workers: usize = args.parse_or("workers", 2)?;
     let queue: usize = args.parse_or("queue", 8)?;
     let max_request_bytes = args.opt_parse::<u64>("max-request-bytes")?;
-    let block_cache_bytes = args.opt_parse::<u64>("block-cache-bytes")?;
-    let exec_cache_slots = args.opt_parse::<usize>("exec-cache-slots")?;
+    let mut limits = limits_from_args(args)?;
+    limits.exec_cache_slots = args.opt_parse::<usize>("exec-cache-slots")?;
     let max_conns = args.opt_parse::<usize>("max-conns")?;
     let socket = args.opt_str("socket").map(str::to_string);
     let connect = args.opt_str("connect").map(str::to_string);
@@ -405,7 +455,6 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         return Ok(());
     }
 
-    let limits = SessionLimits { block_cache_bytes, exec_cache_slots };
     let session = Arc::new(Session::with_limits(&artifacts, limits));
     let server = Arc::new(serve::Server::start(
         Arc::clone(&session),
@@ -451,6 +500,17 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         cache.evictions,
         fmt::bytes(cache.bytes)
     );
+    if cache.spills + cache.reloads > 0 {
+        eprintln!(
+            "comet serve: out-of-core {} spill(s) ({} written) / {} reload(s) ({} read), \
+             {} spill error(s)",
+            cache.spills,
+            fmt::bytes(cache.spill_bytes),
+            cache.reloads,
+            fmt::bytes(cache.reload_bytes),
+            cache.spill_errors
+        );
+    }
     Ok(())
 }
 
@@ -567,6 +627,9 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
         pool_warm: !args.switch("cold-pool"),
         triangular: args.switch("triangular"),
         nst: args.parse_or("nst", 16)?,
+        reload_frac: args.parse_or("reload-frac", 0.0)?,
+        disk_bw: args.parse_or("disk-bw", 2e9)?,
+        prefetch: !args.switch("no-prefetch"),
         net: CostModel::gemini(),
         link: CostModel::pcie2(),
     };
@@ -588,6 +651,13 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
     println!("  t_CPU       = {}", fmt::secs(p.t_cpu));
     if p.t_dispatch > 0.0 {
         println!("  t_dispatch  = {} (cold per-call thread spawns)", fmt::secs(p.t_dispatch));
+    }
+    if p.t_stall > 0.0 {
+        println!(
+            "  t_stall     = {} (exposed out-of-core reload time{})",
+            fmt::secs(p.t_stall),
+            if input.prefetch { ", read-ahead overlapped" } else { ", serial reloads" }
+        );
     }
     println!("  total       = {}", fmt::secs(p.total));
     println!("  mGEMM fraction = {:.1}% (the paper's overlap regime indicator)", 100.0 * p.gemm_fraction());

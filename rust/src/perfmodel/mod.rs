@@ -57,6 +57,17 @@ pub struct ModelInput {
     pub triangular: bool,
     /// Stage count n_st (3-way).
     pub nst: usize,
+    /// Fraction of the load's block fetches served as out-of-core
+    /// spill reloads (0 = fully resident, 1 = every block reloads —
+    /// the `RunStats::reloads / load` ratio of a budgeted session).
+    pub reload_frac: f64,
+    /// Spill-store read bandwidth in bytes/s (prices one reload as
+    /// vector-block bytes / disk_bw).
+    pub disk_bw: f64,
+    /// Whether the read-ahead pipeline overlaps reloads with compute
+    /// (only the un-hidden part of each read is exposed) or reloads
+    /// serialize in front of their block's kernel work.
+    pub prefetch: bool,
     /// Internode fabric.
     pub net: CostModel,
     /// Host↔accelerator link.
@@ -74,6 +85,11 @@ pub struct Prediction {
     /// Thread-dispatch overhead across the load's kernel calls —
     /// (threads−1)·t_spawn per call cold, 0 against a warm pool.
     pub t_dispatch: f64,
+    /// Exposed out-of-core reload time: with prefetch, the first read
+    /// plus whatever later reads exceed the compute that hides them;
+    /// without, every reload serializes (`RunStats::t_stall`'s analytic
+    /// counterpart).
+    pub t_stall: f64,
     pub total: f64,
 }
 
@@ -125,8 +141,27 @@ fn dispatch_per_call(m: &ModelInput) -> f64 {
     }
 }
 
+/// Exposed reload time for `n_reload` spill reads of `t_r` seconds
+/// each, when `t_c` seconds of per-block compute are available to hide
+/// each one. The double-buffered pipeline exposes the first read fully
+/// (nothing computes yet) and later reads only by the amount they
+/// outrun compute; without prefetch every read serializes.
+fn stall_time(m: &ModelInput, t_c: f64) -> f64 {
+    let n_reload = m.reload_frac.clamp(0.0, 1.0) * m.load as f64;
+    if n_reload <= 0.0 || m.disk_bw <= 0.0 {
+        return 0.0;
+    }
+    let t_r = vblock_bytes(m) as f64 / m.disk_bw;
+    if m.prefetch {
+        t_r + (n_reload - 1.0).max(0.0) * (t_r - t_c).max(0.0)
+    } else {
+        n_reload * t_r
+    }
+}
+
 /// 2-way model (§6.3), extended with the triangular-diag,
-/// thread-parallel, SIMD-lane, and pool-dispatch kernel terms.
+/// thread-parallel, SIMD-lane, pool-dispatch, and out-of-core reload
+/// terms.
 pub fn predict_2way(m: &ModelInput) -> Prediction {
     let t_comm = m.net.msg_time(vblock_bytes(m));
     let t_tv = m.link.msg_time(vblock_bytes(m));
@@ -135,7 +170,10 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
     // One kernel call per block in the load: each pays the dispatch
     // overhead until the pool is warm.
     let t_dispatch = m.load as f64 * dispatch_per_call(m);
-    let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu + t_dispatch;
+    // One block's kernel time is the compute window a prefetched
+    // reload can hide behind.
+    let t_stall = stall_time(m, m.t_gemm / kernel_speedup(m));
+    let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu + t_dispatch + t_stall;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
@@ -143,6 +181,7 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
         t_gemm_total,
         t_cpu: m.t_cpu,
         t_dispatch,
+        t_stall,
         total,
     }
 }
@@ -164,7 +203,9 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
         steps_per_slice * t_gemm_eff + 3.0 * t_tv + 4.0 * t_tm + m.t_cpu + dispatch_per_slice;
     let t_gemm_total = m.load as f64 * steps_per_slice * t_gemm_eff;
     let t_dispatch = m.load as f64 * dispatch_per_slice;
-    let total = t_comm + t_tv + m.load as f64 * per_slice;
+    // A slice's whole mGEMM pipeline is the window hiding its reload.
+    let t_stall = stall_time(m, steps_per_slice * t_gemm_eff);
+    let total = t_comm + t_tv + m.load as f64 * per_slice + t_stall;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
@@ -172,6 +213,7 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
         t_gemm_total,
         t_cpu: m.t_cpu,
         t_dispatch,
+        t_stall,
         total,
     }
 }
@@ -274,6 +316,9 @@ mod tests {
             pool_warm: true,
             triangular: false,
             nst: 16,
+            reload_frac: 0.0,
+            disk_bw: 2e9,
+            prefetch: true,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         }
@@ -356,9 +401,47 @@ mod tests {
     fn totals_are_sums_of_parts_2way() {
         let m = ModelInput { threads: 4, t_spawn: 1e-4, pool_warm: false, ..base() };
         let p = predict_2way(&m);
-        let sum =
-            p.t_comm + p.t_transfer_v + p.t_gemm_total + p.t_transfer_m + p.t_cpu + p.t_dispatch;
+        let sum = p.t_comm
+            + p.t_transfer_v
+            + p.t_gemm_total
+            + p.t_transfer_m
+            + p.t_cpu
+            + p.t_dispatch
+            + p.t_stall;
         assert!((p.total - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reloads_hidden_by_compute_expose_only_the_first_read() {
+        // t_r = 409.6 MB / 1e8 B/s = 4.096 s < t_gemm = 6.5 s: every
+        // reload after the first hides behind a block's kernel time, so
+        // the pipeline exposes exactly one read.
+        let m = ModelInput { reload_frac: 1.0, disk_bw: 1e8, ..base() };
+        let p = predict_2way(&m);
+        assert!((p.t_stall - 4.096).abs() < 1e-9, "t_stall={}", p.t_stall);
+        // Without prefetch all 13 reads serialize.
+        let serial = predict_2way(&ModelInput { prefetch: false, ..m });
+        assert!((serial.t_stall - 13.0 * 4.096).abs() < 1e-9);
+        assert!(p.total < serial.total);
+        // No reloads → no stall term, totals match the resident model.
+        assert_eq!(predict_2way(&base()).t_stall, 0.0);
+    }
+
+    #[test]
+    fn slow_disk_exposes_the_bandwidth_gap_even_with_prefetch() {
+        // t_r = 40.96 s > t_gemm: compute hides only 6.5 s of each
+        // later read; the rest is exposed stall.
+        let m = ModelInput { reload_frac: 1.0, disk_bw: 1e7, ..base() };
+        let p = predict_2way(&m);
+        let expect = 40.96 + 12.0 * (40.96 - 6.5);
+        assert!((p.t_stall - expect).abs() < 1e-9, "t_stall={}", p.t_stall);
+        let serial = predict_2way(&ModelInput { prefetch: false, ..m });
+        assert!(p.t_stall < serial.t_stall);
+        // 3-way hides behind the whole slice pipeline, which at these
+        // parameters exceeds t_r — one exposed read.
+        let p3 = predict_3way(&m);
+        assert!(p3.t_stall > 0.0);
+        assert!(p3.t_stall < p.t_stall);
     }
 
     #[test]

@@ -28,14 +28,28 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Point-in-time view of a ledger's counters. Hits/misses/evictions
-/// are monotonic; `bytes` is the current resident total.
+/// Point-in-time view of a ledger's counters. Everything except
+/// `bytes` is monotonic; `bytes` is the current resident total.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheSnapshot {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
     pub bytes: u64,
+    /// Evictions that landed in the spill store instead of being
+    /// dropped (out-of-core sessions; see `vecdata::oocstore`).
+    pub spills: u64,
+    /// Bytes actually written to the spill store (a re-evicted block
+    /// whose bytes are already on disk spills without a write).
+    pub spill_bytes: u64,
+    /// Misses served byte-identically from the spill store (no load,
+    /// no ingest).
+    pub reloads: u64,
+    /// Bytes read back from the spill store.
+    pub reload_bytes: u64,
+    /// Spill writes abandoned after retries — the block degrades to
+    /// re-ingest-on-next-touch instead of reload (never an error).
+    pub spill_errors: u64,
 }
 
 /// Clears the cache slot that registered the entry. Must be callable
@@ -64,6 +78,14 @@ pub struct CostLedger {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    // Spill-pipeline counters: atomics only, so they are safe to bump
+    // from eviction closures and reload paths that hold slot locks
+    // (the lock-discipline note below concerns only the state mutex).
+    spills: AtomicU64,
+    spill_bytes: AtomicU64,
+    reloads: AtomicU64,
+    reload_bytes: AtomicU64,
+    spill_errors: AtomicU64,
     state: Mutex<LedgerState>,
 }
 
@@ -77,8 +99,32 @@ impl CostLedger {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            spill_bytes: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            reload_bytes: AtomicU64::new(0),
+            spill_errors: AtomicU64::new(0),
             state: Mutex::new(LedgerState::default()),
         }
+    }
+
+    /// Record an eviction that landed in the spill store.
+    /// `bytes_written` is 0 when the key's bytes were already on disk.
+    pub fn note_spill(&self, bytes_written: u64) {
+        self.spills.fetch_add(1, Ordering::Relaxed);
+        self.spill_bytes.fetch_add(bytes_written, Ordering::Relaxed);
+    }
+
+    /// Record a miss served byte-identically from the spill store.
+    pub fn note_reload(&self, bytes: u64) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        self.reload_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record a spill write abandoned after retries (the block falls
+    /// back to plain drop + re-ingest).
+    pub fn note_spill_error(&self) {
+        self.spill_errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn budget(&self) -> Option<u64> {
@@ -139,6 +185,11 @@ impl CostLedger {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             bytes,
+            spills: self.spills.load(Ordering::Relaxed),
+            spill_bytes: self.spill_bytes.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            reload_bytes: self.reload_bytes.load(Ordering::Relaxed),
+            spill_errors: self.spill_errors.load(Ordering::Relaxed),
         }
     }
 

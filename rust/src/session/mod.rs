@@ -55,13 +55,14 @@ use anyhow::{ensure, Context, Result};
 use self::cache::{CacheSnapshot, CostLedger};
 
 use crate::config::{BackendKind, InputSource, Precision, RunConfig};
-use crate::coordinator::{self, BlockProvider, RunOutcome};
+use crate::coordinator::{self, prefetch::ReadAhead, BlockProvider, RunOutcome};
 use crate::decomp::Grid;
 use crate::metrics::{Metric, MetricId};
 use crate::output::sink::{FileSink, ResultSink, TeeRef};
 use crate::runtime::{PjrtService, RuntimeClient};
 use crate::util::Scalar;
 use crate::vecdata::block::{Block, Repr};
+use crate::vecdata::oocstore::{self, BlockStore, DirStore};
 use crate::vecdata::SyntheticKind;
 
 /// Identity of a dataset: where the vectors come from and the campaign
@@ -125,15 +126,25 @@ struct DatasetInner {
     spec: DatasetSpec,
     f32_blocks: BlockCache<f32>,
     f64_blocks: BlockCache<f64>,
-    /// Load-and-ingest operations actually performed (cache misses).
-    /// The ingest-once contract: after the first run of a given
-    /// (repr, ingest key, grid), this stays flat however many more
-    /// runs the session serves over the dataset — unless the session's
-    /// byte budget evicted a block in between.
+    /// Load-and-ingest operations actually performed (cache misses
+    /// that could not be served from the spill store). The ingest-once
+    /// contract: after the first run of a given (repr, ingest key,
+    /// grid), this stays flat however many more runs the session
+    /// serves over the dataset — a budget eviction in between costs a
+    /// reload, not a re-ingest, as long as the spill store holds the
+    /// bytes.
     ingests: AtomicU64,
     /// The owning session's byte-budget ledger (shared across all of
     /// the session's datasets).
     ledger: Arc<CostLedger>,
+    /// The session's spill store (out-of-core sessions): budget
+    /// evictions write the block's resident bytes here instead of
+    /// dropping them; misses check here before re-ingesting. `None`
+    /// restores the PR 7 drop-on-evict behavior.
+    store: Option<Arc<dyn BlockStore>>,
+    /// Per-dataset spill-key prefix (a hash of the spec), so datasets
+    /// sharing one session store never collide.
+    store_prefix: String,
 }
 
 /// A cheap, clonable handle to a session-cached dataset. Implements
@@ -147,7 +158,13 @@ pub struct Dataset {
 }
 
 impl Dataset {
-    fn new(spec: DatasetSpec, ledger: Arc<CostLedger>) -> Self {
+    fn new(spec: DatasetSpec, ledger: Arc<CostLedger>, store: Option<Arc<dyn BlockStore>>) -> Self {
+        let store_prefix = {
+            use std::hash::{Hash, Hasher};
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            spec.hash(&mut h);
+            format!("ds{:016x}", h.finish())
+        };
         Dataset {
             inner: Arc::new(DatasetInner {
                 spec,
@@ -155,8 +172,48 @@ impl Dataset {
                 f64_blocks: BlockCache::default(),
                 ingests: AtomicU64::new(0),
                 ledger,
+                store,
+                store_prefix,
             }),
         }
+    }
+
+    /// The spill-store key of a block: dataset prefix + precision +
+    /// representation + ingest parameters + grid slice. Flat and
+    /// filename-safe (see [`BlockStore`]'s key contract).
+    fn store_key<T: Scalar>(&self, key: &BlockKey) -> String {
+        format!(
+            "{}-w{}-{}-k{:016x}-{}x{}-{}-{}",
+            self.inner.store_prefix,
+            T::BYTES,
+            key.repr.name(),
+            key.ingest_key,
+            key.npv,
+            key.npf,
+            key.pv,
+            key.pf
+        )
+    }
+
+    /// Serve a miss from the spill store, byte-identically, if the key
+    /// was ever spilled. Transient store errors retry with backoff;
+    /// permanent errors and poisoned files (checksum mismatch) surface
+    /// as typed [`oocstore::StoreError`]s in the anyhow chain — never a
+    /// silently wrong block.
+    fn reload_from_store<T: Scalar>(&self, key: &BlockKey) -> Result<Option<Block<T>>> {
+        let Some(store) = &self.inner.store else {
+            return Ok(None);
+        };
+        let skey = self.store_key::<T>(key);
+        let Some(bytes) = oocstore::with_retry(|| store.get(&skey))
+            .with_context(|| format!("reload spilled block {skey}"))?
+        else {
+            return Ok(None);
+        };
+        let block = oocstore::decode::<T>(&bytes)
+            .with_context(|| format!("decode spilled block {skey}"))?;
+        self.inner.ledger.note_reload(block.resident_bytes());
+        Ok(Some(block))
     }
 
     pub fn spec(&self) -> &DatasetSpec {
@@ -232,17 +289,52 @@ impl Dataset {
             ledger.touch(id);
             return Ok(block);
         }
-        let block = metric.ingest(coordinator::load_block::<T>(cfg, pv, pf)?);
-        self.inner.ingests.fetch_add(1, Ordering::Relaxed);
+        // Miss: a previously spilled block reloads byte-identically
+        // from the store (no load, no ingest); otherwise load + ingest
+        // fresh.
+        let block = match self.reload_from_store::<T>(&key)? {
+            Some(block) => block,
+            None => {
+                let block = metric.ingest(coordinator::load_block::<T>(cfg, pv, pf)?);
+                self.inner.ingests.fetch_add(1, Ordering::Relaxed);
+                block
+            }
+        };
         let ledger_id = ledger.next_id();
         *guard = Some(Cached { block: block.clone(), ledger_id });
         drop(guard);
         let evict_slot = Arc::clone(&slot);
-        ledger.insert(
-            ledger_id,
-            block.resident_bytes(),
-            Box::new(move || *evict_slot.lock().unwrap() = None),
-        );
+        let evictor: Box<dyn FnMut() + Send> = match &self.inner.store {
+            // No spill store: eviction drops the block (re-ingest on
+            // next touch — the PR 7 behavior).
+            None => Box::new(move || *evict_slot.lock().unwrap() = None),
+            // Spill store: eviction moves the resident bytes to disk.
+            // Blocks are immutable per key, so a key already on disk
+            // skips the write; a write that fails permanently degrades
+            // to drop + re-ingest (counted, never an error — eviction
+            // runs on whichever thread overflowed the budget and has
+            // no caller to report to).
+            Some(store) => {
+                let store = Arc::clone(store);
+                let skey = self.store_key::<T>(&key);
+                let spill_ledger = Arc::clone(ledger);
+                Box::new(move || {
+                    let taken = evict_slot.lock().unwrap().take();
+                    if let Some(c) = taken {
+                        if store.contains(&skey) {
+                            spill_ledger.note_spill(0);
+                            return;
+                        }
+                        let blob = oocstore::encode(&c.block);
+                        match oocstore::with_retry(|| store.put(&skey, &blob)) {
+                            Ok(()) => spill_ledger.note_spill(blob.len() as u64),
+                            Err(_) => spill_ledger.note_spill_error(),
+                        }
+                    }
+                })
+            }
+        };
+        ledger.insert(ledger_id, block.resident_bytes(), evictor);
         Ok(block)
     }
 }
@@ -372,15 +464,29 @@ impl RunRequestBuilder {
 /// Resource budgets a serving deployment sets on a session's caches.
 /// The default (`None` everywhere) is the pre-serving behavior: cache
 /// forever, never evict.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SessionLimits {
     /// Byte budget for ingested blocks across *every* dataset of the
-    /// session. Past it, least-recently-used blocks are evicted and
-    /// re-ingested on next touch (bounded memory instead of OOM).
+    /// session. Past it, least-recently-used blocks are evicted —
+    /// spilled to the session's on-disk store (when `spill` is on) or
+    /// dropped for re-ingest on next touch (bounded memory instead of
+    /// OOM either way).
     pub block_cache_bytes: Option<u64>,
     /// Slot budget for the PJRT service's compiled-executable cache
     /// (LRU within the service; see `runtime`).
     pub exec_cache_slots: Option<usize>,
+    /// Spill budget-evicted blocks to a per-session on-disk store
+    /// (`vecdata::oocstore`) and reload them byte-identically on next
+    /// touch, instead of dropping and re-ingesting. On by default; only
+    /// meaningful together with `block_cache_bytes` (an unbudgeted
+    /// session never evicts, so it never spills).
+    pub spill: bool,
+}
+
+impl Default for SessionLimits {
+    fn default() -> Self {
+        SessionLimits { block_cache_bytes: None, exec_cache_slots: None, spill: true }
+    }
 }
 
 /// The long-lived service object. See the module docs for the shape;
@@ -392,6 +498,10 @@ pub struct Session {
     /// Block-cache byte accounting + eviction, shared by every dataset
     /// handle this session creates.
     ledger: Arc<CostLedger>,
+    /// The out-of-core spill store (budgeted sessions with `spill` on;
+    /// `None` otherwise). Shared by every dataset handle; keys are
+    /// prefixed per dataset.
+    spill_store: Option<Arc<dyn BlockStore>>,
     pjrt: Mutex<Option<PjrtService>>,
     datasets: Mutex<HashMap<DatasetSpec, Dataset>>,
 }
@@ -414,11 +524,36 @@ impl Session {
     }
 
     /// A session with cache budgets — the `comet serve` constructor.
+    /// A budgeted session with `limits.spill` on (the default) gets a
+    /// process-unique temp-dir spill store, removed when the session
+    /// drops.
     pub fn with_limits(artifact_dir: impl Into<PathBuf>, limits: SessionLimits) -> Self {
+        let store = (limits.spill && limits.block_cache_bytes.is_some())
+            .then(|| Arc::new(DirStore::temp("session")) as Arc<dyn BlockStore>);
+        Self::assemble(artifact_dir, limits, store)
+    }
+
+    /// A session spilling through an explicit [`BlockStore`] — how the
+    /// fault-injection rigs wire a scripted failing store in, and how a
+    /// deployment points spills at a specific volume.
+    pub fn with_spill_store(
+        artifact_dir: impl Into<PathBuf>,
+        limits: SessionLimits,
+        store: Arc<dyn BlockStore>,
+    ) -> Self {
+        Self::assemble(artifact_dir, limits, Some(store))
+    }
+
+    fn assemble(
+        artifact_dir: impl Into<PathBuf>,
+        limits: SessionLimits,
+        spill_store: Option<Arc<dyn BlockStore>>,
+    ) -> Self {
         Session {
             artifact_dir: artifact_dir.into(),
             limits,
             ledger: Arc::new(CostLedger::new(limits.block_cache_bytes)),
+            spill_store,
             pjrt: Mutex::new(None),
             datasets: Mutex::new(HashMap::new()),
         }
@@ -439,7 +574,9 @@ impl Session {
     pub fn dataset(&self, spec: DatasetSpec) -> Dataset {
         let mut map = self.datasets.lock().unwrap();
         map.entry(spec.clone())
-            .or_insert_with(|| Dataset::new(spec, Arc::clone(&self.ledger)))
+            .or_insert_with(|| {
+                Dataset::new(spec, Arc::clone(&self.ledger), self.spill_store.clone())
+            })
             .clone()
     }
 
@@ -469,16 +606,27 @@ impl Session {
         // the compute phase, and every kernel call in the run (and all
         // later runs) dispatches to already-parked threads.
         crate::linalg::pool::warm(req.cfg.threads);
-        let provider = Arc::new(req.dataset.clone()) as Arc<dyn BlockProvider>;
+        // The dataset provider rides behind a read-ahead pipeline:
+        // `run_typed` hints the step schedule's block order, a pool
+        // task warms each block (RAM hit or spill reload) under a
+        // bounded in-flight budget, and the node programs' own fetches
+        // block only on a genuinely late read (counted as stall time).
+        let inner = Arc::new(req.dataset.clone()) as Arc<dyn BlockProvider>;
+        let readahead = Arc::new(ReadAhead::new(inner));
+        let provider = Arc::clone(&readahead) as Arc<dyn BlockProvider>;
         let cache_before = self.ledger.snapshot();
-        let mut outcome = match &req.cfg.output_dir {
+        let result = match &req.cfg.output_dir {
             Some(dir) => {
                 let file = FileSink::new(dir, req.cfg.output_threshold);
                 let tee = TeeRef::new(vec![sink, &file as &dyn ResultSink]);
                 coordinator::run_streamed(&req.cfg, client, provider, &tee)
             }
             None => coordinator::run_streamed(&req.cfg, client, provider, sink),
-        }?;
+        };
+        // Stop the read-ahead task before returning, error or not — a
+        // dangling prefetch must never outlive its run.
+        readahead.finish();
+        let mut outcome = result?;
         // Cache-pressure deltas for this run (ledger counters are
         // session-global; concurrent runs each absorb whatever pressure
         // landed during their window, which sums correctly across a
@@ -488,6 +636,11 @@ impl Session {
         outcome.stats.cache_misses = cache_after.misses - cache_before.misses;
         outcome.stats.cache_evictions = cache_after.evictions - cache_before.evictions;
         outcome.stats.cache_bytes = cache_after.bytes;
+        outcome.stats.spills = cache_after.spills - cache_before.spills;
+        outcome.stats.spill_bytes = cache_after.spill_bytes - cache_before.spill_bytes;
+        outcome.stats.reloads = cache_after.reloads - cache_before.reloads;
+        outcome.stats.reload_bytes = cache_after.reload_bytes - cache_before.reload_bytes;
+        outcome.stats.t_stall = readahead.stall_secs();
         Ok(outcome)
     }
 
@@ -584,41 +737,57 @@ mod tests {
         assert_eq!(ds.ingest_count(), 5);
     }
 
-    #[test]
-    fn block_budget_evicts_lru_and_reingests_bit_identically() {
-        // npv=4 over nv=16, nf=40, f64: each block is 4 × 40 × 8 =
-        // 1280 B; the budget holds exactly two.
-        let session = Session::with_limits(
-            "artifacts",
-            SessionLimits { block_cache_bytes: Some(2 * 1280), ..Default::default() },
-        );
-        let ds = session.dataset(DatasetSpec::synthetic(SyntheticKind::Alleles, 5, 40, 16));
-        let cfg = RunRequest::builder(ds.clone(), MetricId::Czekanowski)
+    /// The shared shape of the budget tests: nv=16 over npv=4, nf=40,
+    /// f64 — each block is 4 × 40 × 8 = 1280 B; a 2560 B budget holds
+    /// exactly two.
+    const BLOCK_B: u64 = 1280;
+
+    fn budget_cfg(ds: &Dataset) -> RunConfig {
+        RunRequest::builder(ds.clone(), MetricId::Czekanowski)
             .grid(Grid::new(1, 4, 1))
             .build()
             .unwrap()
             .config()
-            .clone();
+            .clone()
+    }
+
+    fn budget_spec() -> DatasetSpec {
+        DatasetSpec::synthetic(SyntheticKind::Alleles, 5, 40, 16)
+    }
+
+    #[test]
+    fn block_budget_evicts_lru_and_reloads_bit_identically() {
+        // Spill is on by default: an evicted block comes back from the
+        // session's spill store byte-identically — no re-ingest.
+        let session = Session::with_limits(
+            "artifacts",
+            SessionLimits { block_cache_bytes: Some(2 * BLOCK_B), ..Default::default() },
+        );
+        let ds = session.dataset(budget_spec());
+        let cfg = budget_cfg(&ds);
         let cz = Czekanowski;
         let first = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
         let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
         assert_eq!(session.cache_stats().bytes, 2560);
         assert_eq!(ds.cached_bytes(), 2560);
         // A third block forces the LRU victim (pv 0) out — resident
-        // bytes stay at the budget, not above it.
+        // bytes stay at the budget, and the victim lands in the store.
         let _ = ds.block_f64(&cfg, &cz, 2, 0).unwrap();
         assert_eq!(ds.cached_blocks(), 2);
         let snap = session.cache_stats();
         assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.spills, 1);
+        assert!(snap.spill_bytes > BLOCK_B, "spill blob = payload + header");
         assert_eq!(snap.bytes, 2560);
         assert_eq!(ds.cached_bytes(), 2560);
-        // pv 1 is still resident (pure hit), pv 0 must re-ingest.
+        // pv 1 is still resident (pure hit); pv 0 reloads from the
+        // store with zero new ingests.
         let before = ds.ingest_count();
         let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
         assert_eq!(ds.ingest_count(), before, "resident block re-ingested");
         let again = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
-        assert_eq!(ds.ingest_count(), before + 1, "evicted block served stale");
-        // The re-ingested block is bit-identical to the original.
+        assert_eq!(ds.ingest_count(), before, "spilled block re-ingested instead of reloaded");
+        // The reloaded block is bit-identical to the original.
         let (a, b) = (first.as_float().unwrap(), again.as_float().unwrap());
         assert_eq!(a.raw().len(), b.raw().len());
         for (x, y) in a.raw().iter().zip(b.raw()) {
@@ -626,8 +795,90 @@ mod tests {
         }
         let snap = session.cache_stats();
         assert_eq!(snap.hits, 1);
-        assert_eq!(snap.misses, 4);
+        assert_eq!(snap.misses, 4, "a reload is still a counted miss-and-fill");
         assert_eq!(snap.evictions, 2);
+        assert_eq!(snap.reloads, 1);
+        assert_eq!(snap.reload_bytes, BLOCK_B);
+        assert_eq!(snap.spill_errors, 0);
+    }
+
+    #[test]
+    fn spill_disabled_restores_drop_and_reingest() {
+        // `spill: false` is the PR 7 behavior: eviction drops the
+        // block, the next touch re-ingests (still bit-identical, paid
+        // in ingest time instead of disk reads).
+        let session = Session::with_limits(
+            "artifacts",
+            SessionLimits {
+                block_cache_bytes: Some(2 * BLOCK_B),
+                spill: false,
+                ..Default::default()
+            },
+        );
+        let ds = session.dataset(budget_spec());
+        let cfg = budget_cfg(&ds);
+        let cz = Czekanowski;
+        let first = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
+        let _ = ds.block_f64(&cfg, &cz, 2, 0).unwrap();
+        let before = ds.ingest_count();
+        let again = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), before + 1, "evicted block must re-ingest");
+        let (a, b) = (first.as_float().unwrap(), again.as_float().unwrap());
+        for (x, y) in a.raw().iter().zip(b.raw()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let snap = session.cache_stats();
+        assert_eq!((snap.spills, snap.reloads), (0, 0));
+    }
+
+    #[test]
+    fn resident_byte_accounting_is_exact_across_spill_reload_cycles() {
+        // The satellite accounting audit: `Dataset::cached_bytes` (a
+        // walk of the actual slots) and the ledger's `bytes` (the
+        // budget counter) must agree at every step of a
+        // spill → reload → re-evict cycle — no double-count on reload,
+        // no leak on eviction.
+        let session = Session::with_limits(
+            "artifacts",
+            SessionLimits { block_cache_bytes: Some(2 * BLOCK_B), ..Default::default() },
+        );
+        let ds = session.dataset(budget_spec());
+        let cfg = budget_cfg(&ds);
+        let cz = Czekanowski;
+        let audit = |expect: u64, what: &str| {
+            let ledger_bytes = session.cache_stats().bytes;
+            let slot_bytes = ds.cached_bytes();
+            assert_eq!(ledger_bytes, expect, "ledger bytes after {what}");
+            assert_eq!(slot_bytes, expect, "slot-walk bytes after {what}");
+        };
+        let _ = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        audit(BLOCK_B, "first fill");
+        let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
+        audit(2 * BLOCK_B, "second fill");
+        let _ = ds.block_f64(&cfg, &cz, 2, 0).unwrap();
+        audit(2 * BLOCK_B, "eviction (spill pv0)");
+        // Reload pv0 (evicts the LRU victim): still exactly budget.
+        let _ = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
+        audit(2 * BLOCK_B, "reload pv0 (re-evict)");
+        // Fill the last slice fresh — another spill on the way out.
+        let _ = ds.block_f64(&cfg, &cz, 3, 0).unwrap();
+        audit(2 * BLOCK_B, "fourth fill");
+        // Touch every block once more: reloads stay in budget, and
+        // re-evictions of already-on-disk blocks (write skipped) must
+        // not drift the accounting either.
+        for pv in 0..4 {
+            let _ = ds.block_f64(&cfg, &cz, pv, 0).unwrap();
+            audit(2 * BLOCK_B, "sweep");
+        }
+        let snap = session.cache_stats();
+        assert!(snap.reloads >= 3, "sweep must reload spilled blocks: {snap:?}");
+        assert_eq!(snap.spill_errors, 0);
+        assert_eq!(
+            ds.ingest_count(),
+            4,
+            "every block ingested exactly once; everything after is reload"
+        );
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Fault injection for the out-of-core spill store: a [`FailingStore`]
+//! wrapper that scripts per-operation failures over any inner
+//! [`BlockStore`], plus a poisoning helper that corrupts a spilled
+//! payload in place.
+//!
+//! The rigs in `tests/ooc_ingest.rs` use this to pin the error
+//! contract: transient faults are retried with backoff and recover
+//! without checksum drift; permanent faults surface as typed
+//! [`StoreError`]s through `Session::run` (and as an `Error` wire frame
+//! through `comet serve`); a poisoned spill file is detected by the
+//! codec checksum, never silently decoded.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::vecdata::oocstore::{BlockStore, StoreError};
+
+/// A [`BlockStore`] wrapper with scripted fault queues. Each `get`/`put`
+/// first consumes the next scripted fault for that operation (if any)
+/// and returns it; otherwise the call passes through to the inner
+/// store. Attempt counters include faulted calls, so retry budgets are
+/// observable.
+pub struct FailingStore {
+    inner: Arc<dyn BlockStore>,
+    get_faults: Mutex<VecDeque<StoreError>>,
+    put_faults: Mutex<VecDeque<StoreError>>,
+    get_attempts: AtomicU64,
+    put_attempts: AtomicU64,
+}
+
+impl FailingStore {
+    pub fn new(inner: Arc<dyn BlockStore>) -> Self {
+        FailingStore {
+            inner,
+            get_faults: Mutex::new(VecDeque::new()),
+            put_faults: Mutex::new(VecDeque::new()),
+            get_attempts: AtomicU64::new(0),
+            put_attempts: AtomicU64::new(0),
+        }
+    }
+
+    /// Script the next `n` `get` calls to fail with (clones of) `err`.
+    pub fn fail_next_gets(&self, n: usize, err: StoreError) {
+        let mut q = self.get_faults.lock().unwrap();
+        for _ in 0..n {
+            q.push_back(err.clone());
+        }
+    }
+
+    /// Script the next `n` `put` calls to fail with (clones of) `err`.
+    pub fn fail_next_puts(&self, n: usize, err: StoreError) {
+        let mut q = self.put_faults.lock().unwrap();
+        for _ in 0..n {
+            q.push_back(err.clone());
+        }
+    }
+
+    /// Drop every scripted fault (both queues) — the "operator fixed
+    /// the disk" transition in recovery tests.
+    pub fn clear_faults(&self) {
+        self.get_faults.lock().unwrap().clear();
+        self.put_faults.lock().unwrap().clear();
+    }
+
+    /// Total `get` calls observed (faulted + passed-through) — the
+    /// retry-budget pin.
+    pub fn get_attempts(&self) -> u64 {
+        self.get_attempts.load(Ordering::Relaxed)
+    }
+
+    /// Total `put` calls observed (faulted + passed-through).
+    pub fn put_attempts(&self) -> u64 {
+        self.put_attempts.load(Ordering::Relaxed)
+    }
+
+    /// Corrupt the spilled blob under `key` in the inner store by
+    /// flipping one payload byte (the last byte — always payload, never
+    /// header, for any non-empty block). Returns whether the key
+    /// existed. The next reload of the key must fail the codec checksum
+    /// as [`StoreErrorKind::Corrupt`](crate::vecdata::oocstore::StoreErrorKind).
+    pub fn poison(&self, key: &str) -> bool {
+        match self.inner.get(key) {
+            Ok(Some(mut bytes)) if !bytes.is_empty() => {
+                let last = bytes.len() - 1;
+                bytes[last] ^= 0x01;
+                self.inner.put(key, &bytes).is_ok()
+            }
+            _ => false,
+        }
+    }
+
+    /// Whether `key` made it through to the inner store — convenience
+    /// for confirming a spill landed before poisoning it.
+    pub fn contains_inner(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+}
+
+impl BlockStore for FailingStore {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError> {
+        self.put_attempts.fetch_add(1, Ordering::Relaxed);
+        if let Some(err) = self.put_faults.lock().unwrap().pop_front() {
+            return Err(err);
+        }
+        self.inner.put(key, bytes)
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, StoreError> {
+        self.get_attempts.fetch_add(1, Ordering::Relaxed);
+        if let Some(err) = self.get_faults.lock().unwrap().pop_front() {
+            return Err(err);
+        }
+        self.inner.get(key)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.contains(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::oocstore::{with_retry, MemStore, StoreErrorKind, RETRY_ATTEMPTS};
+
+    fn rig() -> Arc<FailingStore> {
+        Arc::new(FailingStore::new(Arc::new(MemStore::new())))
+    }
+
+    #[test]
+    fn faults_are_consumed_in_script_order_then_pass_through() {
+        let store = rig();
+        store.put("k", b"v").unwrap();
+        store.fail_next_gets(2, StoreError::transient("scripted"));
+        assert_eq!(store.get("k").unwrap_err().kind, StoreErrorKind::Transient);
+        assert_eq!(store.get("k").unwrap_err().kind, StoreErrorKind::Transient);
+        assert_eq!(store.get("k").unwrap().as_deref(), Some(&b"v"[..]));
+        assert_eq!(store.get_attempts(), 3);
+    }
+
+    #[test]
+    fn retry_policy_drains_scripted_transients() {
+        let store = rig();
+        store.put("k", b"v").unwrap();
+        store.fail_next_gets(RETRY_ATTEMPTS as usize - 1, StoreError::transient("flaky"));
+        let got = with_retry(|| store.get("k")).unwrap();
+        assert_eq!(got.as_deref(), Some(&b"v"[..]));
+        assert_eq!(store.get_attempts(), RETRY_ATTEMPTS as u64);
+        // A permanent fault is not retried: one attempt, typed surface.
+        store.fail_next_gets(1, StoreError::permanent("gone"));
+        let before = store.get_attempts();
+        assert_eq!(with_retry(|| store.get("k")).unwrap_err().kind, StoreErrorKind::Permanent);
+        assert_eq!(store.get_attempts(), before + 1);
+    }
+
+    #[test]
+    fn poison_flips_a_byte_in_place() {
+        let store = rig();
+        assert!(!store.poison("missing"));
+        store.put("k", b"abc").unwrap();
+        assert!(store.poison("k"));
+        assert_eq!(store.get("k").unwrap().as_deref(), Some(&b"ab\x62"[..]));
+    }
+}

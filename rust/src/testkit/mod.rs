@@ -3,6 +3,8 @@
 //! shrink-free but *reproducible* failures: the failing case's seed is
 //! printed so the exact case can be replayed.
 
+pub mod faults;
+
 use crate::util::prng::Stream;
 
 /// A generation context handed to case generators.

@@ -20,6 +20,7 @@
 pub mod bits;
 pub mod block;
 pub mod io;
+pub mod oocstore;
 
 use anyhow::bail;
 

@@ -1,0 +1,560 @@
+//! Out-of-core block store: the spill side of the streaming-ingest
+//! pipeline.
+//!
+//! When a session's `block_cache_bytes` budget evicts an ingested
+//! block, the block is not discarded — it is **spilled** to a
+//! per-dataset on-disk store in its resident representation (packed u64
+//! words for bit-domain blocks, raw float panels otherwise) and
+//! **reloaded** byte-for-byte on next touch, skipping the load + ingest
+//! path entirely. This is the graceful-degradation half of the
+//! out-of-core pipeline described by Fabregat-Traver & Bientinesi
+//! (arXiv 1210.7683) and Beyer & Bientinesi (arXiv 1302.4332): budget
+//! exceeded means "trade disk bandwidth for memory", never "recompute"
+//! and never "OOM".
+//!
+//! Three pieces live here:
+//!
+//! * [`BlockStore`] — the object-safe byte-blob store seam ([`DirStore`]
+//!   is the filesystem implementation; `testkit::faults::FailingStore`
+//!   wraps any store with scripted fault injection for the test rigs).
+//! * [`encode`]/[`decode`] — the spill codec: a little-endian header
+//!   (shape, representation, element width) plus the raw resident
+//!   payload, guarded by an FNV-1a checksum so a poisoned spill file is
+//!   **detected** ([`StoreErrorKind::Corrupt`]) instead of silently
+//!   corrupting bit-identical results.
+//! * [`with_retry`] — the retry policy: [`StoreErrorKind::Transient`]
+//!   errors are retried with exponential backoff;
+//!   [`StoreErrorKind::Permanent`] and `Corrupt` errors surface
+//!   immediately as typed errors (downcastable through `anyhow`), never
+//!   as panics.
+//!
+//! The codec round-trip is bit-exact for every [`Repr`] — pinned per
+//! representation (including partial trailing packed words) by
+//! proptests in `tests/ooc_ingest.rs`.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::Scalar;
+use crate::vecdata::bits::BitVectorSet;
+use crate::vecdata::block::{Block, Repr};
+use crate::vecdata::VectorSet;
+
+/// How a store operation failed — the axis the retry policy and the
+/// fault-injection rig both key on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreErrorKind {
+    /// Worth retrying (interrupted syscall, timeout, contention).
+    Transient,
+    /// Retrying cannot help (missing directory, permissions, full disk).
+    Permanent,
+    /// The bytes came back but fail the codec's checksum or shape
+    /// validation — a poisoned spill file.
+    Corrupt,
+}
+
+impl StoreErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreErrorKind::Transient => "transient",
+            StoreErrorKind::Permanent => "permanent",
+            StoreErrorKind::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// Typed spill-store error: the kind drives retry-vs-surface, the
+/// message carries the operation context. Travels through `anyhow`
+/// chains (and from there into `comet serve`'s `Error` wire frame)
+/// without losing its type — callers can `downcast_ref::<StoreError>()`.
+#[derive(Debug, Clone)]
+pub struct StoreError {
+    pub kind: StoreErrorKind,
+    pub message: String,
+}
+
+impl StoreError {
+    pub fn new(kind: StoreErrorKind, message: impl Into<String>) -> Self {
+        StoreError { kind, message: message.into() }
+    }
+
+    pub fn transient(message: impl Into<String>) -> Self {
+        Self::new(StoreErrorKind::Transient, message)
+    }
+
+    pub fn permanent(message: impl Into<String>) -> Self {
+        Self::new(StoreErrorKind::Permanent, message)
+    }
+
+    pub fn corrupt(message: impl Into<String>) -> Self {
+        Self::new(StoreErrorKind::Corrupt, message)
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "spill store {} error: {}", self.kind.name(), self.message)
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// An object-safe byte-blob store for spilled blocks. Implementations
+/// must be safe to call from any thread (evictions run on whichever
+/// thread overflowed the budget; reloads on node and prefetch threads).
+///
+/// Keys are flat strings (safe as file names: `[A-Za-z0-9._-]`). A key,
+/// once written, is immutable — blocks are pure functions of their
+/// (dataset, repr, ingest key, grid slice) identity, so a second spill
+/// of the same key may be skipped entirely.
+pub trait BlockStore: Send + Sync {
+    /// Store `bytes` under `key` (overwrite allowed, never required).
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError>;
+    /// Fetch the bytes under `key`; `Ok(None)` when never spilled.
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, StoreError>;
+    /// Whether `key` is present (used to skip redundant re-spills).
+    fn contains(&self, key: &str) -> bool;
+}
+
+/// Classify an I/O error for the retry policy.
+fn classify_io(e: &std::io::Error) -> StoreErrorKind {
+    use std::io::ErrorKind as K;
+    match e.kind() {
+        K::Interrupted | K::WouldBlock | K::TimedOut => StoreErrorKind::Transient,
+        _ => StoreErrorKind::Permanent,
+    }
+}
+
+/// Filesystem [`BlockStore`]: one file per key under a directory.
+/// The directory is created lazily on first write; a store constructed
+/// with [`DirStore::temp`] owns its directory and removes it on drop
+/// (per-session spill areas must not outlive the session).
+pub struct DirStore {
+    dir: PathBuf,
+    owned: bool,
+}
+
+impl DirStore {
+    /// A store over an existing (or to-be-created) directory the caller
+    /// owns.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        DirStore { dir: dir.into(), owned: false }
+    }
+
+    /// A fresh process-unique spill directory under the system temp
+    /// dir, removed when the store drops — the default session spill
+    /// area.
+    pub fn temp(label: &str) -> Self {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "comet-spill-{}-{label}-{n}",
+            std::process::id()
+        ));
+        DirStore { dir, owned: true }
+    }
+
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(key)
+    }
+}
+
+impl Drop for DirStore {
+    fn drop(&mut self) {
+        if self.owned {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+impl BlockStore for DirStore {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError> {
+        std::fs::create_dir_all(&self.dir).map_err(|e| {
+            StoreError::new(classify_io(&e), format!("create {}: {e}", self.dir.display()))
+        })?;
+        let path = self.path_for(key);
+        // Write-then-rename so a crash mid-write never leaves a
+        // truncated file under the real key (truncation would read as
+        // Corrupt, but a clean store should not manufacture it).
+        let tmp = self.dir.join(format!(".{key}.tmp"));
+        std::fs::write(&tmp, bytes)
+            .map_err(|e| StoreError::new(classify_io(&e), format!("write {key}: {e}")))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| StoreError::new(classify_io(&e), format!("commit {key}: {e}")))
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, StoreError> {
+        match std::fs::read(self.path_for(key)) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(StoreError::new(classify_io(&e), format!("read {key}: {e}"))),
+        }
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.path_for(key).exists()
+    }
+}
+
+/// In-memory [`BlockStore`] — tests and ephemeral sessions.
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Every key currently stored (unordered) — lets test rigs pick a
+    /// spilled blob to poison without knowing the session's key scheme.
+    pub fn keys(&self) -> Vec<String> {
+        self.map.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+impl BlockStore for MemStore {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError> {
+        self.map.lock().unwrap().insert(key.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, StoreError> {
+        Ok(self.map.lock().unwrap().get(key).cloned())
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.map.lock().unwrap().contains_key(key)
+    }
+}
+
+/// Attempts [`with_retry`] makes before giving up on a transient
+/// failure (the fault rig scripts `RETRY_ATTEMPTS - 1` transient
+/// errors to pin "recovers on the last try").
+pub const RETRY_ATTEMPTS: u32 = 4;
+
+/// Base backoff between retries; doubles per attempt. Sub-millisecond
+/// so scripted-fault tests stay fast while real interrupted syscalls
+/// still get breathing room.
+const RETRY_BASE: std::time::Duration = std::time::Duration::from_micros(200);
+
+/// Run a store operation under the transient-retry policy: transient
+/// errors are retried up to [`RETRY_ATTEMPTS`] times with exponential
+/// backoff; permanent and corrupt errors (and transient errors past
+/// the attempt budget) surface immediately as the typed error.
+pub fn with_retry<T>(mut op: impl FnMut() -> Result<T, StoreError>) -> Result<T, StoreError> {
+    let mut attempt = 0;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.kind == StoreErrorKind::Transient && attempt + 1 < RETRY_ATTEMPTS => {
+                std::thread::sleep(RETRY_BASE * (1 << attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// FNV-1a 64-bit — the per-block payload checksum. Not cryptographic;
+/// it detects poisoned/truncated spill files, which is the contract.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const MAGIC: &[u8; 8] = b"COMETOC1";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 8 + 4 + 4 + 4 + 4 + 8 * 6;
+
+fn push_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+fn as_raw_bytes<T>(slice: &[T]) -> &[u8] {
+    // SAFETY: T is f32/f64/u64 plain-old-data here; reading its bytes
+    // is always valid (same idiom as `vecdata::io`).
+    unsafe {
+        std::slice::from_raw_parts(slice.as_ptr() as *const u8, std::mem::size_of_val(slice))
+    }
+}
+
+/// Serialize a resident block into its spill form: LE header + the raw
+/// payload in the block's **resident representation** (float elements
+/// at `T`'s width, packed u64 words at 8 B/word) + nothing else. The
+/// payload bytes are exactly the resident bytes — a spill/reload cycle
+/// is bit-identical by construction, and `encode(b).len()` tracks
+/// `b.resident_bytes() + HEADER_LEN`.
+pub fn encode<T: Scalar>(block: &Block<T>) -> Vec<u8> {
+    let (repr_tag, elem_width, words_per_vec, payload): (u32, u32, u64, &[u8]) = match block {
+        Block::Float(v) => (0, T::BYTES as u32, 0, as_raw_bytes(v.raw())),
+        Block::Packed(b) => (1, 8, b.words_per_vec as u64, as_raw_bytes(b.raw_words())),
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(MAGIC);
+    push_u32(&mut out, VERSION);
+    push_u32(&mut out, repr_tag);
+    push_u32(&mut out, elem_width);
+    push_u32(&mut out, 0); // reserved
+    push_u64(&mut out, block.nf() as u64);
+    push_u64(&mut out, block.nv() as u64);
+    push_u64(&mut out, block.first_id() as u64);
+    push_u64(&mut out, words_per_vec);
+    push_u64(&mut out, payload.len() as u64);
+    push_u64(&mut out, fnv1a64(payload));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Deserialize a spill file back into a resident block. Every header
+/// field and the payload checksum are validated; any mismatch is a
+/// [`StoreErrorKind::Corrupt`] error — a poisoned spill file is
+/// detected, never silently decoded into wrong results.
+pub fn decode<T: Scalar>(bytes: &[u8]) -> Result<Block<T>, StoreError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(StoreError::corrupt(format!(
+            "spill blob too short: {} bytes (header is {HEADER_LEN})",
+            bytes.len()
+        )));
+    }
+    if &bytes[..8] != MAGIC {
+        return Err(StoreError::corrupt("bad spill magic"));
+    }
+    let version = read_u32(bytes, 8);
+    if version != VERSION {
+        return Err(StoreError::corrupt(format!("unsupported spill version {version}")));
+    }
+    let repr_tag = read_u32(bytes, 12);
+    let elem_width = read_u32(bytes, 16) as usize;
+    let nf = read_u64(bytes, 24) as usize;
+    let nv = read_u64(bytes, 32) as usize;
+    let first_id = read_u64(bytes, 40) as usize;
+    let words_per_vec = read_u64(bytes, 48) as usize;
+    let payload_len = read_u64(bytes, 56) as usize;
+    let checksum = read_u64(bytes, 64);
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() != payload_len {
+        return Err(StoreError::corrupt(format!(
+            "spill payload length {} != header's {payload_len}",
+            payload.len()
+        )));
+    }
+    if fnv1a64(payload) != checksum {
+        return Err(StoreError::corrupt("spill payload checksum mismatch (poisoned file)"));
+    }
+    match repr_tag {
+        0 => {
+            if elem_width != T::BYTES {
+                return Err(StoreError::corrupt(format!(
+                    "float spill element width {elem_width} != run precision {}",
+                    T::BYTES
+                )));
+            }
+            if payload_len != nf * nv * T::BYTES {
+                return Err(StoreError::corrupt(format!(
+                    "float spill payload {payload_len} B != nf={nf} × nv={nv} × {} B",
+                    T::BYTES
+                )));
+            }
+            let mut vs = VectorSet::<T>::zeros(nf, nv);
+            vs.first_id = first_id;
+            // SAFETY: same POD byte view as encode; lengths checked.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(
+                    vs.raw_mut().as_mut_ptr() as *mut u8,
+                    payload_len,
+                )
+            };
+            dst.copy_from_slice(payload);
+            Ok(Block::Float(Arc::new(vs)))
+        }
+        1 => {
+            if words_per_vec != nf.div_ceil(64) {
+                return Err(StoreError::corrupt(format!(
+                    "packed spill words_per_vec {words_per_vec} inconsistent with nf={nf}"
+                )));
+            }
+            if payload_len != words_per_vec * nv * 8 {
+                return Err(StoreError::corrupt(format!(
+                    "packed spill payload {payload_len} B != {words_per_vec} × nv={nv} words"
+                )));
+            }
+            let words: Vec<u64> = payload
+                .chunks_exact(8)
+                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Block::Packed(Arc::new(BitVectorSet::from_words(nf, nv, first_id, words))))
+        }
+        t => Err(StoreError::corrupt(format!("unknown spill repr tag {t}"))),
+    }
+}
+
+/// The expected decoded representation of a spill blob (header peek,
+/// no payload validation) — introspection for tests and tooling.
+pub fn peek_repr(bytes: &[u8]) -> Option<Repr> {
+    if bytes.len() < HEADER_LEN || &bytes[..8] != MAGIC {
+        return None;
+    }
+    match read_u32(bytes, 12) {
+        0 => Some(Repr::Float),
+        1 => Some(Repr::Packed),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::SyntheticKind;
+
+    fn float_block(nf: usize, nv: usize, first: usize) -> Block<f64> {
+        Block::Float(Arc::new(VectorSet::generate(
+            SyntheticKind::RandomGrid,
+            3,
+            nf,
+            nv,
+            first,
+        )))
+    }
+
+    #[test]
+    fn float_codec_roundtrips_bit_exactly() {
+        let b = float_block(33, 6, 12);
+        let blob = encode(&b);
+        assert_eq!(blob.len() as u64, b.resident_bytes() + HEADER_LEN as u64);
+        assert_eq!(peek_repr(&blob), Some(Repr::Float));
+        let back = decode::<f64>(&blob).unwrap();
+        assert_eq!((back.nf(), back.nv(), back.first_id()), (33, 6, 12));
+        let (a, c) = (b.as_float().unwrap(), back.as_float().unwrap());
+        for (x, y) in a.raw().iter().zip(c.raw()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn packed_codec_roundtrips_partial_trailing_words() {
+        // nf = 130: two full words + a 2-bit trailing word per vector.
+        let mut bits = BitVectorSet::generate(9, 130, 5, 0.4);
+        bits.first_id = 40;
+        let b: Block<f64> = Block::Packed(Arc::new(bits.clone()));
+        let blob = encode(&b);
+        assert_eq!(peek_repr(&blob), Some(Repr::Packed));
+        let back = decode::<f64>(&blob).unwrap();
+        let rb = back.as_packed().unwrap();
+        assert_eq!((rb.nf, rb.nv, rb.first_id), (130, 5, 40));
+        assert_eq!(rb.raw_words(), bits.raw_words());
+    }
+
+    #[test]
+    fn poisoned_payload_is_detected_not_decoded() {
+        let b = float_block(16, 4, 0);
+        let mut blob = encode(&b);
+        let last = blob.len() - 1;
+        blob[last] ^= 0x01;
+        let err = decode::<f64>(&blob).unwrap_err();
+        assert_eq!(err.kind, StoreErrorKind::Corrupt);
+        assert!(err.message.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn header_tampering_is_corrupt() {
+        let b = float_block(16, 4, 0);
+        let blob = encode(&b);
+        // Truncation.
+        assert_eq!(decode::<f64>(&blob[..HEADER_LEN - 1]).unwrap_err().kind, StoreErrorKind::Corrupt);
+        assert_eq!(decode::<f64>(&blob[..blob.len() - 3]).unwrap_err().kind, StoreErrorKind::Corrupt);
+        // Bad magic.
+        let mut bad = blob.clone();
+        bad[0] = b'X';
+        assert_eq!(decode::<f64>(&bad).unwrap_err().kind, StoreErrorKind::Corrupt);
+        // Wrong precision: an f64 spill must not decode as f32.
+        assert_eq!(decode::<f32>(&blob).unwrap_err().kind, StoreErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn dir_store_roundtrip_and_missing_key() {
+        let store = DirStore::temp("unit");
+        assert_eq!(store.get("k").unwrap(), None);
+        assert!(!store.contains("k"));
+        store.put("k", b"hello").unwrap();
+        assert!(store.contains("k"));
+        assert_eq!(store.get("k").unwrap().as_deref(), Some(&b"hello"[..]));
+        // Overwrite is allowed.
+        store.put("k", b"world").unwrap();
+        assert_eq!(store.get("k").unwrap().as_deref(), Some(&b"world"[..]));
+    }
+
+    #[test]
+    fn temp_store_removes_its_directory_on_drop() {
+        let dir = {
+            let store = DirStore::temp("drop");
+            store.put("k", b"x").unwrap();
+            assert!(store.dir().exists());
+            store.dir().to_path_buf()
+        };
+        assert!(!dir.exists(), "owned spill dir must not outlive the store");
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_and_respects_the_budget() {
+        // Succeeds on the last allowed attempt.
+        let mut calls = 0;
+        let out = with_retry(|| {
+            calls += 1;
+            if calls < RETRY_ATTEMPTS {
+                Err(StoreError::transient("flaky"))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), RETRY_ATTEMPTS);
+        // One more transient than the budget: surfaces the typed error.
+        let mut calls = 0;
+        let out: Result<(), _> = with_retry(|| {
+            calls += 1;
+            Err(StoreError::transient("always"))
+        });
+        assert_eq!(out.unwrap_err().kind, StoreErrorKind::Transient);
+        assert_eq!(calls, RETRY_ATTEMPTS);
+        // Permanent errors never retry.
+        let mut calls = 0;
+        let out: Result<(), _> = with_retry(|| {
+            calls += 1;
+            Err(StoreError::permanent("gone"))
+        });
+        assert_eq!(out.unwrap_err().kind, StoreErrorKind::Permanent);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_35c9_0d56_ab4b);
+    }
+}

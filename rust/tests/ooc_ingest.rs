@@ -1,0 +1,462 @@
+//! The ISSUE 8 out-of-core streaming-ingest contracts:
+//!
+//! 1. **Codec bit-identity** — the spill codec round-trips every block
+//!    representation (f64/f32 float panels, packed u64 words including
+//!    partial trailing words) byte-for-byte (property test).
+//! 2. **Out-of-core runs are bit-identical** — a session squeezed under
+//!    a tiny `block_cache_bytes` budget (forcing spill → reload cycles)
+//!    reproduces the unbudgeted one-shot run's checksum *and* every
+//!    streamed value, across metrics × backends × decompositions ×
+//!    thread counts — with ≥ 1 spill and ≥ 1 reload pinned by
+//!    `RunStats` and zero extra ingests (reload ≠ re-ingest).
+//! 3. **Fault injection** — scripted transient reload faults retry with
+//!    backoff and recover with zero checksum drift; permanent faults
+//!    surface as typed [`StoreError`]s through `Session::run` and as an
+//!    `Error` wire frame through `comet serve` (connection survives);
+//!    a poisoned spill file is detected by the per-block checksum.
+//! 4. **Prefetch scheduler** — the read-ahead task fetches blocks in
+//!    step-schedule order ([`prefetch_order`]), never holds more than
+//!    its in-flight budget, and makes progress at budget = 1 (the
+//!    pool's submit head-room guarantees a worker even when kernels
+//!    saturate it).
+//!
+//! Pool counters and the prefetch task share process-global state, so
+//! every test serializes on [`lock`] like `tests/simd_pool.rs`.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::prefetch::{prefetch_order, ReadAhead};
+use comet::coordinator::{self, BlockProvider, RunOutcome};
+use comet::decomp::Grid;
+use comet::metrics::{make_metric, MetricId};
+use comet::serve::{self, ServeConfig, Server};
+use comet::session::{Session, SessionLimits};
+use comet::testkit::faults::FailingStore;
+use comet::testkit::forall;
+use comet::vecdata::bits::BitVectorSet;
+use comet::vecdata::block::Block;
+use comet::vecdata::oocstore::{self, MemStore, StoreError, StoreErrorKind, RETRY_ATTEMPTS};
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn sweep_cfg(
+    metric: MetricId,
+    num_way: usize,
+    backend: BackendKind,
+    threads: usize,
+    grid: Grid,
+    precision: Precision,
+) -> RunConfig {
+    let kind = match metric {
+        MetricId::Ccc => SyntheticKind::Alleles,
+        _ => SyntheticKind::RandomGrid,
+    };
+    RunConfig {
+        metric,
+        num_way,
+        nv: 16,
+        nf: 40,
+        precision,
+        backend,
+        threads,
+        grid,
+        input: InputSource::Synthetic { kind, seed: 31 },
+        store_metrics: true,
+        ..Default::default()
+    }
+}
+
+/// Resident bytes of one of `cfg`'s blocks — measured through a
+/// throwaway unbudgeted session, so budget tests can size
+/// `block_cache_bytes` exactly (packed Sorensen blocks are ~64× smaller
+/// than the float panels of the same slice).
+fn block_bytes(cfg: &RunConfig) -> u64 {
+    let probe = Session::new();
+    let ds = probe.request_from_config(cfg).unwrap().dataset().clone();
+    match cfg.precision {
+        Precision::F64 => {
+            let m = make_metric::<f64>(cfg.metric, cfg);
+            ds.block_f64(cfg, m.as_ref(), 0, 0).unwrap().resident_bytes()
+        }
+        Precision::F32 => {
+            let m = make_metric::<f32>(cfg.metric, cfg);
+            ds.block_f32(cfg, m.as_ref(), 0, 0).unwrap().resident_bytes()
+        }
+    }
+}
+
+/// Every streamed value of `b` is bit-identical to `a`'s.
+fn assert_same_values(what: &str, cfg: &RunConfig, a: &RunOutcome, b: &RunOutcome) {
+    assert_eq!(a.checksum, b.checksum, "{what}: checksum");
+    if cfg.num_way == 2 {
+        let x = a.pairs.as_ref().unwrap().to_dense(cfg.nv);
+        let y = b.pairs.as_ref().unwrap().to_dense(cfg.nv);
+        assert_eq!(x.len(), y.len(), "{what}");
+        for (off, (p, q)) in x.iter().zip(&y).enumerate() {
+            assert_eq!(p.unwrap().to_bits(), q.unwrap().to_bits(), "{what} offset {off}");
+        }
+    } else {
+        let x = a.triples.as_ref().unwrap().to_dense(cfg.nv);
+        let y = b.triples.as_ref().unwrap().to_dense(cfg.nv);
+        assert_eq!(x.len(), y.len(), "{what}");
+        for (off, (p, q)) in x.iter().zip(&y).enumerate() {
+            assert_eq!(p.unwrap().to_bits(), q.unwrap().to_bits(), "{what} offset {off}");
+        }
+    }
+}
+
+#[test]
+fn prop_spill_codec_roundtrips_every_repr_bit_exactly() {
+    let _g = lock();
+    // nf in 1..=300 crosses the 64-bit word boundaries, so packed
+    // blocks exercise every partial-trailing-word shape; first_id and
+    // nv vary so shape metadata is pinned too. repr 0/1/2 = f64 panel,
+    // f32 panel, packed words.
+    forall(
+        "spill-codec-roundtrip",
+        60,
+        |g| {
+            let nf = g.usize_in(1, 300);
+            let nv = g.usize_in(1, 10);
+            let first = g.usize_in(0, 900);
+            let repr = g.usize_in(0, 2);
+            let density = *g.pick(&[0.0, 0.3, 1.0]);
+            let seed = g.stream.next_u64();
+            (nf, nv, first, repr, density, seed)
+        },
+        |&(nf, nv, first, repr, density, seed)| {
+            match repr {
+                0 => {
+                    let v: VectorSet<f64> =
+                        VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, first);
+                    let block = Block::Float(Arc::new(v));
+                    let back = oocstore::decode::<f64>(&oocstore::encode(&block))
+                        .map_err(|e| format!("f64 decode: {e}"))?;
+                    if (back.nf(), back.nv(), back.first_id()) != (nf, nv, first) {
+                        return Err("f64 shape metadata drifted".into());
+                    }
+                    let (a, b) = (block.as_float().unwrap(), back.as_float().unwrap());
+                    for (x, y) in a.raw().iter().zip(b.raw()) {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("f64 payload drifted at nf={nf} nv={nv}"));
+                        }
+                    }
+                }
+                1 => {
+                    let v: VectorSet<f32> =
+                        VectorSet::generate(SyntheticKind::RandomGrid, seed, nf, nv, first);
+                    let block = Block::Float(Arc::new(v));
+                    let back = oocstore::decode::<f32>(&oocstore::encode(&block))
+                        .map_err(|e| format!("f32 decode: {e}"))?;
+                    if (back.nf(), back.nv(), back.first_id()) != (nf, nv, first) {
+                        return Err("f32 shape metadata drifted".into());
+                    }
+                    let (a, b) = (block.as_float().unwrap(), back.as_float().unwrap());
+                    for (x, y) in a.raw().iter().zip(b.raw()) {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("f32 payload drifted at nf={nf} nv={nv}"));
+                        }
+                    }
+                }
+                _ => {
+                    let mut bits = BitVectorSet::generate(seed, nf, nv, density);
+                    bits.first_id = first;
+                    let block: Block<f64> = Block::Packed(Arc::new(bits.clone()));
+                    let back = oocstore::decode::<f64>(&oocstore::encode(&block))
+                        .map_err(|e| format!("packed decode: {e}"))?;
+                    let rb = back.as_packed().unwrap();
+                    if (rb.nf, rb.nv, rb.first_id) != (nf, nv, first) {
+                        return Err("packed shape metadata drifted".into());
+                    }
+                    if rb.raw_words() != bits.raw_words() {
+                        return Err(format!("packed words drifted at nf={nf} nv={nv}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn out_of_core_runs_are_bit_identical_across_metrics_backends_grids_threads() {
+    let _g = lock();
+    let combos: Vec<RunConfig> = [
+        (MetricId::Czekanowski, 2, BackendKind::CpuOptimized, 1, (1, 4, 1), Precision::F64),
+        (MetricId::Czekanowski, 2, BackendKind::CpuReference, 2, (1, 4, 1), Precision::F64),
+        (MetricId::Czekanowski, 2, BackendKind::CpuOptimized, 4, (2, 2, 1), Precision::F64),
+        (MetricId::Czekanowski, 2, BackendKind::CpuOptimized, 2, (1, 2, 2), Precision::F64),
+        (MetricId::Czekanowski, 3, BackendKind::CpuOptimized, 2, (1, 2, 1), Precision::F64),
+        (MetricId::Czekanowski, 2, BackendKind::CpuOptimized, 2, (1, 4, 1), Precision::F32),
+        (MetricId::Ccc, 2, BackendKind::CpuOptimized, 1, (1, 4, 1), Precision::F64),
+        (MetricId::Ccc, 2, BackendKind::CpuReference, 4, (1, 2, 1), Precision::F64),
+        (MetricId::Sorenson, 2, BackendKind::CpuOptimized, 2, (1, 4, 1), Precision::F64),
+        (MetricId::Sorenson, 2, BackendKind::CpuReference, 1, (1, 4, 1), Precision::F64),
+    ]
+    .into_iter()
+    .map(|(m, w, b, t, (gf, gv, gr), p)| sweep_cfg(m, w, b, t, Grid::new(gf, gv, gr), p))
+    .collect();
+    for cfg in &combos {
+        let what = format!(
+            "{} {}-way {:?} t={} grid={}x{}x{} {:?}",
+            cfg.metric.name(),
+            cfg.num_way,
+            cfg.backend,
+            cfg.threads,
+            cfg.grid.npf,
+            cfg.grid.npv,
+            cfg.grid.npr,
+            cfg.precision
+        );
+        let baseline = coordinator::run(cfg).unwrap();
+        // Budget = 1.5 blocks: every fill past the first evicts, so the
+        // cold run spills and any rerun reloads — the out-of-core path
+        // is exercised on every combo, not just the float ones.
+        let budget = block_bytes(cfg) * 3 / 2;
+        let session = Session::with_limits(
+            "artifacts",
+            SessionLimits { block_cache_bytes: Some(budget), ..Default::default() },
+        );
+        let req = session.request_from_config(cfg).unwrap();
+        let ds = req.dataset().clone();
+        let cold = session.run_collect(&req).unwrap();
+        assert!(cold.stats.spills >= 1, "{what}: cold run must spill ({:?})", cold.stats.spills);
+        let ingests_after_cold = ds.ingest_count();
+        let warm = session.run_collect(&req).unwrap();
+        assert!(warm.stats.reloads >= 1, "{what}: warm run must reload");
+        assert_eq!(ds.ingest_count(), ingests_after_cold, "{what}: a reload must never re-ingest");
+        assert_same_values(&format!("{what} cold"), cfg, &baseline, &cold);
+        assert_same_values(&format!("{what} warm"), cfg, &baseline, &warm);
+        assert!(session.cache_stats().bytes <= budget, "{what}: resident bytes over budget");
+        assert_eq!(session.cache_stats().spill_errors, 0, "{what}");
+    }
+}
+
+/// The shared fault-rig shape: Czekanowski over 4 blocks, budget 1.5
+/// blocks, spilling through a [`FailingStore`] over a [`MemStore`].
+fn fault_rig() -> (RunConfig, Arc<MemStore>, Arc<FailingStore>, Session) {
+    let cfg = sweep_cfg(
+        MetricId::Czekanowski,
+        2,
+        BackendKind::CpuOptimized,
+        2,
+        Grid::new(1, 4, 1),
+        Precision::F64,
+    );
+    let budget = block_bytes(&cfg) * 3 / 2;
+    let mem = Arc::new(MemStore::new());
+    let failing = Arc::new(FailingStore::new(mem.clone()));
+    let session = Session::with_spill_store(
+        "artifacts",
+        SessionLimits { block_cache_bytes: Some(budget), ..Default::default() },
+        failing.clone(),
+    );
+    (cfg, mem, failing, session)
+}
+
+#[test]
+fn transient_reload_faults_retry_with_backoff_and_recover_without_drift() {
+    let _g = lock();
+    let (cfg, mem, failing, session) = fault_rig();
+    let baseline = coordinator::run(&cfg).unwrap();
+    let req = session.request_from_config(&cfg).unwrap();
+    let cold = session.run_collect(&req).unwrap();
+    assert!(cold.stats.spills >= 1);
+    assert!(!mem.keys().is_empty(), "spills must land in the inner store");
+    // One fewer transient than the retry budget: however the faults
+    // split across reload calls, every reload recovers on a retry.
+    let gets_before = failing.get_attempts();
+    failing.fail_next_gets(RETRY_ATTEMPTS as usize - 1, StoreError::transient("cable wiggle"));
+    let warm = session.run_collect(&req).unwrap();
+    assert!(warm.stats.reloads >= 1, "warm run must reload through the faults");
+    assert!(
+        failing.get_attempts() >= gets_before + RETRY_ATTEMPTS as u64,
+        "faulted attempts plus the recovering reads must all be observed"
+    );
+    assert_same_values("transient recovery", &cfg, &baseline, &warm);
+}
+
+#[test]
+fn permanent_store_faults_surface_typed_and_clear_on_repair() {
+    let _g = lock();
+    let (cfg, _mem, failing, session) = fault_rig();
+    let baseline = coordinator::run(&cfg).unwrap();
+    let req = session.request_from_config(&cfg).unwrap();
+    session.run_collect(&req).unwrap();
+    // Every read fails permanently: the run must fail with the typed
+    // StoreError in its anyhow chain — downcastable, never a panic,
+    // never a silently wrong block.
+    failing.fail_next_gets(1000, StoreError::permanent("array offline"));
+    let err = session.run_collect(&req).unwrap_err();
+    let store_err = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<StoreError>())
+        .unwrap_or_else(|| panic!("no typed StoreError in chain: {err:#}"));
+    assert_eq!(store_err.kind, StoreErrorKind::Permanent);
+    // Repair the store: the same session recovers, bit-identically.
+    failing.clear_faults();
+    let recovered = session.run_collect(&req).unwrap();
+    assert!(recovered.stats.reloads >= 1);
+    assert_same_values("post-repair", &cfg, &baseline, &recovered);
+}
+
+#[test]
+fn poisoned_spill_files_are_detected_by_the_block_checksum() {
+    let _g = lock();
+    let (cfg, mem, failing, session) = fault_rig();
+    let req = session.request_from_config(&cfg).unwrap();
+    session.run_collect(&req).unwrap();
+    let keys = mem.keys();
+    assert!(!keys.is_empty());
+    for key in &keys {
+        assert!(failing.poison(key), "poisoning {key}");
+        assert!(failing.contains_inner(key));
+    }
+    let err = session.run_collect(&req).unwrap_err();
+    let store_err = err
+        .chain()
+        .find_map(|c| c.downcast_ref::<StoreError>())
+        .unwrap_or_else(|| panic!("no typed StoreError in chain: {err:#}"));
+    assert_eq!(store_err.kind, StoreErrorKind::Corrupt);
+    assert!(store_err.message.contains("checksum"), "{store_err}");
+}
+
+#[test]
+fn serve_surfaces_store_faults_as_error_frames_and_recovers() {
+    let _g = lock();
+    let line = "metric=czekanowski nv=16 nf=40 npv=4 seed=7";
+    let baseline_cfg = RunConfig::from_kv_line(line).unwrap();
+    let baseline = coordinator::run(&baseline_cfg).unwrap();
+    let budget = block_bytes(&baseline_cfg) * 3 / 2;
+    let mem = Arc::new(MemStore::new());
+    let failing = Arc::new(FailingStore::new(mem.clone()));
+    let session = Arc::new(Session::with_spill_store(
+        "artifacts",
+        SessionLimits { block_cache_bytes: Some(budget), ..Default::default() },
+        failing.clone(),
+    ));
+    let server = Server::start(Arc::clone(&session), ServeConfig::default()).unwrap();
+
+    let (mut client, server_end) = std::os::unix::net::UnixStream::pair().unwrap();
+    std::thread::scope(|s| {
+        let server = &server;
+        let conn = s.spawn(move || {
+            let reader = server_end.try_clone().unwrap();
+            serve::serve_connection(server, reader, server_end)
+        });
+
+        // Request 1 fills and spills; the reply matches the one-shot.
+        let r1 = serve::request_over_stream(&mut client, line).unwrap();
+        assert_eq!(r1.checksum, baseline.checksum.digest());
+
+        // Request 2 needs reloads and every read fails permanently: the
+        // client sees a typed Error frame naming the store fault — and
+        // the connection survives it.
+        failing.fail_next_gets(1000, StoreError::permanent("array offline"));
+        let err = serve::request_over_stream(&mut client, line).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("server error"), "{msg}");
+        assert!(msg.contains("permanent"), "{msg}");
+
+        // Request 3 after the repair: same connection, same bits.
+        failing.clear_faults();
+        let r3 = serve::request_over_stream(&mut client, line).unwrap();
+        assert_eq!(r3.checksum, baseline.checksum.digest());
+
+        drop(client); // EOF ends the connection loop cleanly
+        conn.join().unwrap().unwrap();
+    });
+
+    let cache = session.cache_stats();
+    assert!(cache.spills >= 1, "serve runs must have spilled: {cache:?}");
+    assert!(cache.reloads >= 1, "serve runs must have reloaded: {cache:?}");
+}
+
+#[test]
+fn prefetch_fetches_in_step_schedule_order_and_rehints_are_idempotent() {
+    let _g = lock();
+    // npf=2 × npv=3: six ranks over six distinct (pv, pf) keys — the
+    // schedule order is the rank order's dedup, which is what the
+    // fetch log must reproduce exactly when the budget never binds.
+    let cfg = sweep_cfg(
+        MetricId::Czekanowski,
+        2,
+        BackendKind::CpuOptimized,
+        1,
+        Grid::new(2, 3, 1),
+        Precision::F64,
+    );
+    let session = Session::new();
+    let req = session.request_from_config(&cfg).unwrap();
+    let inner = Arc::new(req.dataset().clone()) as Arc<dyn BlockProvider>;
+    let order = prefetch_order(&cfg);
+    assert_eq!(order.len(), 6, "every (pv, pf) slice appears once");
+    let ra = ReadAhead::with_budget(inner, order.len());
+    ra.prefetch(&cfg, &order);
+    ra.drain();
+    assert_eq!(ra.fetch_log(), order, "fetch order must match the step schedule");
+    assert_eq!(ra.prefetched(), order.len() as u64);
+    assert!(ra.max_ahead() <= order.len() as u64);
+    // Re-hinting the same schedule (what node programs do per-slice) is
+    // idempotent: no new fetches.
+    ra.prefetch(&cfg, &order);
+    ra.drain();
+    assert_eq!(ra.fetch_log().len(), order.len());
+    ra.finish();
+}
+
+#[test]
+fn in_flight_budget_is_never_exceeded_and_budget_one_makes_progress() {
+    let _g = lock();
+    let cfg = sweep_cfg(
+        MetricId::Czekanowski,
+        2,
+        BackendKind::CpuOptimized,
+        1,
+        Grid::new(1, 4, 1),
+        Precision::F64,
+    );
+    let session = Session::new();
+    let req = session.request_from_config(&cfg).unwrap();
+    let inner = Arc::new(req.dataset().clone()) as Arc<dyn BlockProvider>;
+    let metric = make_metric::<f64>(cfg.metric, &cfg);
+    let order = prefetch_order(&cfg);
+    // Budget 1: single buffering. The task parks after each fetch until
+    // the consumer drains it — consuming in schedule order must always
+    // unblock it (progress), and the high-water mark stays at 1.
+    let ra = ReadAhead::with_budget(Arc::clone(&inner), 1);
+    ra.prefetch(&cfg, &order);
+    for &(pv, pf) in &order {
+        let block = ra.block_f64(&cfg, metric.as_ref(), pv, pf).unwrap();
+        assert_eq!(block.nv(), cfg.nv / cfg.grid.npv);
+    }
+    ra.drain();
+    assert!(ra.max_ahead() <= 1, "budget 1 exceeded: max_ahead {}", ra.max_ahead());
+    // Consumers race the task, so the log is a prefix-free subsequence
+    // of the schedule — but never out of schedule order.
+    let log = ra.fetch_log();
+    assert!(log.len() <= order.len());
+    let mut tail = order.iter();
+    for k in &log {
+        assert!(
+            tail.any(|o| o == k),
+            "fetch log {log:?} is not a schedule-order subsequence of {order:?}"
+        );
+    }
+    ra.finish();
+    // An unhinted provider (no prefetch call) still serves fetches —
+    // and counts no stalls, because nothing was promised.
+    let ra2 = ReadAhead::with_budget(inner, 1);
+    let block = ra2.block_f64(&cfg, metric.as_ref(), 0, 0).unwrap();
+    assert_eq!(block.nv(), cfg.nv / cfg.grid.npv);
+    assert_eq!(ra2.stalls(), 0);
+    assert_eq!(ra2.stall_secs(), 0.0);
+    ra2.finish();
+}
