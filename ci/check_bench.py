@@ -37,7 +37,7 @@ ENTRY_KEYS = {
 }
 METRICS = {"czekanowski", "ccc", "sorenson"}
 REPRS = {"float", "packed"}
-KERNELS = {"full", "tri", "session-oneshot", "session-reused", "session-ooc"}
+KERNELS = {"full", "tri", "session-oneshot", "session-reused", "session-ooc", "session-faulted"}
 
 
 def check(path: Path) -> list:

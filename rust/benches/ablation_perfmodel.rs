@@ -65,6 +65,13 @@ fn main() {
             pool_warm: true,
             triangular: true,
             nst: 1,
+            reload_frac: 0.0,
+            disk_bw: 2e9,
+            prefetch: true,
+            retry_rate: 0.0,
+            t_backoff: 0.0,
+            ckpt_frac: 0.0,
+            ckpt_bw: 0.0,
             net: host_net(),
             link: host_net(),
         };
@@ -98,6 +105,13 @@ fn main() {
         pool_warm: true,
         triangular: false,
         nst: 16,
+        reload_frac: 0.0,
+        disk_bw: 2e9,
+        prefetch: true,
+        retry_rate: 0.0,
+        t_backoff: 0.0,
+        ckpt_frac: 0.0,
+        ckpt_bw: 0.0,
         net: CostModel::gemini(),
         link: CostModel::pcie2(),
     };

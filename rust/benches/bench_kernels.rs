@@ -40,7 +40,10 @@
 //!   serving every request from its ingest-once block cache) vs
 //!   "session-ooc" (the reused campaign under a block budget that
 //!   forces a spill-store round trip every run — the out-of-core
-//!   steady state). For the session points `comparisons_per_sec` is
+//!   steady state) vs "session-faulted" (the reused campaign with
+//!   scripted link drops injected into every run, each recovered by a
+//!   checksum-verified retransmit — the fault-recovery steady state).
+//!   For the session points `comparisons_per_sec` is
 //!   campaign comparisons
 //!   (nf · nv(nv−1)/2 per run × runs) over the median batch time, and
 //!   `iters` is the number of back-to-back runs per batch.
@@ -51,14 +54,16 @@
 //!   in spirit by the first measured run appended after them.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use comet::config::{InputSource, RunConfig};
-use comet::coordinator;
+use comet::coordinator::{self, run_streamed_opts, BlockProvider, RunOpts};
 use comet::decomp::Grid;
 use comet::linalg::{opcount, optimized, sorenson};
 use comet::metrics::MetricId;
 use comet::output::sink::DiscardSink;
 use comet::session::{Session, SessionLimits};
+use comet::testkit::faults::{scripted_comm_plan, FaultKind};
 use comet::util::timer::bench_run;
 use comet::vecdata::bits::BitVectorSet;
 use comet::vecdata::{SyntheticKind, VectorSet};
@@ -218,6 +223,39 @@ fn main() {
             iters: runs,
             secs: ooc,
             cps: campaign_cmps as f64 / ooc,
+        });
+
+        // Fault-recovery point: the same campaign served from the
+        // session's already-ingested blocks, with two PRNG-placed link
+        // drops scripted into every run (np=2 ranks × 2 send ops
+        // each). Every drop costs one checksum-verified retransmit
+        // plus one retry-policy backoff sleep, so the gap to
+        // "session-reused" prices the comm fault-recovery machinery in
+        // its steady state — and checksums stay bit-identical to the
+        // clean campaign by contract.
+        let clean = session.run(&req, &DiscardSink).unwrap().checksum;
+        let provider = Arc::new(req.dataset().clone()) as Arc<dyn BlockProvider>;
+        let faulted = bench_run("session-faulted", 1, iters, || {
+            for r in 0..runs {
+                let plan = scripted_comm_plan(100 + r as u64, 2, 2, 2, FaultKind::Drop);
+                let opts = RunOpts { faults: Some(plan), ..Default::default() };
+                let p = Arc::clone(&provider);
+                let out = run_streamed_opts(&cfg, None, p, &DiscardSink, &opts).unwrap();
+                assert!(out.stats.comm_retries >= 1, "faulted point must retransmit");
+                assert_eq!(out.checksum, clean, "fault recovery must stay bit-identical");
+            }
+        })
+        .median();
+        entries.push(Entry {
+            metric: "sorenson",
+            repr: "packed",
+            kernel: "session-faulted",
+            threads: 1,
+            nf,
+            nv,
+            iters: runs,
+            secs: faulted,
+            cps: campaign_cmps as f64 / faulted,
         });
     }
 

@@ -79,6 +79,13 @@ fn main() {
             pool_warm: true,
             triangular: false,
             nst: 1,
+            reload_frac: 0.0,
+            disk_bw: 2e9,
+            prefetch: true,
+            retry_rate: 0.0,
+            t_backoff: 0.0,
+            ckpt_frac: 0.0,
+            ckpt_bw: 0.0,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         };
@@ -107,6 +114,13 @@ fn main() {
             pool_warm: true,
             triangular: false,
             nst: 1,
+            reload_frac: 0.0,
+            disk_bw: 2e9,
+            prefetch: true,
+            retry_rate: 0.0,
+            t_backoff: 0.0,
+            ckpt_frac: 0.0,
+            ckpt_bw: 0.0,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         };

@@ -1,0 +1,392 @@
+//! Scripted comm-fabric fault injection — the interconnect's
+//! counterpart to `testkit::faults::FailingStore`.
+//!
+//! A [`FaultPlan`] holds a deterministic schedule of link faults keyed
+//! by `(rank, k)`: *the k-th send operation of that rank* (0-based,
+//! counted across every `send`/`sendrecv`/`allreduce_sum`/`barrier`
+//! the rank performs). Install it with
+//! [`super::VirtualCluster::with_faults`]; the endpoints consult it on
+//! every operation:
+//!
+//! * [`FaultKind::Drop`] — the envelope is lost on the wire; the link
+//!   layer's ack timeout fires and it **retransmits** under the shared
+//!   [`crate::util::retry::Policy`] backoff. Transient: the run
+//!   recovers bit-identically (only the successful delivery is
+//!   accounted). Script it more times than the retry budget and the
+//!   send surfaces a typed timeout.
+//! * [`FaultKind::Corrupt`] — a bit-flipped copy is delivered under the
+//!   clean checksum; the receiver **detects** the mismatch, discards
+//!   the envelope, and the sender retransmits. Exercises the
+//!   per-envelope FNV-64 validation end to end.
+//! * [`FaultKind::Delay`] — the envelope is delivered after a scripted
+//!   stall (a slow link, not a lost one). No retransmit, no error.
+//! * [`FaultKind::Kill`] — the rank dies at step *k*: this and every
+//!   later comm operation on it fails permanently
+//!   ([`super::CommErrorKind::Killed`]); peers waiting on it surface
+//!   typed timeouts within their recv deadline.
+//!
+//! Like `FailingStore`, the plan counts what it injects (and what the
+//! receive side detects) so rigs can assert the faults actually fired.
+//! Schedules built from a PRNG seed (`testkit::faults` has builders)
+//! are fully deterministic — no wall clock anywhere in the schedule.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One scripted link fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Lose the envelope (link retransmits after backoff).
+    Drop,
+    /// Deliver after a scripted stall.
+    Delay(Duration),
+    /// Deliver a bit-flipped copy (caught by the envelope checksum,
+    /// then retransmitted clean).
+    Corrupt,
+    /// Kill the rank permanently at this step.
+    Kill,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay(_) => "delay",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Kill => "kill",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    kind: FaultKind,
+    /// How many attempts (first try + retransmits) the fault fires on —
+    /// schedule ≥ the retry budget to pin exhaustion.
+    times: u32,
+}
+
+#[derive(Debug, Default)]
+struct RankState {
+    /// Send operations this rank has started (the step counter `k`).
+    ops: u64,
+    scheduled: HashMap<u64, Scheduled>,
+    killed: bool,
+}
+
+/// A scripted, thread-safe fault schedule shared by every endpoint of
+/// one cluster. All methods take `&self` (interior mutability) so the
+/// plan can be consulted concurrently from every node thread.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    ranks: Mutex<HashMap<usize, RankState>>,
+    /// Recv deadline override for the cluster (None → the fabric
+    /// default). Stored as nanos; 0 = unset.
+    recv_deadline_nanos: AtomicU64,
+    drops: AtomicU64,
+    delays: AtomicU64,
+    corrupts: AtomicU64,
+    kills: AtomicU64,
+    corrupt_detected: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn schedule(&self, rank: usize, k: u64, kind: FaultKind, times: u32) {
+        let mut ranks = self.ranks.lock().unwrap_or_else(|p| p.into_inner());
+        ranks
+            .entry(rank)
+            .or_default()
+            .scheduled
+            .insert(k, Scheduled { kind, times: times.max(1) });
+    }
+
+    /// Drop the k-th send of `rank` once (the retransmit delivers).
+    pub fn drop_at(&self, rank: usize, k: u64) {
+        self.drop_at_times(rank, k, 1);
+    }
+
+    /// Drop the k-th send of `rank` on `times` consecutive attempts —
+    /// schedule ≥ the retry budget to force typed exhaustion.
+    pub fn drop_at_times(&self, rank: usize, k: u64, times: u32) {
+        self.schedule(rank, k, FaultKind::Drop, times);
+    }
+
+    /// Corrupt the k-th send of `rank` once (checksum catches it, the
+    /// retransmit delivers clean).
+    pub fn corrupt_at(&self, rank: usize, k: u64) {
+        self.corrupt_at_times(rank, k, 1);
+    }
+
+    /// Corrupt the k-th send of `rank` on `times` consecutive attempts.
+    pub fn corrupt_at_times(&self, rank: usize, k: u64, times: u32) {
+        self.schedule(rank, k, FaultKind::Corrupt, times);
+    }
+
+    /// Stall the k-th send of `rank` by `delay` before delivering.
+    pub fn delay_at(&self, rank: usize, k: u64, delay: Duration) {
+        self.schedule(rank, k, FaultKind::Delay(delay), 1);
+    }
+
+    /// Kill `rank` at its k-th send: that operation and every later
+    /// comm operation on the rank fail permanently.
+    pub fn kill_at(&self, rank: usize, k: u64) {
+        self.schedule(rank, k, FaultKind::Kill, u32::MAX);
+    }
+
+    /// Shrink the cluster's blocking-recv deadline (rigs use ~hundreds
+    /// of ms so a killed peer surfaces fast; production keeps the
+    /// generous fabric default).
+    pub fn set_recv_deadline(&self, d: Duration) {
+        self.recv_deadline_nanos.store(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// The recv deadline endpoints of this plan's cluster should use.
+    pub fn recv_deadline(&self) -> Duration {
+        match self.recv_deadline_nanos.load(Ordering::Relaxed) {
+            0 => super::DEFAULT_RECV_DEADLINE,
+            n => Duration::from_nanos(n),
+        }
+    }
+
+    /// Whether `rank` has been killed (checked by every comm op).
+    pub fn is_killed(&self, rank: usize) -> bool {
+        self.ranks
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(&rank)
+            .map(|r| r.killed)
+            .unwrap_or(false)
+    }
+
+    /// Start one logical send operation of `rank`; returns its step
+    /// index `k`. Retransmit attempts belong to the same `k`.
+    pub fn begin_send(&self, rank: usize) -> u64 {
+        let mut ranks = self.ranks.lock().unwrap_or_else(|p| p.into_inner());
+        let st = ranks.entry(rank).or_default();
+        let op = st.ops;
+        st.ops += 1;
+        op
+    }
+
+    /// Consume (one firing of) the fault scheduled for `(rank, k)`, if
+    /// any remains; counts the injection. A `Kill` marks the rank dead.
+    pub fn take_send_fault(&self, rank: usize, k: u64) -> Option<FaultKind> {
+        let mut ranks = self.ranks.lock().unwrap_or_else(|p| p.into_inner());
+        let st = ranks.entry(rank).or_default();
+        let sched = st.scheduled.get_mut(&k)?;
+        if sched.times == 0 {
+            return None;
+        }
+        sched.times = sched.times.saturating_sub(1);
+        let kind = sched.kind;
+        match kind {
+            FaultKind::Drop => self.drops.fetch_add(1, Ordering::Relaxed),
+            FaultKind::Delay(_) => self.delays.fetch_add(1, Ordering::Relaxed),
+            FaultKind::Corrupt => self.corrupts.fetch_add(1, Ordering::Relaxed),
+            FaultKind::Kill => {
+                st.killed = true;
+                self.kills.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        Some(kind)
+    }
+
+    /// Send operations `rank` has started so far (faulted attempts and
+    /// clean sends alike) — the mirror of `FailingStore`'s attempt
+    /// counters.
+    pub fn send_ops(&self, rank: usize) -> u64 {
+        self.ranks
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(&rank)
+            .map(|r| r.ops)
+            .unwrap_or(0)
+    }
+
+    /// Record a receive-side checksum rejection.
+    pub fn note_corrupt_detected(&self) {
+        self.corrupt_detected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn drops_injected(&self) -> u64 {
+        self.drops.load(Ordering::Relaxed)
+    }
+    pub fn delays_injected(&self) -> u64 {
+        self.delays.load(Ordering::Relaxed)
+    }
+    pub fn corrupts_injected(&self) -> u64 {
+        self.corrupts.load(Ordering::Relaxed)
+    }
+    pub fn kills_injected(&self) -> u64 {
+        self.kills.load(Ordering::Relaxed)
+    }
+    pub fn corrupts_detected(&self) -> u64 {
+        self.corrupt_detected.load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected across every class.
+    pub fn injected(&self) -> u64 {
+        self.drops_injected()
+            + self.delays_injected()
+            + self.corrupts_injected()
+            + self.kills_injected()
+    }
+
+    /// The remaining (not-yet-fired) schedule as sorted
+    /// `(rank, k, kind)` triples — introspection for determinism tests.
+    pub fn remaining_schedule(&self) -> Vec<(usize, u64, FaultKind)> {
+        let ranks = self.ranks.lock().unwrap_or_else(|p| p.into_inner());
+        let mut out: Vec<_> = ranks
+            .iter()
+            .flat_map(|(&rank, st)| {
+                st.scheduled
+                    .iter()
+                    .filter(|(_, s)| s.times > 0)
+                    .map(move |(&k, s)| (rank, k, s.kind))
+            })
+            .collect();
+        out.sort_by_key(|&(r, k, _)| (r, k));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommErrorKind, Payload, VirtualCluster};
+    use std::sync::Arc;
+
+    fn token(ep_payload: Payload) -> u64 {
+        match ep_payload {
+            Payload::Token(t) => t,
+            other => panic!("expected Token, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_envelope_is_retransmitted_and_counted_once() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.drop_at(0, 0);
+        let mut cluster = VirtualCluster::with_faults(2, 8, Arc::clone(&plan));
+        let counters = cluster.counters();
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send(1, 1, Payload::Token(42)).unwrap();
+        assert_eq!(token(e1.recv(0, 1).unwrap()), 42);
+        // One retransmit recovered the drop; accounting saw ONE message.
+        assert_eq!(e0.retransmits(), 1);
+        assert_eq!(plan.drops_injected(), 1);
+        assert_eq!(counters.messages.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(e0.sent(), (1, 8));
+        // The step counter advanced once per logical send.
+        assert_eq!(plan.send_ops(0), 1);
+    }
+
+    #[test]
+    fn corrupted_envelope_is_detected_then_replaced_clean() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.corrupt_at(0, 0);
+        let mut cluster = VirtualCluster::with_faults(2, 8, Arc::clone(&plan));
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let payload = Payload::Partial(Arc::new(vec![1.25, -3.5]));
+        e0.send(1, 9, payload).unwrap();
+        // The receiver sees the CLEAN payload — bit-identical.
+        match e1.recv(0, 9).unwrap() {
+            Payload::Partial(d) => assert_eq!(*d, vec![1.25, -3.5]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(e1.corrupt_detected(), 1);
+        assert_eq!(plan.corrupts_injected(), 1);
+        assert_eq!(plan.corrupts_detected(), 1);
+        assert_eq!(e0.retransmits(), 1);
+    }
+
+    #[test]
+    fn delay_stalls_but_delivers_without_retry() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.delay_at(0, 0, Duration::from_millis(15));
+        let mut cluster = VirtualCluster::with_faults(2, 8, Arc::clone(&plan));
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let t0 = std::time::Instant::now();
+        e0.send(1, 1, Payload::Token(5)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        assert_eq!(token(e1.recv(0, 1).unwrap()), 5);
+        assert_eq!(e0.retransmits(), 0);
+        assert_eq!(plan.delays_injected(), 1);
+    }
+
+    #[test]
+    fn persistent_drop_exhausts_the_retry_budget_with_typed_error() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.drop_at_times(0, 0, u32::MAX);
+        let mut cluster = VirtualCluster::with_faults(2, 8, Arc::clone(&plan));
+        let mut eps = cluster.endpoints();
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let err = e0.send(1, 1, Payload::Token(0)).unwrap_err();
+        assert_eq!(err.kind, CommErrorKind::Timeout);
+        // Exactly the policy budget's worth of drops fired.
+        assert_eq!(plan.drops_injected() as u32, crate::util::retry::DEFAULT_ATTEMPTS);
+        assert_eq!(e0.sent(), (0, 0), "no successful delivery may be accounted");
+    }
+
+    #[test]
+    fn killed_rank_fails_permanently_and_peers_time_out() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.kill_at(0, 1);
+        plan.set_recv_deadline(Duration::from_millis(30));
+        let mut cluster = VirtualCluster::with_faults(2, 8, Arc::clone(&plan));
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // Send 0 is clean; send 1 is the kill point.
+        e0.send(1, 1, Payload::Token(0)).unwrap();
+        let err = e0.send(1, 2, Payload::Token(1)).unwrap_err();
+        assert_eq!(err.kind, CommErrorKind::Killed);
+        // Every later op on the killed rank fails the same way …
+        assert_eq!(e0.send(1, 3, Payload::Token(2)).unwrap_err().kind, CommErrorKind::Killed);
+        assert_eq!(e0.recv(1, 1).unwrap_err().kind, CommErrorKind::Killed);
+        assert!(plan.is_killed(0));
+        assert_eq!(plan.kills_injected(), 1);
+        // … and the waiting peer gets a bounded typed timeout, not a hang.
+        assert_eq!(token(e1.recv(0, 1).unwrap()), 0);
+        assert_eq!(e1.recv(0, 2).unwrap_err().kind, CommErrorKind::Timeout);
+    }
+
+    #[test]
+    fn schedules_are_introspectable_and_deterministic() {
+        let build = || {
+            let plan = FaultPlan::new();
+            plan.drop_at(2, 7);
+            plan.corrupt_at(0, 3);
+            plan.delay_at(1, 5, Duration::from_millis(1));
+            plan.kill_at(3, 11);
+            plan
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a.remaining_schedule(), b.remaining_schedule());
+        assert_eq!(a.remaining_schedule().len(), 4);
+        // Consuming a fault removes it from the remaining schedule.
+        assert_eq!(a.begin_send(0), 0);
+        for _ in 0..3 {
+            assert!(a.begin_send(0) > 0);
+        }
+        assert_eq!(a.take_send_fault(0, 3), Some(FaultKind::Corrupt));
+        assert_eq!(a.take_send_fault(0, 3), None);
+        assert_eq!(a.remaining_schedule().len(), 3);
+        // Unscheduled steps yield no fault.
+        assert_eq!(a.take_send_fault(2, 0), None);
+    }
+}

@@ -8,15 +8,103 @@
 //! same pairing discipline as Algorithm 1/2's ring exchanges. Message
 //! and byte counts are accounted per node so benches can report the
 //! communication volumes the paper's model (§6.3) prices.
+//!
+//! ## Fault model
+//!
+//! Leadership-scale fabrics drop, delay, corrupt, and lose nodes; the
+//! simulated fabric mirrors that failure surface so the layers above
+//! can be exercised against it:
+//!
+//! * every comm operation returns a typed [`CommError`] instead of
+//!   blocking forever or panicking — [`Endpoint::recv`] bounds its wait
+//!   with a deadline ([`DEFAULT_RECV_DEADLINE`], shrinkable per plan),
+//!   and a send to a torn-down peer surfaces as
+//!   [`CommErrorKind::PeerDead`];
+//! * every envelope carries an FNV-64 checksum over its canonical
+//!   payload bytes, validated on receive — a bit-flip on the simulated
+//!   wire is **detected** ([`CommErrorKind::Corrupt`]), never decoded
+//!   into wrong results;
+//! * the link layer retransmits dropped/corrupted envelopes under the
+//!   shared [`crate::util::retry::Policy`] backoff (the same policy as
+//!   `oocstore::with_retry`), so transient faults recover bit-identically
+//!   while permanent ones (a killed node, an exhausted retry budget)
+//!   surface as typed errors within a bounded deadline;
+//! * [`faults::FaultPlan`] is the injection seam: scripted drop / delay /
+//!   corrupt / kill faults at the *k*-th send of a rank (in the spirit of
+//!   `testkit::faults::FailingStore`), installed via
+//!   [`VirtualCluster::with_faults`]. Fault-free clusters pay zero extra
+//!   messages or bytes — counters tick only on successful delivery.
 
 pub mod cost;
+pub mod faults;
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::util::retry::Policy;
 use crate::vecdata::block::BlockData;
+use faults::{FaultKind, FaultPlan};
+
+/// How long a blocking [`Endpoint::recv`] waits before surfacing
+/// [`CommErrorKind::Timeout`]. Generous — healthy runs never come close;
+/// fault rigs shorten it via [`faults::FaultPlan::set_recv_deadline`].
+pub const DEFAULT_RECV_DEADLINE: Duration = Duration::from_secs(30);
+
+/// How a comm operation failed — the axis the retry layer and the node
+/// supervisor key on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommErrorKind {
+    /// No matching envelope arrived within the recv deadline.
+    Timeout,
+    /// The peer's endpoint is gone (its mailbox was torn down).
+    PeerDead,
+    /// An envelope failed its payload checksum (or the protocol saw an
+    /// unexpected payload variant) and no clean copy arrived in budget.
+    Corrupt,
+    /// This rank was killed by the fault plan; every subsequent comm
+    /// operation on it fails permanently.
+    Killed,
+}
+
+impl CommErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CommErrorKind::Timeout => "timeout",
+            CommErrorKind::PeerDead => "peer-dead",
+            CommErrorKind::Corrupt => "corrupt",
+            CommErrorKind::Killed => "killed",
+        }
+    }
+}
+
+/// Typed comm-fabric error. Travels through `anyhow` chains without
+/// losing its type — supervisors `downcast_ref::<CommError>()` to tell
+/// a timeout from a kill.
+#[derive(Debug, Clone)]
+pub struct CommError {
+    pub kind: CommErrorKind,
+    /// Rank that observed the failure.
+    pub rank: usize,
+    pub message: String,
+}
+
+impl CommError {
+    pub fn new(kind: CommErrorKind, rank: usize, message: impl Into<String>) -> Self {
+        CommError { kind, rank, message: message.into() }
+    }
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "comm {} error at rank {}: {}", self.kind.name(), self.rank, self.message)
+    }
+}
+
+impl std::error::Error for CommError {}
 
 /// Message payload: a block of vector data or a small control value.
 /// Blocks travel in their metric-preferred representation
@@ -54,14 +142,129 @@ impl Payload {
     }
 }
 
+/// Streaming FNV-1a 64 over an envelope's canonical payload bytes
+/// (variant tag, shape, then data at its bit-exact LE encoding) —
+/// computed at send, validated at receive, so a wire bit-flip is
+/// caught before the payload reaches a node program.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, x: u64) {
+        self.update(&x.to_le_bytes());
+    }
+}
+
+/// Canonical checksum of a payload (pure — same payload, same value).
+pub fn payload_checksum(p: &Payload) -> u64 {
+    let mut h = Fnv::new();
+    match p {
+        Payload::Block { nf, nv, first_id, data } => {
+            h.u64(1);
+            h.u64(*nf as u64);
+            h.u64(*nv as u64);
+            h.u64(*first_id as u64);
+            match data {
+                BlockData::F64(d) => {
+                    h.u64(0);
+                    for x in d.iter() {
+                        h.u64(x.to_bits());
+                    }
+                }
+                BlockData::Packed(pb) => {
+                    h.u64(1);
+                    h.u64(pb.words_per_vec as u64);
+                    for w in pb.words.iter() {
+                        h.u64(*w);
+                    }
+                }
+            }
+        }
+        Payload::Partial(d) => {
+            h.u64(2);
+            for x in d.iter() {
+                h.u64(x.to_bits());
+            }
+        }
+        Payload::Sums(d) => {
+            h.u64(3);
+            for x in d.iter() {
+                h.u64(x.to_bits());
+            }
+        }
+        Payload::Token(t) => {
+            h.u64(4);
+            h.u64(*t);
+        }
+    }
+    h.0
+}
+
+/// A wire bit-flip: the payload with one data bit inverted (the
+/// checksum in the envelope still describes the clean payload, so the
+/// receiver's validation fires). Used only by the fault injector.
+fn bitflip(p: &Payload) -> Payload {
+    match p {
+        Payload::Block { nf, nv, first_id, data } => {
+            let data = match data {
+                BlockData::F64(d) => {
+                    let mut v = (**d).clone();
+                    if let Some(x) = v.first_mut() {
+                        *x = f64::from_bits(x.to_bits() ^ 1);
+                    }
+                    BlockData::F64(Arc::new(v))
+                }
+                BlockData::Packed(pb) => {
+                    let mut words = (*pb.words).clone();
+                    if let Some(w) = words.first_mut() {
+                        *w ^= 1;
+                    }
+                    BlockData::Packed(crate::vecdata::block::PackedBlock {
+                        words_per_vec: pb.words_per_vec,
+                        words: Arc::new(words),
+                    })
+                }
+            };
+            Payload::Block { nf: *nf, nv: *nv, first_id: *first_id, data }
+        }
+        Payload::Partial(d) => {
+            let mut v = (**d).clone();
+            if let Some(x) = v.first_mut() {
+                *x = f64::from_bits(x.to_bits() ^ 1);
+            }
+            Payload::Partial(Arc::new(v))
+        }
+        Payload::Sums(d) => {
+            let mut v = (**d).clone();
+            if let Some(x) = v.first_mut() {
+                *x = f64::from_bits(x.to_bits() ^ 1);
+            }
+            Payload::Sums(Arc::new(v))
+        }
+        Payload::Token(t) => Payload::Token(t ^ 1),
+    }
+}
+
 #[derive(Debug)]
 struct Envelope {
     from: usize,
     tag: u64,
+    checksum: u64,
     payload: Payload,
 }
 
-/// Shared per-cluster counters (the §6.3 accounting inputs).
+/// Shared per-cluster counters (the §6.3 accounting inputs). Only
+/// successfully delivered envelopes tick these — retransmits of dropped
+/// or corrupted envelopes are the link layer's business, so fault-free
+/// and fault-recovered runs account identically.
 #[derive(Debug, Default)]
 pub struct CommCounters {
     pub messages: AtomicU64,
@@ -75,11 +278,22 @@ pub struct VirtualCluster {
     receivers: Vec<Option<Receiver<Envelope>>>,
     counters: Arc<CommCounters>,
     elem_bytes: usize,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl VirtualCluster {
     /// `elem_bytes`: precision width used for wire-byte accounting.
     pub fn new(np: usize, elem_bytes: usize) -> Self {
+        Self::build(np, elem_bytes, None)
+    }
+
+    /// A cluster whose link layer runs under a scripted
+    /// [`faults::FaultPlan`] — the fault-injection seam for rigs.
+    pub fn with_faults(np: usize, elem_bytes: usize, plan: Arc<FaultPlan>) -> Self {
+        Self::build(np, elem_bytes, Some(plan))
+    }
+
+    fn build(np: usize, elem_bytes: usize, faults: Option<Arc<FaultPlan>>) -> Self {
         let mut senders = Vec::with_capacity(np);
         let mut receivers = Vec::with_capacity(np);
         for _ in 0..np {
@@ -92,6 +306,7 @@ impl VirtualCluster {
             receivers,
             counters: Arc::new(CommCounters::default()),
             elem_bytes,
+            faults,
         }
     }
 
@@ -105,6 +320,11 @@ impl VirtualCluster {
 
     /// Take all endpoints (consumes the receivers; call once).
     pub fn endpoints(&mut self) -> Vec<Endpoint> {
+        let deadline = self
+            .faults
+            .as_ref()
+            .map(|f| f.recv_deadline())
+            .unwrap_or(DEFAULT_RECV_DEADLINE);
         (0..self.np())
             .map(|rank| Endpoint {
                 rank,
@@ -114,8 +334,12 @@ impl VirtualCluster {
                 stash: HashMap::new(),
                 counters: Arc::clone(&self.counters),
                 elem_bytes: self.elem_bytes,
+                deadline,
+                faults: self.faults.clone(),
                 sent_messages: 0,
                 sent_bytes: 0,
+                retransmits: 0,
+                corrupt_detected: 0,
             })
             .collect()
     }
@@ -132,28 +356,104 @@ pub struct Endpoint {
     stash: HashMap<(usize, u64), Vec<Payload>>,
     counters: Arc<CommCounters>,
     elem_bytes: usize,
+    deadline: Duration,
+    faults: Option<Arc<FaultPlan>>,
     /// This rank's own sent totals (mirrored into `RunStats` by the
     /// node programs so `RunStats::absorb` sums match cluster totals).
     sent_messages: u64,
     sent_bytes: u64,
+    /// Link-layer retransmits this rank performed recovering from
+    /// scripted drops/corruptions (0 on a healthy fabric).
+    retransmits: u64,
+    /// Envelopes this rank discarded on checksum mismatch.
+    corrupt_detected: u64,
 }
 
 impl Endpoint {
+    fn err(&self, kind: CommErrorKind, message: impl Into<String>) -> CommError {
+        CommError::new(kind, self.rank, message)
+    }
+
+    fn check_alive(&self) -> Result<(), CommError> {
+        if let Some(f) = &self.faults {
+            if f.is_killed(self.rank) {
+                return Err(self.err(CommErrorKind::Killed, "node killed by fault plan"));
+            }
+        }
+        Ok(())
+    }
+
     /// Non-blocking tagged send (buffered — never deadlocks on unpaired
-    /// sends, like MPI_Isend with ample buffering).
-    pub fn send(&mut self, to: usize, tag: u64, payload: Payload) {
+    /// sends, like MPI_Isend with ample buffering). The link layer
+    /// retransmits scripted drops/corruptions under the shared backoff
+    /// policy; only the successful delivery is accounted.
+    pub fn send(&mut self, to: usize, tag: u64, payload: Payload) -> Result<(), CommError> {
+        self.check_alive()?;
         let bytes = payload.bytes(self.elem_bytes);
-        self.counters.messages.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes.fetch_add(bytes, Ordering::Relaxed);
-        self.sent_messages += 1;
-        self.sent_bytes += bytes;
-        self.senders[to]
-            .send(Envelope {
-                from: self.rank,
-                tag,
-                payload,
-            })
-            .expect("peer endpoint dropped");
+        let checksum = payload_checksum(&payload);
+        let op = self.faults.as_ref().map(|f| f.begin_send(self.rank));
+        let policy = Policy::seeded(self.rank as u64);
+        let mut attempt: u32 = 0;
+        loop {
+            let fault = match (&self.faults, op) {
+                (Some(f), Some(op)) => f.take_send_fault(self.rank, op),
+                _ => None,
+            };
+            match fault {
+                Some(FaultKind::Kill) => {
+                    // The plan marked this rank dead; surface permanently.
+                    return Err(self.err(CommErrorKind::Killed, "node killed by fault plan"));
+                }
+                Some(FaultKind::Drop) => {
+                    // Envelope lost on the wire; the ack timeout fires
+                    // and the link layer retransmits after backoff.
+                    if attempt + 1 >= policy.attempts {
+                        return Err(self.err(
+                            CommErrorKind::Timeout,
+                            format!("send to {to} tag {tag}: retransmit budget exhausted"),
+                        ));
+                    }
+                    std::thread::sleep(policy.delay(attempt));
+                    attempt += 1;
+                    self.retransmits += 1;
+                    continue;
+                }
+                Some(FaultKind::Corrupt) => {
+                    // Deliver a bit-flipped copy under the clean
+                    // checksum: the receiver's validation fires, the
+                    // nack comes back, and the link layer retransmits.
+                    let _ = self.senders[to].send(Envelope {
+                        from: self.rank,
+                        tag,
+                        checksum,
+                        payload: bitflip(&payload),
+                    });
+                    if attempt + 1 >= policy.attempts {
+                        return Err(self.err(
+                            CommErrorKind::Corrupt,
+                            format!("send to {to} tag {tag}: retransmit budget exhausted"),
+                        ));
+                    }
+                    std::thread::sleep(policy.delay(attempt));
+                    attempt += 1;
+                    self.retransmits += 1;
+                    continue;
+                }
+                Some(FaultKind::Delay(d)) => {
+                    std::thread::sleep(d);
+                }
+                None => {}
+            }
+            self.counters.messages.fetch_add(1, Ordering::Relaxed);
+            self.counters.bytes.fetch_add(bytes, Ordering::Relaxed);
+            self.sent_messages += 1;
+            self.sent_bytes += bytes;
+            return self.senders[to]
+                .send(Envelope { from: self.rank, tag, checksum, payload })
+                .map_err(|_| {
+                    self.err(CommErrorKind::PeerDead, format!("peer {to} endpoint dropped"))
+                });
+        }
     }
 
     /// (messages, bytes) this endpoint has sent so far.
@@ -161,32 +461,135 @@ impl Endpoint {
         (self.sent_messages, self.sent_bytes)
     }
 
-    /// Blocking tagged receive from a specific source.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Payload {
+    /// Link-layer retransmits performed recovering from scripted
+    /// drops/corruptions (0 on a healthy fabric).
+    pub fn retransmits(&self) -> u64 {
+        self.retransmits
+    }
+
+    /// Envelopes discarded on checksum mismatch.
+    pub fn corrupt_detected(&self) -> u64 {
+        self.corrupt_detected
+    }
+
+    /// Validate-and-sort one arrived envelope; returns the payload when
+    /// it matches (from, tag), stashes it otherwise. Corrupt envelopes
+    /// are discarded (the sender's link layer retransmits).
+    fn accept(
+        &mut self,
+        env: Envelope,
+        from: usize,
+        tag: u64,
+    ) -> Option<Payload> {
+        if payload_checksum(&env.payload) != env.checksum {
+            self.corrupt_detected += 1;
+            if let Some(f) = &self.faults {
+                f.note_corrupt_detected();
+            }
+            return None;
+        }
+        if env.from == from && env.tag == tag {
+            return Some(env.payload);
+        }
+        self.stash.entry((env.from, env.tag)).or_default().push(env.payload);
+        None
+    }
+
+    /// Tagged receive bounded by an explicit deadline. Out-of-order
+    /// arrivals for other (source, tag) pairs are stashed; envelopes
+    /// failing their checksum are discarded (the link layer's
+    /// retransmit supplies the clean copy).
+    pub fn recv_deadline(
+        &mut self,
+        from: usize,
+        tag: u64,
+        deadline: Duration,
+    ) -> Result<Payload, CommError> {
+        self.check_alive()?;
         if let Some(q) = self.stash.get_mut(&(from, tag)) {
             if !q.is_empty() {
-                return q.remove(0);
+                return Ok(q.remove(0));
+            }
+        }
+        let expires = Instant::now() + deadline;
+        loop {
+            let remaining = expires.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(self.err(
+                    CommErrorKind::Timeout,
+                    format!("recv from {from} tag {tag}: no envelope within {deadline:?}"),
+                ));
+            }
+            match self.rx.recv_timeout(remaining) {
+                Ok(env) => {
+                    if let Some(p) = self.accept(env, from, tag) {
+                        return Ok(p);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(self.err(
+                        CommErrorKind::Timeout,
+                        format!("recv from {from} tag {tag}: no envelope within {deadline:?}"),
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.err(
+                        CommErrorKind::PeerDead,
+                        format!("recv from {from} tag {tag}: fabric torn down"),
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Blocking tagged receive from a specific source, bounded by the
+    /// endpoint's default deadline (never blocks forever: a dead peer
+    /// surfaces as a typed [`CommErrorKind::Timeout`]).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Payload, CommError> {
+        self.recv_deadline(from, tag, self.deadline)
+    }
+
+    /// Non-blocking tagged receive: `Ok(None)` when no matching
+    /// envelope has arrived yet.
+    pub fn try_recv(&mut self, from: usize, tag: u64) -> Result<Option<Payload>, CommError> {
+        self.check_alive()?;
+        if let Some(q) = self.stash.get_mut(&(from, tag)) {
+            if !q.is_empty() {
+                return Ok(Some(q.remove(0)));
             }
         }
         loop {
-            let env = self.rx.recv().expect("cluster torn down mid-recv");
-            if env.from == from && env.tag == tag {
-                return env.payload;
+            match self.rx.try_recv() {
+                Ok(env) => {
+                    if let Some(p) = self.accept(env, from, tag) {
+                        return Ok(Some(p));
+                    }
+                }
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(self.err(
+                        CommErrorKind::PeerDead,
+                        format!("try_recv from {from} tag {tag}: fabric torn down"),
+                    ));
+                }
             }
-            self.stash
-                .entry((env.from, env.tag))
-                .or_default()
-                .push(env.payload);
         }
     }
 
     /// Ring send-and-receive (the Algorithm 1 exchange step): send own
     /// payload to `to`, receive the matching payload from `from`.
-    pub fn sendrecv(&mut self, to: usize, from: usize, tag: u64, payload: Payload) -> Payload {
+    pub fn sendrecv(
+        &mut self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        payload: Payload,
+    ) -> Result<Payload, CommError> {
         if to == self.rank && from == self.rank {
-            return payload; // self-exchange is the identity
+            self.check_alive()?;
+            return Ok(payload); // self-exchange is the identity
         }
-        self.send(to, tag, payload);
+        self.send(to, tag, payload)?;
         self.recv(from, tag)
     }
 
@@ -194,53 +597,69 @@ impl Endpoint {
     /// must contain this rank). Gather-to-root + broadcast: O(2·|g|)
     /// messages — fine at simulation scale, same byte volume as a tree
     /// for the accounting's purposes.
-    pub fn allreduce_sum(&mut self, group: &[usize], tag: u64, mut data: Vec<f64>) -> Vec<f64> {
+    pub fn allreduce_sum(
+        &mut self,
+        group: &[usize],
+        tag: u64,
+        mut data: Vec<f64>,
+    ) -> Result<Vec<f64>, CommError> {
         if group.len() <= 1 {
-            return data;
+            self.check_alive()?;
+            return Ok(data);
         }
         let root = group[0];
         if self.rank == root {
             for &peer in &group[1..] {
-                match self.recv(peer, tag) {
+                match self.recv(peer, tag)? {
                     Payload::Partial(d) => {
                         for (a, b) in data.iter_mut().zip(d.iter()) {
                             *a += b;
                         }
                     }
-                    other => panic!("allreduce expected Partial, got {other:?}"),
+                    other => {
+                        return Err(self.err(
+                            CommErrorKind::Corrupt,
+                            format!("allreduce expected Partial, got {other:?}"),
+                        ))
+                    }
                 }
             }
             let out = Arc::new(data);
             for &peer in &group[1..] {
-                self.send(peer, tag + 1, Payload::Partial(Arc::clone(&out)));
+                self.send(peer, tag + 1, Payload::Partial(Arc::clone(&out)))?;
             }
-            Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone())
+            Ok(Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone()))
         } else {
-            self.send(root, tag, Payload::Partial(Arc::new(data)));
-            match self.recv(root, tag + 1) {
-                Payload::Partial(d) => (*d).clone(),
-                other => panic!("allreduce expected Partial, got {other:?}"),
+            self.send(root, tag, Payload::Partial(Arc::new(data)))?;
+            match self.recv(root, tag + 1)? {
+                Payload::Partial(d) => Ok((*d).clone()),
+                other => Err(self.err(
+                    CommErrorKind::Corrupt,
+                    format!("allreduce expected Partial, got {other:?}"),
+                )),
             }
         }
     }
 
     /// Barrier over `group` (gather tokens at root, release).
-    pub fn barrier(&mut self, group: &[usize], tag: u64) {
+    pub fn barrier(&mut self, group: &[usize], tag: u64) -> Result<(), CommError> {
         if group.len() <= 1 {
-            return;
+            self.check_alive()?;
+            return Ok(());
         }
         let root = group[0];
         if self.rank == root {
             for &peer in &group[1..] {
-                let _ = self.recv(peer, tag);
+                let _ = self.recv(peer, tag)?;
             }
             for &peer in &group[1..] {
-                self.send(peer, tag + 1, Payload::Token(0));
+                self.send(peer, tag + 1, Payload::Token(0))?;
             }
         } else {
-            self.send(root, tag, Payload::Token(0));
-            let _ = self.recv(root, tag + 1);
+            self.send(root, tag, Payload::Token(0))?;
+            let _ = self.recv(root, tag + 1)?;
         }
+        Ok(())
     }
 }
 
@@ -256,13 +675,13 @@ mod tests {
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         // Send two tags out of order; recv must match by tag.
-        e0.send(1, 7, Payload::Token(77));
-        e0.send(1, 5, Payload::Token(55));
-        match e1.recv(0, 5) {
+        e0.send(1, 7, Payload::Token(77)).unwrap();
+        e0.send(1, 5, Payload::Token(55)).unwrap();
+        match e1.recv(0, 5).unwrap() {
             Payload::Token(t) => assert_eq!(t, 55),
             _ => panic!(),
         }
-        match e1.recv(0, 7) {
+        match e1.recv(0, 7).unwrap() {
             Payload::Token(t) => assert_eq!(t, 77),
             _ => panic!(),
         }
@@ -282,7 +701,7 @@ mod tests {
                     // shift by 1: send to rank-1, receive from rank+1.
                     let to = (rank + np - 1) % np;
                     let from = (rank + 1) % np;
-                    match ep.sendrecv(to, from, 1, own) {
+                    match ep.sendrecv(to, from, 1, own).unwrap() {
                         Payload::Partial(d) => d[0] as usize,
                         _ => panic!(),
                     }
@@ -297,7 +716,7 @@ mod tests {
     fn self_sendrecv_is_identity() {
         let mut cluster = VirtualCluster::new(1, 8);
         let mut ep = cluster.endpoints().pop().unwrap();
-        match ep.sendrecv(0, 0, 1, Payload::Token(9)) {
+        match ep.sendrecv(0, 0, 1, Payload::Token(9)).unwrap() {
             Payload::Token(t) => assert_eq!(t, 9),
             _ => panic!(),
         }
@@ -314,7 +733,7 @@ mod tests {
                 thread::spawn(move || {
                     let group = [0, 1, 2];
                     let data = vec![ep.rank as f64, 1.0];
-                    ep.allreduce_sum(&group, 10, data)
+                    ep.allreduce_sum(&group, 10, data).unwrap()
                 })
             })
             .collect();
@@ -339,8 +758,9 @@ mod tests {
                 first_id: 0,
                 data: BlockData::F64(Arc::new(vec![0.0; 20])),
             },
-        );
-        let _ = e1.recv(0, 1);
+        )
+        .unwrap();
+        let _ = e1.recv(0, 1).unwrap();
         assert_eq!(counters.messages.load(Ordering::Relaxed), 1);
         assert_eq!(counters.bytes.load(Ordering::Relaxed), 80); // 20 × 4B
         assert_eq!(e0.sent(), (1, 80));
@@ -401,8 +821,9 @@ mod tests {
                     words: Arc::new(vec![0; 4]),
                 }),
             },
-        );
-        let _ = e1.recv(0, 3);
+        )
+        .unwrap();
+        let _ = e1.recv(0, 3).unwrap();
         assert_eq!(counters.bytes.load(Ordering::Relaxed), 32);
         assert_eq!(e0.sent(), (1, 32));
     }
@@ -420,7 +841,7 @@ mod tests {
                 thread::spawn(move || {
                     let group: Vec<usize> = (0..np).collect();
                     flag.fetch_add(1, Ordering::SeqCst);
-                    ep.barrier(&group, 100);
+                    ep.barrier(&group, 100).unwrap();
                     // After the barrier everyone must have incremented.
                     assert_eq!(flag.load(Ordering::SeqCst), np as u64);
                 })
@@ -429,5 +850,90 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn recv_times_out_instead_of_blocking_forever() {
+        let plan = Arc::new(FaultPlan::new());
+        plan.set_recv_deadline(Duration::from_millis(20));
+        let mut cluster = VirtualCluster::with_faults(2, 8, plan);
+        let mut ep = cluster.endpoints().remove(1);
+        let t0 = Instant::now();
+        let err = ep.recv(0, 1).unwrap_err();
+        assert_eq!(err.kind, CommErrorKind::Timeout);
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline must bound the wait");
+        // Explicit deadlines work without a plan too.
+        let mut cluster = VirtualCluster::new(2, 8);
+        let mut ep = cluster.endpoints().remove(1);
+        let err = ep.recv_deadline(0, 1, Duration::from_millis(10)).unwrap_err();
+        assert_eq!(err.kind, CommErrorKind::Timeout);
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking_and_tag_matched() {
+        let mut cluster = VirtualCluster::new(2, 8);
+        let mut eps = cluster.endpoints();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        assert!(e1.try_recv(0, 1).unwrap().is_none());
+        e0.send(1, 2, Payload::Token(2)).unwrap();
+        e0.send(1, 1, Payload::Token(1)).unwrap();
+        // Drain until the tag-1 envelope is visible (send is async).
+        let p = loop {
+            if let Some(p) = e1.try_recv(0, 1).unwrap() {
+                break p;
+            }
+        };
+        match p {
+            Payload::Token(t) => assert_eq!(t, 1),
+            _ => panic!(),
+        }
+        // The out-of-order tag-2 envelope was stashed, not lost.
+        match e1.recv(0, 2).unwrap() {
+            Payload::Token(t) => assert_eq!(t, 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn send_to_dropped_peer_is_peer_dead() {
+        let mut cluster = VirtualCluster::new(2, 8);
+        let mut eps = cluster.endpoints();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e1);
+        let err = e0.send(1, 1, Payload::Token(0)).unwrap_err();
+        assert_eq!(err.kind, CommErrorKind::PeerDead);
+    }
+
+    #[test]
+    fn checksum_covers_every_payload_variant() {
+        let a = Payload::Partial(Arc::new(vec![1.0, 2.0]));
+        let b = Payload::Partial(Arc::new(vec![1.0, 2.0]));
+        assert_eq!(payload_checksum(&a), payload_checksum(&b));
+        // A single flipped bit changes the checksum.
+        assert_ne!(payload_checksum(&a), payload_checksum(&bitflip(&a)));
+        let t = Payload::Token(7);
+        assert_ne!(payload_checksum(&t), payload_checksum(&bitflip(&t)));
+        // Variant confusion is caught: same bytes, different tag.
+        let s = Payload::Sums(Arc::new(vec![1.0, 2.0]));
+        assert_ne!(payload_checksum(&a), payload_checksum(&s));
+        let blk = Payload::Block {
+            nf: 2,
+            nv: 1,
+            first_id: 0,
+            data: BlockData::F64(Arc::new(vec![1.0, 2.0])),
+        };
+        assert_ne!(payload_checksum(&blk), payload_checksum(&bitflip(&blk)));
+        let packed = Payload::Block {
+            nf: 64,
+            nv: 1,
+            first_id: 0,
+            data: BlockData::Packed(crate::vecdata::block::PackedBlock {
+                words_per_vec: 1,
+                words: Arc::new(vec![0xFF]),
+            }),
+        };
+        assert_ne!(payload_checksum(&packed), payload_checksum(&bitflip(&packed)));
     }
 }

@@ -1,0 +1,377 @@
+//! Checkpoint/resume for coordinated runs.
+//!
+//! A [`CheckpointStore`] persists each node program's completed work
+//! units — one blob per unit, holding the unit's emitted [`Tile`]s in
+//! the bit-exact wire encoding — through the same [`BlockStore`]
+//! abstraction the out-of-core spill path uses (`--checkpoint-dir` →
+//! [`DirStore`], tests → [`MemStore`]). A resumed run re-executes its
+//! communication schedule unconditionally (every rank takes the same
+//! skip decisions, so the lockstep exchanges stay paired), skips the
+//! numerator kernels and assembly of completed units, and **replays**
+//! their persisted tiles through the checksum and sink — the §5
+//! checksum is order-independent, so a resumed campaign is
+//! bit-identical to an uninterrupted one.
+//!
+//! ## Key scheme
+//!
+//! Units are keyed `{run-prefix}-{unit}`, filename-safe, where the run
+//! prefix spells out the full run identity in clear text —
+//! `ck-<metric>-w<way>-<nv>x<nf>-<precision>-<backend>-t<threads>-`
+//! `g<npf>x<npv>x<npr>-s<num_stage>.<stage|all>-i<hash>` — and
+//! `<hash>` is an FNV-64 over the canonical input description
+//! (synthetic kind + seed, or file path) and the metric's parameterized
+//! ingest key. Everything that changes a run's results is in the key,
+//! so two different campaigns can share one checkpoint directory
+//! without collisions. The hash is [`fnv1a64`] over canonical strings —
+//! **not** `DefaultHasher`, whose output is not stable across
+//! processes, which would silently defeat resume. Unit suffixes:
+//! `v<pv>-r<pr>-u<Δ>` for 2-way steps (shared across the npf axis, so
+//! reduction groups skip consistently) and `n<rank>-u<seq>` for 3-way
+//! pivot chunks.
+//!
+//! ## Blob format
+//!
+//! `"COMETCK1" · count:u64le · count wire frames · fnv1a64 trailer`
+//! over everything before the trailer. [`DirStore`] writes are
+//! temp-then-rename, so a crash mid-write never leaves a truncated
+//! blob under a real key; a blob that fails validation anyway (external
+//! tampering) surfaces as a typed error rather than silently
+//! recomputing on one rank but not another.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checksum::Checksum;
+use crate::config::{InputSource, RunConfig};
+use crate::coordinator::RunStats;
+use crate::output::sink::{NodeSink, Tile};
+use crate::vecdata::oocstore::{fnv1a64, with_retry, BlockStore, DirStore, MemStore};
+
+/// Magic prefix of a checkpoint blob (8 bytes, versioned by rename).
+pub const CKPT_MAGIC: &[u8; 8] = b"COMETCK1";
+
+/// A campaign-scoped checkpoint area. Cheap to clone-share via `Arc`;
+/// each run derives its own keyspace with [`CheckpointStore::for_run`].
+pub struct CheckpointStore {
+    store: Arc<dyn BlockStore>,
+}
+
+impl CheckpointStore {
+    /// Checkpoints under `dir` (created on first write, never removed
+    /// by this process — resume depends on it surviving).
+    pub fn dir(dir: impl AsRef<Path>) -> Self {
+        CheckpointStore { store: Arc::new(DirStore::new(dir.as_ref().to_path_buf())) }
+    }
+
+    /// In-memory checkpoints — tests and rigs.
+    pub fn mem() -> Self {
+        CheckpointStore { store: Arc::new(MemStore::new()) }
+    }
+
+    /// Over an arbitrary block store (fault rigs wrap `FailingStore`).
+    pub fn with_store(store: Arc<dyn BlockStore>) -> Self {
+        CheckpointStore { store }
+    }
+
+    /// This run's view of the checkpoint area: its key prefix plus
+    /// fresh per-run counters for the ledger.
+    pub fn for_run(&self, cfg: &RunConfig, ingest_key: u64) -> RunCheckpoint {
+        RunCheckpoint {
+            store: Arc::clone(&self.store),
+            prefix: run_prefix(cfg, ingest_key),
+            writes: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The cross-process-stable run identity (see module docs).
+fn run_prefix(cfg: &RunConfig, ingest_key: u64) -> String {
+    let input = match &cfg.input {
+        InputSource::Synthetic { kind, seed } => format!("synthetic.{kind:?}.{seed}"),
+        InputSource::File { path } => format!("file.{path}"),
+    };
+    let ident = fnv1a64(format!("{input}|ik{ingest_key:016x}").as_bytes());
+    let stage = cfg.stage.map(|s| s.to_string()).unwrap_or_else(|| "all".into());
+    format!(
+        "ck-{}-w{}-{}x{}-{}-{}-t{}-g{}x{}x{}-s{}.{}-i{:016x}",
+        cfg.metric.name(),
+        cfg.num_way,
+        cfg.nv,
+        cfg.nf,
+        cfg.precision.tag(),
+        cfg.backend.name(),
+        cfg.threads,
+        cfg.grid.npf,
+        cfg.grid.npv,
+        cfg.grid.npr,
+        cfg.num_stage,
+        stage,
+        ident,
+    )
+}
+
+/// One run's checkpoint handle, shared (`Arc`) across its node threads.
+pub struct RunCheckpoint {
+    store: Arc<dyn BlockStore>,
+    prefix: String,
+    writes: AtomicU64,
+    bytes: AtomicU64,
+    skipped: AtomicU64,
+    replayed: AtomicU64,
+    write_errors: AtomicU64,
+}
+
+impl RunCheckpoint {
+    fn key(&self, unit: &str) -> String {
+        format!("{}-{}", self.prefix, unit)
+    }
+
+    /// Whether `unit` completed in a previous run. Stored blobs are
+    /// immutable-once-written, so every rank probing the same unit key
+    /// reaches the same verdict — the property that keeps coupled
+    /// reduction groups from diverging into a deadlock.
+    pub fn is_done(&self, unit: &str) -> bool {
+        self.store.contains(&self.key(unit))
+    }
+
+    /// Count one unit skipped on resume (each skipping rank counts).
+    pub fn note_skip(&self) {
+        self.skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Persist a completed unit's tiles. Best-effort under the shared
+    /// retry policy: a write that still fails is *counted*, not fatal —
+    /// the run proceeds and that unit simply recomputes on resume.
+    pub fn save(&self, unit: &str, tiles: &[Tile]) {
+        let mut buf = Vec::with_capacity(32 + tiles.iter().map(|t| 16 * t.len()).sum::<usize>());
+        buf.extend_from_slice(CKPT_MAGIC);
+        buf.extend_from_slice(&(tiles.len() as u64).to_le_bytes());
+        for t in tiles {
+            buf.extend_from_slice(&t.encode());
+        }
+        let sum = fnv1a64(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        let key = self.key(unit);
+        match with_retry(|| self.store.put(&key, &buf)) {
+            Ok(()) => {
+                self.writes.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Load a completed unit's tiles for replay. A missing or invalid
+    /// blob after [`RunCheckpoint::is_done`] said yes is a hard, typed
+    /// error: treating it as "not done" on one rank while peers skipped
+    /// would desynchronize coupled reduction groups.
+    pub fn load(&self, unit: &str) -> Result<Vec<Tile>> {
+        let key = self.key(unit);
+        let bytes = with_retry(|| self.store.get(&key))
+            .map_err(|e| anyhow::anyhow!("checkpoint read {key}: {e}"))?
+            .with_context(|| format!("checkpoint unit {key} vanished between probe and load"))?;
+        let tiles = decode_blob(&bytes).with_context(|| format!("checkpoint unit {key}"))?;
+        let values: u64 = tiles.iter().map(|t| t.len() as u64).sum();
+        self.replayed.fetch_add(values, Ordering::Relaxed);
+        Ok(tiles)
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes.load(Ordering::Relaxed)
+    }
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
+    }
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors.load(Ordering::Relaxed)
+    }
+}
+
+fn decode_blob(bytes: &[u8]) -> Result<Vec<Tile>> {
+    ensure!(bytes.len() >= CKPT_MAGIC.len() + 8 + 8, "blob truncated ({} bytes)", bytes.len());
+    ensure!(&bytes[..8] == CKPT_MAGIC, "bad magic (not a checkpoint blob)");
+    let (body, trailer) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+    ensure!(fnv1a64(body) == stored, "payload checksum mismatch (corrupt blob)");
+    let count = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    let mut tiles = Vec::with_capacity(count as usize);
+    let mut rest = &body[16..];
+    for i in 0..count {
+        ensure!(rest.len() >= 4, "tile {i}: missing frame length");
+        let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        ensure!(rest.len() >= 4 + len, "tile {i}: frame truncated");
+        tiles.push(Tile::decode(&rest[..4 + len]).with_context(|| format!("tile {i}"))?);
+        rest = &rest[4 + len..];
+    }
+    if !rest.is_empty() {
+        bail!("{} trailing byte(s) after the last tile", rest.len());
+    }
+    Ok(tiles)
+}
+
+/// Replay persisted tiles exactly as the live path would have emitted
+/// them: every value into the (order-independent) checksum and the
+/// metric counter; non-empty tiles into the sink with the tile counter.
+pub(crate) fn replay_tiles(
+    tiles: Vec<Tile>,
+    checksum: &mut Checksum,
+    stats: &mut RunStats,
+    sink: &mut Option<Box<dyn NodeSink>>,
+) -> Result<()> {
+    for tile in tiles {
+        match &tile {
+            Tile::Pairs { entries, .. } => {
+                for e in entries {
+                    checksum.add_pair(e.i as usize, e.j as usize, e.value);
+                    stats.metrics += 1;
+                }
+            }
+            Tile::Triples { entries, .. } => {
+                for e in entries {
+                    checksum.add_triple(e.i as usize, e.j as usize, e.k as usize, e.value);
+                    stats.metrics += 1;
+                }
+            }
+        }
+        if let Some(s) = sink.as_mut() {
+            if !tile.is_empty() {
+                s.tile(tile)?;
+                stats.tiles += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::store::PairEntry;
+    use crate::metrics::MetricId;
+
+    fn cfg() -> RunConfig {
+        RunConfig::default()
+    }
+
+    #[test]
+    fn save_then_load_round_trips_tiles_bit_exactly() {
+        let store = CheckpointStore::mem();
+        let run = store.for_run(&cfg(), 7);
+        let tile = Tile::Pairs {
+            metric: MetricId::Czekanowski,
+            entries: vec![
+                PairEntry { i: 0, j: 1, value: 0.25 },
+                PairEntry { i: 3, j: 9, value: f64::from_bits(0x7ff8_0000_0000_1234) },
+            ],
+        };
+        assert!(!run.is_done("v0-r0-u0"));
+        run.save("v0-r0-u0", std::slice::from_ref(&tile));
+        assert!(run.is_done("v0-r0-u0"));
+        let back = run.load("v0-r0-u0").unwrap();
+        assert_eq!(back.len(), 1);
+        match (&back[0], &tile) {
+            (Tile::Pairs { entries: a, .. }, Tile::Pairs { entries: b, .. }) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!((x.i, x.j), (y.i, y.j));
+                    assert_eq!(x.value.to_bits(), y.value.to_bits());
+                }
+            }
+            _ => panic!("tile kind changed in round trip"),
+        }
+        assert_eq!(run.writes(), 1);
+        assert_eq!(run.replayed(), 2);
+        // Empty units persist as empty blobs, not absent keys.
+        run.save("v0-r0-u1", &[]);
+        assert!(run.is_done("v0-r0-u1"));
+        assert!(run.load("v0-r0-u1").unwrap().is_empty());
+    }
+
+    #[test]
+    fn keys_discriminate_everything_that_changes_results() {
+        let store = CheckpointStore::mem();
+        let base = store.for_run(&cfg(), 0).prefix;
+        // Every field that changes a run's output must change its key.
+        let variants = [
+            RunConfig { nv: 512, ..cfg() },
+            RunConfig { metric: MetricId::Sorenson, ..cfg() },
+            RunConfig { precision: crate::config::Precision::F32, ..cfg() },
+            RunConfig { threads: 2, ..cfg() },
+            RunConfig { grid: crate::decomp::Grid::new(1, 2, 1), ..cfg() },
+            RunConfig {
+                input: InputSource::Synthetic {
+                    kind: crate::vecdata::SyntheticKind::RandomGrid,
+                    seed: 2,
+                },
+                ..cfg()
+            },
+            RunConfig { input: InputSource::File { path: "/data/x.bin".into() }, ..cfg() },
+        ];
+        for v in &variants {
+            assert_ne!(store.for_run(v, 0).prefix, base, "{v:?}");
+        }
+        // Parameterized ingests (e.g. sparsity thresholds) key too.
+        assert_ne!(store.for_run(&cfg(), 1).prefix, base);
+        // Keys stay filename-safe for DirStore.
+        for c in store.for_run(&cfg(), 0).key("v0-r0-u0").chars() {
+            assert!(c.is_ascii_alphanumeric() || "._-".contains(c), "unsafe key char {c:?}");
+        }
+    }
+
+    #[test]
+    fn corrupt_blobs_surface_typed_errors_not_silent_recompute() {
+        let mem = Arc::new(MemStore::new());
+        let store = CheckpointStore::with_store(Arc::clone(&mem) as Arc<dyn BlockStore>);
+        let run = store.for_run(&cfg(), 0);
+        run.save("v0-r0-u0", &[Tile::Pairs { metric: MetricId::Ccc, entries: vec![] }]);
+        let key = mem.keys().pop().unwrap();
+        // Flip the last payload byte (the testkit poison idiom).
+        let mut bytes = mem.get(&key).unwrap().unwrap();
+        let last = bytes.len() - 9; // inside the body, not the trailer
+        bytes[last] ^= 0xff;
+        mem.put(&key, &bytes).unwrap();
+        let err = run.load("v0-r0-u0").unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+        // Truncation and bad magic are equally loud.
+        mem.put(&key, CKPT_MAGIC).unwrap();
+        assert!(run.load("v0-r0-u0").is_err());
+        mem.put(&key, b"NOTMAGIC________________").unwrap();
+        assert!(format!("{:#}", run.load("v0-r0-u0").unwrap_err()).contains("magic"));
+    }
+
+    #[test]
+    fn replay_reproduces_live_emission_accounting() {
+        let tiles = vec![
+            Tile::Pairs {
+                metric: MetricId::Czekanowski,
+                entries: vec![PairEntry { i: 1, j: 2, value: 0.5 }],
+            },
+            Tile::Pairs { metric: MetricId::Czekanowski, entries: vec![] },
+        ];
+        // Live reference: same values pushed by hand.
+        let mut live = Checksum::default();
+        live.add_pair(1, 2, 0.5);
+        let mut replayed = Checksum::default();
+        let mut stats = RunStats::default();
+        let mut sink: Option<Box<dyn NodeSink>> = None;
+        replay_tiles(tiles, &mut replayed, &mut stats, &mut sink).unwrap();
+        assert_eq!(replayed.digest(), live.digest());
+        assert_eq!(stats.metrics, 1);
+        assert_eq!(stats.tiles, 0, "no sink, no tile pushes");
+    }
+}

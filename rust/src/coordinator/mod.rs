@@ -16,6 +16,7 @@
 //! and the quotient combination in one place.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod prefetch;
 pub mod serial;
 pub mod three_way;
@@ -26,6 +27,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::checksum::Checksum;
+use crate::comm::faults::FaultPlan;
 use crate::comm::VirtualCluster;
 use crate::config::{BackendKind, InputSource, Precision, RunConfig};
 use crate::decomp::partition::Partition;
@@ -94,6 +96,27 @@ pub struct RunStats {
     /// read (`coordinator::prefetch::ReadAhead` stall clock) — the
     /// exposed, un-overlapped part of reload time.
     pub t_stall: f64,
+    /// Comm-fabric resilience counters: link-layer retransmits this
+    /// run's endpoints performed recovering from dropped/corrupted
+    /// envelopes, envelopes discarded on checksum mismatch at receive,
+    /// and scripted faults injected by an attached
+    /// [`crate::comm::faults::FaultPlan`]. All zero on a healthy fabric
+    /// — `tests/fault_tolerance.rs` pins that fault-free runs also add
+    /// zero wire messages/bytes over the `tests/comm_accounting.rs`
+    /// baselines.
+    pub comm_retries: u64,
+    pub comm_corrupt: u64,
+    pub faults_injected: u64,
+    /// Checkpoint/resume accounting (zero without a checkpoint store):
+    /// units persisted (and their encoded bytes), units skipped on
+    /// resume, metric values replayed from persisted tiles, and failed
+    /// checkpoint writes (non-fatal — those units recompute on the
+    /// next resume).
+    pub ckpt_writes: u64,
+    pub ckpt_bytes: u64,
+    pub ckpt_skipped: u64,
+    pub ckpt_replayed: u64,
+    pub ckpt_errors: u64,
 }
 
 impl RunStats {
@@ -132,6 +155,16 @@ impl RunStats {
         self.reloads += o.reloads;
         self.reload_bytes += o.reload_bytes;
         self.t_stall += o.t_stall;
+        // Resilience + checkpoint counters are events: they sum, like
+        // the comm counters they sit beside.
+        self.comm_retries += o.comm_retries;
+        self.comm_corrupt += o.comm_corrupt;
+        self.faults_injected += o.faults_injected;
+        self.ckpt_writes += o.ckpt_writes;
+        self.ckpt_bytes += o.ckpt_bytes;
+        self.ckpt_skipped += o.ckpt_skipped;
+        self.ckpt_replayed += o.ckpt_replayed;
+        self.ckpt_errors += o.ckpt_errors;
         self.t_input = self.t_input.max(o.t_input);
         self.t_compute = self.t_compute.max(o.t_compute);
         self.t_output = self.t_output.max(o.t_output);
@@ -155,6 +188,53 @@ pub struct RunOutcome {
 pub(crate) struct NodeResult {
     pub checksum: Checksum,
     pub stats: RunStats,
+}
+
+/// Typed abort of a coordinated run: one or more node programs failed
+/// (panic, comm timeout, killed rank, dead peer, sink error). The
+/// supervisor in [`run_streamed_opts`] joins **every** node thread
+/// before surfacing this — a failing rank drops its endpoint, peers
+/// time out on their bounded receives and unwind, and no thread is
+/// left blocked mid-ring — so the error carries a diagnostic for each
+/// rank that failed, not just the first.
+#[derive(Debug)]
+pub struct RunError {
+    /// `(rank, diagnostic)` for every failed node, rank-ordered.
+    pub ranks: Vec<(usize, String)>,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "run aborted: {} rank(s) failed", self.ranks.len())?;
+        for (rank, diag) in &self.ranks {
+            write!(f, "; rank {rank}: {diag}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// Human-readable panic payload (the `&str`/`String` cases cover every
+/// `panic!` in this crate; anything else gets a generic tag).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("opaque panic payload")
+}
+
+/// Optional run attachments: a scripted comm-fault plan (test rigs) and
+/// a checkpoint store (campaign resume). `Default` is a plain run —
+/// every existing call site goes through [`run_streamed`], which passes
+/// exactly that.
+#[derive(Default, Clone)]
+pub struct RunOpts {
+    /// Scripted comm faults injected into the run's fabric.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Persist completed work units; skip + replay them on resume.
+    pub checkpoint: Option<Arc<checkpoint::CheckpointStore>>,
 }
 
 /// Supplies ingested node blocks to a run — the seam the session layer
@@ -339,14 +419,29 @@ pub fn run_streamed(
     provider: Arc<dyn BlockProvider>,
     sink: &dyn ResultSink,
 ) -> Result<RunOutcome> {
+    run_streamed_opts(cfg, client, provider, sink, &RunOpts::default())
+}
+
+/// [`run_streamed`] with explicit [`RunOpts`] — the supervised,
+/// fault-injectable, checkpointable entry point. A failed run (panicked
+/// node, exhausted retransmit budget, killed rank) surfaces as a typed
+/// [`RunError`] with per-rank diagnostics after *all* node threads have
+/// unwound.
+pub fn run_streamed_opts(
+    cfg: &RunConfig,
+    client: Option<RuntimeClient>,
+    provider: Arc<dyn BlockProvider>,
+    sink: &dyn ResultSink,
+    opts: &RunOpts,
+) -> Result<RunOutcome> {
     cfg.validate()?;
     if cfg.num_way == 3 && cfg.grid.npf > 1 {
         bail!("npf > 1 is not supported for 3-way runs (the paper sets npf=1 there too)");
     }
     let accel_before = client.as_ref().map(|c| c.stats().1).unwrap_or(0.0);
     let mut outcome = match cfg.precision {
-        Precision::F32 => run_typed::<f32>(cfg, client.clone(), provider, sink),
-        Precision::F64 => run_typed::<f64>(cfg, client.clone(), provider, sink),
+        Precision::F32 => run_typed::<f32>(cfg, client.clone(), provider, sink, opts),
+        Precision::F64 => run_typed::<f64>(cfg, client.clone(), provider, sink, opts),
     }?;
     if let Some(c) = &client {
         let (_execs, secs) = c.stats();
@@ -360,14 +455,25 @@ fn run_typed<T: Scalar + ProvideBlocks>(
     client: Option<RuntimeClient>,
     provider: Arc<dyn BlockProvider>,
     sink: &dyn ResultSink,
+    opts: &RunOpts,
 ) -> Result<RunOutcome> {
     let backend = backend::make_backend::<T>(cfg.backend, cfg.precision, client, cfg.threads)?;
     let metric = crate::metrics::make_metric::<T>(cfg.metric, cfg);
     let np = cfg.grid.np();
-    let mut cluster = VirtualCluster::new(np, cfg.precision.bytes());
+    let mut cluster = match &opts.faults {
+        Some(plan) => VirtualCluster::with_faults(np, cfg.precision.bytes(), Arc::clone(plan)),
+        None => VirtualCluster::new(np, cfg.precision.bytes()),
+    };
     let counters = cluster.counters();
     let endpoints = cluster.endpoints();
     let null = sink.is_null();
+    // Per-run checkpoint view (key prefix + fresh ledger counters),
+    // shared by every node thread.
+    let ckpt = opts
+        .checkpoint
+        .as_ref()
+        .map(|store| Arc::new(store.for_run(cfg, metric.ingest_key())));
+    let faults_before = opts.faults.as_ref().map(|p| p.injected()).unwrap_or(0);
 
     // Hint the whole run's block schedule up front (rank order = the
     // order node threads enter their input phase); a read-ahead
@@ -393,29 +499,56 @@ fn run_typed<T: Scalar + ProvideBlocks>(
         let backend = Arc::clone(&backend);
         let metric = Arc::clone(&metric);
         let provider = Arc::clone(&provider);
-        handles.push(
+        let ckpt = ckpt.clone();
+        let rank = ep.rank;
+        handles.push((
+            rank,
             std::thread::Builder::new()
-                .name(format!("node-{}", ep.rank))
+                .name(format!("node-{}", rank))
                 .spawn(move || -> Result<NodeResult> {
                     if cfg.num_way == 2 {
                         two_way::node_main::<T>(
-                            &cfg, coord, ep, backend, metric, provider, node_sink,
+                            &cfg, coord, ep, backend, metric, provider, node_sink, ckpt,
                         )
                     } else {
                         three_way::node_main::<T>(
-                            &cfg, coord, ep, backend, metric, provider, node_sink,
+                            &cfg, coord, ep, backend, metric, provider, node_sink, ckpt,
                         )
                     }
                 })
                 .context("spawn node thread")?,
-        );
+        ));
     }
 
+    // Supervisor: drain EVERY join before judging the run. A failing
+    // rank drops its endpoint; peers blocked on it hit their bounded
+    // recv deadline and unwind with typed errors of their own — joining
+    // sequentially-and-bailing-early would instead leave threads
+    // orphaned mid-ring (the old deadlock-on-panic shape).
     let mut outcome = RunOutcome::default();
-    for h in handles {
-        let res = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
-        outcome.checksum.merge(res.checksum);
-        outcome.stats.absorb(&res.stats);
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    for (rank, h) in handles {
+        match h.join() {
+            Ok(Ok(res)) => {
+                outcome.checksum.merge(res.checksum);
+                outcome.stats.absorb(&res.stats);
+            }
+            Ok(Err(e)) => failures.push((rank, format!("{e:#}"))),
+            Err(payload) => failures.push((rank, format!("panicked: {}", panic_message(&*payload)))),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(RunError { ranks: failures }.into());
+    }
+    if let Some(c) = &ckpt {
+        outcome.stats.ckpt_writes += c.writes();
+        outcome.stats.ckpt_bytes += c.bytes_written();
+        outcome.stats.ckpt_skipped += c.skipped();
+        outcome.stats.ckpt_replayed += c.replayed();
+        outcome.stats.ckpt_errors += c.write_errors();
+    }
+    if let Some(p) = &opts.faults {
+        outcome.stats.faults_injected += p.injected() - faults_before;
     }
     outcome.stats.t_total = t0.elapsed().as_secs_f64();
     // Worker-pool dispatch deltas for this run (see RunStats docs for

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 use crate::checksum::Checksum;
 use crate::comm::{Endpoint, Payload};
 use crate::config::RunConfig;
+use crate::coordinator::checkpoint::{self, RunCheckpoint};
 use crate::coordinator::{backend::Backend, BlockProvider, NodeResult, ProvideBlocks, RunStats};
 use crate::decomp::three_way::{stripe_pivots, Combo3};
 use crate::decomp::{partition::Partition, three_way, NodeCoord};
@@ -33,6 +34,7 @@ use crate::vecdata::block::Block;
 const TAG_BLOCK3: u64 = 5_000;
 const TAG_SUMS3: u64 = 6_000;
 
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     cfg: &RunConfig,
     coord: NodeCoord,
@@ -41,6 +43,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     metric: Arc<dyn Metric<T>>,
     provider: Arc<dyn BlockProvider>,
     mut sink: Option<Box<dyn NodeSink>>,
+    ckpt: Option<Arc<RunCheckpoint>>,
 ) -> Result<NodeResult> {
     let grid = cfg.grid;
     let (pv, pr) = (coord.pv, coord.pr);
@@ -101,12 +104,12 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
             first_id: blocks[&pv].first_id(),
             data: wire.clone(),
         };
-        let got = ep.sendrecv(to, from, TAG_BLOCK3 + d as u64, payload);
+        let got = ep.sendrecv(to, from, TAG_BLOCK3 + d as u64, payload)?;
         let Payload::Block { nf, nv, first_id, data } = got else {
             bail!("expected Block payload");
         };
         let got_sums =
-            ep.sendrecv(to, from, TAG_SUMS3 + d as u64, Payload::Sums(Arc::clone(&sums_wire)));
+            ep.sendrecv(to, from, TAG_SUMS3 + d as u64, Payload::Sums(Arc::clone(&sums_wire)))?;
         let Payload::Sums(ps) = got_sums else {
             bail!("expected Sums payload");
         };
@@ -155,6 +158,10 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
         }
     };
 
+    // Checkpoint units: one per (slice, stage, pivot chunk), numbered
+    // in this rank's deterministic traversal order (3-way runs pin
+    // npf = 1, so units are rank-private — no cross-rank coupling).
+    let mut unit_no: u64 = 0;
     for slice in &slices {
         let (b_pivot, b_right) = match slice.combo {
             Combo3::Diag => (pv, pv),
@@ -167,16 +174,38 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
         let s_a = Arc::clone(&sums[&pv]);
         let s_p = Arc::clone(&sums[&b_pivot]);
         let s_r = Arc::clone(&sums[&b_right]);
-        // The three 2-way tables of Algorithm 3.
-        let t_ap = n2_table(pv, b_pivot, &blocks, &mut stats)?;
-        let t_ar = n2_table(pv, b_right, &blocks, &mut stats)?;
-        let t_pr = n2_table(b_pivot, b_right, &blocks, &mut stats)?;
+        // The three 2-way tables of Algorithm 3 — built lazily on the
+        // first *live* chunk, so a fully-checkpointed slice skips its
+        // table mGEMMs along with its slabs.
+        let mut tables: Option<(Arc<MatF64>, Arc<MatF64>, Arc<MatF64>)> = None;
 
         let jt_max = backend.pivot_batch_for(a_blk.nf(), a_blk.nv().max(r_blk.nv()));
         for &stage in &stages {
             let pivots: Vec<usize> =
                 stripe_pivots(p_blk.nv(), slice.sub, cfg.num_stage, stage).collect();
             for chunk in pivots.chunks(jt_max) {
+                let unit = ckpt.as_deref().map(|c| (c, format!("n{}-u{unit_no}", ep.rank)));
+                unit_no += 1;
+                if let Some((c, u)) = &unit {
+                    if c.is_done(u) {
+                        c.note_skip();
+                        let tiles = c.load(u)?;
+                        checkpoint::replay_tiles(tiles, &mut checksum, &mut stats, &mut sink)?;
+                        continue;
+                    }
+                }
+                let (t_ap, t_ar, t_pr) = match tables.as_ref() {
+                    Some((a, b, c)) => (Arc::clone(a), Arc::clone(b), Arc::clone(c)),
+                    None => {
+                        let t = (
+                            n2_table(pv, b_pivot, &blocks, &mut stats)?,
+                            n2_table(pv, b_right, &blocks, &mut stats)?,
+                            n2_table(b_pivot, b_right, &blocks, &mut stats)?,
+                        );
+                        tables = Some((Arc::clone(&t.0), Arc::clone(&t.1), Arc::clone(&t.2)));
+                        t
+                    }
+                };
                 let pivot_set = p_blk.select_cols(chunk)?;
                 // Diag slices read only slab[t, i, k] with
                 // i < chunk[t] < k, so the diag-aware slab kernel skips
@@ -189,7 +218,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
                 stats.mgemm3_calls += 1;
                 // One result tile per pivot chunk, entries in emission
                 // order.
-                let want_tile = sink.is_some();
+                let want_tile = sink.is_some() || unit.is_some();
                 let mut entries: Vec<TripleEntry> = Vec::new();
                 for (t, &j_local) in chunk.iter().enumerate() {
                     let gj = vparts.start(b_pivot) + j_local;
@@ -261,12 +290,23 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
                         }
                     }
                 }
-                if let Some(s) = sink.as_mut() {
-                    if !entries.is_empty() {
+                if want_tile {
+                    let tile = Tile::Triples { metric: metric.id(), entries };
+                    // Persist first (unit durable before delivery; the
+                    // order-independent checksum makes replay-after-
+                    // delivery harmless), then hand to the sink.
+                    if let Some((c, u)) = &unit {
                         t_out.start();
-                        s.tile(Tile::Triples { metric: metric.id(), entries })?;
+                        c.save(u, std::slice::from_ref(&tile));
                         t_out.stop();
-                        stats.tiles += 1;
+                    }
+                    if let Some(s) = sink.as_mut() {
+                        if !tile.is_empty() {
+                            t_out.start();
+                            s.tile(tile)?;
+                            t_out.stop();
+                            stats.tiles += 1;
+                        }
                     }
                 }
             }
@@ -283,8 +323,11 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     stats.t_compute = t_comp.secs() - t_out.secs();
     stats.t_output = t_out.secs();
     // Per-node comm accounting: RunStats::absorb sums these across
-    // nodes to reproduce the cluster totals.
+    // nodes to reproduce the cluster totals. Retransmits/corruptions
+    // ride along so the ledger prices fault recovery.
     (stats.comm_messages, stats.comm_bytes) = ep.sent();
+    stats.comm_retries = ep.retransmits();
+    stats.comm_corrupt = ep.corrupt_detected();
     Ok(NodeResult { checksum, stats })
 }
 

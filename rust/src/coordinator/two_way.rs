@@ -29,6 +29,7 @@ use anyhow::Result;
 use crate::checksum::Checksum;
 use crate::comm::{Endpoint, Payload};
 use crate::config::RunConfig;
+use crate::coordinator::checkpoint::{self, RunCheckpoint};
 use crate::coordinator::{backend::Backend, BlockProvider, NodeResult, ProvideBlocks, RunStats};
 use crate::decomp::{partition::Partition, two_way, NodeCoord};
 use crate::metrics::{store::PairEntry, Metric};
@@ -41,6 +42,7 @@ const TAG_BLOCK: u64 = 1_000;
 const TAG_SUMS: u64 = 2_000;
 const TAG_REDUCE: u64 = 10_000;
 
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     cfg: &RunConfig,
     coord: NodeCoord,
@@ -49,6 +51,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     metric: Arc<dyn Metric<T>>,
     provider: Arc<dyn BlockProvider>,
     mut sink: Option<Box<dyn NodeSink>>,
+    ckpt: Option<Arc<RunCheckpoint>>,
 ) -> Result<NodeResult> {
     let grid = cfg.grid;
     let (pv, pr, pf) = (coord.pv, coord.pr, coord.pf);
@@ -73,7 +76,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     let local_sums = metric.denominators(&block)?;
     let own_sums = if grid.npf > 1 {
         let group = pf_group(&grid, pv, pr);
-        ep.allreduce_sum(&group, TAG_REDUCE, local_sums)
+        ep.allreduce_sum(&group, TAG_REDUCE, local_sums)?
     } else {
         local_sums
     };
@@ -106,7 +109,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
                 first_id: block.first_id(),
                 data: wire.clone(),
             };
-            let got = ep.sendrecv(to, from, tag, payload);
+            let got = ep.sendrecv(to, from, tag, payload)?;
             let Payload::Block { nf, nv, first_id, data } = got else {
                 anyhow::bail!("expected Block payload");
             };
@@ -116,7 +119,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
                 from,
                 TAG_SUMS + step.dp as u64,
                 Payload::Sums(Arc::clone(&sums_wire)),
-            );
+            )?;
             let Payload::Sums(ps) = got_sums else {
                 anyhow::bail!("expected Sums payload");
             };
@@ -127,6 +130,27 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
         // The schedule pairs "no peer" with the diagonal block exactly
         // (Δ = 0) — the triangular kernel relies on this.
         debug_assert_eq!(peer_block.is_none(), info.diag, "diag blocks have no peer");
+
+        // --- Checkpoint probe ------------------------------------------
+        // Unit = this (pv, pr) plane's step Δ. The key is shared across
+        // the npf axis, so every rank of a reduction group reaches the
+        // same skip verdict (blobs are immutable once written — within
+        // a run pf=0 only writes *after* its group's reduce, so a probe
+        // can never observe a done-marker for work its own group has
+        // not finished). The exchange above already ran: resumed runs
+        // keep the full lockstep comm schedule and skip only compute +
+        // emission, replaying the persisted tiles bit-identically.
+        let unit = ckpt.as_deref().map(|c| (c, format!("v{pv}-r{pr}-u{}", step.dp)));
+        if let Some((c, u)) = &unit {
+            if c.is_done(u) {
+                c.note_skip();
+                if pf == 0 {
+                    let tiles = c.load(u)?;
+                    checkpoint::replay_tiles(tiles, &mut checksum, &mut stats, &mut sink)?;
+                }
+                continue;
+            }
+        }
 
         // Offload the numerator block through the metric's kernel —
         // cached representations in, zero re-packing. A diagonal block
@@ -155,7 +179,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
                 &group,
                 TAG_REDUCE + 2 * (step.dp as u64 + 1),
                 n_block.data,
-            );
+            )?;
             crate::linalg::MatF64 {
                 rows: block.nv(),
                 cols: reduced.len() / block.nv(),
@@ -175,7 +199,7 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
         // One result tile per computed block: entries in emission order
         // (the dense §6.8 file format is order-defined).
         let my_first = block.first_id();
-        let want_tile = sink.is_some();
+        let want_tile = sink.is_some() || unit.is_some();
         let mut entries: Vec<PairEntry> = Vec::new();
         if info.diag {
             for j in 1..n_block.cols {
@@ -202,12 +226,24 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
                 }
             }
         }
-        if let Some(s) = sink.as_mut() {
-            if !entries.is_empty() {
+        if want_tile {
+            let tile = Tile::Pairs { metric: metric.id(), entries };
+            // Persist before handing the tile to the sink: a unit is
+            // only marked done once its values are durable, and the
+            // order-independent checksum makes replay-after-delivery
+            // harmless if the run dies between the two.
+            if let Some((c, u)) = &unit {
                 t_out.start();
-                s.tile(Tile::Pairs { metric: metric.id(), entries })?;
+                c.save(u, std::slice::from_ref(&tile));
                 t_out.stop();
-                stats.tiles += 1;
+            }
+            if let Some(s) = sink.as_mut() {
+                if !tile.is_empty() {
+                    t_out.start();
+                    s.tile(tile)?;
+                    t_out.stop();
+                    stats.tiles += 1;
+                }
             }
         }
     }
@@ -223,8 +259,11 @@ pub(crate) fn node_main<T: Scalar + ProvideBlocks>(
     stats.t_compute = t_comp.secs() - t_out.secs();
     stats.t_output = t_out.secs();
     // Per-node comm accounting: RunStats::absorb sums these across
-    // nodes to reproduce the cluster totals.
+    // nodes to reproduce the cluster totals. Retransmits/corruptions
+    // ride along so the ledger prices fault recovery.
     (stats.comm_messages, stats.comm_bytes) = ep.sent();
+    stats.comm_retries = ep.retransmits();
+    stats.comm_corrupt = ep.corrupt_detected();
     Ok(NodeResult { checksum, stats })
 }
 

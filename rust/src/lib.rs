@@ -92,6 +92,42 @@
 //! ([`testkit::faults::FailingStore`] scripts the failures), and the
 //! prefetch order/budget contracts.
 //!
+//! ## Fault tolerance
+//!
+//! Campaigns survive the fabric, the nodes, and the clock. The comm
+//! layer validates every envelope with an FNV-64 checksum and
+//! retransmits dropped or corrupted deliveries under the shared
+//! [`util::retry::Policy`] backoff (deterministic, no wall clock in
+//! any schedule); blocking receives carry a bounded deadline, so a
+//! dead peer is a typed [`comm::CommError`] — never a hang.
+//! [`comm::faults::FaultPlan`] scripts per-`(rank, send-op)`
+//! drop/delay/corrupt/kill faults into a run
+//! ([`coordinator::RunOpts::faults`];
+//! [`testkit::faults::script_comm_faults`] places them from a PRNG
+//! seed), and the node supervisor in
+//! [`coordinator::run_streamed_opts`] joins **every** node thread
+//! before judging the run, converting panics and comm timeouts into a
+//! typed [`coordinator::RunError`] with per-rank diagnostics. The
+//! serve layer respawns a shard worker that dies mid-request: the
+//! in-flight ticket surfaces [`serve::ServeError::WorkerDied`] and the
+//! next submission to the shard re-arms it. Checkpoint/resume rides
+//! the same spill codec: a [`coordinator::checkpoint::CheckpointStore`]
+//! ([`coordinator::RunOpts::checkpoint`], CLI `--checkpoint-dir`)
+//! persists each completed work unit's tiles keyed by a
+//! config-derived, cross-process-stable run prefix; rerunning the same
+//! config skips persisted units (the comm schedule still runs in
+//! lockstep), replays their tiles through the sink, and finishes
+//! bit-identically — `comet batch --halt-after N` is the scripted
+//! interruption rig. A corrupt checkpoint blob is a typed error, never
+//! a silent recompute; retry/corrupt/fault and
+//! write/skip/replay counters flow through [`coordinator::RunStats`]
+//! into the run/batch ledgers, and [`perfmodel`] prices retransmits
+//! (`retry_rate`/`t_backoff`) and checkpoint writes
+//! (`ckpt_frac`/`ckpt_bw`). `tests/fault_tolerance.rs` pins the
+//! zero-overhead-when-healthy wire counts, recovery bit-identity
+//! across the fault matrix, bounded typed aborts, resume, and worker
+//! respawn.
+//!
 //! **Migration note:** `coordinator::run` / `run_with_artifacts` /
 //! `run_with_client` remain as one-shot shims (fresh ingest, legacy
 //! `store_metrics`/`output_dir` semantics, unchanged checksums — a

@@ -96,6 +96,11 @@ run options:
                      bit-identically (read ahead of the step schedule)
   --no-spill         evicted blocks are dropped and re-ingested instead
                      of spilled (pre-out-of-core behavior)
+  --checkpoint-dir DIR   persist per-unit progress; rerunning the same
+                     config against the same DIR skips completed units and
+                     replays their tiles bit-identically (kill-resume safe;
+                     a corrupt checkpoint is a typed error, never silently
+                     recomputed)
 
 batch options:
   --config FILE      batch TOML: base [run]/[decomp]/[input] tables plus one
@@ -106,6 +111,11 @@ batch options:
                      once — see examples/batch.toml
   --artifacts DIR    artifact directory (default: artifacts)
   --block-cache-bytes N / --no-spill   as for run (one budget, whole batch)
+  --checkpoint-dir DIR   as for run; every request in the campaign
+                     checkpoints its units under DIR
+  --halt-after N     stop after N completed request(s) — the deterministic
+                     interruption rig for kill-resume drills: rerun the
+                     same batch with the same --checkpoint-dir to finish
 
 serve options (server):
   --socket PATH      listen on a Unix socket (one handler thread/connection);
@@ -151,6 +161,12 @@ model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                                     (default 2e9)
                  [--no-prefetch]    price reloads serially instead of
                                     overlapped by the read-ahead pipeline
+                 [--retry-rate X]   expected retransmits per block exchange
+                                    (comm-fault recovery pressure, 0 healthy)
+                 [--tbackoff SECS]  mean retry backoff sleep per retransmit
+                 [--ckpt-frac X]    fraction of units checkpointed (0..1;
+                                    1 = fresh --checkpoint-dir campaign)
+                 [--ckpt-bw B]      checkpoint-store write bandwidth, bytes/s
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
                  [--synthetic grid|verifiable|phewas|alleles] [--seed N]
 ";
@@ -218,6 +234,7 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let artifacts = args.str_or("artifacts", "artifacts");
     let limits = limits_from_args(args)?;
+    let ckpt_dir = args.opt_str("checkpoint-dir").map(str::to_string);
     args.reject_unknown()?;
     println!(
         "comet run: {}-way {} {} nv={} nf={} grid=({},{},{}) backend={} threads={} kernel={} repr={} stages={}{}",
@@ -242,6 +259,9 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     // request's file sink when --output-dir is set; otherwise nothing
     // listens — the CLI only reports stats + checksum).
     let session = Session::with_limits(&artifacts, limits);
+    if let Some(dir) = &ckpt_dir {
+        session.checkpoint_to_dir(dir);
+    }
     let req = session.request_from_config(&cfg)?;
     let outcome = session.run(&req, &DiscardSink)?;
     let s = &outcome.stats;
@@ -291,6 +311,24 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
             fmt::secs(s.t_stall)
         );
     }
+    if s.comm_retries + s.comm_corrupt + s.faults_injected > 0 {
+        println!(
+            "  comm recovery    : {} retransmit(s), {} corrupt frame(s) detected, \
+             {} fault(s) injected",
+            s.comm_retries, s.comm_corrupt, s.faults_injected
+        );
+    }
+    if s.ckpt_writes + s.ckpt_skipped + s.ckpt_replayed + s.ckpt_errors > 0 {
+        println!(
+            "  checkpoint       : {} unit(s) written ({}) / {} skipped on resume \
+             ({} tile(s) replayed), {} write error(s)",
+            s.ckpt_writes,
+            fmt::bytes(s.ckpt_bytes),
+            s.ckpt_skipped,
+            s.ckpt_replayed,
+            s.ckpt_errors
+        );
+    }
     let cmps = if cfg.num_way == 2 {
         counts::cmp_2way(cfg.nf, cfg.nv)
     } else {
@@ -313,10 +351,15 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
     let path = args.require_str("config")?;
     let artifacts = args.str_or("artifacts", "artifacts");
     let limits = limits_from_args(args)?;
+    let ckpt_dir = args.opt_str("checkpoint-dir").map(str::to_string);
+    let halt_after = args.opt_parse::<usize>("halt-after")?;
     args.reject_unknown()?;
     let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
     let entries = config::batch_from_toml_str(&text)?;
     let session = Session::with_limits(&artifacts, limits);
+    if let Some(dir) = &ckpt_dir {
+        session.checkpoint_to_dir(dir);
+    }
     println!(
         "comet batch: {} request(s) from {} against one session",
         entries.len(),
@@ -341,7 +384,13 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
         "new ingests",
         "time",
     ]);
+    let mut completed = 0usize;
+    let mut halted = false;
     for e in &entries {
+        if halt_after.is_some_and(|h| completed >= h) {
+            halted = true;
+            break;
+        }
         let req = session.request_from_config(&e.cfg)?;
         let ds = req.dataset().clone();
         let before = ds.ingest_count();
@@ -367,8 +416,16 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
         if !datasets.iter().any(|d| d.spec() == ds.spec()) {
             datasets.push(ds);
         }
+        completed += 1;
     }
     table.print();
+    if halted {
+        println!(
+            "  halted after {completed} of {} request(s) (--halt-after); rerun the batch \
+             with the same --checkpoint-dir to finish bit-identically",
+            entries.len()
+        );
+    }
 
     let total_ingests: u64 = datasets.iter().map(|d| d.ingest_count()).sum();
     println!(
@@ -420,6 +477,31 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
             pool_totals.reloads,
             fmt::bytes(pool_totals.reload_bytes),
             fmt::secs(pool_totals.t_stall)
+        );
+    }
+    if pool_totals.comm_retries + pool_totals.comm_corrupt + pool_totals.faults_injected > 0 {
+        println!(
+            "  comm recovery    : {} retransmit(s), {} corrupt frame(s) detected, \
+             {} fault(s) injected",
+            pool_totals.comm_retries, pool_totals.comm_corrupt, pool_totals.faults_injected
+        );
+    }
+    if pool_totals.ckpt_writes
+        + pool_totals.ckpt_skipped
+        + pool_totals.ckpt_replayed
+        + pool_totals.ckpt_errors
+        > 0
+    {
+        // Restart ledger: what the campaign persisted, and (on a
+        // resumed run) how much recompute the checkpoints bought back.
+        println!(
+            "  checkpoint       : {} unit(s) written ({}) / {} skipped on resume \
+             ({} tile(s) replayed), {} write error(s)",
+            pool_totals.ckpt_writes,
+            fmt::bytes(pool_totals.ckpt_bytes),
+            pool_totals.ckpt_skipped,
+            pool_totals.ckpt_replayed,
+            pool_totals.ckpt_errors
         );
     }
     Ok(())
@@ -485,11 +567,13 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
 
     let stats = server.stats();
     eprintln!(
-        "comet serve: {} submitted / {} completed, rejected {} busy + {} too-large, queue wait {}",
+        "comet serve: {} submitted / {} completed, rejected {} busy + {} too-large, \
+         {} worker respawn(s), queue wait {}",
         stats.submitted,
         stats.completed,
         stats.rejected_busy,
         stats.rejected_too_large,
+        stats.respawns,
         fmt::secs(stats.queue_wait_secs)
     );
     let cache = session.cache_stats();
@@ -630,6 +714,10 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
         reload_frac: args.parse_or("reload-frac", 0.0)?,
         disk_bw: args.parse_or("disk-bw", 2e9)?,
         prefetch: !args.switch("no-prefetch"),
+        retry_rate: args.parse_or("retry-rate", 0.0)?,
+        t_backoff: args.parse_or("tbackoff", 0.0)?,
+        ckpt_frac: args.parse_or("ckpt-frac", 0.0)?,
+        ckpt_bw: args.parse_or("ckpt-bw", 0.0)?,
         net: CostModel::gemini(),
         link: CostModel::pcie2(),
     };
@@ -658,6 +746,12 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
             fmt::secs(p.t_stall),
             if input.prefetch { ", read-ahead overlapped" } else { ", serial reloads" }
         );
+    }
+    if p.t_retry > 0.0 {
+        println!("  t_retry     = {} (comm retransmits + retry backoff)", fmt::secs(p.t_retry));
+    }
+    if p.t_ckpt > 0.0 {
+        println!("  t_ckpt      = {} (checkpoint-unit writes)", fmt::secs(p.t_ckpt));
     }
     println!("  total       = {}", fmt::secs(p.total));
     println!("  mGEMM fraction = {:.1}% (the paper's overlap regime indicator)", 100.0 * p.gemm_fraction());

@@ -68,6 +68,22 @@ pub struct ModelInput {
     /// (only the un-hidden part of each read is exposed) or reloads
     /// serialize in front of their block's kernel work.
     pub prefetch: bool,
+    /// Expected link-layer retransmits per block exchange (0 = healthy
+    /// fabric; `RunStats::comm_retries / comm_messages` measured). Each
+    /// retransmit repeats the exchange's message time plus a backoff
+    /// sleep.
+    pub retry_rate: f64,
+    /// Mean retry-policy backoff sleep per retransmit (seconds) — the
+    /// `util::retry` schedule's expected delay at the observed attempt
+    /// depth.
+    pub t_backoff: f64,
+    /// Fraction of the load's work units persisted to a checkpoint
+    /// store (0 = checkpointing off; 1 = every unit written — a fresh
+    /// `--checkpoint-dir` run; a resumed run writes only the remainder).
+    pub ckpt_frac: f64,
+    /// Checkpoint-store write bandwidth in bytes/s (prices one unit's
+    /// tile blob as ≈ the metrics block's bytes / ckpt_bw).
+    pub ckpt_bw: f64,
     /// Internode fabric.
     pub net: CostModel,
     /// Host↔accelerator link.
@@ -90,6 +106,14 @@ pub struct Prediction {
     /// without, every reload serializes (`RunStats::t_stall`'s analytic
     /// counterpart).
     pub t_stall: f64,
+    /// Fault-recovery cost: expected retransmits × (message time +
+    /// backoff sleep) across the load's exchanges
+    /// (`RunStats::comm_retries`' analytic counterpart; 0 healthy).
+    pub t_retry: f64,
+    /// Checkpoint-write cost: persisted units × blob write time
+    /// (`RunStats::ckpt_writes/ckpt_bytes`' analytic counterpart;
+    /// 0 with checkpointing off).
+    pub t_ckpt: f64,
     pub total: f64,
 }
 
@@ -159,6 +183,29 @@ fn stall_time(m: &ModelInput, t_c: f64) -> f64 {
     }
 }
 
+/// Expected fault-recovery time over `exchanges` block exchanges of
+/// `t_msg` seconds each: each retransmit repeats the message and
+/// sleeps the backoff. Comm faults are rare events priced linearly —
+/// the healthy-fabric case (`retry_rate = 0`) contributes exactly 0.
+fn retry_time(m: &ModelInput, t_msg: f64, exchanges: f64) -> f64 {
+    if m.retry_rate <= 0.0 {
+        return 0.0;
+    }
+    m.retry_rate * exchanges * (t_msg + m.t_backoff)
+}
+
+/// Checkpoint-write time for `units` persistable work units: each
+/// unit's tile blob is ≈ one metrics block, written at `ckpt_bw`.
+/// Writes are off the critical kernel path but not free — campaigns
+/// trade this term for restartability.
+fn ckpt_time(m: &ModelInput, units: f64) -> f64 {
+    let frac = m.ckpt_frac.clamp(0.0, 1.0);
+    if frac <= 0.0 || m.ckpt_bw <= 0.0 {
+        return 0.0;
+    }
+    frac * units * (mblock_bytes(m) as f64 / m.ckpt_bw)
+}
+
 /// 2-way model (§6.3), extended with the triangular-diag,
 /// thread-parallel, SIMD-lane, pool-dispatch, and out-of-core reload
 /// terms.
@@ -173,7 +220,11 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
     // One block's kernel time is the compute window a prefetched
     // reload can hide behind.
     let t_stall = stall_time(m, m.t_gemm / kernel_speedup(m));
-    let total = t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu + t_dispatch + t_stall;
+    // 2-way: one ring exchange and one checkpointable unit per block.
+    let t_retry = retry_time(m, t_comm, m.load as f64);
+    let t_ckpt = ckpt_time(m, m.load as f64);
+    let total =
+        t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu + t_dispatch + t_stall + t_retry + t_ckpt;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
@@ -182,6 +233,8 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
         t_cpu: m.t_cpu,
         t_dispatch,
         t_stall,
+        t_retry,
+        t_ckpt,
         total,
     }
 }
@@ -205,7 +258,11 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
     let t_dispatch = m.load as f64 * dispatch_per_slice;
     // A slice's whole mGEMM pipeline is the window hiding its reload.
     let t_stall = stall_time(m, steps_per_slice * t_gemm_eff);
-    let total = t_comm + t_tv + m.load as f64 * per_slice + t_stall;
+    // 3-way: one slice exchange per load entry; each mGEMM step of
+    // each slice is a checkpointable unit.
+    let t_retry = retry_time(m, t_comm, m.load as f64);
+    let t_ckpt = ckpt_time(m, m.load as f64 * steps_per_slice);
+    let total = t_comm + t_tv + m.load as f64 * per_slice + t_stall + t_retry + t_ckpt;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
@@ -214,6 +271,8 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
         t_cpu: m.t_cpu,
         t_dispatch,
         t_stall,
+        t_retry,
+        t_ckpt,
         total,
     }
 }
@@ -319,6 +378,10 @@ mod tests {
             reload_frac: 0.0,
             disk_bw: 2e9,
             prefetch: true,
+            retry_rate: 0.0,
+            t_backoff: 0.0,
+            ckpt_frac: 0.0,
+            ckpt_bw: 0.0,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         }
@@ -399,7 +462,16 @@ mod tests {
 
     #[test]
     fn totals_are_sums_of_parts_2way() {
-        let m = ModelInput { threads: 4, t_spawn: 1e-4, pool_warm: false, ..base() };
+        let m = ModelInput {
+            threads: 4,
+            t_spawn: 1e-4,
+            pool_warm: false,
+            retry_rate: 0.01,
+            t_backoff: 2e-4,
+            ckpt_frac: 1.0,
+            ckpt_bw: 1e9,
+            ..base()
+        };
         let p = predict_2way(&m);
         let sum = p.t_comm
             + p.t_transfer_v
@@ -407,8 +479,59 @@ mod tests {
             + p.t_transfer_m
             + p.t_cpu
             + p.t_dispatch
-            + p.t_stall;
+            + p.t_stall
+            + p.t_retry
+            + p.t_ckpt;
         assert!((p.total - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn healthy_fabric_and_no_checkpointing_cost_nothing() {
+        // The default inputs predict exactly the fault-free, no-ckpt
+        // pipeline: both robustness terms are identically zero and the
+        // total matches a model without them.
+        let p = predict_2way(&base());
+        assert_eq!(p.t_retry, 0.0);
+        assert_eq!(p.t_ckpt, 0.0);
+        let p3 = predict_3way(&base());
+        assert_eq!(p3.t_retry, 0.0);
+        assert_eq!(p3.t_ckpt, 0.0);
+    }
+
+    #[test]
+    fn retry_term_prices_retransmits_linearly() {
+        let m = ModelInput { retry_rate: 0.5, t_backoff: 1e-3, ..base() };
+        let p0 = predict_2way(&base());
+        let p = predict_2way(&m);
+        // Each expected retransmit repeats the exchange's message time
+        // plus the backoff, over load exchanges.
+        let expect = 0.5 * m.load as f64 * (p.t_comm + 1e-3);
+        assert!((p.t_retry - expect).abs() < 1e-12, "t_retry={}", p.t_retry);
+        assert!((p.total - p0.total - expect).abs() < 1e-12);
+        // Doubling the rate doubles the term.
+        let p2 = predict_2way(&ModelInput { retry_rate: 1.0, ..m });
+        assert!((p2.t_retry - 2.0 * p.t_retry).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ckpt_term_scales_with_fraction_and_units() {
+        let m = ModelInput { ckpt_frac: 1.0, ckpt_bw: 1e9, ..base() };
+        let p = predict_2way(&m);
+        // load units × one metrics blob each at ckpt_bw.
+        let blob = (m.nvp * m.nvp * m.elem_bytes) as f64 / 1e9;
+        assert!((p.t_ckpt - m.load as f64 * blob).abs() < 1e-9, "t_ckpt={}", p.t_ckpt);
+        // A resumed run rewriting half the units pays half.
+        let half = predict_2way(&ModelInput { ckpt_frac: 0.5, ..m });
+        assert!((half.t_ckpt - 0.5 * p.t_ckpt).abs() < 1e-12);
+        // Out-of-range fractions clamp instead of extrapolating.
+        let over = predict_2way(&ModelInput { ckpt_frac: 3.0, ..m });
+        assert_eq!(over.t_ckpt, p.t_ckpt);
+        // 3-way persists one unit per mGEMM step of every slice.
+        let m3 = ModelInput { nvp: 2880, t_gemm: 0.5, load: 6, nst: 16, ..m };
+        let p3 = predict_3way(&m3);
+        let steps = 3.0 + (2880.0 / 6.0) / 16.0;
+        let blob3 = (m3.nvp * m3.nvp * m3.elem_bytes) as f64 / 1e9;
+        assert!((p3.t_ckpt - 6.0 * steps * blob3).abs() < 1e-9, "t_ckpt={}", p3.t_ckpt);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::RunOutcome;
@@ -94,6 +94,12 @@ pub enum ServeError {
     Invalid(String),
     /// The server is shutting down.
     Shutdown,
+    /// The shard worker running (or about to run) this request died —
+    /// a panic unwound it mid-request. The server respawns the worker
+    /// on the next submission to that shard; the failed request
+    /// surfaces this typed error (an `Error` wire frame over a
+    /// connection) instead of hanging its client forever.
+    WorkerDied { shard: usize },
 }
 
 impl std::fmt::Display for ServeError {
@@ -110,6 +116,11 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
             ServeError::Shutdown => write!(f, "server is shutting down"),
+            ServeError::WorkerDied { shard } => write!(
+                f,
+                "shard {shard} worker died mid-request (panic); \
+                 the shard respawns on its next submission — retry"
+            ),
         }
     }
 }
@@ -154,6 +165,15 @@ struct Counters {
     rejected_busy: AtomicU64,
     rejected_too_large: AtomicU64,
     queue_wait_nanos: AtomicU64,
+    respawns: AtomicU64,
+}
+
+/// Poison-tolerant lock: a worker that panicked while holding a shard
+/// or writer lock must not turn every later `lock().unwrap()` into a
+/// cascading panic — the state these mutexes guard (job queues, wire
+/// writers) stays consistent across an unwind, so we keep serving.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Point-in-time scheduler counters.
@@ -166,19 +186,29 @@ pub struct ServeStats {
     /// Total seconds requests spent queued before a worker picked
     /// them up (the perfmodel queue-wait term, measured).
     pub queue_wait_secs: f64,
+    /// Shard workers respawned after dying to a panic (0 on a healthy
+    /// server — the fault-tolerance signal).
+    pub respawns: u64,
 }
 
 /// Handle to one submitted request; [`Ticket::wait`] blocks until its
 /// shard worker finishes the run.
 pub struct Ticket {
     rx: Receiver<Result<RunOutcome>>,
+    shard: usize,
 }
 
 impl Ticket {
+    /// Block until the shard worker finishes the run. If the worker
+    /// dies (panics) with this request in flight or still queued, its
+    /// reply channel drops and this surfaces the typed
+    /// [`ServeError::WorkerDied`] — never a hang, never a poisoned
+    /// lock: the client sees an error and can resubmit.
     pub fn wait(self) -> Result<RunOutcome> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("serve worker dropped the request (server shut down?)"))?
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(anyhow::Error::new(ServeError::WorkerDied { shard: self.shard })),
+        }
     }
 }
 
@@ -189,8 +219,25 @@ pub struct Server {
     session: Arc<Session>,
     cfg: ServeConfig,
     shards: Vec<Arc<ShardQueue>>,
-    workers: Vec<JoinHandle<()>>,
+    /// One slot per shard; a dead (panicked) worker is reaped and
+    /// respawned by the next submission to its shard.
+    workers: Vec<Mutex<Option<JoinHandle<()>>>>,
     counters: Arc<Counters>,
+}
+
+fn spawn_worker(
+    shard: usize,
+    session: &Arc<Session>,
+    queue: &Arc<ShardQueue>,
+    counters: &Arc<Counters>,
+) -> Result<JoinHandle<()>> {
+    let session = Arc::clone(session);
+    let queue = Arc::clone(queue);
+    let counters = Arc::clone(counters);
+    std::thread::Builder::new()
+        .name(format!("serve-shard-{shard}"))
+        .spawn(move || worker_main(session, queue, counters))
+        .context("spawn serve worker")
 }
 
 impl Server {
@@ -214,16 +261,42 @@ impl Server {
                 ready: Condvar::new(),
             });
             shards.push(Arc::clone(&queue));
-            let session = Arc::clone(&session);
-            let counters = Arc::clone(&counters);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("serve-shard-{shard}"))
-                    .spawn(move || worker_main(session, queue, counters))
-                    .context("spawn serve worker")?,
-            );
+            workers.push(Mutex::new(Some(spawn_worker(shard, &session, &queue, &counters)?)));
         }
         Ok(Server { session, cfg, shards, workers, counters })
+    }
+
+    /// Reap-and-respawn a shard's worker if it died. A panicking run
+    /// (e.g. a sink that panics on the worker thread) unwinds
+    /// `worker_main`; the in-flight request's reply channel drops —
+    /// its ticket surfaces [`ServeError::WorkerDied`] — and the next
+    /// submission to the shard lands here, joins the corpse, and
+    /// spawns a fresh worker over the same (still-consistent) queue.
+    fn ensure_worker(&self, shard: usize) -> std::result::Result<(), ServeError> {
+        let mut slot = relock(&self.workers[shard]);
+        let dead = match slot.as_ref() {
+            None => true,
+            Some(h) => h.is_finished(),
+        };
+        if !dead {
+            return Ok(());
+        }
+        // A worker that exited because its queue closed is shutdown,
+        // not death — don't resurrect it.
+        if !relock(&self.shards[shard].state).open {
+            return Err(ServeError::Shutdown);
+        }
+        if let Some(h) = slot.take() {
+            let _ = h.join();
+        }
+        match spawn_worker(shard, &self.session, &self.shards[shard], &self.counters) {
+            Ok(h) => {
+                *slot = Some(h);
+                self.counters.respawns.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(_) => Err(ServeError::WorkerDied { shard }),
+        }
     }
 
     pub fn session(&self) -> &Arc<Session> {
@@ -242,7 +315,7 @@ impl Server {
 
     /// Jobs currently queued (not yet picked up) on a shard.
     pub fn queue_depth(&self, shard: usize) -> usize {
-        self.shards[shard].state.lock().unwrap().jobs.len()
+        relock(&self.shards[shard].state).jobs.len()
     }
 
     /// Admit a request: validate, size-check, enqueue on its dataset's
@@ -262,8 +335,11 @@ impl Server {
             }
         }
         let shard = self.shard_of(cfg);
+        // Respawn the shard's worker first if a panic killed it — the
+        // queue itself survives an unwind, so queued work is preserved.
+        self.ensure_worker(shard)?;
         let queue = &self.shards[shard];
-        let mut state = queue.state.lock().unwrap();
+        let mut state = relock(&queue.state);
         if !state.open {
             return Err(ServeError::Shutdown);
         }
@@ -281,7 +357,7 @@ impl Server {
         drop(state);
         queue.ready.notify_one();
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        Ok(Ticket { rx })
+        Ok(Ticket { rx, shard })
     }
 
     pub fn stats(&self) -> ServeStats {
@@ -291,6 +367,7 @@ impl Server {
             rejected_busy: self.counters.rejected_busy.load(Ordering::Relaxed),
             rejected_too_large: self.counters.rejected_too_large.load(Ordering::Relaxed),
             queue_wait_secs: self.counters.queue_wait_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            respawns: self.counters.respawns.load(Ordering::Relaxed),
         }
     }
 }
@@ -298,11 +375,13 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         for shard in &self.shards {
-            shard.state.lock().unwrap().open = false;
+            relock(&shard.state).open = false;
             shard.ready.notify_all();
         }
-        for worker in self.workers.drain(..) {
-            let _ = worker.join();
+        for worker in &self.workers {
+            if let Some(h) = relock(worker).take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -310,7 +389,7 @@ impl Drop for Server {
 fn worker_main(session: Arc<Session>, queue: Arc<ShardQueue>, counters: Arc<Counters>) {
     loop {
         let job = {
-            let mut state = queue.state.lock().unwrap();
+            let mut state = relock(&queue.state);
             loop {
                 if let Some(job) = state.jobs.pop_front() {
                     break job;
@@ -320,7 +399,10 @@ fn worker_main(session: Arc<Session>, queue: Arc<ShardQueue>, counters: Arc<Coun
                 if !state.open {
                     return;
                 }
-                state = queue.ready.wait(state).unwrap();
+                state = queue
+                    .ready
+                    .wait(state)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         counters
@@ -363,7 +445,10 @@ where
             Ok(done) => done,
             Err(e) => Frame::Error { message: format!("{e:#}") },
         };
-        let mut w = shared.lock().unwrap();
+        // Poison-tolerant: a worker panicking mid-frame must not take
+        // the whole connection down with a lock-poison cascade — the
+        // client gets this request's Error frame and keeps going.
+        let mut w = relock(&shared);
         frame.write_to(&mut *w)?;
         w.flush().context("flush reply")?;
     }

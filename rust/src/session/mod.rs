@@ -55,7 +55,9 @@ use anyhow::{ensure, Context, Result};
 use self::cache::{CacheSnapshot, CostLedger};
 
 use crate::config::{BackendKind, InputSource, Precision, RunConfig};
-use crate::coordinator::{self, prefetch::ReadAhead, BlockProvider, RunOutcome};
+use crate::coordinator::{
+    self, checkpoint::CheckpointStore, prefetch::ReadAhead, BlockProvider, RunOpts, RunOutcome,
+};
 use crate::decomp::Grid;
 use crate::metrics::{Metric, MetricId};
 use crate::output::sink::{FileSink, ResultSink, TeeRef};
@@ -504,6 +506,11 @@ pub struct Session {
     spill_store: Option<Arc<dyn BlockStore>>,
     pjrt: Mutex<Option<PjrtService>>,
     datasets: Mutex<HashMap<DatasetSpec, Dataset>>,
+    /// Campaign checkpoint area (`--checkpoint-dir`): when set, every
+    /// run this session serves persists completed work units and
+    /// resumes past ones bit-identically. `None` (the default) runs
+    /// without checkpointing.
+    checkpoint: Mutex<Option<Arc<CheckpointStore>>>,
 }
 
 impl Default for Session {
@@ -556,7 +563,23 @@ impl Session {
             spill_store,
             pjrt: Mutex::new(None),
             datasets: Mutex::new(HashMap::new()),
+            checkpoint: Mutex::new(None),
         }
+    }
+
+    /// Attach (or detach, with `None`) a campaign checkpoint store.
+    /// Subsequent runs persist completed work units under it and skip +
+    /// replay units a previous run already finished — the
+    /// `--checkpoint-dir` resume path. See
+    /// [`crate::coordinator::checkpoint`] for the key scheme and the
+    /// bit-identity contract.
+    pub fn set_checkpoint_store(&self, store: Option<Arc<CheckpointStore>>) {
+        *self.checkpoint.lock().unwrap() = store;
+    }
+
+    /// Convenience for the CLI: checkpoint into `dir`.
+    pub fn checkpoint_to_dir(&self, dir: impl AsRef<std::path::Path>) {
+        self.set_checkpoint_store(Some(Arc::new(CheckpointStore::dir(dir))));
     }
 
     pub fn limits(&self) -> SessionLimits {
@@ -615,13 +638,17 @@ impl Session {
         let readahead = Arc::new(ReadAhead::new(inner));
         let provider = Arc::clone(&readahead) as Arc<dyn BlockProvider>;
         let cache_before = self.ledger.snapshot();
+        let opts = RunOpts {
+            checkpoint: self.checkpoint.lock().unwrap().clone(),
+            ..RunOpts::default()
+        };
         let result = match &req.cfg.output_dir {
             Some(dir) => {
                 let file = FileSink::new(dir, req.cfg.output_threshold);
                 let tee = TeeRef::new(vec![sink, &file as &dyn ResultSink]);
-                coordinator::run_streamed(&req.cfg, client, provider, &tee)
+                coordinator::run_streamed_opts(&req.cfg, client, provider, &tee, &opts)
             }
-            None => coordinator::run_streamed(&req.cfg, client, provider, sink),
+            None => coordinator::run_streamed_opts(&req.cfg, client, provider, sink, &opts),
         };
         // Stop the read-ahead task before returning, error or not — a
         // dangling prefetch must never outlive its run.

@@ -9,11 +9,24 @@
 //! [`StoreError`]s through `Session::run` (and as an `Error` wire frame
 //! through `comet serve`); a poisoned spill file is detected by the
 //! codec checksum, never silently decoded.
+//!
+//! The comm fabric gets the same treatment: [`FaultPlan`] /
+//! [`FaultKind`] (re-exported from [`crate::comm::faults`]) script
+//! per-`(rank, send-op)` link faults, and [`script_comm_faults`] /
+//! [`scripted_comm_plan`] place `n` of them at PRNG-chosen slots —
+//! deterministic per seed, mirroring the "fail the next `n` ops"
+//! shape of [`FailingStore`]. [`PanicSink`] rounds the kit out for the
+//! serve layer: a result sink that panics on the shard worker's own
+//! thread, driving the worker-death → typed-error → respawn path.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+pub use crate::comm::faults::{FaultKind, FaultPlan};
+
+use crate::output::sink::{NodeSink, ResultSink};
+use crate::util::prng::Stream;
 use crate::vecdata::oocstore::{BlockStore, StoreError};
 
 /// A [`BlockStore`] wrapper with scripted fault queues. Each `get`/`put`
@@ -119,6 +132,76 @@ impl BlockStore for FailingStore {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Comm-fabric fault scripting.
+
+/// Place `n` faults of `kind` on `plan` at PRNG-chosen, distinct
+/// `(rank, k)` slots over `np` ranks × `ops_per_rank` send steps.
+/// Deterministic: the same `(seed, np, ops_per_rank, n, kind)` always
+/// produces the same schedule (pinned by a testkit determinism test),
+/// and the schedule never consults the wall clock — the retry module's
+/// no-wall-clock rule extends to fault placement. `n` is clamped to
+/// the slot count.
+pub fn script_comm_faults(
+    plan: &FaultPlan,
+    seed: u64,
+    np: usize,
+    ops_per_rank: u64,
+    n: usize,
+    kind: FaultKind,
+) {
+    assert!(np > 0 && ops_per_rank > 0, "empty comm-fault domain");
+    let slots = np as u64 * ops_per_rank;
+    let n = n.min(slots as usize);
+    let mut stream = Stream::new(seed);
+    let mut used = HashSet::new();
+    while used.len() < n {
+        let slot = stream.below(slots);
+        if !used.insert(slot) {
+            continue;
+        }
+        let (rank, k) = ((slot / ops_per_rank) as usize, slot % ops_per_rank);
+        match kind {
+            FaultKind::Drop => plan.drop_at(rank, k),
+            FaultKind::Corrupt => plan.corrupt_at(rank, k),
+            FaultKind::Delay(d) => plan.delay_at(rank, k, d),
+            FaultKind::Kill => plan.kill_at(rank, k),
+        }
+    }
+}
+
+/// A fresh [`FaultPlan`] with `n` PRNG-placed faults (see
+/// [`script_comm_faults`]), ready for
+/// [`VirtualCluster::with_faults`](crate::comm::VirtualCluster::with_faults).
+pub fn scripted_comm_plan(
+    seed: u64,
+    np: usize,
+    ops_per_rank: u64,
+    n: usize,
+    kind: FaultKind,
+) -> Arc<FaultPlan> {
+    let plan = Arc::new(FaultPlan::new());
+    script_comm_faults(&plan, seed, np, ops_per_rank, n, kind);
+    plan
+}
+
+// ---------------------------------------------------------------------------
+// Serve-layer fault rig.
+
+/// A [`ResultSink`] that panics when the run asks for its first node
+/// sink — on the **serve shard worker's own thread** (node sinks are
+/// created before node threads spawn), so the worker genuinely dies
+/// instead of the coordinator supervisor catching the panic. Drives
+/// `serve`'s worker-death path: the in-flight ticket surfaces the
+/// typed `WorkerDied`, and the next submission respawns the shard.
+pub struct PanicSink;
+
+impl ResultSink for PanicSink {
+    fn node_sink(&self, _rank: usize) -> anyhow::Result<Box<dyn NodeSink>> {
+        panic!("scripted sink panic (testkit::faults::PanicSink)");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +244,45 @@ mod tests {
         store.put("k", b"abc").unwrap();
         assert!(store.poison("k"));
         assert_eq!(store.get("k").unwrap().as_deref(), Some(&b"ab\x62"[..]));
+    }
+
+    #[test]
+    fn scripted_comm_schedules_are_deterministic_per_seed() {
+        let a = scripted_comm_plan(11, 4, 16, 6, FaultKind::Drop);
+        let b = scripted_comm_plan(11, 4, 16, 6, FaultKind::Drop);
+        assert_eq!(a.remaining_schedule(), b.remaining_schedule());
+        assert_eq!(a.remaining_schedule().len(), 6);
+        for (rank, k, kind) in a.remaining_schedule() {
+            assert!(rank < 4 && k < 16);
+            assert_eq!(kind, FaultKind::Drop);
+        }
+        // A different seed places at least one fault elsewhere.
+        let c = scripted_comm_plan(12, 4, 16, 6, FaultKind::Drop);
+        assert_ne!(a.remaining_schedule(), c.remaining_schedule());
+        // Over-asking clamps to the slot count without looping forever.
+        let full = scripted_comm_plan(3, 2, 3, 999, FaultKind::Corrupt);
+        assert_eq!(full.remaining_schedule().len(), 6);
+    }
+
+    #[test]
+    fn scripted_kinds_land_as_scheduled() {
+        let plan = FaultPlan::new();
+        script_comm_faults(&plan, 5, 2, 8, 3, FaultKind::Corrupt);
+        script_comm_faults(
+            &plan,
+            6,
+            2,
+            8,
+            1,
+            FaultKind::Delay(std::time::Duration::from_millis(1)),
+        );
+        let sched = plan.remaining_schedule();
+        // 3 corrupts + 1 delay, unless the two seeds collided on a slot
+        // (the second insert overwrites) — either way every entry is
+        // one of the scripted kinds.
+        assert!(sched.len() >= 3 && sched.len() <= 4, "{sched:?}");
+        for (_, _, kind) in sched {
+            assert!(matches!(kind, FaultKind::Corrupt | FaultKind::Delay(_)));
+        }
     }
 }

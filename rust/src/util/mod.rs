@@ -1,9 +1,11 @@
 //! Small in-tree substrates the offline environment forces us to own:
 //! deterministic PRNG streams, stopwatches, human-readable rate
-//! formatting, and a generic scalar trait shared by the f32/f64 paths.
+//! formatting, the shared transient-retry policy, and a generic scalar
+//! trait shared by the f32/f64 paths.
 
 pub mod fmt;
 pub mod prng;
+pub mod retry;
 pub mod timer;
 
 /// Scalar abstraction over the two precisions the paper evaluates

@@ -1,0 +1,169 @@
+//! Shared transient-retry policy with deterministic backoff.
+//!
+//! Hoisted out of `vecdata::oocstore` so the spill store and the
+//! simulated comm fabric retry with **one** policy instead of two
+//! drifting copies. The shape is classic exponential backoff —
+//! `base × 2^attempt` — plus a bounded jitter term.
+//!
+//! ## The no-wall-clock determinism rule
+//!
+//! The *schedule* (how many attempts, how long each sleep) is a pure
+//! function of the policy's fields and the attempt index — never of
+//! `Instant::now()`, thread IDs, or any other ambient state. Jitter is
+//! derived from a caller-provided PRNG seed via
+//! [`crate::util::prng::mix64`], so two runs with the same seed sleep
+//! the exact same schedule. Wall clock enters only when the sleep is
+//! *performed*; fault-injection tests can therefore pin the whole
+//! schedule (attempt counts, per-attempt delays) without racing real
+//! time.
+
+use std::time::Duration;
+
+use crate::util::prng::mix64;
+
+/// Attempts a default [`Policy`] makes before surfacing a transient
+/// error (shared with `vecdata::oocstore::RETRY_ATTEMPTS`).
+pub const DEFAULT_ATTEMPTS: u32 = 4;
+
+/// Default base backoff; doubles per attempt. Sub-millisecond so
+/// scripted-fault tests stay fast while real interrupted syscalls
+/// still get breathing room.
+pub const DEFAULT_BASE: Duration = Duration::from_micros(200);
+
+/// Maximum jitter as a fraction of the attempt's backoff (+25%).
+const JITTER_FRAC: f64 = 0.25;
+
+/// A deterministic exponential-backoff retry policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Policy {
+    /// Total attempts (first try included) before the transient error
+    /// surfaces.
+    pub attempts: u32,
+    /// Backoff before retry `n` (0-based) is `base × 2^n` plus jitter.
+    pub base: Duration,
+    /// Seed for the deterministic jitter stream. Same seed → same
+    /// schedule; vary it per call site (rank, key hash) to decorrelate
+    /// concurrent retriers without touching the wall clock.
+    pub jitter_seed: u64,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy { attempts: DEFAULT_ATTEMPTS, base: DEFAULT_BASE, jitter_seed: 0 }
+    }
+}
+
+impl Policy {
+    /// The default policy reseeded for a specific call site.
+    pub fn seeded(jitter_seed: u64) -> Self {
+        Policy { jitter_seed, ..Policy::default() }
+    }
+
+    /// The sleep before retry `attempt` (0-based: the delay after the
+    /// first failure is `delay(0)`). Pure function of the policy and
+    /// the attempt index — see the module docs' no-wall-clock rule.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let backoff = self.base * (1u32 << attempt.min(20));
+        // Jitter in [0, JITTER_FRAC) of the backoff, from a hash of
+        // (seed, attempt) — deterministic, decorrelated across seeds.
+        let bits = mix64(self.jitter_seed.wrapping_add(0x9E37_79B9).wrapping_add(attempt as u64));
+        let frac = (bits >> 11) as f64 / (1u64 << 53) as f64;
+        backoff + Duration::from_secs_f64(backoff.as_secs_f64() * JITTER_FRAC * frac)
+    }
+
+    /// Run `op` under the policy: errors for which `is_transient`
+    /// returns true are retried (sleeping [`Policy::delay`] between
+    /// attempts) until the attempt budget is spent; any other error —
+    /// and a transient one past the budget — surfaces immediately.
+    pub fn run<T, E>(
+        &self,
+        is_transient: impl Fn(&E) -> bool,
+        mut op: impl FnMut() -> Result<T, E>,
+    ) -> Result<T, E> {
+        let mut attempt = 0;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) if is_transient(&e) && attempt + 1 < self.attempts.max(1) => {
+                    std::thread::sleep(self.delay(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_exponential() {
+        let p = Policy::seeded(42);
+        let again = Policy::seeded(42);
+        for a in 0..6 {
+            // Same seed → bit-identical schedule (no wall clock).
+            assert_eq!(p.delay(a), again.delay(a));
+            // Monotone doubling envelope: base×2^a ≤ delay < base×2^a×(1+25%).
+            let floor = p.base * (1 << a);
+            assert!(p.delay(a) >= floor, "attempt {a}: {:?} < {floor:?}", p.delay(a));
+            let ceil = floor + Duration::from_secs_f64(floor.as_secs_f64() * 0.25);
+            assert!(p.delay(a) <= ceil, "attempt {a}: {:?} > {ceil:?}", p.delay(a));
+        }
+        // Different seeds decorrelate at least one attempt's jitter.
+        let other = Policy::seeded(43);
+        assert!((0..6).any(|a| other.delay(a) != p.delay(a)));
+    }
+
+    #[test]
+    fn run_retries_transients_within_budget() {
+        let p = Policy { base: Duration::from_micros(1), ..Policy::default() };
+        // Succeeds on the last allowed attempt.
+        let mut calls = 0;
+        let out = p.run(
+            |_: &&str| true,
+            || {
+                calls += 1;
+                if calls < p.attempts { Err("flaky") } else { Ok(calls) }
+            },
+        );
+        assert_eq!(out.unwrap(), p.attempts);
+        // Budget exhausted: the error surfaces after exactly `attempts` calls.
+        let mut calls = 0;
+        let out: Result<(), _> = p.run(
+            |_: &&str| true,
+            || {
+                calls += 1;
+                Err("always")
+            },
+        );
+        assert_eq!(out.unwrap_err(), "always");
+        assert_eq!(calls, p.attempts);
+        // Non-transient errors never retry.
+        let mut calls = 0;
+        let out: Result<(), _> = p.run(
+            |_: &&str| false,
+            || {
+                calls += 1;
+                Err("fatal")
+            },
+        );
+        assert_eq!(out.unwrap_err(), "fatal");
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn degenerate_budgets_still_run_once() {
+        let p = Policy { attempts: 0, ..Policy::default() };
+        let mut calls = 0;
+        let _: Result<(), _> = p.run(
+            |_: &&str| true,
+            || {
+                calls += 1;
+                Err("x")
+            },
+        );
+        assert_eq!(calls, 1);
+    }
+}

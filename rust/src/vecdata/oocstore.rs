@@ -239,29 +239,16 @@ impl BlockStore for MemStore {
 /// Attempts [`with_retry`] makes before giving up on a transient
 /// failure (the fault rig scripts `RETRY_ATTEMPTS - 1` transient
 /// errors to pin "recovers on the last try").
-pub const RETRY_ATTEMPTS: u32 = 4;
+pub const RETRY_ATTEMPTS: u32 = crate::util::retry::DEFAULT_ATTEMPTS;
 
-/// Base backoff between retries; doubles per attempt. Sub-millisecond
-/// so scripted-fault tests stay fast while real interrupted syscalls
-/// still get breathing room.
-const RETRY_BASE: std::time::Duration = std::time::Duration::from_micros(200);
-
-/// Run a store operation under the transient-retry policy: transient
-/// errors are retried up to [`RETRY_ATTEMPTS`] times with exponential
-/// backoff; permanent and corrupt errors (and transient errors past
-/// the attempt budget) surface immediately as the typed error.
-pub fn with_retry<T>(mut op: impl FnMut() -> Result<T, StoreError>) -> Result<T, StoreError> {
-    let mut attempt = 0;
-    loop {
-        match op() {
-            Ok(v) => return Ok(v),
-            Err(e) if e.kind == StoreErrorKind::Transient && attempt + 1 < RETRY_ATTEMPTS => {
-                std::thread::sleep(RETRY_BASE * (1 << attempt));
-                attempt += 1;
-            }
-            Err(e) => return Err(e),
-        }
-    }
+/// Run a store operation under the shared transient-retry policy
+/// ([`crate::util::retry::Policy`]): transient errors are retried up
+/// to [`RETRY_ATTEMPTS`] times with deterministic exponential backoff;
+/// permanent and corrupt errors (and transient errors past the attempt
+/// budget) surface immediately as the typed error.
+pub fn with_retry<T>(op: impl FnMut() -> Result<T, StoreError>) -> Result<T, StoreError> {
+    crate::util::retry::Policy::default()
+        .run(|e: &StoreError| e.kind == StoreErrorKind::Transient, op)
 }
 
 /// FNV-1a 64-bit — the per-block payload checksum. Not cryptographic;

@@ -1,0 +1,319 @@
+//! Fault-tolerance acceptance suite (ISSUE 9):
+//!
+//! 1. **Zero-overhead when healthy** — attaching the fault-injection
+//!    seam (an empty `FaultPlan`) and a checkpoint store to a run adds
+//!    ZERO wire messages/bytes over the `tests/comm_accounting.rs`
+//!    pinned baselines, and every resilience counter stays 0.
+//! 2. **Transient-fault recovery** — scripted drops/corrupts/delays
+//!    across metrics × backends × 2/3-way × thread counts recover
+//!    bit-identically (link-layer retransmits under the shared retry
+//!    policy; per-envelope checksum catches corruption).
+//! 3. **Typed abort + resume** — a killed rank surfaces a typed
+//!    [`RunError`] naming the rank within a bounded deadline (no hung
+//!    ring), and rerunning against the same checkpoint store finishes
+//!    the campaign bit-identically, skipping persisted units.
+//! 4. **Full resume** — rerunning a completed, checkpointed campaign
+//!    recomputes nothing (zero kernel calls) while keeping the comm
+//!    schedule in lockstep and the results bit-identical.
+//! 5. **Serve worker respawn** — a sink panic on a shard worker's own
+//!    thread kills the worker; the in-flight ticket gets the typed
+//!    `WorkerDied`, the shard respawns on its next submission, and
+//!    concurrent follow-up requests complete bit-identically.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::{self, checkpoint::CheckpointStore, FreshIngest, RunError, RunOpts};
+use comet::decomp::Grid;
+use comet::metrics::MetricId;
+use comet::output::sink::{CollectSink, DiscardSink, ResultSink};
+use comet::serve::{ServeConfig, ServeError, Server};
+use comet::session::Session;
+use comet::testkit::faults::{scripted_comm_plan, FaultKind, FaultPlan, PanicSink};
+use comet::vecdata::SyntheticKind;
+
+fn cfg_for(metric: MetricId, num_way: usize, nv: usize, nf: usize, grid: Grid) -> RunConfig {
+    let kind = match metric {
+        MetricId::Ccc => SyntheticKind::Alleles,
+        _ => SyntheticKind::RandomGrid,
+    };
+    RunConfig {
+        metric,
+        num_way,
+        nv,
+        nf,
+        backend: BackendKind::CpuOptimized,
+        grid,
+        input: InputSource::Synthetic { kind, seed: 29 },
+        store_metrics: false,
+        ..Default::default()
+    }
+}
+
+fn run_opts(cfg: &RunConfig, sink: &dyn ResultSink, opts: &RunOpts) -> comet::Result<coordinator::RunOutcome> {
+    coordinator::run_streamed_opts(cfg, None, Arc::new(FreshIngest), sink, opts)
+}
+
+// The tests/comm_accounting.rs pinned shape and its exact wire totals:
+// nv=64, nf=4096 over (1,4,1); steps Δ ∈ {1,2} → 8 block + 8 sums
+// sends. The fault-tolerance machinery must not move these numbers.
+const PINNED_MESSAGES: u64 = 16;
+const PINNED_SORENSON_BYTES: u64 = 66_560;
+const PINNED_FLOAT_BYTES: u64 = 4_195_328;
+
+fn pinned_cfg(metric: MetricId) -> RunConfig {
+    RunConfig {
+        metric,
+        num_way: 2,
+        nv: 64,
+        nf: 4096,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, 4, 1),
+        input: InputSource::Synthetic { kind: SyntheticKind::RandomGrid, seed: 7 },
+        store_metrics: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fault_free_runs_add_zero_wire_overhead_and_zero_counters() {
+    for (metric, bytes) in [
+        (MetricId::Czekanowski, PINNED_FLOAT_BYTES),
+        (MetricId::Sorenson, PINNED_SORENSON_BYTES),
+    ] {
+        let cfg = pinned_cfg(metric);
+        let baseline = coordinator::run(&cfg).unwrap();
+        assert_eq!(baseline.stats.comm_messages, PINNED_MESSAGES);
+        assert_eq!(baseline.stats.comm_bytes, bytes);
+        assert_eq!(baseline.stats.comm_retries, 0);
+        assert_eq!(baseline.stats.comm_corrupt, 0);
+        assert_eq!(baseline.stats.faults_injected, 0);
+        assert_eq!(baseline.stats.ckpt_writes + baseline.stats.ckpt_skipped, 0);
+
+        // Same run with the whole robustness apparatus attached but
+        // idle (empty plan) or off the wire (checkpoint writes go to
+        // the store, not the fabric): wire accounting must be
+        // bit-identical to the bare run — the zero-overhead pin.
+        let opts = RunOpts {
+            faults: Some(Arc::new(FaultPlan::new())),
+            checkpoint: Some(Arc::new(CheckpointStore::mem())),
+        };
+        let armed = run_opts(&cfg, &DiscardSink, &opts).unwrap();
+        assert_eq!(armed.checksum, baseline.checksum, "{metric:?}");
+        assert_eq!(armed.stats.comm_messages, PINNED_MESSAGES, "{metric:?}");
+        assert_eq!(armed.stats.comm_bytes, bytes, "{metric:?}");
+        assert_eq!(armed.stats.comm_retries, 0);
+        assert_eq!(armed.stats.comm_corrupt, 0);
+        assert_eq!(armed.stats.faults_injected, 0);
+        assert!(armed.stats.ckpt_writes > 0, "checkpointing must actually persist");
+        assert_eq!(armed.stats.ckpt_errors, 0);
+    }
+}
+
+#[test]
+fn scripted_drops_and_corrupts_recover_bit_identically() {
+    // The recovery matrix: every metric family × both native backends
+    // × 2-way and 3-way × serial/threaded kernels. Each combination is
+    // run clean, then under scripted drops, then scripted corruption;
+    // all three checksums must agree and the counters must show the
+    // faults actually fired and were retransmitted around.
+    let mut combos: Vec<RunConfig> = Vec::new();
+    for metric in [MetricId::Czekanowski, MetricId::Sorenson, MetricId::Ccc] {
+        for backend in [BackendKind::CpuReference, BackendKind::CpuOptimized] {
+            for threads in [1usize, 2] {
+                let mut cfg = cfg_for(metric, 2, 24, 48, Grid::new(1, 3, 1));
+                cfg.backend = backend;
+                cfg.threads = threads;
+                combos.push(cfg);
+            }
+        }
+    }
+    for backend in [BackendKind::CpuReference, BackendKind::CpuOptimized] {
+        for threads in [1usize, 2] {
+            let mut cfg = cfg_for(MetricId::Czekanowski, 3, 16, 24, Grid::new(1, 2, 1));
+            cfg.backend = backend;
+            cfg.threads = threads;
+            combos.push(cfg);
+        }
+    }
+
+    for (i, cfg) in combos.iter().enumerate() {
+        let clean = coordinator::run(cfg).unwrap();
+        let np = cfg.grid.np();
+        // Slots (rank, k ∈ {0, 1}) are all real send ops for these
+        // shapes: every rank sends at least a block + a sums payload.
+        for kind in [FaultKind::Drop, FaultKind::Corrupt] {
+            let plan = scripted_comm_plan(41 + i as u64, np, 2, np, kind);
+            let opts = RunOpts { faults: Some(plan), checkpoint: None };
+            let out = run_opts(cfg, &DiscardSink, &opts).unwrap();
+            let what = format!(
+                "combo {i} ({:?} {}-way {:?} t{}) {}",
+                cfg.metric, cfg.num_way, cfg.backend, cfg.threads,
+                kind.name()
+            );
+            assert_eq!(out.checksum, clean.checksum, "{what}");
+            assert_eq!(out.stats.metrics, clean.stats.metrics, "{what}");
+            assert!(out.stats.faults_injected > 0, "{what}: no fault fired");
+            assert!(out.stats.comm_retries > 0, "{what}: recovery must retransmit");
+            if kind == FaultKind::Corrupt {
+                assert!(out.stats.comm_corrupt > 0, "{what}: corruption must be detected");
+            }
+        }
+    }
+
+    // Delays stall but never retransmit: bit-identical with zero
+    // retries — the accounting separates slow links from lossy ones.
+    let cfg = cfg_for(MetricId::Czekanowski, 2, 24, 48, Grid::new(1, 3, 1));
+    let clean = coordinator::run(&cfg).unwrap();
+    let plan =
+        scripted_comm_plan(7, cfg.grid.np(), 2, 2, FaultKind::Delay(Duration::from_millis(1)));
+    let out = run_opts(&cfg, &DiscardSink, &RunOpts { faults: Some(plan), checkpoint: None })
+        .unwrap();
+    assert_eq!(out.checksum, clean.checksum);
+    assert!(out.stats.faults_injected > 0);
+    assert_eq!(out.stats.comm_retries, 0);
+}
+
+#[test]
+fn exhausted_retransmit_budget_is_a_typed_bounded_abort() {
+    let cfg = cfg_for(MetricId::Czekanowski, 2, 24, 48, Grid::new(1, 3, 1));
+    let plan = Arc::new(FaultPlan::new());
+    plan.drop_at_times(1, 0, u32::MAX); // every retransmit of rank 1's first send is lost
+    plan.set_recv_deadline(Duration::from_millis(100));
+    let t0 = Instant::now();
+    let err = run_opts(&cfg, &DiscardSink, &RunOpts { faults: Some(plan), checkpoint: None })
+        .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(30), "abort must be bounded, not a hang");
+    let run_err = err.downcast_ref::<RunError>().expect("typed RunError");
+    assert!(!run_err.ranks.is_empty());
+    assert!(
+        run_err.ranks.iter().any(|(r, _)| *r == 1),
+        "the failing sender must be diagnosed: {run_err}"
+    );
+}
+
+#[test]
+fn killed_rank_aborts_typed_then_resume_is_bit_identical() {
+    let mut cfg = cfg_for(MetricId::Czekanowski, 2, 32, 48, Grid::new(1, 4, 1));
+    cfg.store_metrics = true;
+    let baseline = coordinator::run(&cfg).unwrap();
+
+    let store = Arc::new(CheckpointStore::mem());
+
+    // Kill rank 2 at its 4th send — after the first circulant step's
+    // units have been computed and persisted, mid-ring in the second.
+    let plan = Arc::new(FaultPlan::new());
+    plan.kill_at(2, 3);
+    plan.set_recv_deadline(Duration::from_millis(100));
+    let t0 = Instant::now();
+    let err = run_opts(
+        &cfg,
+        &DiscardSink,
+        &RunOpts { faults: Some(plan), checkpoint: Some(Arc::clone(&store)) },
+    )
+    .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(30), "abort must be bounded");
+    let run_err = err.downcast_ref::<RunError>().expect("typed RunError");
+    assert!(
+        run_err.ranks.iter().any(|(r, _)| *r == 2),
+        "the killed rank must be diagnosed: {run_err}"
+    );
+
+    // Resume against the same store: the campaign completes, skipping
+    // the units the doomed run persisted, and every metric value is
+    // bit-identical to the never-faulted baseline.
+    let sink = CollectSink::for_metric(cfg.metric);
+    let resumed = run_opts(
+        &cfg,
+        &sink,
+        &RunOpts { faults: None, checkpoint: Some(Arc::clone(&store)) },
+    )
+    .unwrap();
+    assert_eq!(resumed.checksum, baseline.checksum);
+    assert!(resumed.stats.ckpt_skipped > 0, "resume must reuse persisted units");
+    assert!(resumed.stats.ckpt_replayed > 0, "skipped units must replay their tiles");
+    let (pairs, _) = sink.take();
+    let want = baseline.pairs.as_ref().unwrap().to_dense(cfg.nv);
+    let got = pairs.to_dense(cfg.nv);
+    assert_eq!(want.len(), got.len());
+    for (off, (x, y)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(x.unwrap().to_bits(), y.unwrap().to_bits(), "offset {off}");
+    }
+}
+
+#[test]
+fn completed_campaign_resumes_without_recomputing() {
+    // 2-way: a second run over a fully-persisted store recomputes no
+    // numerators at all — the comm schedule still runs in lockstep
+    // (identical wire accounting), but every unit skips its kernel.
+    let cfg = cfg_for(MetricId::Czekanowski, 2, 32, 48, Grid::new(1, 4, 1));
+    let store = Arc::new(CheckpointStore::mem());
+    let opts = RunOpts { faults: None, checkpoint: Some(Arc::clone(&store)) };
+    let first = run_opts(&cfg, &DiscardSink, &opts).unwrap();
+    assert!(first.stats.ckpt_writes > 0);
+    assert_eq!(first.stats.ckpt_skipped, 0);
+
+    let second = run_opts(&cfg, &DiscardSink, &opts).unwrap();
+    assert_eq!(second.checksum, first.checksum);
+    assert_eq!(second.stats.ckpt_writes, 0, "nothing new to persist");
+    assert!(second.stats.ckpt_skipped > 0);
+    assert_eq!(second.stats.mgemm2_calls, 0, "full resume must skip every kernel");
+    assert_eq!(second.stats.comm_messages, first.stats.comm_messages, "lockstep schedule");
+    assert_eq!(second.stats.comm_bytes, first.stats.comm_bytes);
+
+    // 3-way: same contract at the slice/stage granularity.
+    let cfg3 = cfg_for(MetricId::Czekanowski, 3, 16, 24, Grid::new(1, 2, 1));
+    let store3 = Arc::new(CheckpointStore::mem());
+    let opts3 = RunOpts { faults: None, checkpoint: Some(Arc::clone(&store3)) };
+    let first3 = run_opts(&cfg3, &DiscardSink, &opts3).unwrap();
+    assert!(first3.stats.ckpt_writes > 0);
+    let second3 = run_opts(&cfg3, &DiscardSink, &opts3).unwrap();
+    assert_eq!(second3.checksum, first3.checksum);
+    assert_eq!(second3.stats.ckpt_writes, 0);
+    assert!(second3.stats.ckpt_skipped > 0);
+}
+
+#[test]
+fn serve_worker_panic_surfaces_typed_and_respawns() {
+    let cfg = cfg_for(MetricId::Czekanowski, 2, 24, 32, Grid::new(1, 2, 1));
+    let baseline = coordinator::run(&cfg).unwrap();
+
+    let session = Arc::new(Session::new());
+    let server = Server::start(
+        Arc::clone(&session),
+        ServeConfig { workers: 2, queue_capacity: 8, max_request_bytes: None },
+    )
+    .unwrap();
+    let shard = server.shard_of(&cfg);
+
+    // A sink that panics on the shard worker's own thread (node sinks
+    // are created before node threads spawn) — the worker genuinely
+    // dies; the coordinator supervisor never gets to catch this one.
+    let ticket = server.submit(&cfg, Arc::new(PanicSink)).unwrap();
+    let err = ticket.wait().unwrap_err();
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::WorkerDied { shard: s }) => assert_eq!(*s, shard),
+        other => panic!("expected WorkerDied, got {other:?}: {err:#}"),
+    }
+
+    // The dead shard respawns lazily on its next submission; ≥ 3
+    // concurrent follow-up clients all complete bit-identically.
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let server = &server;
+            let cfg = &cfg;
+            let baseline = &baseline;
+            s.spawn(move || {
+                let out = server.submit(cfg, Arc::new(DiscardSink)).unwrap().wait().unwrap();
+                assert_eq!(out.checksum, baseline.checksum);
+            });
+        }
+    });
+
+    let stats = server.stats();
+    assert!(stats.respawns >= 1, "the dead shard worker must have been respawned");
+    assert_eq!(stats.submitted, 4);
+    assert_eq!(server.queue_depth(shard), 0);
+}
