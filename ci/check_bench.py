@@ -36,8 +36,16 @@ ENTRY_KEYS = {
     "comparisons_per_sec": (int, float),
 }
 METRICS = {"czekanowski", "ccc", "sorenson"}
-REPRS = {"float", "packed"}
-KERNELS = {"full", "tri", "session-oneshot", "session-reused", "session-ooc", "session-faulted"}
+REPRS = {"float", "packed", "packed2"}
+KERNELS = {
+    "full",
+    "tri",
+    "session-oneshot",
+    "session-reused",
+    "session-ooc",
+    "session-faulted",
+    "ingest-bed",
+}
 
 
 def check(path: Path) -> list:

@@ -72,6 +72,8 @@ fn main() {
             t_backoff: 0.0,
             ckpt_frac: 0.0,
             ckpt_bw: 0.0,
+            ingest_bytes: 0,
+            ingest_bw: 0.0,
             net: host_net(),
             link: host_net(),
         };
@@ -112,6 +114,8 @@ fn main() {
         t_backoff: 0.0,
         ckpt_frac: 0.0,
         ckpt_bw: 0.0,
+        ingest_bytes: 0,
+        ingest_bw: 0.0,
         net: CostModel::gemini(),
         link: CostModel::pcie2(),
     };

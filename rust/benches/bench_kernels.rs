@@ -47,8 +47,11 @@
 //!   campaign comparisons
 //!   (nf · nv(nv−1)/2 per run × runs) over the median batch time, and
 //!   `iters` is the number of back-to-back runs per batch.
+//!   "ingest-bed" is the real-data front door: one PLINK `.bed`
+//!   column-span decode plus the two-plane CCC pack, rated in genotype
+//!   calls (nf · nv) per second rather than pair comparisons.
 //! * `repr` matches the metric's block representation
-//!   ("float" | "packed").
+//!   ("float" | "packed" | "packed2").
 //! * `source` is "measured" for harness output; seed points generated
 //!   without a local toolchain are marked "estimate" and are replaced
 //!   in spirit by the first measured run appended after them.
@@ -257,6 +260,34 @@ fn main() {
             secs: faulted,
             cps: campaign_cmps as f64 / faulted,
         });
+    }
+
+    // --- Real-data ingest point: one PLINK .bed column-span decode
+    // plus the two-plane CCC pack — the per-node-block price a
+    // .bed-fed run pays once at ingest (the kernels then consume the
+    // packed planes directly). Rated in genotype calls per pass, not
+    // pair comparisons.
+    {
+        let dir = std::env::temp_dir().join(format!("comet-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bed = comet::vecdata::geno::write_plink_fixture(&dir, "bench", &alleles).unwrap();
+        let calls = (nf * nv) as u64;
+        let (s, c) = time_kernel("ingest-bed", iters, calls, || {
+            let span = comet::vecdata::geno::read_bed_cols(&bed, nf, nv, 0, nv).unwrap();
+            std::hint::black_box(span.pack2());
+        });
+        entries.push(Entry {
+            metric: "ccc",
+            repr: "packed2",
+            kernel: "ingest-bed",
+            threads: 1,
+            nf,
+            nv,
+            iters,
+            secs: s,
+            cps: c,
+        });
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     println!(

@@ -86,6 +86,8 @@ fn main() {
             t_backoff: 0.0,
             ckpt_frac: 0.0,
             ckpt_bw: 0.0,
+            ingest_bytes: 0,
+            ingest_bw: 0.0,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         };
@@ -121,6 +123,8 @@ fn main() {
             t_backoff: 0.0,
             ckpt_frac: 0.0,
             ckpt_bw: 0.0,
+            ingest_bytes: 0,
+            ingest_bw: 0.0,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         };

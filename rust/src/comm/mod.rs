@@ -186,6 +186,19 @@ pub fn payload_checksum(p: &Payload) -> u64 {
                         h.u64(*w);
                     }
                 }
+                BlockData::Packed2(pb) => {
+                    h.u64(2);
+                    h.u64(pb.words_per_vec as u64);
+                    h.u64(pb.missing.is_some() as u64);
+                    for w in pb.lo.iter().chain(pb.hi.iter()) {
+                        h.u64(*w);
+                    }
+                    if let Some(m) = &pb.missing {
+                        for w in m.iter() {
+                            h.u64(*w);
+                        }
+                    }
+                }
             }
         }
         Payload::Partial(d) => {
@@ -230,6 +243,18 @@ fn bitflip(p: &Payload) -> Payload {
                     BlockData::Packed(crate::vecdata::block::PackedBlock {
                         words_per_vec: pb.words_per_vec,
                         words: Arc::new(words),
+                    })
+                }
+                BlockData::Packed2(pb) => {
+                    let mut lo = (*pb.lo).clone();
+                    if let Some(w) = lo.first_mut() {
+                        *w ^= 1;
+                    }
+                    BlockData::Packed2(crate::vecdata::block::Packed2Block {
+                        words_per_vec: pb.words_per_vec,
+                        lo: Arc::new(lo),
+                        hi: Arc::clone(&pb.hi),
+                        missing: pb.missing.clone(),
                     })
                 }
             };
@@ -792,6 +817,33 @@ mod tests {
         };
         assert_eq!(packed.bytes(8), 48);
         assert_eq!(packed.bytes(4), 48);
+        // Two-plane genotype blocks likewise charge 8 B per word across
+        // every plane present (the mask plane only when it travels).
+        let packed2 = Payload::Block {
+            nf: 130,
+            nv: 2,
+            first_id: 0,
+            data: BlockData::Packed2(crate::vecdata::block::Packed2Block {
+                words_per_vec: 3,
+                lo: Arc::new(vec![0; 6]),
+                hi: Arc::new(vec![0; 6]),
+                missing: None,
+            }),
+        };
+        assert_eq!(packed2.bytes(8), 96);
+        assert_eq!(packed2.bytes(4), 96);
+        let masked = Payload::Block {
+            nf: 130,
+            nv: 2,
+            first_id: 0,
+            data: BlockData::Packed2(crate::vecdata::block::Packed2Block {
+                words_per_vec: 3,
+                lo: Arc::new(vec![0; 6]),
+                hi: Arc::new(vec![0; 6]),
+                missing: Some(Arc::new(vec![0; 6])),
+            }),
+        };
+        assert_eq!(masked.bytes(8), 144);
         // Partials and sums are float vectors at element width.
         assert_eq!(Payload::Partial(Arc::new(vec![0.0; 5])).bytes(8), 40);
         assert_eq!(Payload::Sums(Arc::new(vec![0.0; 5])).bytes(4), 20);

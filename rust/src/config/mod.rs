@@ -80,6 +80,34 @@ pub enum InputSource {
     Synthetic { kind: SyntheticKind, seed: u64 },
     /// Read the §6.8 column-major binary file.
     File { path: String },
+    /// Read a variant-major PLINK `.bed` genotype file (2-bit calls;
+    /// companion `.bim`/`.fam` cross-check the run dimensions).
+    Bed { path: String },
+    /// Read a GT-field VCF genotype file (diploid calls decoded in
+    /// parallel chunks on the worker pool).
+    Vcf { path: String },
+}
+
+impl InputSource {
+    /// Parse a `format=` value naming how a `file=` path is read.
+    pub fn from_format(format: &str, path: String) -> Result<Self> {
+        match format {
+            "raw" => Ok(InputSource::File { path }),
+            "bed" => Ok(InputSource::Bed { path }),
+            "vcf" => Ok(InputSource::Vcf { path }),
+            other => bail!("unknown input format {other:?} (want raw|bed|vcf)"),
+        }
+    }
+
+    /// The format name (`raw`/`bed`/`vcf`), if this source reads a file.
+    pub fn format_name(&self) -> Option<&'static str> {
+        match self {
+            InputSource::Synthetic { .. } => None,
+            InputSource::File { .. } => Some("raw"),
+            InputSource::Bed { .. } => Some("bed"),
+            InputSource::Vcf { .. } => Some("vcf"),
+        }
+    }
 }
 
 /// A fully validated run description.
@@ -280,13 +308,19 @@ impl RunConfig {
 
     /// Apply the `[input]` table.
     fn apply_input(&mut self, doc: &toml::Doc) -> Result<()> {
+        let format = doc
+            .get("input", "format")
+            .map(|v| v.as_str().context("input.format"))
+            .transpose()?;
         match doc.get("input", "file") {
             Some(v) => {
-                self.input = InputSource::File {
-                    path: v.as_str().context("input.file")?.to_string(),
-                };
+                let path = v.as_str().context("input.file")?.to_string();
+                self.input = InputSource::from_format(format.unwrap_or("raw"), path)?;
             }
             None => {
+                if format.is_some() {
+                    bail!("input.format requires input.file");
+                }
                 let kind = match doc.get("input", "synthetic").map(|v| v.as_str()).transpose()? {
                     Some(s) => SyntheticKind::parse(s)?,
                     None => SyntheticKind::RandomGrid,
@@ -324,6 +358,7 @@ impl RunConfig {
         let mut synthetic = SyntheticKind::RandomGrid;
         let mut seed = 1u64;
         let mut file: Option<String> = None;
+        let mut format: Option<String> = None;
         for tok in line.split_whitespace() {
             let Some((key, val)) = tok.split_once('=') else {
                 bail!("request token {tok:?} is not key=value");
@@ -344,10 +379,11 @@ impl RunConfig {
                 "synthetic" => synthetic = SyntheticKind::parse(val)?,
                 "seed" => seed = num(key, val)?,
                 "file" => file = Some(val.to_string()),
+                "format" => format = Some(val.to_string()),
                 "output_threshold" => cfg.output_threshold = Some(num(key, val)?),
                 other => bail!(
                     "unknown request key {other:?} (valid: metric|num_way|nv|nf|precision|\
-                     backend|threads|npf|npv|npr|num_stage|stage|synthetic|seed|file|\
+                     backend|threads|npf|npv|npr|num_stage|stage|synthetic|seed|file|format|\
                      output_threshold)"
                 ),
             }
@@ -358,7 +394,8 @@ impl RunConfig {
         }
         cfg.grid = Grid::new(npf, npv, npr);
         cfg.input = match file {
-            Some(path) => InputSource::File { path },
+            Some(path) => InputSource::from_format(format.as_deref().unwrap_or("raw"), path)?,
+            None if format.is_some() => bail!("request key format requires file"),
             None => InputSource::Synthetic { kind: synthetic, seed },
         };
         cfg.validate()?;
@@ -426,7 +463,7 @@ pub fn batch_from_toml_str(text: &str) -> Result<Vec<BatchEntry>> {
         "output_threshold",
     ];
     const DECOMP_KEYS: [&str; 5] = ["npf", "npv", "npr", "num_stage", "stage"];
-    const INPUT_KEYS: [&str; 3] = ["file", "synthetic", "seed"];
+    const INPUT_KEYS: [&str; 4] = ["file", "format", "synthetic", "seed"];
     for (section, allowed) in
         [("run", &RUN_KEYS[..]), ("decomp", &DECOMP_KEYS[..]), ("input", &INPUT_KEYS[..])]
     {
@@ -560,6 +597,37 @@ seed = 42
         )
         .unwrap();
         assert_eq!(cfg.input, InputSource::File { path: "/data/v.bin".into() });
+    }
+
+    #[test]
+    fn input_format_selects_the_reader() {
+        // TOML form: format= names how file= is read; raw is the default.
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nnv = 10\nnf = 5\n[input]\nfile = \"/d/c.bed\"\nformat = \"bed\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.input, InputSource::Bed { path: "/d/c.bed".into() });
+        assert_eq!(cfg.input.format_name(), Some("bed"));
+        let cfg = RunConfig::from_toml_str(
+            "[run]\nnv = 10\nnf = 5\n[input]\nfile = \"/d/c.vcf\"\nformat = \"vcf\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.input, InputSource::Vcf { path: "/d/c.vcf".into() });
+        // kv-line form mirrors the TOML vocabulary.
+        let cfg = RunConfig::from_kv_line("nv=8 nf=16 file=/d/c.bed format=bed").unwrap();
+        assert_eq!(cfg.input, InputSource::Bed { path: "/d/c.bed".into() });
+        // CCC accepts genotype-file inputs (allele domain by construction).
+        RunConfig::from_kv_line("metric=ccc nv=8 nf=16 file=/d/c.bed format=bed").unwrap();
+        // Junk formats and orphaned format keys are typed errors.
+        let err = RunConfig::from_toml_str(
+            "[input]\nfile = \"/d/c.bed\"\nformat = \"hdf5\"\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("raw|bed|vcf"), "{err}");
+        let err = RunConfig::from_toml_str("[input]\nformat = \"bed\"\n").unwrap_err();
+        assert!(err.to_string().contains("requires input.file"), "{err}");
+        let err = RunConfig::from_kv_line("nv=8 format=bed").unwrap_err();
+        assert!(err.to_string().contains("requires file"), "{err}");
     }
 
     #[test]

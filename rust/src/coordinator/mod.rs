@@ -117,6 +117,16 @@ pub struct RunStats {
     pub ckpt_skipped: u64,
     pub ckpt_replayed: u64,
     pub ckpt_errors: u64,
+    /// Genotype-ingest accounting (zero for synthetic/raw-float
+    /// inputs): calls decoded by the `.bed`/VCF readers, missing calls
+    /// among them (imputed to dosage 0), and 2-bit plane packs
+    /// performed (`Repr::Packed2` ingests — the pack-once contract pins
+    /// one per node block). Captured as deltas of the process-global
+    /// `vecdata::geno` counters around the run, with the same
+    /// concurrent-runs caveat as the pool counters.
+    pub geno_calls: u64,
+    pub geno_missing: u64,
+    pub pack2_calls: u64,
 }
 
 impl RunStats {
@@ -165,6 +175,9 @@ impl RunStats {
         self.ckpt_skipped += o.ckpt_skipped;
         self.ckpt_replayed += o.ckpt_replayed;
         self.ckpt_errors += o.ckpt_errors;
+        self.geno_calls += o.geno_calls;
+        self.geno_missing += o.geno_missing;
+        self.pack2_calls += o.pack2_calls;
         self.t_input = self.t_input.max(o.t_input);
         self.t_compute = self.t_compute.max(o.t_compute);
         self.t_output = self.t_output.max(o.t_output);
@@ -482,6 +495,11 @@ fn run_typed<T: Scalar + ProvideBlocks>(
 
     let t0 = std::time::Instant::now();
     let pool_before = crate::linalg::pool::stats();
+    let geno_before = (
+        crate::vecdata::geno::calls_decoded(),
+        crate::vecdata::geno::missing_calls(),
+        crate::vecdata::geno::pack2_calls(),
+    );
     let mut handles = Vec::new();
     for ep in endpoints {
         let coord = cfg.grid.coords(ep.rank);
@@ -559,6 +577,11 @@ fn run_typed<T: Scalar + ProvideBlocks>(
     outcome.stats.pool_scopes = pool_after.scopes - pool_before.scopes;
     outcome.stats.pool_tasks = pool_after.tasks - pool_before.tasks;
     outcome.stats.pool_threads_spawned = pool_after.threads_spawned - pool_before.threads_spawned;
+    // Genotype-ingest deltas (decode happens inside the node threads'
+    // input phase, between t0 and the joins above).
+    outcome.stats.geno_calls = crate::vecdata::geno::calls_decoded() - geno_before.0;
+    outcome.stats.geno_missing = crate::vecdata::geno::missing_calls() - geno_before.1;
+    outcome.stats.pack2_calls = crate::vecdata::geno::pack2_calls() - geno_before.2;
     // The absorbed per-node sent totals must reproduce the fabric's own
     // accounting exactly — if they diverge, a node program forgot to
     // record its endpoint counts (see tests/comm_accounting.rs).
@@ -593,6 +616,18 @@ pub(crate) fn load_block<T: Scalar>(
         }
         InputSource::File { path } => {
             vio::read_raw_cols::<T>(std::path::Path::new(path), cfg.nf, cfg.nv, first, ncols)?
+        }
+        // Genotype readers decode the node's column span to 2-bit codes
+        // (missing → dosage 0) and expand to floats here; packed-repr
+        // metrics re-pack once at ingest, float metrics use the floats
+        // directly — load stays representation-agnostic either way.
+        InputSource::Bed { path } => {
+            let p = std::path::Path::new(path);
+            crate::vecdata::geno::read_bed_cols(p, cfg.nf, cfg.nv, first, ncols)?.to_floats()
+        }
+        InputSource::Vcf { path } => {
+            let p = std::path::Path::new(path);
+            crate::vecdata::geno::read_vcf_cols(p, cfg.nf, cfg.nv, first, ncols)?.to_floats()
         }
     };
     if cfg.grid.npf > 1 {

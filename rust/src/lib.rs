@@ -164,8 +164,40 @@
 //! ships them over the simulated wire as
 //! [`vecdata::block::BlockData`] — packed u64 words for Sorensen
 //! (~64× less comm volume than f64 elements, accounted per variant by
-//! `comm::Payload::bytes`), f64 elements for the float families. The
-//! step loops never re-pack (`tests/comm_accounting.rs` pins this).
+//! `comm::Payload::bytes`), two packed allele planes for CCC
+//! ([`vecdata::geno::GenoBlock`], [`vecdata::block::Repr::Packed2`]),
+//! f64 elements for the float families. The step loops never re-pack
+//! (`tests/comm_accounting.rs` and `tests/geno_ingest.rs` pin this).
+//!
+//! ## Real-data ingest (`vecdata::geno`)
+//!
+//! Genomics cohorts come from files, not synthesis: `--input-format
+//! raw|bed|vcf` (config `input.format`, serve key `format`) selects
+//! the reader behind [`config::InputSource`]. The PLINK `.bed` reader
+//! ([`vecdata::geno::read_bed_cols`]) validates the variant-major
+//! magic, the exact byte size, and `.bim`/`.fam` companion dimensions,
+//! then reads each node's column span straight out of the 2-bit codes;
+//! the VCF reader ([`vecdata::geno::read_vcf_cols`]) streams the text
+//! once and fans GT-field chunk decodes out over the [`linalg::pool`]
+//! workers. Both yield [`vecdata::geno::GenoCodes`] (0/1/2 dosage +
+//! missing), which expands to the float path or packs once into the
+//! two-plane [`vecdata::geno::GenoBlock`] — dosage = lo + 2·hi, with a
+//! missing-genotype mask plane that travels and spills only when the
+//! span actually has missing calls (missing imputes to dosage 0 on
+//! every path, so results stay bit-identical to the float oracle). CCC
+//! composes its plain-GEMM numerators from four Sorensen plane kernels
+//! over these blocks — exact small-integer arithmetic, so `.bed`- and
+//! VCF-ingested runs are checksum-identical to the synthetic float
+//! path across backends × decompositions × threads
+//! (`tests/geno_ingest.rs`), with wire volume pinned ≥16× below the
+//! float exchange. The packed planes ride the oocstore spill codec
+//! byte-identically (elem-width tag 2 + mask flag), decode/missing
+//! counters flow through [`coordinator::RunStats`] into the ledgers,
+//! [`perfmodel`] prices the one-time decode
+//! (`ingest_bytes`/`ingest_bw` → `t_ingest`), and `comet gen-data
+//! --format bed|vcf` writes seeded fixture filesets
+//! ([`vecdata::geno::write_plink_fixture`]) so no binary blobs live
+//! in-tree.
 //!
 //! ## Symmetry-halved + thread-parallel compute core
 //!

@@ -86,7 +86,12 @@ run options:
   --num-stage N --stage S   3-way staging
   --synthetic grid|verifiable|phewas|alleles   input generator (default grid)
   --seed N
-  --input-file FILE  column-major binary input (overrides --synthetic)
+  --input-file FILE  input file (overrides --synthetic)
+  --input-format raw|bed|vcf   how --input-file is read (default raw):
+                       raw  column-major binary floats (§6.8)
+                       bed  variant-major PLINK .bed (2-bit genotype codes;
+                            companion .bim/.fam cross-check --nv/--nf)
+                       vcf  GT-field VCF (diploid calls, chunk-parallel decode)
   --output-dir DIR   write per-node metric files + run.meta sidecar
   --output-threshold X  drop metrics below X ((offset, byte) records)
   --no-store         do not keep metrics in memory (big runs)
@@ -121,7 +126,7 @@ serve options (server):
   --socket PATH      listen on a Unix socket (one handler thread/connection);
                      clients send one `key=value ...` request spec per line
                      (keys: metric num_way nv nf precision backend threads
-                     npf npv npr num_stage stage synthetic seed file
+                     npf npv npr num_stage stage synthetic seed file format
                      output_threshold) and receive length-prefixed wire
                      frames: result tiles, then Done (metrics + checksum)
                      or Error — bit-identical to `comet run` of the same spec
@@ -167,8 +172,16 @@ model options:   --num-way 2|3 --nvp N --nfp N --load L [--nst N]
                  [--ckpt-frac X]    fraction of units checkpointed (0..1;
                                     1 = fresh --checkpoint-dir campaign)
                  [--ckpt-bw B]      checkpoint-store write bandwidth, bytes/s
+                 [--ingest-bytes N] input-file bytes decoded per node at ingest
+                 [--ingest-bw B]    ingest decode bandwidth, bytes/s (prices
+                                    the genotype-reader term; 0 = not modeled)
 gen-data options: --nv N --nf N --out FILE [--precision f32|f64]
                  [--synthetic grid|verifiable|phewas|alleles] [--seed N]
+                 [--format raw|bed|vcf]   raw floats (default), a PLINK
+                                    .bed/.bim/.fam fileset, or a GT-field VCF
+                                    (bed/vcf require --synthetic alleles; a
+                                    same-seed synthetic run is the fixture's
+                                    bit-identical float-path oracle)
 ";
 
 fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
@@ -200,8 +213,12 @@ fn config_from_args(args: &cli::Args) -> Result<RunConfig> {
     if let Some(s) = args.opt_parse::<usize>("stage")? {
         cfg.stage = Some(s);
     }
+    let input_format = args.opt_str("input-format").map(str::to_string);
     if let Some(f) = args.opt_str("input-file") {
-        cfg.input = InputSource::File { path: f.to_string() };
+        cfg.input =
+            InputSource::from_format(input_format.as_deref().unwrap_or("raw"), f.to_string())?;
+    } else if input_format.is_some() {
+        bail!("--input-format requires --input-file");
     } else if args.opt_str("synthetic").is_some() || args.opt_str("seed").is_some() {
         let kind = SyntheticKind::parse(&args.str_or("synthetic", "grid"))?;
         cfg.input = InputSource::Synthetic { kind, seed: args.parse_or("seed", 1u64)? };
@@ -309,6 +326,12 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
             s.reloads,
             fmt::bytes(s.reload_bytes),
             fmt::secs(s.t_stall)
+        );
+    }
+    if s.geno_calls + s.pack2_calls > 0 {
+        println!(
+            "  genotype ingest  : {} call(s) decoded ({} missing), {} plane pack(s)",
+            s.geno_calls, s.geno_missing, s.pack2_calls
         );
     }
     if s.comm_retries + s.comm_corrupt + s.faults_injected > 0 {
@@ -477,6 +500,15 @@ fn cmd_batch(args: &cli::Args) -> Result<()> {
             pool_totals.reloads,
             fmt::bytes(pool_totals.reload_bytes),
             fmt::secs(pool_totals.t_stall)
+        );
+    }
+    if pool_totals.geno_calls + pool_totals.pack2_calls > 0 {
+        // Real-data ledger: decoded genotype calls (and the missing
+        // fraction imputed to dosage 0), plus the pack-once conversions
+        // into 2-bit planes.
+        println!(
+            "  genotype ingest  : {} call(s) decoded ({} missing), {} plane pack(s)",
+            pool_totals.geno_calls, pool_totals.geno_missing, pool_totals.pack2_calls
         );
     }
     if pool_totals.comm_retries + pool_totals.comm_corrupt + pool_totals.faults_injected > 0 {
@@ -718,6 +750,8 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
         t_backoff: args.parse_or("tbackoff", 0.0)?,
         ckpt_frac: args.parse_or("ckpt-frac", 0.0)?,
         ckpt_bw: args.parse_or("ckpt-bw", 0.0)?,
+        ingest_bytes: args.parse_or("ingest-bytes", 0)?,
+        ingest_bw: args.parse_or("ingest-bw", 0.0)?,
         net: CostModel::gemini(),
         link: CostModel::pcie2(),
     };
@@ -753,6 +787,9 @@ fn cmd_model(args: &cli::Args) -> Result<()> {
     if p.t_ckpt > 0.0 {
         println!("  t_ckpt      = {} (checkpoint-unit writes)", fmt::secs(p.t_ckpt));
     }
+    if p.t_ingest > 0.0 {
+        println!("  t_ingest    = {} (input-file decode bandwidth)", fmt::secs(p.t_ingest));
+    }
     println!("  total       = {}", fmt::secs(p.total));
     println!("  mGEMM fraction = {:.1}% (the paper's overlap regime indicator)", 100.0 * p.gemm_fraction());
     if serve_workers > 0 {
@@ -778,25 +815,54 @@ fn cmd_gen_data(args: &cli::Args) -> Result<()> {
     let out = args.require_str("out")?;
     let precision = Precision::parse(&args.str_or("precision", "f32"))?;
     let seed: u64 = args.parse_or("seed", 1)?;
-    let kind = SyntheticKind::parse(&args.str_or("synthetic", "phewas"))?;
+    let format = args.str_or("format", "raw");
+    let kind = SyntheticKind::parse(&args.str_or(
+        "synthetic",
+        if format == "raw" { "phewas" } else { "alleles" },
+    ))?;
     args.reject_unknown()?;
     let path = std::path::Path::new(&out);
-    match precision {
-        Precision::F32 => {
-            let set: VectorSet<f32> = VectorSet::generate(kind, seed, nf, nv, 0);
-            vio::write_raw(path, &set)?;
-        }
-        Precision::F64 => {
+    match format.as_str() {
+        "raw" => match precision {
+            Precision::F32 => {
+                let set: VectorSet<f32> = VectorSet::generate(kind, seed, nf, nv, 0);
+                vio::write_raw(path, &set)?;
+            }
+            Precision::F64 => {
+                let set: VectorSet<f64> = VectorSet::generate(kind, seed, nf, nv, 0);
+                vio::write_raw(path, &set)?;
+            }
+        },
+        // Genotype containers hold 2-bit codes: the cohort must come
+        // from the allele generator so a same-seed synthetic run is the
+        // bit-identical float-path oracle for the fixture.
+        "bed" | "vcf" => {
+            if kind != SyntheticKind::Alleles {
+                bail!("--format {format} requires --synthetic alleles (2-bit genotype codes)");
+            }
             let set: VectorSet<f64> = VectorSet::generate(kind, seed, nf, nv, 0);
-            vio::write_raw(path, &set)?;
+            if format == "bed" {
+                let dir = match path.parent() {
+                    Some(d) if d != std::path::Path::new("") => d,
+                    _ => std::path::Path::new("."),
+                };
+                let stem = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .context("--out needs a file name for --format bed")?;
+                comet::vecdata::geno::write_plink_fixture(dir, stem, &set)?;
+            } else {
+                comet::vecdata::geno::write_vcf_fixture(path, &set)?;
+            }
         }
+        other => bail!("unknown --format {other:?} (want raw|bed|vcf)"),
     }
     println!(
         "wrote {} ({} vectors × {} features, {})",
         out,
         nv,
         nf,
-        precision.tag()
+        if format == "raw" { precision.tag().to_string() } else { format.clone() }
     );
     Ok(())
 }

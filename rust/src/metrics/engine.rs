@@ -42,6 +42,7 @@ use crate::util::prng::mix64;
 use crate::util::Scalar;
 use crate::vecdata::bits::BitVectorSet;
 use crate::vecdata::block::{Block, Repr};
+use crate::vecdata::geno::GenoBlock;
 use crate::vecdata::VectorSet;
 
 use super::{c2_from_parts, c3_from_parts, ccc_from_parts};
@@ -128,10 +129,13 @@ impl MetricId {
 
     /// Block representation this family's kernels consume. Bit-domain
     /// metrics cache packed bit-planes at ingest and exchange packed
-    /// words on the wire; float families keep dense `VectorSet`s.
+    /// words on the wire: Sorensen one plane, CCC two allele planes
+    /// (the 2-bit genotype encoding). Float families keep dense
+    /// `VectorSet`s.
     pub fn preferred_repr(self) -> Repr {
         match self {
-            MetricId::Czekanowski | MetricId::Ccc => Repr::Float,
+            MetricId::Czekanowski => Repr::Float,
+            MetricId::Ccc => Repr::Packed2,
             MetricId::Sorenson => Repr::Packed,
         }
     }
@@ -299,6 +303,17 @@ fn packed_operand<'a, T: Scalar>(b: &'a Block<T>, metric: &str) -> Result<&'a Bi
     }
 }
 
+/// Extract the 2-bit allele-plane operand the CCC plane kernels need.
+fn packed2_operand<'a, T: Scalar>(b: &'a Block<T>, metric: &str) -> Result<&'a GenoBlock> {
+    match b.as_packed2() {
+        Some(g) => Ok(g),
+        None => bail!(
+            "metric {metric} expects packed2 blocks, got a {} block",
+            b.repr().name()
+        ),
+    }
+}
+
 /// Proportional Similarity (the source paper's metric):
 /// c2 = 2 n2 / (Σv_i + Σv_j), c3 per Eq. (1).
 #[derive(Debug, Default, Clone, Copy)]
@@ -376,11 +391,24 @@ impl<T: Scalar> Metric<T> for Czekanowski {
 /// over allele-count vectors u, v ∈ {0, 1, 2}^n_f,
 ///
 /// ```text
-/// n(u,v) = Σ_q u_q v_q            (plain GEMM numerator)
+/// n(u,v) = Σ_q u_q v_q            (dot-product numerator)
 /// f_i    = Σu / (2 n_f)           (allele frequency)
 /// f_ij   = n / (4 n_f)            (co-occurrence frequency)
 /// ccc    = (9/2) f_ij (1 − (2/3) f_i)(1 − (2/3) f_j)
 /// ```
+///
+/// Blocks are ingested as 2-bit allele planes ([`Repr::Packed2`]): with
+/// u = lo + 2·hi the numerator expands into four AND+popcount kernels,
+///
+/// ```text
+/// n(u,v) = |lo_u ∧ lo_v| + 2 |lo_u ∧ hi_v| + 2 |hi_u ∧ lo_v|
+///        + 4 |hi_u ∧ hi_v|
+/// ```
+///
+/// and Σu = pop(lo) + 2·pop(hi). Every part is an exact small integer,
+/// so results are **bit-identical** to the float-GEMM path over the
+/// same {0, 1, 2} data while blocks travel and spill at 2 bits per
+/// genotype call instead of a full float.
 ///
 /// `nf` is the **global** feature count of the campaign: feature-sliced
 /// (n_pf > 1) nodes hold partial numerators/sums that are allreduced
@@ -402,21 +430,64 @@ impl<T: Scalar> Metric<T> for Ccc {
         MetricId::Ccc
     }
 
+    fn ingest_key(&self) -> u64 {
+        // Parameter-free, but deliberately distinct from the float
+        // identity ingest (key 0): CCC blocks are 2-bit allele planes
+        // and must never alias a float-family cache entry.
+        mix64(0x2b17_0ccc_2)
+    }
+
+    fn ingest(&self, v: VectorSet<T>) -> Block<T> {
+        // The pack-once site for CCC: floats in {0, 1, 2} become two
+        // bit-planes per node block, in the input phase only
+        // (`geno::pack2_calls` counts packs; tests pin one per block).
+        Block::Packed2(Arc::new(GenoBlock::from_floats(&v)))
+    }
+
     fn numerators2(
         &self,
         backend: &dyn Backend<T>,
         w: &Block<T>,
         v: &Block<T>,
     ) -> Result<MatF64> {
-        backend.gemm2(float_operand(w, "ccc")?, float_operand(v, "ccc")?)
+        let w = packed2_operand(w, "ccc")?;
+        let v = packed2_operand(v, "ccc")?;
+        let ll = backend.sorenson2(&w.lo, &v.lo)?;
+        let lh = backend.sorenson2(&w.lo, &v.hi)?;
+        let hl = backend.sorenson2(&w.hi, &v.lo)?;
+        let hh = backend.sorenson2(&w.hi, &v.hi)?;
+        // All four parts are exact integers ≤ n_f, so this f64
+        // combination is exact — bit-identical to the float GEMM.
+        let mut n = ll;
+        for (i, x) in n.data.iter_mut().enumerate() {
+            *x += 2.0 * (lh.data[i] + hl.data[i]) + 4.0 * hh.data[i];
+        }
+        Ok(n)
     }
 
     fn numerators2_diag(&self, backend: &dyn Backend<T>, v: &Block<T>) -> Result<MatF64> {
-        backend.gemm2_diag(float_operand(v, "ccc")?)
+        let g = packed2_operand(v, "ccc")?;
+        // The symmetric plane pairs route to the triangular kernel; the
+        // lo×hi cross term is not entrywise-symmetric (only the sum
+        // lh[i,j] + lh[j,i] is), so it runs the full square kernel.
+        let ll = backend.sorenson2_diag(&g.lo)?;
+        let hh = backend.sorenson2_diag(&g.hi)?;
+        let lh = backend.sorenson2(&g.lo, &g.hi)?;
+        let mut n = ll;
+        for i in 0..n.rows {
+            for j in (i + 1)..n.cols {
+                let x = n.at(i, j) + 2.0 * (lh.at(i, j) + lh.at(j, i)) + 4.0 * hh.at(i, j);
+                n.set(i, j, x);
+            }
+        }
+        Ok(n)
     }
 
     fn denominators(&self, v: &Block<T>) -> Result<Vec<f64>> {
-        Ok(float_operand(v, "ccc")?.col_sums())
+        // Σu per vector = pop(lo) + 2·pop(hi), served from the plane
+        // popcount caches primed at ingest — exactly the float path's
+        // column sums over {0, 1, 2}.
+        Ok(packed2_operand(v, "ccc")?.dose_sums())
     }
 
     fn combine2(&self, n: f64, d_i: f64, d_j: f64) -> f64 {
@@ -622,12 +693,13 @@ mod tests {
     fn preferred_reprs_per_family() {
         use crate::vecdata::block::Repr;
         assert_eq!(MetricId::Czekanowski.preferred_repr(), Repr::Float);
-        assert_eq!(MetricId::Ccc.preferred_repr(), Repr::Float);
+        assert_eq!(MetricId::Ccc.preferred_repr(), Repr::Packed2);
         assert_eq!(MetricId::Sorenson.preferred_repr(), Repr::Packed);
         let m: &dyn Metric<f64> = &Sorenson::default();
         assert_eq!(m.preferred_repr(), Repr::Packed);
         assert_eq!(Repr::Float.name(), "float");
         assert_eq!(Repr::Packed.name(), "packed");
+        assert_eq!(Repr::Packed2.name(), "packed2");
     }
 
     #[test]
@@ -657,6 +729,15 @@ mod tests {
         // Denominators fail the same way — an error, not a panic.
         assert!(sor.denominators(&float_block).is_err());
         assert!(cz.denominators(&packed_block).is_err());
+        // CCC consumes neither floats nor single-plane packed blocks.
+        let ccc_metric = Ccc::new(64);
+        let ccc: &dyn Metric<f64> = &ccc_metric;
+        let err = ccc
+            .numerators2(&CpuOptimized::default(), &float_block, &float_block)
+            .unwrap_err();
+        assert!(err.to_string().contains("expects packed2"), "{err}");
+        let err = ccc.denominators(&packed_block).unwrap_err();
+        assert!(err.to_string().contains("expects packed2"), "{err}");
     }
 
     #[test]
@@ -689,12 +770,19 @@ mod tests {
 
     #[test]
     fn ingest_keys_discriminate_parameterized_ingests_only() {
-        // Float families share blocks (identity ingest, key 0) …
+        // Float families use the identity ingest (key 0) …
         let cz: &dyn Metric<f64> = &Czekanowski;
-        let ccc_metric = Ccc::new(10);
-        let ccc: &dyn Metric<f64> = &ccc_metric;
         assert_eq!(cz.ingest_key(), 0);
-        assert_eq!(ccc.ingest_key(), 0);
+        // … CCC's plane-packing ingest is parameter-free but keyed away
+        // from the float identity (instances still share blocks) …
+        let ccc_a = Ccc::new(10);
+        let ccc_b = Ccc::new(99);
+        let ccc: &dyn Metric<f64> = &ccc_a;
+        assert_ne!(ccc.ingest_key(), 0);
+        assert_eq!(
+            Metric::<f64>::ingest_key(&ccc_a),
+            Metric::<f64>::ingest_key(&ccc_b)
+        );
         // … while Sorensen instances share only at equal thresholds.
         let a = Sorenson { threshold: 0.5 };
         let b = Sorenson { threshold: 0.25 };
@@ -703,6 +791,31 @@ mod tests {
             Metric::<f64>::ingest_key(&Sorenson::default())
         );
         assert_ne!(Metric::<f64>::ingest_key(&a), Metric::<f64>::ingest_key(&b));
+        assert_ne!(ccc.ingest_key(), Metric::<f64>::ingest_key(&a));
+    }
+
+    #[test]
+    fn ccc_packed_numerators_match_float_gemm_bitwise() {
+        // The plane-composed numerators and cached-popcount
+        // denominators must be bit-identical to the float path they
+        // replaced — not merely close.
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 13, 70, 9, 0);
+        let ccc = Ccc::new(v.nf);
+        let m: &dyn Metric<f64> = &ccc;
+        let b = m.ingest(v.clone());
+        let backend = CpuOptimized::default();
+        let packed = m.numerators2(&backend, &b, &b).unwrap();
+        let float = backend.gemm2(&v, &v).unwrap();
+        for i in 0..v.nv {
+            for j in 0..v.nv {
+                assert_eq!(
+                    packed.at(i, j).to_bits(),
+                    float.at(i, j).to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
+        assert_eq!(m.denominators(&b).unwrap(), v.col_sums());
     }
 
     #[test]

@@ -84,6 +84,14 @@ pub struct ModelInput {
     /// Checkpoint-store write bandwidth in bytes/s (prices one unit's
     /// tile blob as ≈ the metrics block's bytes / ckpt_bw).
     pub ckpt_bw: f64,
+    /// Input-file bytes this node decodes before the pipeline starts
+    /// (0 = synthetic generation; a `.bed` column span is
+    /// n_vp × ⌈n_fp/4⌉ bytes, a VCF span its share of the text).
+    pub ingest_bytes: u64,
+    /// Input-file decode bandwidth in bytes/s (prices the one-time
+    /// genotype ingest as ingest_bytes / ingest_bw; 0 disables the
+    /// term).
+    pub ingest_bw: f64,
     /// Internode fabric.
     pub net: CostModel,
     /// Host↔accelerator link.
@@ -114,6 +122,10 @@ pub struct Prediction {
     /// (`RunStats::ckpt_writes/ckpt_bytes`' analytic counterpart;
     /// 0 with checkpointing off).
     pub t_ckpt: f64,
+    /// One-time input-file decode cost: ingest_bytes / ingest_bw
+    /// (`RunStats::geno_calls`' analytic counterpart; 0 for synthetic
+    /// inputs or when no bandwidth is given).
+    pub t_ingest: f64,
     pub total: f64,
 }
 
@@ -206,6 +218,17 @@ fn ckpt_time(m: &ModelInput, units: f64) -> f64 {
     frac * units * (mblock_bytes(m) as f64 / m.ckpt_bw)
 }
 
+/// One-time genotype-ingest time: the node's input-file span decoded
+/// at `ingest_bw`. It is paid before the pipeline starts (nothing
+/// hides it) but amortizes over the campaign — a session reusing the
+/// cached blocks pays it once, not per run.
+fn ingest_time(m: &ModelInput) -> f64 {
+    if m.ingest_bytes == 0 || m.ingest_bw <= 0.0 {
+        return 0.0;
+    }
+    m.ingest_bytes as f64 / m.ingest_bw
+}
+
 /// 2-way model (§6.3), extended with the triangular-diag,
 /// thread-parallel, SIMD-lane, pool-dispatch, and out-of-core reload
 /// terms.
@@ -223,8 +246,17 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
     // 2-way: one ring exchange and one checkpointable unit per block.
     let t_retry = retry_time(m, t_comm, m.load as f64);
     let t_ckpt = ckpt_time(m, m.load as f64);
-    let total =
-        t_comm + t_tv + t_gemm_total + t_tm + m.t_cpu + t_dispatch + t_stall + t_retry + t_ckpt;
+    let t_ingest = ingest_time(m);
+    let total = t_comm
+        + t_tv
+        + t_gemm_total
+        + t_tm
+        + m.t_cpu
+        + t_dispatch
+        + t_stall
+        + t_retry
+        + t_ckpt
+        + t_ingest;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
@@ -235,6 +267,7 @@ pub fn predict_2way(m: &ModelInput) -> Prediction {
         t_stall,
         t_retry,
         t_ckpt,
+        t_ingest,
         total,
     }
 }
@@ -262,7 +295,8 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
     // each slice is a checkpointable unit.
     let t_retry = retry_time(m, t_comm, m.load as f64);
     let t_ckpt = ckpt_time(m, m.load as f64 * steps_per_slice);
-    let total = t_comm + t_tv + m.load as f64 * per_slice + t_stall + t_retry + t_ckpt;
+    let t_ingest = ingest_time(m);
+    let total = t_comm + t_tv + m.load as f64 * per_slice + t_stall + t_retry + t_ckpt + t_ingest;
     Prediction {
         t_comm,
         t_transfer_v: t_tv,
@@ -273,6 +307,7 @@ pub fn predict_3way(m: &ModelInput) -> Prediction {
         t_stall,
         t_retry,
         t_ckpt,
+        t_ingest,
         total,
     }
 }
@@ -382,6 +417,8 @@ mod tests {
             t_backoff: 0.0,
             ckpt_frac: 0.0,
             ckpt_bw: 0.0,
+            ingest_bytes: 0,
+            ingest_bw: 0.0,
             net: CostModel::gemini(),
             link: CostModel::pcie2(),
         }
@@ -470,6 +507,8 @@ mod tests {
             t_backoff: 2e-4,
             ckpt_frac: 1.0,
             ckpt_bw: 1e9,
+            ingest_bytes: 1 << 30,
+            ingest_bw: 5e8,
             ..base()
         };
         let p = predict_2way(&m);
@@ -481,7 +520,8 @@ mod tests {
             + p.t_dispatch
             + p.t_stall
             + p.t_retry
-            + p.t_ckpt;
+            + p.t_ckpt
+            + p.t_ingest;
         assert!((p.total - sum).abs() < 1e-12);
     }
 
@@ -496,6 +536,25 @@ mod tests {
         let p3 = predict_3way(&base());
         assert_eq!(p3.t_retry, 0.0);
         assert_eq!(p3.t_ckpt, 0.0);
+        assert_eq!(p.t_ingest, 0.0);
+        assert_eq!(p3.t_ingest, 0.0);
+    }
+
+    #[test]
+    fn ingest_term_prices_input_bytes_at_decode_bandwidth() {
+        // 512 MB of `.bed` columns at 256 MB/s → 2 s, added once to
+        // both decompositions' totals.
+        let m = ModelInput { ingest_bytes: 512 << 20, ingest_bw: 256e6, ..base() };
+        let p0 = predict_2way(&base());
+        let p = predict_2way(&m);
+        let expect = (512u64 << 20) as f64 / 256e6;
+        assert!((p.t_ingest - expect).abs() < 1e-12, "t_ingest={}", p.t_ingest);
+        assert!((p.total - p0.total - expect).abs() < 1e-9);
+        let p3 = predict_3way(&m);
+        assert!((p3.t_ingest - expect).abs() < 1e-12);
+        // Bytes without a bandwidth (or vice versa) disable the term.
+        assert_eq!(predict_2way(&ModelInput { ingest_bw: 0.0, ..m }).t_ingest, 0.0);
+        assert_eq!(predict_2way(&ModelInput { ingest_bytes: 0, ..m }).t_ingest, 0.0);
     }
 
     #[test]

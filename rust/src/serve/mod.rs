@@ -130,12 +130,15 @@ impl std::error::Error for ServeError {}
 /// Estimated resident bytes of the blocks a request will ingest —
 /// the admission-control cost model. Matches
 /// `Block::resident_bytes` summed over the whole dataset: packed
-/// bit-domain metrics cost one u64 word per 64 features, float
-/// metrics cost nv × nf elements at run precision.
+/// bit-domain metrics cost one u64 word per 64 features per plane
+/// (one plane for Sorensen, two allele planes — budgeted three to
+/// cover a missing-mask plane — for CCC), float metrics cost
+/// nv × nf elements at run precision.
 pub fn estimated_request_bytes(cfg: &RunConfig) -> u64 {
     let (nv, nf) = (cfg.nv as u64, cfg.nf as u64);
     match cfg.metric.preferred_repr() {
         Repr::Packed => nv * nf.div_ceil(64) * 8,
+        Repr::Packed2 => nv * nf.div_ceil(64) * 8 * 3,
         Repr::Float => nv * nf * cfg.precision.bytes() as u64,
     }
 }
@@ -609,6 +612,10 @@ mod tests {
         let mut packed = big;
         packed.metric = MetricId::Sorenson;
         assert_eq!(estimated_request_bytes(&packed), 256 * 6 * 8);
+        // CCC budgets three packed planes (lo, hi, missing mask).
+        let mut geno = packed.clone();
+        geno.metric = MetricId::Ccc;
+        assert_eq!(estimated_request_bytes(&geno), 256 * 6 * 8 * 3);
         let ticket = server.submit(&packed, Arc::new(DiscardSink)).unwrap();
         ticket.wait().unwrap();
         assert_eq!(server.stats().rejected_too_large, 1);

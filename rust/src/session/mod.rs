@@ -742,26 +742,31 @@ mod tests {
         let b = ds.block_f64(&cfg, &cz, 0, 0).unwrap();
         assert_eq!(ds.ingest_count(), 1);
         assert_eq!(a.nv(), b.nv());
-        // CCC shares the float representation — still one ingest.
+        // CCC packs allele planes — a second representation, a second
+        // ingest (it no longer shares the float blocks)…
         let ccc = Ccc::new(cfg.nf);
-        let _ = ds.block_f64(&cfg, &ccc, 0, 0).unwrap();
-        assert_eq!(ds.ingest_count(), 1);
-        // Sorensen packs — a second representation, a second ingest.
+        let g = ds.block_f64(&cfg, &ccc, 0, 0).unwrap();
+        assert_eq!(g.repr(), Repr::Packed2);
+        assert_eq!(ds.ingest_count(), 2);
+        // …though two CCC instances do share packed2 blocks.
+        let _ = ds.block_f64(&cfg, &Ccc::new(cfg.nf), 0, 0).unwrap();
+        assert_eq!(ds.ingest_count(), 2);
+        // Sorensen packs single-plane — a third representation.
         let sor = Sorenson::default();
         let packed = ds.block_f64(&cfg, &sor, 0, 0).unwrap();
         assert_eq!(packed.repr(), Repr::Packed);
-        assert_eq!(ds.ingest_count(), 2);
+        assert_eq!(ds.ingest_count(), 3);
         // A different Sorensen threshold must NOT share packed blocks.
         let sor_lo = Sorenson { threshold: 0.1 };
         let _ = ds.block_f64(&cfg, &sor_lo, 0, 0).unwrap();
-        assert_eq!(ds.ingest_count(), 3);
+        assert_eq!(ds.ingest_count(), 4);
         // Other node/grid slices are distinct blocks.
         let _ = ds.block_f64(&cfg, &cz, 1, 0).unwrap();
-        assert_eq!(ds.ingest_count(), 4);
-        assert_eq!(ds.cached_blocks(), 4);
+        assert_eq!(ds.ingest_count(), 5);
+        assert_eq!(ds.cached_blocks(), 5);
         // Precisions cache separately (typed kernels consume them).
         let _ = ds.block_f32(&cfg, &Czekanowski, 0, 0).unwrap();
-        assert_eq!(ds.ingest_count(), 5);
+        assert_eq!(ds.ingest_count(), 6);
     }
 
     /// The shared shape of the budget tests: nv=16 over npv=4, nf=40,

@@ -41,6 +41,9 @@ pub trait Scalar:
     }
     /// Raw little-endian bytes (literal construction + checksums).
     fn to_bits_u64(self) -> u64;
+    /// Decode one element from its little-endian byte image (safe
+    /// file-reader path; `bytes.len()` must be `BYTES`).
+    fn from_le_bytes(bytes: &[u8]) -> Self;
 }
 
 impl Scalar for f32 {
@@ -59,6 +62,10 @@ impl Scalar for f32 {
     fn to_bits_u64(self) -> u64 {
         self.to_bits() as u64
     }
+    #[inline]
+    fn from_le_bytes(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().expect("4-byte f32 image"))
+    }
 }
 
 impl Scalar for f64 {
@@ -76,6 +83,10 @@ impl Scalar for f64 {
     #[inline]
     fn to_bits_u64(self) -> u64 {
         self.to_bits()
+    }
+    #[inline]
+    fn from_le_bytes(bytes: &[u8]) -> Self {
+        f64::from_le_bytes(bytes.try_into().expect("8-byte f64 image"))
     }
 }
 

@@ -23,11 +23,12 @@ use anyhow::{bail, Result};
 
 use crate::util::Scalar;
 use crate::vecdata::bits::BitVectorSet;
+use crate::vecdata::geno::GenoBlock;
 use crate::vecdata::VectorSet;
 
 /// Which block representation a metric wants its operands in
 /// (`metrics::Metric::preferred_repr`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Repr {
     /// Dense float elements (`VectorSet<T>`): min-product / dot-product
     /// metric families.
@@ -36,6 +37,10 @@ pub enum Repr {
     /// Packed bit-planes (`BitVectorSet`): bitwise AND+popcount
     /// families.
     Packed,
+    /// Two-plane 2-bit genotype packing (`GenoBlock`): the CCC
+    /// allele-count family — dosage = lo + 2·hi, plus an optional
+    /// missing-call mask plane.
+    Packed2,
 }
 
 impl Repr {
@@ -43,6 +48,7 @@ impl Repr {
         match self {
             Repr::Float => "float",
             Repr::Packed => "packed",
+            Repr::Packed2 => "packed2",
         }
     }
 }
@@ -56,6 +62,24 @@ pub struct PackedBlock {
     pub words: Arc<Vec<u64>>,
 }
 
+/// Two-plane packed wire payload: per plane, `words_per_vec` =
+/// ⌈nf/64⌉ words per vector, vector-contiguous. The missing mask plane
+/// travels only when the block actually has missing calls.
+#[derive(Debug, Clone)]
+pub struct Packed2Block {
+    pub words_per_vec: usize,
+    pub lo: Arc<Vec<u64>>,
+    pub hi: Arc<Vec<u64>>,
+    pub missing: Option<Arc<Vec<u64>>>,
+}
+
+impl Packed2Block {
+    /// Total u64 words across all planes present.
+    pub fn total_words(&self) -> usize {
+        self.lo.len() + self.hi.len() + self.missing.as_ref().map_or(0, |m| m.len())
+    }
+}
+
 /// Wire form of a vector block — what `comm::Payload::Block` carries.
 #[derive(Debug, Clone)]
 pub enum BlockData {
@@ -63,6 +87,9 @@ pub enum BlockData {
     F64(Arc<Vec<f64>>),
     /// Bit-packed u64 words, charged at 8 bytes per word.
     Packed(PackedBlock),
+    /// Two allele bit-planes (+ optional missing mask), charged at
+    /// 8 bytes per word across every plane present.
+    Packed2(Packed2Block),
 }
 
 impl BlockData {
@@ -73,6 +100,7 @@ impl BlockData {
         match self {
             BlockData::F64(d) => (d.len() * elem_bytes) as u64,
             BlockData::Packed(p) => (p.words.len() * 8) as u64,
+            BlockData::Packed2(p) => (p.total_words() * 8) as u64,
         }
     }
 }
@@ -85,6 +113,7 @@ impl BlockData {
 pub enum Block<T: Scalar> {
     Float(Arc<VectorSet<T>>),
     Packed(Arc<BitVectorSet>),
+    Packed2(Arc<GenoBlock>),
 }
 
 impl<T: Scalar> Block<T> {
@@ -92,6 +121,7 @@ impl<T: Scalar> Block<T> {
         match self {
             Block::Float(_) => Repr::Float,
             Block::Packed(_) => Repr::Packed,
+            Block::Packed2(_) => Repr::Packed2,
         }
     }
 
@@ -99,6 +129,7 @@ impl<T: Scalar> Block<T> {
         match self {
             Block::Float(v) => v.nf,
             Block::Packed(b) => b.nf,
+            Block::Packed2(g) => g.nf(),
         }
     }
 
@@ -106,6 +137,7 @@ impl<T: Scalar> Block<T> {
         match self {
             Block::Float(v) => v.nv,
             Block::Packed(b) => b.nv,
+            Block::Packed2(g) => g.nv(),
         }
     }
 
@@ -113,6 +145,7 @@ impl<T: Scalar> Block<T> {
         match self {
             Block::Float(v) => v.first_id,
             Block::Packed(b) => b.first_id,
+            Block::Packed2(g) => g.first_id(),
         }
     }
 
@@ -125,20 +158,28 @@ impl<T: Scalar> Block<T> {
         match self {
             Block::Float(v) => (v.raw().len() * std::mem::size_of::<T>()) as u64,
             Block::Packed(b) => (b.raw_words().len() * 8) as u64,
+            Block::Packed2(g) => g.resident_bytes(),
         }
     }
 
     pub fn as_float(&self) -> Option<&VectorSet<T>> {
         match self {
             Block::Float(v) => Some(v),
-            Block::Packed(_) => None,
+            _ => None,
         }
     }
 
     pub fn as_packed(&self) -> Option<&BitVectorSet> {
         match self {
-            Block::Float(_) => None,
             Block::Packed(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_packed2(&self) -> Option<&GenoBlock> {
+        match self {
+            Block::Packed2(g) => Some(g),
+            _ => None,
         }
     }
 
@@ -153,6 +194,12 @@ impl<T: Scalar> Block<T> {
             Block::Packed(b) => BlockData::Packed(PackedBlock {
                 words_per_vec: b.words_per_vec,
                 words: Arc::new(b.raw_words().to_vec()),
+            }),
+            Block::Packed2(g) => BlockData::Packed2(Packed2Block {
+                words_per_vec: g.words_per_vec(),
+                lo: Arc::new(g.lo.raw_words().to_vec()),
+                hi: Arc::new(g.hi.raw_words().to_vec()),
+                missing: g.missing.as_ref().map(|m| Arc::new(m.raw_words().to_vec())),
             }),
         }
     }
@@ -186,6 +233,34 @@ impl<T: Scalar> Block<T> {
                     p.words.as_ref().clone(),
                 ))))
             }
+            BlockData::Packed2(p) => {
+                let wpv = nf.div_ceil(64);
+                if p.words_per_vec != wpv {
+                    bail!(
+                        "packed2 payload words_per_vec {} inconsistent with nf={nf}",
+                        p.words_per_vec
+                    );
+                }
+                let plane_len = wpv * nv;
+                if p.lo.len() != plane_len
+                    || p.hi.len() != plane_len
+                    || p.missing.as_ref().is_some_and(|m| m.len() != plane_len)
+                {
+                    bail!(
+                        "packed2 payload plane shape mismatch: lo={} hi={} for nf={nf} nv={nv}",
+                        p.lo.len(),
+                        p.hi.len()
+                    );
+                }
+                Ok(Block::Packed2(Arc::new(GenoBlock::from_planes(
+                    nf,
+                    nv,
+                    first_id,
+                    p.lo.as_ref().clone(),
+                    p.hi.as_ref().clone(),
+                    p.missing.as_ref().map(|m| m.as_ref().clone()),
+                ))))
+            }
         }
     }
 
@@ -196,7 +271,9 @@ impl<T: Scalar> Block<T> {
     pub fn select_cols(&self, cols: &[usize]) -> Result<Self> {
         match self {
             Block::Float(v) => Ok(Block::Float(Arc::new(v.select_cols(cols)))),
-            Block::Packed(_) => bail!("column selection is not defined for packed blocks"),
+            Block::Packed(_) | Block::Packed2(_) => {
+                bail!("column selection is not defined for packed blocks")
+            }
         }
     }
 }
@@ -265,5 +342,59 @@ mod tests {
         let bits = BitVectorSet::generate(2, 64, 4, 0.5);
         let b: Block<f64> = Block::Packed(Arc::new(bits));
         assert!(b.select_cols(&[0, 1]).is_err());
+        let v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 2, 64, 4, 0);
+        let g: Block<f64> = Block::Packed2(Arc::new(GenoBlock::from_floats(&v)));
+        assert!(g.select_cols(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn packed2_wire_roundtrip_is_bit_exact() {
+        let mut v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 9, 130, 5, 0);
+        v.first_id = 40;
+        let geno = GenoBlock::from_floats(&v);
+        let b: Block<f64> = Block::Packed2(Arc::new(geno.clone()));
+        assert_eq!(b.repr(), Repr::Packed2);
+        assert_eq!((b.nf(), b.nv(), b.first_id()), (130, 5, 40));
+        let wire = b.to_wire();
+        let back = Block::<f64>::from_wire(130, 5, 40, &wire).unwrap();
+        let rg = back.as_packed2().unwrap();
+        assert_eq!(rg.first_id(), 40);
+        for c in 0..5 {
+            assert_eq!(rg.lo.words(c), geno.lo.words(c));
+            assert_eq!(rg.hi.words(c), geno.hi.words(c));
+        }
+        assert!(rg.missing.is_none());
+        // ⌈130/64⌉ = 3 words/vec × 5 vecs × 2 planes × 8 B, no mask.
+        assert_eq!(wire.wire_bytes(8), 3 * 5 * 2 * 8);
+        assert_eq!(wire.wire_bytes(4), 3 * 5 * 2 * 8); // precision-independent
+        assert_eq!(b.resident_bytes(), 3 * 5 * 2 * 8);
+    }
+
+    #[test]
+    fn packed2_mask_travels_and_shape_mismatch_rejected() {
+        use crate::vecdata::geno::{self, MISSING};
+        let dir = std::env::temp_dir().join("comet-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("blockmask-{}.bed", std::process::id()));
+        geno::write_bed_codes(&p, 3, &[1, MISSING, 2, 0, 0, MISSING]).unwrap();
+        let g = geno::read_bed_cols(&p, 3, 2, 0, 2).unwrap().pack2();
+        std::fs::remove_file(&p).ok();
+        let b: Block<f64> = Block::Packed2(Arc::new(g.clone()));
+        let wire = b.to_wire();
+        // Mask plane adds a third word plane on the wire.
+        assert_eq!(wire.wire_bytes(8), 2 * 3 * 8);
+        let back = Block::<f64>::from_wire(3, 2, 0, &wire).unwrap();
+        let rg = back.as_packed2().unwrap();
+        assert_eq!(rg.missing_calls, 2);
+        assert!(rg.missing.as_ref().unwrap().get_bit(0, 1));
+        // Inconsistent words_per_vec and short planes are rejected.
+        if let BlockData::Packed2(p2) = &wire {
+            let bad = BlockData::Packed2(Packed2Block { words_per_vec: 2, ..p2.clone() });
+            assert!(Block::<f64>::from_wire(3, 2, 0, &bad).is_err());
+            let bad = BlockData::Packed2(Packed2Block { lo: Arc::new(vec![0]), ..p2.clone() });
+            assert!(Block::<f64>::from_wire(3, 2, 0, &bad).is_err());
+        } else {
+            panic!("expected a Packed2 wire payload");
+        }
     }
 }

@@ -1,0 +1,836 @@
+//! Real-data genotype front end (§6.8): PLINK `.bed` and VCF readers
+//! feeding CCC's native two-plane packed representation.
+//!
+//! PLINK stores genotypes as 2-bit codes in variant-major rows — exactly
+//! the packed form the companion CCC paper wants on the wire — so the
+//! `.bed` reader's per-variant rows are literally the per-node column
+//! spans `io::read_raw_cols` reads from the raw float format. The VCF
+//! reader decodes GT fields from a streaming line parser, fanning chunk
+//! decodes out over the `linalg::pool` workers.
+//!
+//! Both readers produce [`GenoCodes`] (one byte per call: 0/1/2 alt-allele
+//! dosage, [`MISSING`]), which either expands to a float `VectorSet` (the
+//! oracle path — missing imputes to 0, i.e. hom-ref) or packs once into a
+//! [`GenoBlock`]: two allele bit-planes (`lo` = dosage bit 0, `hi` =
+//! dosage bit 1) plus an optional missing-call mask. Dosage = `lo + 2·hi`
+//! as exact small integers, so every CCC count computed on the planes is
+//! bit-identical to the float path.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::pool;
+use crate::util::Scalar;
+use crate::vecdata::bits::BitVectorSet;
+use crate::vecdata::VectorSet;
+
+/// Variant-major PLINK `.bed` magic (the third byte selects the
+/// variant-major layout; sample-major files are rejected).
+pub const BED_MAGIC: [u8; 3] = [0x6c, 0x1b, 0x01];
+
+/// Code for a missing genotype call in [`GenoCodes`].
+pub const MISSING: u8 = 3;
+
+/// Genotype calls decoded from real-format inputs (process-wide).
+static GENO_CALLS: AtomicU64 = AtomicU64::new(0);
+/// Missing calls among them (imputed to hom-ref at decode).
+static GENO_MISSING: AtomicU64 = AtomicU64::new(0);
+/// Two-plane packing conversions ([`GenoBlock`] constructions from
+/// floats or codes) — the pack-once contract's counter, mirroring
+/// [`crate::vecdata::bits::pack_calls`].
+static PACK2_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Genotype calls decoded so far (process-wide).
+pub fn calls_decoded() -> u64 {
+    GENO_CALLS.load(Ordering::Relaxed)
+}
+
+/// Missing genotype calls decoded so far (process-wide).
+pub fn missing_calls() -> u64 {
+    GENO_MISSING.load(Ordering::Relaxed)
+}
+
+/// Two-plane packing conversions performed so far (process-wide).
+pub fn pack2_calls() -> u64 {
+    PACK2_CALLS.load(Ordering::Relaxed)
+}
+
+/// A decoded column span of genotype calls: one byte per call
+/// (variant-contiguous, `nf` calls per variant), values 0/1/2 or
+/// [`MISSING`]. The common output of both readers, one small step from
+/// either representation the engine wants.
+#[derive(Debug, Clone)]
+pub struct GenoCodes {
+    pub nf: usize,
+    pub nv: usize,
+    pub first_id: usize,
+    codes: Vec<u8>,
+    pub missing: u64,
+}
+
+impl GenoCodes {
+    /// Wrap freshly decoded codes, counting calls into the process-wide
+    /// ingest counters.
+    fn finish(nf: usize, nv: usize, first_id: usize, codes: Vec<u8>) -> Self {
+        debug_assert_eq!(codes.len(), nf * nv);
+        let missing = codes.iter().filter(|&&c| c == MISSING).count() as u64;
+        GENO_CALLS.fetch_add(codes.len() as u64, Ordering::Relaxed);
+        GENO_MISSING.fetch_add(missing, Ordering::Relaxed);
+        GenoCodes { nf, nv, first_id, codes, missing }
+    }
+
+    #[inline]
+    pub fn code(&self, v: usize, q: usize) -> u8 {
+        self.codes[v * self.nf + q]
+    }
+
+    /// Expand to the float representation the scalar oracle and the
+    /// non-CCC metrics run on. Missing imputes to 0 (hom-ref) — the
+    /// same value the packed planes carry, so both paths agree bit for
+    /// bit.
+    pub fn to_floats<T: Scalar>(&self) -> VectorSet<T> {
+        let mut out = VectorSet::<T>::zeros(self.nf, self.nv);
+        out.first_id = self.first_id;
+        for v in 0..self.nv {
+            let col = out.col_mut(v);
+            for (q, &c) in self.codes[v * self.nf..(v + 1) * self.nf].iter().enumerate() {
+                if c != MISSING && c != 0 {
+                    col[q] = T::from_f64(c as f64);
+                }
+            }
+        }
+        out
+    }
+
+    /// Pack once into the two-plane block (counts toward
+    /// [`pack2_calls`]). The missing mask plane is materialized only
+    /// when the span actually has missing calls.
+    pub fn pack2(&self) -> GenoBlock {
+        PACK2_CALLS.fetch_add(1, Ordering::Relaxed);
+        let mut lo = BitVectorSet::zeros(self.nf, self.nv);
+        let mut hi = BitVectorSet::zeros(self.nf, self.nv);
+        lo.first_id = self.first_id;
+        hi.first_id = self.first_id;
+        let mut miss = if self.missing > 0 {
+            let mut m = BitVectorSet::zeros(self.nf, self.nv);
+            m.first_id = self.first_id;
+            Some(m)
+        } else {
+            None
+        };
+        for v in 0..self.nv {
+            for (q, &c) in self.codes[v * self.nf..(v + 1) * self.nf].iter().enumerate() {
+                match c {
+                    0 => {}
+                    1 => lo.set_bit(v, q),
+                    2 => hi.set_bit(v, q),
+                    _ => {
+                        if let Some(m) = miss.as_mut() {
+                            m.set_bit(v, q);
+                        }
+                    }
+                }
+            }
+        }
+        GenoBlock::assemble(lo, hi, miss, self.missing)
+    }
+}
+
+/// A two-plane packed genotype block: `lo`/`hi` carry the alt-allele
+/// dosage bits (dosage = `lo + 2·hi` ∈ {0, 1, 2}), `missing` marks
+/// imputed calls (0 on both dosage planes, so CCC counts ignore them
+/// exactly as the float path's missing→0 does). This is the resident
+/// form behind `Block::Packed2` / `Repr::Packed2`.
+#[derive(Debug, Clone)]
+pub struct GenoBlock {
+    pub lo: BitVectorSet,
+    pub hi: BitVectorSet,
+    pub missing: Option<BitVectorSet>,
+    /// Missing calls in the span (mask popcount; survives even when the
+    /// mask plane is omitted because it is empty).
+    pub missing_calls: u64,
+}
+
+impl GenoBlock {
+    fn assemble(
+        lo: BitVectorSet,
+        hi: BitVectorSet,
+        missing: Option<BitVectorSet>,
+        missing_calls: u64,
+    ) -> Self {
+        // Prime the plane popcount caches at ingest: the CCC
+        // denominator pass becomes a cached read, like Sorenson's.
+        let _ = lo.popcounts_cached();
+        let _ = hi.popcounts_cached();
+        GenoBlock { lo, hi, missing, missing_calls }
+    }
+
+    /// Pack a float allele-count block (values in {0, 1, 2}; anything
+    /// else rounds and clamps into that domain). The `Ccc::ingest`
+    /// path: one call per block, counted by [`pack2_calls`].
+    pub fn from_floats<T: Scalar>(set: &VectorSet<T>) -> Self {
+        PACK2_CALLS.fetch_add(1, Ordering::Relaxed);
+        let mut lo = BitVectorSet::zeros(set.nf, set.nv);
+        let mut hi = BitVectorSet::zeros(set.nf, set.nv);
+        lo.first_id = set.first_id;
+        hi.first_id = set.first_id;
+        for v in 0..set.nv {
+            for (q, &x) in set.col(v).iter().enumerate() {
+                let d = x.to_f64().round().clamp(0.0, 2.0) as u8;
+                if d & 1 != 0 {
+                    lo.set_bit(v, q);
+                }
+                if d & 2 != 0 {
+                    hi.set_bit(v, q);
+                }
+            }
+        }
+        Self::assemble(lo, hi, None, 0)
+    }
+
+    /// Rehydrate from raw plane words (the wire → block and spill →
+    /// block paths; never re-packs). Word vectors must hold exactly
+    /// ⌈nf/64⌉ × nv words each.
+    pub fn from_planes(
+        nf: usize,
+        nv: usize,
+        first_id: usize,
+        lo: Vec<u64>,
+        hi: Vec<u64>,
+        missing: Option<Vec<u64>>,
+    ) -> Self {
+        let lo = BitVectorSet::from_words(nf, nv, first_id, lo);
+        let hi = BitVectorSet::from_words(nf, nv, first_id, hi);
+        let missing = missing.map(|m| BitVectorSet::from_words(nf, nv, first_id, m));
+        let missing_calls = missing.as_ref().map_or(0, |m| (0..nv).map(|v| m.popcount(v)).sum());
+        Self::assemble(lo, hi, missing, missing_calls)
+    }
+
+    #[inline]
+    pub fn nf(&self) -> usize {
+        self.lo.nf
+    }
+
+    #[inline]
+    pub fn nv(&self) -> usize {
+        self.lo.nv
+    }
+
+    #[inline]
+    pub fn first_id(&self) -> usize {
+        self.lo.first_id
+    }
+
+    #[inline]
+    pub fn words_per_vec(&self) -> usize {
+        self.lo.words_per_vec
+    }
+
+    /// Alt-allele dosage of call (v, q) — missing reads as 0, exactly
+    /// what the compute planes carry.
+    #[inline]
+    pub fn dosage(&self, v: usize, q: usize) -> u8 {
+        self.lo.get_bit(v, q) as u8 + 2 * self.hi.get_bit(v, q) as u8
+    }
+
+    /// Per-vector dosage sums — CCC's denominator ingredients, exact
+    /// small integers (= `VectorSet::col_sums` of the decoded floats).
+    pub fn dose_sums(&self) -> Vec<f64> {
+        let lo = self.lo.popcounts_cached();
+        let hi = self.hi.popcounts_cached();
+        lo.iter().zip(hi).map(|(l, h)| l + 2.0 * h).collect()
+    }
+
+    /// Expand to floats (oracle cross-checks).
+    pub fn to_floats<T: Scalar>(&self) -> VectorSet<T> {
+        let mut out = VectorSet::<T>::zeros(self.nf(), self.nv());
+        out.first_id = self.first_id();
+        for v in 0..self.nv() {
+            for q in 0..self.nf() {
+                let d = self.dosage(v, q);
+                if d != 0 {
+                    out.col_mut(v)[q] = T::from_f64(d as f64);
+                }
+            }
+        }
+        out
+    }
+
+    /// Resident payload bytes: all planes at 8 B/word.
+    pub fn resident_bytes(&self) -> u64 {
+        let words = self.lo.raw_words().len()
+            + self.hi.raw_words().len()
+            + self.missing.as_ref().map_or(0, |m| m.raw_words().len());
+        (words * 8) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PLINK .bed
+// ---------------------------------------------------------------------------
+
+/// Bytes per variant-major `.bed` row: 4 calls per byte.
+#[inline]
+fn bed_row_bytes(nf: usize) -> usize {
+    nf.div_ceil(4)
+}
+
+/// Cross-check a companion text file's line count against the
+/// configured dimension (`.bim` lines = variants, `.fam` lines =
+/// samples). Missing companions are tolerated — the dimensions travel
+/// in the run config, as with the raw format — but a present companion
+/// that disagrees is a hard error.
+fn check_companion(path: &Path, expected: usize, what: &str) -> Result<()> {
+    if !path.exists() {
+        return Ok(());
+    }
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let lines = BufReader::new(f)
+        .lines()
+        .map_while(std::io::Result::ok)
+        .filter(|l| !l.trim().is_empty())
+        .count();
+    if lines != expected {
+        bail!(
+            "{}: {lines} lines but the run config expects {expected} {what}",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Read variants [first_col, first_col + ncols) of a variant-major
+/// PLINK `.bed` — the per-node portion read, mirroring
+/// [`crate::vecdata::io::read_raw_cols`]. `nf` = samples (`.fam`
+/// lines), `nv` = variants (`.bim` lines); both are cross-checked
+/// against the companion files when present, and the `.bed` byte size
+/// must match the dimensions exactly.
+pub fn read_bed_cols(
+    path: &Path,
+    nf: usize,
+    nv: usize,
+    first_col: usize,
+    ncols: usize,
+) -> Result<GenoCodes> {
+    if first_col + ncols > nv {
+        bail!("column range [{first_col}, {}) exceeds nv={nv}", first_col + ncols);
+    }
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let row_bytes = bed_row_bytes(nf);
+    let expected = 3 + (nv * row_bytes) as u64;
+    let actual = f.metadata()?.len();
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 3];
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{}: too short for the .bed magic", path.display()))?;
+    if magic != BED_MAGIC {
+        bail!(
+            "{}: not a variant-major PLINK .bed (magic {:02x} {:02x} {:02x}, expected 6c 1b 01)",
+            path.display(),
+            magic[0],
+            magic[1],
+            magic[2]
+        );
+    }
+    if actual != expected {
+        bail!(
+            "{}: .bed size {actual} != expected {expected} (3-byte magic + nv={nv} rows of {row_bytes} B at nf={nf})",
+            path.display()
+        );
+    }
+    check_companion(&path.with_extension("bim"), nv, "variants")?;
+    check_companion(&path.with_extension("fam"), nf, "samples")?;
+    r.seek(SeekFrom::Start(3 + (first_col * row_bytes) as u64))?;
+    let mut rows = vec![0u8; ncols * row_bytes];
+    r.read_exact(&mut rows)?;
+    let mut codes = vec![0u8; ncols * nf];
+    for c in 0..ncols {
+        let row = &rows[c * row_bytes..(c + 1) * row_bytes];
+        let col = &mut codes[c * nf..(c + 1) * nf];
+        for (q, slot) in col.iter_mut().enumerate() {
+            // 00 hom-ref, 01 missing, 10 het, 11 hom-alt; tail codes in
+            // the last byte beyond nf are padding and ignored.
+            *slot = match (row[q / 4] >> (2 * (q % 4))) & 3 {
+                0b00 => 0,
+                0b01 => MISSING,
+                0b10 => 1,
+                _ => 2,
+            };
+        }
+    }
+    Ok(GenoCodes::finish(nf, ncols, first_col, codes))
+}
+
+/// Write genotype codes (0/1/2/[`MISSING`], variant-contiguous, `nf`
+/// per variant) as a variant-major `.bed`.
+pub fn write_bed_codes(path: &Path, nf: usize, codes: &[u8]) -> Result<()> {
+    if nf == 0 || codes.len() % nf != 0 {
+        bail!("{} codes do not tile nf={nf} samples", codes.len());
+    }
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&BED_MAGIC)?;
+    let row_bytes = bed_row_bytes(nf);
+    for col in codes.chunks(nf) {
+        let mut row = vec![0u8; row_bytes];
+        for (q, &c) in col.iter().enumerate() {
+            let two = match c {
+                0 => 0b00,
+                1 => 0b10,
+                2 => 0b11,
+                _ => 0b01,
+            };
+            row[q / 4] |= two << (2 * (q % 4));
+        }
+        w.write_all(&row)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Quantize a float allele-count set to genotype codes (no missing —
+/// floats cannot express the distinction).
+fn float_codes<T: Scalar>(set: &VectorSet<T>) -> Vec<u8> {
+    let mut codes = vec![0u8; set.nf * set.nv];
+    for v in 0..set.nv {
+        for (q, &x) in set.col(v).iter().enumerate() {
+            codes[v * set.nf + q] = x.to_f64().round().clamp(0.0, 2.0) as u8;
+        }
+    }
+    codes
+}
+
+/// Emit a complete PLINK fileset (`stem.bed` + `stem.bim` + `stem.fam`)
+/// for a float cohort with allele-count values — the fixture writer
+/// behind `comet gen-data --format bed` (no binary blobs in-tree).
+/// Returns the `.bed` path.
+pub fn write_plink_fixture<T: Scalar>(
+    dir: &Path,
+    stem: &str,
+    set: &VectorSet<T>,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let bed = dir.join(format!("{stem}.bed"));
+    write_bed_codes(&bed, set.nf, &float_codes(set))?;
+    let f = File::create(dir.join(format!("{stem}.bim")))?;
+    let mut w = BufWriter::new(f);
+    for v in 0..set.nv {
+        writeln!(w, "1\tsnp{v}\t0\t{}\tA\tG", v + 1)?;
+    }
+    w.flush()?;
+    let f = File::create(dir.join(format!("{stem}.fam")))?;
+    let mut w = BufWriter::new(f);
+    for q in 0..set.nf {
+        writeln!(w, "fam{q} ind{q} 0 0 0 -9")?;
+    }
+    w.flush()?;
+    Ok(bed)
+}
+
+// ---------------------------------------------------------------------------
+// VCF
+// ---------------------------------------------------------------------------
+
+/// Variant lines decoded per worker-pool task.
+const VCF_CHUNK: usize = 64;
+
+/// Alt-allele dosage of one GT value ("0/1", "1|1", "./.", …).
+fn gt_dosage(gt: &str, line_no: usize) -> Result<u8> {
+    let mut dose = 0u8;
+    let mut alleles = 0;
+    for a in gt.split(['/', '|']) {
+        alleles += 1;
+        match a {
+            "." => return Ok(MISSING),
+            "0" => {}
+            s if !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()) => {
+                dose = dose.saturating_add(1)
+            }
+            _ => bail!("line {line_no}: malformed GT value {gt:?}"),
+        }
+    }
+    if alleles != 2 {
+        bail!("line {line_no}: GT {gt:?} is not diploid");
+    }
+    Ok(dose)
+}
+
+/// Decode one chunk of data lines (each tagged with its 1-based file
+/// line number) into codes — the per-task body the pool workers run.
+fn decode_vcf_chunk(lines: &[(usize, String)], nf: usize) -> Result<Vec<u8>> {
+    let mut codes = vec![0u8; lines.len() * nf];
+    for (i, (line_no, line)) in lines.iter().enumerate() {
+        let fields: Vec<&str> = line.split('\t').collect();
+        if fields.len() != 9 + nf {
+            bail!(
+                "line {line_no}: short VCF line — {} fields, expected {} (9 fixed + {nf} samples)",
+                fields.len(),
+                9 + nf
+            );
+        }
+        let gt_idx = fields[8]
+            .split(':')
+            .position(|k| k == "GT")
+            .with_context(|| format!("line {line_no}: FORMAT {:?} has no GT field", fields[8]))?;
+        for (s, slot) in codes[i * nf..(i + 1) * nf].iter_mut().enumerate() {
+            let sample = fields[9 + s];
+            let gt = sample
+                .split(':')
+                .nth(gt_idx)
+                .with_context(|| format!("line {line_no}: sample {s} field {sample:?} lacks GT"))?;
+            *slot = gt_dosage(gt, *line_no)?;
+        }
+    }
+    Ok(codes)
+}
+
+/// Read variants [first_col, first_col + ncols) of a VCF: a streaming
+/// line parser walks the whole file (validating the `#CHROM` sample
+/// count against `nf` and the data-line count against `nv`), and the
+/// span's GT decodes run chunked on the `linalg::pool` workers.
+pub fn read_vcf_cols(
+    path: &Path,
+    nf: usize,
+    nv: usize,
+    first_col: usize,
+    ncols: usize,
+) -> Result<GenoCodes> {
+    if first_col + ncols > nv {
+        bail!("column range [{first_col}, {}) exceeds nv={nv}", first_col + ncols);
+    }
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut span: Vec<(usize, String)> = Vec::with_capacity(ncols);
+    let mut saw_header = false;
+    let mut variants = 0usize;
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line.with_context(|| format!("read {}", path.display()))?;
+        let line_no = i + 1;
+        if line.starts_with("##") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("#CHROM") {
+            let samples = rest.split('\t').filter(|s| !s.is_empty()).count().saturating_sub(8);
+            if samples != nf {
+                bail!(
+                    "{}: header names {samples} samples but the run config expects nf={nf}",
+                    path.display()
+                );
+            }
+            saw_header = true;
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        if !saw_header {
+            bail!("{}: data line {line_no} before the #CHROM header", path.display());
+        }
+        if variants >= first_col && variants < first_col + ncols {
+            span.push((line_no, line));
+        }
+        variants += 1;
+    }
+    if !saw_header {
+        bail!("{}: no #CHROM header line", path.display());
+    }
+    if variants != nv {
+        bail!("{}: {variants} variant lines but the run config expects nv={nv}", path.display());
+    }
+    // Fan the span's chunk decodes out over the worker pool; the
+    // streaming parse above stays single-pass and sequential.
+    let chunks: Vec<&[(usize, String)]> = span.chunks(VCF_CHUNK).collect();
+    let results: Mutex<Vec<Option<Result<Vec<u8>>>>> =
+        Mutex::new((0..chunks.len()).map(|_| None).collect());
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .iter()
+        .enumerate()
+        .map(|(ci, chunk)| {
+            let results = &results;
+            let chunk = *chunk;
+            Box::new(move || {
+                let r = decode_vcf_chunk(chunk, nf);
+                results.lock().unwrap()[ci] = Some(r);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::global().scope(tasks);
+    let mut codes = Vec::with_capacity(ncols * nf);
+    for slot in results.into_inner().unwrap() {
+        codes.extend(slot.expect("pool scope joins every chunk task")?);
+    }
+    Ok(GenoCodes::finish(nf, ncols, first_col, codes))
+}
+
+/// Write genotype codes as a minimal VCF (one `GT`-only FORMAT column
+/// per sample; missing codes emit `./.`).
+pub fn write_vcf_codes(path: &Path, nf: usize, codes: &[u8]) -> Result<()> {
+    if nf == 0 || codes.len() % nf != 0 {
+        bail!("{} codes do not tile nf={nf} samples", codes.len());
+    }
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "##fileformat=VCFv4.2")?;
+    writeln!(w, "##source=comet gen-data")?;
+    write!(w, "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT")?;
+    for q in 0..nf {
+        write!(w, "\tind{q}")?;
+    }
+    writeln!(w)?;
+    for (v, col) in codes.chunks(nf).enumerate() {
+        write!(w, "1\t{}\tsnp{v}\tA\tG\t.\tPASS\t.\tGT", v + 1)?;
+        for &c in col {
+            let gt = match c {
+                0 => "0/0",
+                1 => "0/1",
+                2 => "1/1",
+                _ => "./.",
+            };
+            write!(w, "\t{gt}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Emit a VCF for a float cohort with allele-count values — the fixture
+/// writer behind `comet gen-data --format vcf`.
+pub fn write_vcf_fixture<T: Scalar>(path: &Path, set: &VectorSet<T>) -> Result<()> {
+    write_vcf_codes(path, set.nf, &float_codes(set))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdata::SyntheticKind;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("comet-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    fn cohort(nf: usize, nv: usize) -> VectorSet<f64> {
+        VectorSet::generate(SyntheticKind::Alleles, 11, nf, nv, 0)
+    }
+
+    #[test]
+    fn bed_fixture_roundtrips_full_and_partial() {
+        let set = cohort(13, 9); // nf not divisible by 4: padded rows
+        let dir = tmp("bed-rt");
+        let bed = write_plink_fixture(&dir, "cohort", &set).unwrap();
+        let full = read_bed_cols(&bed, 13, 9, 0, 9).unwrap();
+        assert_eq!(full.missing, 0);
+        let floats: VectorSet<f64> = full.to_floats();
+        assert_eq!(floats.raw(), set.raw());
+        let part = read_bed_cols(&bed, 13, 9, 3, 4).unwrap();
+        assert_eq!(part.first_id, 3);
+        let pf: VectorSet<f64> = part.to_floats();
+        for v in 0..4 {
+            assert_eq!(pf.col(v), set.col(3 + v));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn vcf_fixture_roundtrips_full_and_partial() {
+        let set = cohort(7, 10);
+        let p = tmp("vcf-rt.vcf");
+        write_vcf_fixture(&p, &set).unwrap();
+        let full = read_vcf_cols(&p, 7, 10, 0, 10).unwrap();
+        let floats: VectorSet<f64> = full.to_floats();
+        assert_eq!(floats.raw(), set.raw());
+        let part = read_vcf_cols(&p, 7, 10, 4, 3).unwrap();
+        assert_eq!(part.first_id, 4);
+        let pf: VectorSet<f64> = part.to_floats();
+        for v in 0..3 {
+            assert_eq!(pf.col(v), set.col(4 + v));
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bed_and_vcf_agree_with_each_other() {
+        let set = cohort(9, 6);
+        let dir = tmp("bed-vs-vcf");
+        let bed = write_plink_fixture(&dir, "c", &set).unwrap();
+        let vcf = dir.join("c.vcf");
+        write_vcf_codes(&vcf, 9, &float_codes(&set)).unwrap();
+        let a = read_bed_cols(&bed, 9, 6, 0, 6).unwrap();
+        let b = read_vcf_cols(&vcf, 9, 6, 0, 6).unwrap();
+        assert_eq!(a.codes, b.codes);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad-magic.bed");
+        std::fs::write(&p, [0x6c, 0x1b, 0x00, 0, 0, 0, 0]).unwrap();
+        let err = read_bed_cols(&p, 4, 1, 0, 1).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // Shorter than the magic itself is its own typed error.
+        std::fs::write(&p, [0x6c]).unwrap();
+        assert!(read_bed_cols(&p, 4, 1, 0, 1).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bed_size_mismatch_rejected() {
+        let set = cohort(8, 4);
+        let dir = tmp("bed-size");
+        let bed = write_plink_fixture(&dir, "c", &set).unwrap();
+        // Truncated: claim more variants than the file holds.
+        let err = read_bed_cols(&bed, 8, 5, 0, 5).unwrap_err();
+        assert!(err.to_string().contains("size"), "{err}");
+        // Oversized: claim fewer.
+        let err = read_bed_cols(&bed, 8, 3, 0, 3).unwrap_err();
+        assert!(err.to_string().contains("size"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn companion_dimension_mismatch_rejected() {
+        let set = cohort(8, 4);
+        let dir = tmp("bed-companion");
+        let bed = write_plink_fixture(&dir, "c", &set).unwrap();
+        // A .bim disagreeing with nv is a hard error even though the
+        // .bed size happens to parse under other dimensions.
+        std::fs::write(dir.join("c.bim"), "1\tsnp0\t0\t1\tA\tG\n").unwrap();
+        let err = read_bed_cols(&bed, 8, 4, 0, 4).unwrap_err();
+        assert!(err.to_string().contains("4 variants"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn vcf_hostile_inputs_are_typed_errors() {
+        let p = tmp("vcf-hostile.vcf");
+        // Short data line (sample column missing).
+        std::fs::write(
+            &p,
+            "##fileformat=VCFv4.2\n#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\ta\tb\n\
+             1\t1\ts\tA\tG\t.\t.\t.\tGT\t0/0\n",
+        )
+        .unwrap();
+        let err = read_vcf_cols(&p, 2, 1, 0, 1).unwrap_err();
+        assert!(err.to_string().contains("short VCF line"), "{err}");
+        // No #CHROM header at all.
+        std::fs::write(&p, "1\t1\ts\tA\tG\t.\t.\t.\tGT\t0/0\n").unwrap();
+        assert!(read_vcf_cols(&p, 1, 1, 0, 1).is_err());
+        // Header sample count disagreeing with nf.
+        std::fs::write(
+            &p,
+            "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\ta\n\
+             1\t1\ts\tA\tG\t.\t.\t.\tGT\t0/0\n",
+        )
+        .unwrap();
+        let err = read_vcf_cols(&p, 2, 1, 0, 1).unwrap_err();
+        assert!(err.to_string().contains("samples"), "{err}");
+        // Malformed GT and non-diploid GT.
+        for gt in ["x/0", "0/1/1", "1"] {
+            std::fs::write(
+                &p,
+                format!(
+                    "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\ta\n\
+                     1\t1\ts\tA\tG\t.\t.\t.\tGT\t{gt}\n"
+                ),
+            )
+            .unwrap();
+            assert!(read_vcf_cols(&p, 1, 1, 0, 1).is_err(), "GT {gt:?} must fail");
+        }
+        // Variant count disagreeing with nv.
+        std::fs::write(
+            &p,
+            "#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\ta\n\
+             1\t1\ts\tA\tG\t.\t.\t.\tGT\t0/0\n",
+        )
+        .unwrap();
+        let err = read_vcf_cols(&p, 1, 2, 0, 1).unwrap_err();
+        assert!(err.to_string().contains("variant lines"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_calls_impute_to_zero_and_are_counted() {
+        // codes: variant 0 = [het, missing, hom-alt], variant 1 = all missing
+        let codes = vec![1, MISSING, 2, MISSING, MISSING, MISSING];
+        let p = tmp("missing.bed");
+        write_bed_codes(&p, 3, &codes).unwrap();
+        let before = missing_calls();
+        let g = read_bed_cols(&p, 3, 2, 0, 2).unwrap();
+        assert_eq!(g.missing, 4);
+        assert!(missing_calls() >= before + 4);
+        let f: VectorSet<f64> = g.to_floats();
+        assert_eq!(f.col(0), &[1.0, 0.0, 2.0]);
+        assert_eq!(f.col(1), &[0.0, 0.0, 0.0]);
+        let packed = g.pack2();
+        assert_eq!(packed.missing_calls, 4);
+        let m = packed.missing.as_ref().unwrap();
+        assert!(m.get_bit(0, 1) && m.get_bit(1, 0) && m.get_bit(1, 2));
+        assert!(!m.get_bit(0, 0));
+        // Dosage planes carry 0 where the mask is set.
+        assert_eq!(packed.dosage(0, 1), 0);
+        assert_eq!(packed.dose_sums(), vec![3.0, 0.0]);
+        // The same cohort through the VCF writer decodes identically.
+        let pv = tmp("missing.vcf");
+        write_vcf_codes(&pv, 3, &codes).unwrap();
+        let gv = read_vcf_cols(&pv, 3, 2, 0, 2).unwrap();
+        assert_eq!(gv.codes, g.codes);
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(pv).ok();
+    }
+
+    #[test]
+    fn pack_from_floats_matches_pack_from_codes() {
+        let set = cohort(70, 5); // two words per plane vector
+        let a = GenoBlock::from_floats(&set);
+        let dir = tmp("packeq");
+        let bed = write_plink_fixture(&dir, "c", &set).unwrap();
+        let b = read_bed_cols(&bed, 70, 5, 0, 5).unwrap().pack2();
+        for v in 0..5 {
+            assert_eq!(a.lo.words(v), b.lo.words(v));
+            assert_eq!(a.hi.words(v), b.hi.words(v));
+        }
+        assert!(a.missing.is_none() && b.missing.is_none());
+        // Dosage sums are exactly the float column sums.
+        assert_eq!(a.dose_sums(), set.col_sums());
+        // And the float expansion is exactly the input.
+        assert_eq!(a.to_floats::<f64>().raw(), set.raw());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn pack2_counter_increments_once_per_pack() {
+        let set = cohort(16, 3);
+        let before = pack2_calls();
+        let _ = GenoBlock::from_floats(&set);
+        assert!(pack2_calls() > before);
+    }
+
+    #[test]
+    fn plane_roundtrip_through_raw_words() {
+        let codes = vec![0, 1, 2, MISSING, 2, 2, 0, 1];
+        let p = tmp("planes.bed");
+        write_bed_codes(&p, 4, &codes).unwrap();
+        let g = read_bed_cols(&p, 4, 2, 0, 2).unwrap().pack2();
+        let r = GenoBlock::from_planes(
+            4,
+            2,
+            0,
+            g.lo.raw_words().to_vec(),
+            g.hi.raw_words().to_vec(),
+            g.missing.as_ref().map(|m| m.raw_words().to_vec()),
+        );
+        assert_eq!(r.missing_calls, 1);
+        for v in 0..2 {
+            for q in 0..4 {
+                assert_eq!(r.dosage(v, q), g.dosage(v, q));
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+}

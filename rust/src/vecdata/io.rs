@@ -16,7 +16,9 @@ pub fn write_raw<T: Scalar>(path: &Path, set: &VectorSet<T>) -> Result<()> {
     let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(f);
     for v in 0..set.nv {
-        w.write_all(as_bytes(set.col(v)))?;
+        for x in set.col(v) {
+            w.write_all(&x.to_bits_u64().to_le_bytes()[..T::BYTES])?;
+        }
     }
     w.flush()?;
     Ok(())
@@ -48,20 +50,25 @@ pub fn read_raw_cols<T: Scalar>(
     r.seek(SeekFrom::Start((first_col * nf * T::BYTES) as u64))?;
     let mut set = VectorSet::<T>::zeros(nf, ncols);
     set.first_id = first_col;
-    let bytes = unsafe {
-        std::slice::from_raw_parts_mut(
-            set.raw_mut().as_mut_ptr() as *mut u8,
-            nf * ncols * T::BYTES,
-        )
-    };
-    r.read_exact(bytes)?;
-    Ok(set)
-}
-
-fn as_bytes<T: Scalar>(slice: &[T]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(slice.as_ptr() as *const u8, std::mem::size_of_val(slice))
+    // Safe per-column decode: one checked read per column, elements
+    // reassembled from their little-endian images (no byte-level
+    // aliasing of the element buffer).
+    let mut colbuf = vec![0u8; nf * T::BYTES];
+    for c in 0..ncols {
+        r.read_exact(&mut colbuf).with_context(|| {
+            format!(
+                "{}: short read at column {} (nf={nf} elem={}B)",
+                path.display(),
+                first_col + c,
+                T::BYTES
+            )
+        })?;
+        let col = set.col_mut(c);
+        for (dst, src) in col.iter_mut().zip(colbuf.chunks_exact(T::BYTES)) {
+            *dst = T::from_le_bytes(src);
+        }
     }
+    Ok(set)
 }
 
 #[cfg(test)]
@@ -106,6 +113,36 @@ mod tests {
         write_raw(&p, &set).unwrap();
         let err = read_raw_cols::<f64>(&p, 6, 5, 0, 5).unwrap_err();
         assert!(err.to_string().contains("size"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_file_names_actual_and_expected_sizes() {
+        let set: VectorSet<f64> = VectorSet::generate(SyntheticKind::RandomGrid, 4, 6, 4, 0);
+        let p = tmp("truncated");
+        write_raw(&p, &set).unwrap();
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(6 * 4 * 8 - 5).unwrap();
+        drop(f);
+        let err = read_raw_cols::<f64>(&p, 6, 4, 0, 4).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("size 187"), "{msg}");
+        assert!(msg.contains("expected 192"), "{msg}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn oversized_file_names_actual_and_expected_sizes() {
+        let set: VectorSet<f32> = VectorSet::generate(SyntheticKind::RandomGrid, 5, 6, 4, 0);
+        let p = tmp("oversized");
+        write_raw(&p, &set).unwrap();
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(6 * 4 * 4 + 9).unwrap();
+        drop(f);
+        let err = read_raw_cols::<f32>(&p, 6, 4, 0, 4).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("size 105"), "{msg}");
+        assert!(msg.contains("expected 96"), "{msg}");
         std::fs::remove_file(p).ok();
     }
 

@@ -19,6 +19,7 @@
 
 pub mod bits;
 pub mod block;
+pub mod geno;
 pub mod io;
 pub mod oocstore;
 

@@ -41,6 +41,7 @@ use std::sync::{Arc, Mutex};
 use crate::util::Scalar;
 use crate::vecdata::bits::BitVectorSet;
 use crate::vecdata::block::{Block, Repr};
+use crate::vecdata::geno::GenoBlock;
 use crate::vecdata::VectorSet;
 
 /// How a store operation failed — the axis the retry policy and the
@@ -297,23 +298,40 @@ fn as_raw_bytes<T>(slice: &[T]) -> &[u8] {
 /// is bit-identical by construction, and `encode(b).len()` tracks
 /// `b.resident_bytes() + HEADER_LEN`.
 pub fn encode<T: Scalar>(block: &Block<T>) -> Vec<u8> {
-    let (repr_tag, elem_width, words_per_vec, payload): (u32, u32, u64, &[u8]) = match block {
-        Block::Float(v) => (0, T::BYTES as u32, 0, as_raw_bytes(v.raw())),
-        Block::Packed(b) => (1, 8, b.words_per_vec as u64, as_raw_bytes(b.raw_words())),
-    };
+    use std::borrow::Cow;
+    // `flags` is the former reserved u32 (always 0 before the packed2
+    // tag): for packed2 blobs, bit 0 records whether the missing-mask
+    // plane is part of the payload.
+    let (repr_tag, elem_width, flags, words_per_vec, payload): (u32, u32, u32, u64, Cow<[u8]>) =
+        match block {
+            Block::Float(v) => (0, T::BYTES as u32, 0, 0, Cow::Borrowed(as_raw_bytes(v.raw()))),
+            Block::Packed(b) => {
+                (1, 8, 0, b.words_per_vec as u64, Cow::Borrowed(as_raw_bytes(b.raw_words())))
+            }
+            Block::Packed2(g) => {
+                // The three planes spill concatenated: lo ‖ hi ‖ mask.
+                let mut bytes = Vec::with_capacity(g.resident_bytes() as usize);
+                bytes.extend_from_slice(as_raw_bytes(g.lo.raw_words()));
+                bytes.extend_from_slice(as_raw_bytes(g.hi.raw_words()));
+                if let Some(m) = &g.missing {
+                    bytes.extend_from_slice(as_raw_bytes(m.raw_words()));
+                }
+                (2, 8, g.missing.is_some() as u32, g.words_per_vec() as u64, Cow::Owned(bytes))
+            }
+        };
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(MAGIC);
     push_u32(&mut out, VERSION);
     push_u32(&mut out, repr_tag);
     push_u32(&mut out, elem_width);
-    push_u32(&mut out, 0); // reserved
+    push_u32(&mut out, flags);
     push_u64(&mut out, block.nf() as u64);
     push_u64(&mut out, block.nv() as u64);
     push_u64(&mut out, block.first_id() as u64);
     push_u64(&mut out, words_per_vec);
     push_u64(&mut out, payload.len() as u64);
-    push_u64(&mut out, fnv1a64(payload));
-    out.extend_from_slice(payload);
+    push_u64(&mut out, fnv1a64(&payload));
+    out.extend_from_slice(&payload);
     out
 }
 
@@ -396,6 +414,34 @@ pub fn decode<T: Scalar>(bytes: &[u8]) -> Result<Block<T>, StoreError> {
                 .collect();
             Ok(Block::Packed(Arc::new(BitVectorSet::from_words(nf, nv, first_id, words))))
         }
+        2 => {
+            let has_mask = read_u32(bytes, 20) & 1 != 0;
+            if words_per_vec != nf.div_ceil(64) {
+                return Err(StoreError::corrupt(format!(
+                    "packed2 spill words_per_vec {words_per_vec} inconsistent with nf={nf}"
+                )));
+            }
+            let plane = words_per_vec * nv * 8;
+            let planes = if has_mask { 3 } else { 2 };
+            if payload_len != plane * planes {
+                return Err(StoreError::corrupt(format!(
+                    "packed2 spill payload {payload_len} B != {planes} planes of {plane} B \
+                     ({words_per_vec} × nv={nv} words each)"
+                )));
+            }
+            let words_at = |at: usize| -> Vec<u64> {
+                payload[at..at + plane]
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            };
+            let lo = words_at(0);
+            let hi = words_at(plane);
+            let missing = has_mask.then(|| words_at(2 * plane));
+            Ok(Block::Packed2(Arc::new(GenoBlock::from_planes(
+                nf, nv, first_id, lo, hi, missing,
+            ))))
+        }
         t => Err(StoreError::corrupt(format!("unknown spill repr tag {t}"))),
     }
 }
@@ -409,6 +455,7 @@ pub fn peek_repr(bytes: &[u8]) -> Option<Repr> {
     match read_u32(bytes, 12) {
         0 => Some(Repr::Float),
         1 => Some(Repr::Packed),
+        2 => Some(Repr::Packed2),
         _ => None,
     }
 }
@@ -454,6 +501,48 @@ mod tests {
         let rb = back.as_packed().unwrap();
         assert_eq!((rb.nf, rb.nv, rb.first_id), (130, 5, 40));
         assert_eq!(rb.raw_words(), bits.raw_words());
+    }
+
+    #[test]
+    fn packed2_codec_roundtrips_with_and_without_mask() {
+        use crate::vecdata::geno::{self, MISSING};
+        // No mask: pack a clean allele cohort (nf=130 → partial word).
+        let mut v: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, 21, 130, 5, 0);
+        v.first_id = 7;
+        let g = GenoBlock::from_floats(&v);
+        let b: Block<f64> = Block::Packed2(Arc::new(g.clone()));
+        let blob = encode(&b);
+        assert_eq!(blob.len() as u64, b.resident_bytes() + HEADER_LEN as u64);
+        assert_eq!(peek_repr(&blob), Some(Repr::Packed2));
+        let back = decode::<f64>(&blob).unwrap();
+        let rg = back.as_packed2().unwrap();
+        assert_eq!((rg.nf(), rg.nv(), rg.first_id()), (130, 5, 7));
+        assert_eq!(rg.lo.raw_words(), g.lo.raw_words());
+        assert_eq!(rg.hi.raw_words(), g.hi.raw_words());
+        assert!(rg.missing.is_none());
+        // With mask: missing calls force the third plane through the
+        // codec (and an all-missing column must survive byte-exactly).
+        let dir = std::env::temp_dir().join("comet-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("oocmask-{}.bed", std::process::id()));
+        geno::write_bed_codes(&p, 3, &[1, MISSING, 2, MISSING, MISSING, MISSING]).unwrap();
+        let gm = geno::read_bed_cols(&p, 3, 2, 0, 2).unwrap().pack2();
+        std::fs::remove_file(&p).ok();
+        let bm: Block<f64> = Block::Packed2(Arc::new(gm.clone()));
+        let blob = encode(&bm);
+        assert_eq!(blob.len() as u64, bm.resident_bytes() + HEADER_LEN as u64);
+        let back = decode::<f64>(&blob).unwrap();
+        let rg = back.as_packed2().unwrap();
+        assert_eq!(rg.missing_calls, 4);
+        assert_eq!(
+            rg.missing.as_ref().unwrap().raw_words(),
+            gm.missing.as_ref().unwrap().raw_words()
+        );
+        // Mask-flag tampering changes the expected payload size →
+        // Corrupt, never a mis-shaped decode.
+        let mut bad = blob.clone();
+        bad[20] = 0;
+        assert_eq!(decode::<f64>(&bad).unwrap_err().kind, StoreErrorKind::Corrupt);
     }
 
     #[test]

@@ -156,9 +156,10 @@ fn packed_runs_stay_bit_identical_across_backends_and_decompositions() {
 #[test]
 fn float_metrics_keep_the_float_wire_untouched() {
     let _g = lock();
-    // preferred_repr() gates the representation: czekanowski and ccc
-    // must still move f64 elements (their kernels consume floats), and
-    // their byte accounting must still scale with the precision width.
+    // preferred_repr() gates the representation: czekanowski must
+    // still move f64 elements (its kernels consume floats), and its
+    // byte accounting must still scale with the precision width.
+    // (CCC's packed2 wire is pinned in `tests/geno_ingest.rs`.)
     let mut cfg = pinned_cfg(MetricId::Czekanowski);
     let f64_run = run(&cfg).unwrap();
     assert_eq!(f64_run.stats.comm_bytes, PINNED_FLOAT_BYTES);

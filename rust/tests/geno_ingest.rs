@@ -1,0 +1,197 @@
+//! Genotype-ingest lock-down suite: real-data CCC end to end.
+//!
+//! The `vecdata::geno` subsystem feeds PLINK `.bed` / VCF cohorts into
+//! the same engine the synthetic runs use, and the CCC metric rides a
+//! two-plane packed representation from ingest to wire to kernel. All
+//! of that must be invisible at the result level:
+//!
+//! * `.bed`- and VCF-ingested CCC runs are bit-identical — values AND
+//!   checksums — to the float path and its scalar oracle, across
+//!   backends, decompositions, and thread counts;
+//! * packed allele planes travel on the wire (comm volume drops ≥16×
+//!   vs the float exchange, pinned to exact byte counts for one shape);
+//! * plane packing happens exactly once per node block, at ingest;
+//! * decode/missing-call counters round-trip into `RunStats`.
+//!
+//! Tests in this binary share a lock: the geno ingest counters are
+//! process-global, so counter tests must not interleave.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use comet::checksum::Checksum;
+use comet::config::{BackendKind, InputSource, Precision, RunConfig};
+use comet::coordinator::run;
+use comet::decomp::Grid;
+use comet::metrics::{self, indexing, MetricId};
+use comet::vecdata::geno;
+use comet::vecdata::{SyntheticKind, VectorSet};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("comet-tests")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn ccc_cfg(input: InputSource, nv: usize, nf: usize) -> RunConfig {
+    RunConfig {
+        metric: MetricId::Ccc,
+        num_way: 2,
+        nv,
+        nf,
+        precision: Precision::F64,
+        backend: BackendKind::CpuOptimized,
+        grid: Grid::new(1, 1, 1),
+        input,
+        store_metrics: false,
+        ..Default::default()
+    }
+}
+
+/// Salted bit-level oracle: scalar `ccc2` over every pair.
+fn oracle_checksum(v: &VectorSet<f64>) -> Checksum {
+    let mut want = Checksum::with_salt(MetricId::Ccc.checksum_salt());
+    for (i, j) in indexing::pairs(v.nv) {
+        want.add_pair(i, j, metrics::ccc2(v.col(i), v.col(j)));
+    }
+    want
+}
+
+#[test]
+fn bed_and_vcf_ingest_match_the_float_path_bitwise() {
+    let _g = lock();
+    let (nv, nf, seed) = (24usize, 130usize, 41u64); // partial trailing word
+    let cohort: VectorSet<f64> = VectorSet::generate(SyntheticKind::Alleles, seed, nf, nv, 0);
+    let want = oracle_checksum(&cohort);
+
+    let dir = tmp_dir("geno-bitident");
+    let bed = geno::write_plink_fixture(&dir, "cohort", &cohort).unwrap();
+    let vcf = dir.join("cohort.vcf");
+    geno::write_vcf_fixture(&vcf, &cohort).unwrap();
+
+    let inputs = [
+        InputSource::Synthetic { kind: SyntheticKind::Alleles, seed },
+        InputSource::Bed { path: bed.to_str().unwrap().to_string() },
+        InputSource::Vcf { path: vcf.to_str().unwrap().to_string() },
+    ];
+    for input in &inputs {
+        for backend in [BackendKind::CpuReference, BackendKind::CpuOptimized] {
+            for (npf, npv, npr) in [(1, 1, 1), (1, 3, 1), (1, 4, 2), (2, 2, 1)] {
+                for threads in [1usize, 3] {
+                    let mut cfg = ccc_cfg(input.clone(), nv, nf);
+                    cfg.backend = backend;
+                    cfg.grid = Grid::new(npf, npv, npr);
+                    cfg.threads = threads;
+                    let out = run(&cfg).unwrap();
+                    assert_eq!(
+                        out.checksum,
+                        want,
+                        "checksum drift: input {:?}, backend {backend:?}, \
+                         grid ({npf},{npv},{npr}), threads {threads}",
+                        cfg.input.format_name()
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// Exact wire accounting for the pinned shape (nv=64, nf=4096, grid
+// (1,4,1)): steps Δ ∈ {1, 2} each make every node send one block +
+// one sums payload → 8 block sends + 8 sums sends = 16 messages.
+//
+// Packed2 block: ⌈4096/64⌉ × 16 words × 8 B × 2 planes =  16384 B
+// Float block:   4096 × 16 elements × 8 B (f64)        = 524288 B
+// Sums payload:  16 f64 × 8 B                          =    128 B
+const PINNED_MESSAGES: u64 = 16;
+const PINNED_CCC_BYTES: u64 = 8 * 16_384 + 8 * 128; // = 132_096
+const PINNED_FLOAT_BYTES: u64 = 8 * 524_288 + 8 * 128; // = 4_195_328
+
+#[test]
+fn packed2_wire_cuts_ccc_comm_bytes_at_least_16x() {
+    let _g = lock();
+    let input = InputSource::Synthetic { kind: SyntheticKind::Alleles, seed: 7 };
+    let mut cfg = ccc_cfg(input, 64, 4096);
+    cfg.grid = Grid::new(1, 4, 1);
+    let ccc = run(&cfg).unwrap();
+    cfg.metric = MetricId::Czekanowski;
+    let cz = run(&cfg).unwrap();
+
+    // Identical schedule, identical message count — only the block
+    // representation differs.
+    assert_eq!(ccc.stats.comm_messages, PINNED_MESSAGES);
+    assert_eq!(cz.stats.comm_messages, PINNED_MESSAGES);
+
+    // Pin the exact byte counts so any accounting regression is loud.
+    assert_eq!(ccc.stats.comm_bytes, PINNED_CCC_BYTES);
+    assert_eq!(cz.stats.comm_bytes, PINNED_FLOAT_BYTES);
+
+    let ratio = cz.stats.comm_bytes as f64 / ccc.stats.comm_bytes as f64;
+    assert!(ratio >= 16.0, "packed2 wire saves only {ratio:.1}× (< 16×)");
+}
+
+#[test]
+fn ccc_packs_planes_once_per_node_block_never_in_the_step_loop() {
+    let _g = lock();
+    let input = InputSource::Synthetic { kind: SyntheticKind::Alleles, seed: 9 };
+    let mut cfg = ccc_cfg(input, 36, 130);
+    cfg.grid = Grid::new(1, 3, 2); // 6 nodes, multi-step schedule
+    let before = geno::pack2_calls();
+    let out = run(&cfg).unwrap();
+    let packs = geno::pack2_calls() - before;
+    // Exactly one plane-packing conversion per node block (at ingest).
+    // Any per-step or per-kernel re-packing would at least double this.
+    assert_eq!(packs, 6, "expected 6 ingest-time packs, saw {packs}");
+    assert_eq!(out.stats.pack2_calls, 6);
+    assert!(out.stats.metrics > 0);
+
+    // Same problem, serial grid: one pack for the one node block.
+    cfg.grid = Grid::new(1, 1, 1);
+    let before = geno::pack2_calls();
+    let solo = run(&cfg).unwrap();
+    assert_eq!(geno::pack2_calls() - before, 1);
+    assert_eq!(solo.stats.pack2_calls, 1);
+}
+
+#[test]
+fn bed_ingest_counters_reach_run_stats_and_missing_imputes_to_zero() {
+    let _g = lock();
+    let (nf, nv) = (9usize, 8usize);
+    // Deterministic codes with a sprinkle of missing calls; no .bim or
+    // .fam companions — the reader accepts a bare .bed.
+    let codes: Vec<u8> = (0..nf * nv)
+        .map(|k| match k % 7 {
+            0 | 3 => 0,
+            1 | 4 => 1,
+            2 | 5 => 2,
+            _ => geno::MISSING,
+        })
+        .collect();
+    let n_missing = codes.iter().filter(|&&c| c == geno::MISSING).count() as u64;
+    assert!(n_missing > 0);
+    let dir = tmp_dir("geno-counters");
+    let bed = dir.join("sparse.bed");
+    geno::write_bed_codes(&bed, nf, &codes).unwrap();
+
+    let input = InputSource::Bed { path: bed.to_str().unwrap().to_string() };
+    let out = run(&ccc_cfg(input, nv, nf)).unwrap();
+    // One node decodes the whole file once.
+    assert_eq!(out.stats.geno_calls, (nf * nv) as u64);
+    assert_eq!(out.stats.geno_missing, n_missing);
+    assert_eq!(out.stats.pack2_calls, 1);
+
+    // Missing imputes to dosage 0 on both paths: the run's checksum is
+    // the scalar oracle over the imputed float expansion.
+    let floats: VectorSet<f64> = geno::read_bed_cols(&bed, nf, nv, 0, nv).unwrap().to_floats();
+    assert_eq!(out.checksum, oracle_checksum(&floats));
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -407,6 +407,96 @@ fn prop_pack_once_coordinator_matches_repack_per_call_oracle() {
 }
 
 #[test]
+fn prop_packed2_spill_codec_roundtrips_bit_identically() {
+    // Satellite: genotype blocks must survive the out-of-core spill
+    // codec byte for byte — across partial trailing words (nf % 64),
+    // padded .bed rows (nf % 4), odd spans, all-missing columns, and
+    // spans with no missing calls at all (mask plane omitted).
+    use comet::vecdata::block::Block;
+    use comet::vecdata::{geno, oocstore};
+    use std::sync::Arc;
+    let dir = std::env::temp_dir().join("comet-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("prop-packed2-spill-{}.bed", std::process::id()));
+    forall(
+        "packed2-spill-roundtrip",
+        40,
+        |g| {
+            let nf = if g.bool() {
+                *g.pick(&[1usize, 3, 63, 64, 65, 127, 128, 129])
+            } else {
+                g.usize_in(1, 150)
+            };
+            let nv = g.usize_in(1, 11);
+            let missing_rate = *g.pick(&[0.0, 0.0, 0.15]);
+            let mut codes = vec![0u8; nf * nv];
+            for c in codes.iter_mut() {
+                *c = if g.f64_unit() < missing_rate {
+                    geno::MISSING
+                } else {
+                    *g.pick(&[0u8, 0, 1, 2])
+                };
+            }
+            // Sometimes blank out a whole variant to all-missing.
+            if nv > 1 && g.bool() {
+                let victim = g.usize_in(0, nv - 1);
+                codes[victim * nf..(victim + 1) * nf].fill(geno::MISSING);
+            }
+            let first_col = g.usize_in(0, nv - 1);
+            let ncols = g.usize_in(1, nv - first_col);
+            (nf, nv, first_col, ncols, codes)
+        },
+        |(nf, nv, first_col, ncols, codes)| {
+            geno::write_bed_codes(&path, *nf, codes).map_err(|e| e.to_string())?;
+            let span = geno::read_bed_cols(&path, *nf, *nv, *first_col, *ncols)
+                .map_err(|e| e.to_string())?;
+            let packed = span.pack2();
+            let has_mask = packed.missing.is_some();
+            if has_mask != (span.missing > 0) {
+                return Err("mask plane presence disagrees with missing count".into());
+            }
+            let block: Block<f64> = Block::Packed2(Arc::new(packed));
+            let blob = oocstore::encode(&block);
+            let back = oocstore::decode::<f64>(&blob).map_err(|e| e.to_string())?;
+            // Byte-identity: re-encoding the reload reproduces the blob.
+            if oocstore::encode(&back) != blob {
+                return Err(format!("re-encoded blob differs at nf={nf} ncols={ncols}"));
+            }
+            let g2 = back.as_packed2().ok_or("reload is not a packed2 block")?;
+            if g2.first_id() != *first_col || g2.nf() != *nf || g2.nv() != *ncols {
+                return Err("reload dims/first_id differ".into());
+            }
+            if g2.missing_calls != span.missing {
+                return Err(format!(
+                    "reload counts {} missing calls, span had {}",
+                    g2.missing_calls, span.missing
+                ));
+            }
+            for v in 0..*ncols {
+                for q in 0..*nf {
+                    let code = codes[(first_col + v) * nf + q];
+                    let want = if code == geno::MISSING { 0 } else { code };
+                    if g2.dosage(v, q) != want {
+                        return Err(format!("dosage({v},{q}) wrong after reload"));
+                    }
+                }
+            }
+            // A payload flip is always a typed Corrupt error, never a
+            // silent wrong reload (the last byte is payload: every
+            // packed2 blob carries ≥ 2 planes of ≥ 8 B each).
+            let mut evil = blob.clone();
+            *evil.last_mut().unwrap() ^= 0x40;
+            match oocstore::decode::<f64>(&evil) {
+                Err(e) if e.kind == oocstore::StoreErrorKind::Corrupt => Ok(()),
+                Err(e) => Err(format!("payload flip gave {:?}, want Corrupt", e.kind)),
+                Ok(_) => Err("payload flip decoded silently".into()),
+            }
+        },
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
 fn prop_checksum_detects_any_single_mutation() {
     forall(
         "checksum-sensitivity",
